@@ -1,0 +1,62 @@
+//! Quickstart — train a linear SVM with ACF and compare against uniform
+//! CD on a synthetic text-classification dataset.
+//!
+//!     cargo run --release --example quickstart
+
+use acf_cd::acf::AcfParams;
+use acf_cd::data::{binary_accuracy, synth};
+use acf_cd::sched::{AcfSchedulerPolicy, PermutationScheduler};
+use acf_cd::solvers::{svm, SolverConfig};
+use acf_cd::util::rng::Rng;
+
+fn main() {
+    // 1. A sparse dataset with heterogeneous coordinate importance —
+    //    the regime the ACF paper targets.
+    let ds = synth::sparse_text(
+        &synth::SparseTextSpec {
+            name: "quickstart",
+            n: 1500,
+            d: 6000,
+            nnz_per_row: 40,
+            zipf_s: 1.0,
+            concept_k: 80,
+            noise: 0.03,
+        },
+        &mut Rng::new(42),
+    );
+    println!(
+        "dataset: {} instances × {} features ({} non-zeros)",
+        ds.n_instances(),
+        ds.n_features(),
+        ds.nnz()
+    );
+
+    // hard regime: large C means the conflict-pair outliers need their
+    // dual variables driven all the way to the bound — the setting where
+    // adaptive coordinate frequencies pay off (paper §3.2)
+    let c = 1000.0;
+    let cfg = SolverConfig::with_eps(0.001);
+
+    // 2. Baseline: liblinear-style random-permutation CD.
+    let mut perm = PermutationScheduler::new(ds.n_instances(), Rng::new(1));
+    let (model_u, res_u) = svm::solve(&ds, c, &mut perm, cfg.clone());
+    println!("\nuniform : {}", res_u.summary());
+
+    // 3. The paper's contribution: ACF scheduling (Algorithms 2 + 3).
+    let mut acf = AcfSchedulerPolicy::new(ds.n_instances(), AcfParams::default(), Rng::new(2));
+    let (model_a, res_a) = svm::solve(&ds, c, &mut acf, cfg);
+    println!("acf     : {}", res_a.summary());
+
+    // 4. Same solution quality, fewer iterations/operations.
+    println!(
+        "\ntrain accuracy — uniform {:.2}%, acf {:.2}%",
+        100.0 * binary_accuracy(&ds, &model_u.w),
+        100.0 * binary_accuracy(&ds, &model_a.w),
+    );
+    println!(
+        "speed-up — iterations {:.1}×, operations {:.1}×, wall-clock {:.1}×",
+        res_u.iterations as f64 / res_a.iterations as f64,
+        res_u.ops as f64 / res_a.ops as f64,
+        res_u.seconds / res_a.seconds.max(1e-9),
+    );
+}

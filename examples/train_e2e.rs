@@ -1,0 +1,163 @@
+//! End-to-end driver — exercises every layer of the stack on a real
+//! small workload and proves they compose (the repository's E2E
+//! validation; its output is recorded in EXPERIMENTS.md):
+//!
+//!   L3  Rust: generate an rcv1-scale dataset, train linear SVMs with
+//!       ACF / uniform / shrinking policies, logging the convergence
+//!       trace (objective + KKT violation vs iterations);
+//!   L2+L1  PJRT: load the AOT JAX/Pallas artifacts and audit the
+//!       trained model's primal loss + accuracy through the tiled
+//!       validator — a separately-compiled stack must agree with the
+//!       Rust-native numbers;
+//!   §6  Markov: run the balance + perturbation-curve experiment through
+//!       both the native chain and the Pallas cd_sweep kernel.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+
+use acf_cd::acf::AcfParams;
+use acf_cd::coordinator::{run_job_on, JobSpec, Problem};
+use acf_cd::data::{self, Scale};
+use acf_cd::markov;
+use acf_cd::runtime::{validator, Runtime, MARKOV_M, MARKOV_N};
+use acf_cd::sched::Policy;
+use acf_cd::solvers::{svm, SolverConfig};
+use acf_cd::util::json::{arr_f64, Json};
+use acf_cd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut evidence = Json::obj();
+
+    // ------------------------------------------------ L3: train + trace
+    println!("=== L3: training (rcv1-like, C = 10, ε = 0.01) ===");
+    let mut spec = JobSpec::new(Problem::Svm { c: 10.0 }, "rcv1-like", Policy::Acf);
+    spec.scale = Scale(0.6);
+    let ds = spec.load_dataset()?;
+    let split = data::train_test_split(ds.n_instances(), 0.25, &mut Rng::new(3));
+    let (train, test) = data::apply(&ds, &split);
+    println!(
+        "dataset: {} train / {} test instances, {} features",
+        train.n_instances(),
+        test.n_instances(),
+        train.n_features()
+    );
+
+    let mut cfg = SolverConfig::with_eps(0.01);
+    cfg.trace_every = 2_000;
+    let mut acf =
+        Policy::Acf.build(train.n_instances(), AcfParams::default(), Rng::new(11));
+    let (model, res_acf) = svm::solve(&train, 10.0, acf.as_mut(), cfg.clone());
+    println!("acf     : {}", res_acf.summary());
+    println!("convergence trace (iteration → objective, violation):");
+    for p in res_acf
+        .trace
+        .points
+        .iter()
+        .step_by((res_acf.trace.points.len() / 8).max(1))
+    {
+        println!("  {:>9} → {:>14.4}  viol {:.4}", p.iteration, p.objective, p.violation);
+    }
+    res_acf.trace.check_monotone(1e-9).expect("objective must be monotone");
+
+    let mut perm =
+        Policy::Permutation.build(train.n_instances(), AcfParams::default(), Rng::new(12));
+    let (_m2, res_uni) = svm::solve(&train, 10.0, perm.as_mut(), cfg);
+    println!("uniform : {}", res_uni.summary());
+    let mut shr_spec = spec.clone();
+    shr_spec.problem = Problem::SvmShrinking { c: 10.0 };
+    let res_shr = run_job_on(&shr_spec, &train);
+    println!("shrink  : {}", res_shr.result.summary());
+
+    let acc_train = data::binary_accuracy(&train, &model.w);
+    let acc_test = data::binary_accuracy(&test, &model.w);
+    println!("accuracy: train {:.2}%, test {:.2}%", 100.0 * acc_train, 100.0 * acc_test);
+    evidence.set("svm", {
+        let mut o = Json::obj();
+        o.set("acf_iters", Json::Num(res_acf.iterations as f64))
+            .set("uniform_iters", Json::Num(res_uni.iterations as f64))
+            .set("shrinking_iters", Json::Num(res_shr.result.iterations as f64))
+            .set("speedup_iters_vs_uniform", Json::Num(res_uni.iterations as f64 / res_acf.iterations as f64))
+            .set("test_accuracy", Json::Num(acc_test))
+            .set("trace_len", Json::Num(res_acf.trace.points.len() as f64));
+        o
+    });
+
+    // --------------------------------- L2+L1: cross-stack validation
+    println!("\n=== L2+L1: PJRT validator audit (AOT JAX/Pallas artifacts) ===");
+    let rt = Runtime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let rep = validator::validate(&rt, &test, &model.w)?;
+    let native_primal = svm::primal_objective(&test, &model.w, 10.0);
+    let xla_primal = rep.svm_primal(&model.w, 10.0);
+    println!(
+        "validator accuracy {:.2}% (native {:.2}%)",
+        100.0 * rep.accuracy,
+        100.0 * acc_test
+    );
+    println!("primal objective — native {native_primal:.4}, xla {xla_primal:.4}");
+    let rel = (native_primal - xla_primal).abs() / native_primal.abs().max(1.0);
+    assert!(rel < 1e-2, "cross-stack primal mismatch: {rel}");
+    assert!((rep.accuracy - acc_test).abs() < 1e-9, "accuracy mismatch");
+    evidence.set("validator", {
+        let mut o = Json::obj();
+        o.set("platform", Json::Str(rt.platform()))
+            .set("primal_rel_err", Json::Num(rel))
+            .set("accuracy", Json::Num(rep.accuracy));
+        o
+    });
+
+    // ------------------------------------------------ §6: Markov chain
+    println!("\n=== §6: Markov-chain experiment (n = 5) ===");
+    let mut rng = Rng::new(21);
+    let q = markov::Quadratic::rbf_gram(5, 1.0, &mut rng);
+    let bal = markov::balance(
+        &q,
+        &markov::BalanceConfig { steps_per_round: 30_000, ..Default::default() },
+        &mut rng,
+    );
+    let uni = markov::progress_rate(&q, &[0.2; 5], 2_000, 100_000, &mut rng);
+    println!(
+        "balanced π̄ = {:?}\nρ(π̄) = {:.6} vs ρ(uniform) = {:.6} (gain {:.3}×)",
+        bal.pi.iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+        bal.rho,
+        uni.rho,
+        bal.rho / uni.rho
+    );
+    // cross-stack sweep through the Pallas kernel
+    let mut qpad = vec![0.0f32; MARKOV_N * MARKOV_N];
+    for i in 0..MARKOV_N {
+        for j in 0..MARKOV_N {
+            qpad[i * MARKOV_N + j] = if i < 5 && j < 5 {
+                q.entry(i, j) as f32
+            } else if i == j {
+                1.0
+            } else {
+                0.0
+            };
+        }
+    }
+    let w0: Vec<f64> = (0..5).map(|_| rng.gaussian()).collect();
+    let mut wpad = vec![0.0f32; MARKOV_N];
+    for i in 0..5 {
+        wpad[i] = w0[i] as f32;
+    }
+    let seq: Vec<i32> = (0..MARKOV_M).map(|k| (k % 5) as i32).collect();
+    let (_w, t_pallas) = rt.cd_sweep_block(&qpad, &wpad, &seq)?;
+    let mut chain = markov::Chain { q: &q, w: w0 };
+    let t_rust = chain.apply_sequence(&seq.iter().map(|&i| i as u32).collect::<Vec<_>>());
+    let rel = (t_pallas as f64 - t_rust).abs() / t_rust.abs().max(1.0);
+    println!("cd_sweep log-progress: pallas {t_pallas:.4} vs rust {t_rust:.4} (rel {rel:.4})");
+    assert!(rel < 0.05);
+    evidence.set("markov", {
+        let mut o = Json::obj();
+        o.set("pi_bar", arr_f64(&bal.pi))
+            .set("rho_balanced", Json::Num(bal.rho))
+            .set("rho_uniform", Json::Num(uni.rho))
+            .set("cd_sweep_rel_err", Json::Num(rel));
+        o
+    });
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/train_e2e.json", evidence.to_string_pretty())?;
+    println!("\nall layers compose ✓ — evidence written to results/train_e2e.json");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+"""AOT lowering: L2 graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    args = model.example_args()
+    manifest = {
+        "tile": {"bl": model.BL, "bd": model.BD},
+        "markov": {"n": model.MARKOV_N, "m": model.MARKOV_M},
+        "graphs": {},
+    }
+    for name, fn in model.GRAPHS.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args[name]
+            ],
+            "bytes": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

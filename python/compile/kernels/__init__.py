@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO via ../aot.py).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops
+that the Rust runtime's PJRT CPU client executes directly. Real-TPU
+performance is estimated structurally (VMEM footprint / MXU utilization)
+in DESIGN.md §Hardware-Adaptation.
+"""

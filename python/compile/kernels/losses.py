@@ -1,0 +1,76 @@
+"""Fused masked loss reductions over margins — L1 Pallas kernel.
+
+Given margins m (L,), labels y (L,) and a validity mask (L,) (padding
+rows carry mask 0), one pass computes the four reductions the Rust
+validator consumes:
+
+    hinge_sum    Σ mask·max(0, 1 − y·m)        (SVM primal loss)
+    logistic_sum Σ mask·softplus(−y·m)         (logreg primal loss)
+    correct      Σ mask·[y·m > 0]              (accuracy numerator)
+    sq_err_sum   Σ mask·(m − y)²               (LASSO residual term)
+
+Fusing margin→elementwise→reduce keeps the elementwise intermediates in
+VMEM — they never round-trip to HBM (the analog of what a CUDA kernel
+would keep in registers/shared memory). The within-block partial sums
+are accumulated across the grid axis in the (4,)-vector output block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BL = 256
+
+
+def _losses_kernel(m_ref, y_ref, mask_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m = m_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    ym = y * m
+    hinge = jnp.sum(mask * jnp.maximum(0.0, 1.0 - ym))
+    # numerically stable softplus(−ym)
+    logistic = jnp.sum(
+        mask * (jnp.maximum(-ym, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(ym))))
+    )
+    correct = jnp.sum(mask * (ym > 0.0).astype(m.dtype))
+    sq_err = jnp.sum(mask * (m - y) ** 2)
+    o_ref[...] += jnp.stack([hinge, logistic, correct, sq_err])
+
+
+@functools.partial(jax.jit, static_argnames=("bl",))
+def binary_eval(m, y, mask, *, bl: int = DEFAULT_BL):
+    """Fused reductions; all inputs (L,) with L a multiple of bl.
+
+    Returns a (4,) vector [hinge_sum, logistic_sum, correct, sq_err_sum].
+    """
+    (l,) = m.shape
+    assert l % bl == 0, (l, bl)
+    grid = (l // bl,)
+    return pl.pallas_call(
+        _losses_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+        interpret=True,
+    )(m, y, mask)
+
+
+def binary_eval_padded(m, y, mask, *, bl: int = DEFAULT_BL):
+    """binary_eval() for arbitrary L via zero-padding (mask handles it)."""
+    (l,) = m.shape
+    lp = -(-l // bl) * bl
+    pad = (0, lp - l)
+    return binary_eval(jnp.pad(m, pad), jnp.pad(y, pad), jnp.pad(mask, pad), bl=bl)

@@ -1,0 +1,69 @@
+"""Tiled dense margins matvec — the validator's L1 hot-spot.
+
+Computes ``m = X @ w`` for a dense data tile X of shape (L, D) by
+gridding over (L/BL, D/BD) VMEM blocks: each program multiplies an
+(BL, BD) block of X against a (BD,) slice of w on the MXU and
+accumulates into the (BL,) output block.
+
+TPU design notes (DESIGN.md §Hardware-Adaptation):
+  * BL×BD f32 block at the default (256, 256) = 256 KiB of VMEM for X
+    plus 1 KiB for w and 1 KiB for the accumulator — comfortably within
+    a TensorCore's ~16 MiB VMEM, leaving room for double-buffering the
+    HBM→VMEM stream along the D grid axis.
+  * The inner product maps to the MXU as a (BL, BD) × (BD, 1) matmul;
+    f32 accumulation avoids bf16 drift across D tiles.
+  * Grid order (row-major over (i, j)) makes the j axis innermost so the
+    partial-sum accumulator for a row block stays resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BL = 256
+DEFAULT_BD = 256
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """One (i, j) grid cell: o[i] += X[i,j] @ w[j]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BL, BD) @ (BD,) on the MXU, f32 accumulation
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bd"))
+def margins(x, w, *, bl: int = DEFAULT_BL, bd: int = DEFAULT_BD):
+    """m = X @ w with Pallas tiling. Shapes must divide (bl, bd)."""
+    l, d = x.shape
+    assert l % bl == 0 and d % bd == 0, (l, d, bl, bd)
+    grid = (l // bl, d // bd)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def margins_padded(x, w, *, bl: int = DEFAULT_BL, bd: int = DEFAULT_BD):
+    """margins() for arbitrary shapes via zero-padding to tile multiples."""
+    l, d = x.shape
+    lp = -(-l // bl) * bl
+    dp = -(-d // bd) * bd
+    xp = jnp.pad(x, ((0, lp - l), (0, dp - d)))
+    wp = jnp.pad(w, (0, dp - d))
+    return margins(xp, wp, bl=bl, bd=bd)[:l]

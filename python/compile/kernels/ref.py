@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness baseline.
+
+Each function here is the mathematically obvious implementation; the
+pytest suite asserts the Pallas kernels match these within float32
+tolerance across hypothesis-generated shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def margins(x, w):
+    """Row margins of a dense data tile: m = X·w. x: (L, D), w: (D,)."""
+    return x @ w
+
+
+def binary_eval(m, y, mask):
+    """Masked binary-classification reductions over margins.
+
+    Returns (hinge_sum, logistic_sum, correct_count, sq_err_sum):
+      hinge    Σ mask·max(0, 1 − y·m)
+      logistic Σ mask·log(1 + exp(−y·m))   (numerically stable)
+      correct  Σ mask·[y·m > 0]
+      sq_err   Σ mask·(m − y)²             (regression reuse)
+    """
+    ym = y * m
+    hinge = jnp.sum(mask * jnp.maximum(0.0, 1.0 - ym))
+    # stable softplus(−ym)
+    logistic = jnp.sum(mask * (jnp.maximum(-ym, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(ym)))))
+    correct = jnp.sum(mask * (ym > 0.0).astype(m.dtype))
+    sq_err = jnp.sum(mask * (m - y) ** 2)
+    return hinge, logistic, correct, sq_err
+
+
+def cd_sweep(q, w, seq):
+    """Sequential CD Newton-projection sweep on f(w) = ½ wᵀQw.
+
+    For each index i in seq: w_i ← w_i − (Q_i·w)/Q_ii, accumulating the
+    log-progress Σ log f_before − log f_after, renormalizing w after each
+    step (the chain is scale invariant; this keeps f representable in
+    float32 over long sweeps). Returns (w_out, total).
+    Reference implementation with a python loop (small n only).
+    """
+    total = jnp.array(0.0, dtype=w.dtype)
+    for i in list(seq):
+        i = int(i)
+        f_before = 0.5 * w @ (q @ w)
+        g = q[i] @ w
+        w = w.at[i].add(-g / q[i, i])
+        f_after = jnp.maximum(0.5 * w @ (q @ w), 1e-30)
+        total = total + (jnp.log(f_before) - jnp.log(f_after))
+        w = w / jnp.maximum(jnp.sqrt(jnp.sum(w * w)), 1e-30)
+    return w, total

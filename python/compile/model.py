@@ -1,0 +1,77 @@
+"""L2 — the JAX compute graphs the Rust runtime executes (via AOT HLO).
+
+Three graph families, all calling the L1 Pallas kernels:
+
+* ``margins_block``   — one (BL, BD) tile's contribution to m = X·w;
+  the Rust validator streams dense tiles of the sparse design matrix
+  through this graph and accumulates partial margins.
+* ``binary_eval_block`` — fused masked loss/accuracy reductions over a
+  margins block (hinge, logistic, correct count, squared error).
+* ``cd_sweep_block``  — the §6 Markov-chain CD sweep on a dense Q.
+
+Fixed shapes (AOT contract, mirrored by rust/src/runtime/):
+  BL = 256 rows per tile, BD = 256 features per tile,
+  MARKOV_N = 8 coordinates, MARKOV_M = 256 steps per sweep block.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cd_sweep as _cd_sweep
+from .kernels import losses as _losses
+from .kernels import matvec as _matvec
+
+# AOT tile contract — keep in sync with rust/src/runtime/mod.rs.
+BL = 256
+BD = 256
+MARKOV_N = 8
+MARKOV_M = 256
+
+
+def margins_block(x_tile, w_tile):
+    """Partial margins of one dense tile: (BL, BD) × (BD,) → (BL,)."""
+    return (_matvec.margins(x_tile, w_tile, bl=BL, bd=BD),)
+
+
+def binary_eval_block(m, y, mask):
+    """Fused reductions over a margins block of BL entries.
+
+    Returns a (4,) vector [hinge_sum, logistic_sum, correct, sq_err_sum].
+    """
+    return (_losses.binary_eval(m, y, mask, bl=BL),)
+
+
+def cd_sweep_block(q, w, seq):
+    """One CD sweep block on the MARKOV_N-dim quadratic."""
+    w_out, total = _cd_sweep.sweep(q, w, seq)
+    return (w_out, total)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of each graph."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return {
+        "margins": (
+            jax.ShapeDtypeStruct((BL, BD), f32),
+            jax.ShapeDtypeStruct((BD,), f32),
+        ),
+        "binary_eval": (
+            jax.ShapeDtypeStruct((BL,), f32),
+            jax.ShapeDtypeStruct((BL,), f32),
+            jax.ShapeDtypeStruct((BL,), f32),
+        ),
+        "cd_sweep": (
+            jax.ShapeDtypeStruct((MARKOV_N, MARKOV_N), f32),
+            jax.ShapeDtypeStruct((MARKOV_N,), f32),
+            jax.ShapeDtypeStruct((MARKOV_M,), i32),
+        ),
+    }
+
+
+GRAPHS = {
+    "margins": margins_block,
+    "binary_eval": binary_eval_block,
+    "cd_sweep": cd_sweep_block,
+}

@@ -1,0 +1,184 @@
+"""Pallas kernel correctness vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; every kernel must match its
+oracle within float32 tolerance. This is the CORE correctness signal of
+the L1 layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import cd_sweep, losses, matvec, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, lo=-2.0, hi=2.0):
+    return (rng.uniform(lo, hi, size=shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matvec
+
+@settings(**SETTINGS)
+@given(
+    li=st.integers(1, 3),
+    dj=st.integers(1, 3),
+    bl=st.sampled_from([8, 16]),
+    bd=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_matches_ref_tiled(li, dj, bl, bd, seed):
+    rng = np.random.default_rng(seed)
+    l, d = li * bl, dj * bd
+    x = rand(rng, l, d)
+    w = rand(rng, d)
+    got = matvec.margins(jnp.asarray(x), jnp.asarray(w), bl=bl, bd=bd)
+    want = ref.margins(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    l=st.integers(1, 70),
+    d=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_padded_arbitrary_shapes(l, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, l, d)
+    w = rand(rng, d)
+    got = matvec.margins_padded(jnp.asarray(x), jnp.asarray(w), bl=16, bd=16)
+    want = ref.margins(x, w)
+    assert got.shape == (l,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_margins_rejects_non_multiple():
+    with pytest.raises(AssertionError):
+        matvec.margins(jnp.zeros((10, 16)), jnp.zeros((16,)), bl=16, bd=16)
+
+
+def test_margins_zero_weight_gives_zero():
+    x = jnp.ones((16, 16), jnp.float32)
+    w = jnp.zeros((16,), jnp.float32)
+    out = matvec.margins(x, w, bl=16, bd=16)
+    assert_allclose(np.asarray(out), np.zeros(16), atol=0)
+
+
+# ---------------------------------------------------------------- losses
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 4),
+    bl=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_eval_matches_ref(blocks, bl, seed):
+    rng = np.random.default_rng(seed)
+    l = blocks * bl
+    m = rand(rng, l, lo=-4.0, hi=4.0)
+    y = np.where(rng.uniform(size=l) < 0.5, -1.0, 1.0).astype(np.float32)
+    mask = (rng.uniform(size=l) < 0.8).astype(np.float32)
+    got = losses.binary_eval(jnp.asarray(m), jnp.asarray(y), jnp.asarray(mask), bl=bl)
+    want = jnp.stack(ref.binary_eval(jnp.asarray(m), jnp.asarray(y), jnp.asarray(mask)))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(l=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+def test_binary_eval_padded(l, seed):
+    rng = np.random.default_rng(seed)
+    m = rand(rng, l, lo=-3.0, hi=3.0)
+    y = np.where(rng.uniform(size=l) < 0.5, -1.0, 1.0).astype(np.float32)
+    mask = np.ones(l, np.float32)
+    got = losses.binary_eval_padded(
+        jnp.asarray(m), jnp.asarray(y), jnp.asarray(mask), bl=16
+    )
+    want = jnp.stack(ref.binary_eval(jnp.asarray(m), jnp.asarray(y), jnp.asarray(mask)))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_binary_eval_mask_zeroes_padding():
+    m = jnp.asarray(np.array([10.0] * 8 + [99.0] * 8, np.float32))
+    y = jnp.ones((16,), jnp.float32)
+    mask = jnp.asarray(np.array([1.0] * 8 + [0.0] * 8, np.float32))
+    got = losses.binary_eval(m, y, mask, bl=8)
+    # correct-count = 8 (only masked-in rows count)
+    assert float(got[2]) == 8.0
+
+
+def test_binary_eval_known_values():
+    m = jnp.asarray(np.array([0.5, -0.5, 2.0, -2.0], np.float32))
+    y = jnp.asarray(np.array([1.0, 1.0, -1.0, -1.0], np.float32))
+    mask = jnp.ones((4,), jnp.float32)
+    got = np.asarray(losses.binary_eval(m, y, mask, bl=4))
+    # ym = [0.5, −0.5, −2, 2]; hinge = 0.5+1.5+3+0 = 5
+    assert_allclose(got[0], 5.0, rtol=1e-6)
+    # correct = 2
+    assert got[2] == 2.0
+    # sq_err = (0.5−1)²+(−0.5−1)²+(2+1)²+(−2+1)² = .25+2.25+9+1 = 12.5
+    assert_allclose(got[3], 12.5, rtol=1e-6)
+
+
+# -------------------------------------------------------------- cd_sweep
+
+def spd_matrix(rng, n):
+    a = rng.normal(size=(2 * n, n)).astype(np.float32)
+    q = a.T @ a / (2 * n) + 0.1 * np.eye(n, dtype=np.float32)
+    return q
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 8),
+    m=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cd_sweep_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    q = spd_matrix(rng, n)
+    w = rand(rng, n)
+    seq = rng.integers(0, n, size=m).astype(np.int32)
+    w_got, tot_got = cd_sweep.sweep(jnp.asarray(q), jnp.asarray(w), jnp.asarray(seq))
+    w_want, tot_want = ref.cd_sweep(jnp.asarray(q), jnp.asarray(w), seq)
+    assert_allclose(np.asarray(w_got), np.asarray(w_want), rtol=2e-4, atol=2e-4)
+    assert_allclose(float(tot_got[0]), float(tot_want), rtol=2e-3, atol=2e-3)
+
+
+def test_cd_sweep_progress_is_positive_and_unit_norm():
+    rng = np.random.default_rng(0)
+    n = 6
+    q = spd_matrix(rng, n)
+    w = rand(rng, n)
+    seq = np.arange(n, dtype=np.int32)
+    w_out, total = cd_sweep.sweep(jnp.asarray(q), jnp.asarray(w), jnp.asarray(seq))
+    w_out = np.asarray(w_out)
+    # positive accumulated log-progress and renormalized output state
+    assert float(total[0]) > 0.0
+    assert_allclose(np.linalg.norm(w_out), 1.0, rtol=1e-5)
+
+
+def test_cd_sweep_total_is_scale_invariant():
+    # Lemma 1: scaling the start point must not change the log-progress.
+    rng = np.random.default_rng(3)
+    n = 5
+    q = spd_matrix(rng, n)
+    w = rand(rng, n)
+    seq = rng.integers(0, n, size=32).astype(np.int32)
+    _, t1 = cd_sweep.sweep(jnp.asarray(q), jnp.asarray(w), jnp.asarray(seq))
+    _, t2 = cd_sweep.sweep(jnp.asarray(q), jnp.asarray(w * 7.5), jnp.asarray(seq))
+    assert_allclose(float(t1[0]), float(t2[0]), rtol=1e-3, atol=1e-3)
+
+
+def test_cd_sweep_repeated_accumulates():
+    rng = np.random.default_rng(1)
+    n = 4
+    q = spd_matrix(rng, n)
+    w = rand(rng, n)
+    seq = np.arange(n, dtype=np.int32)
+    _, t1 = cd_sweep.sweep_repeated(jnp.asarray(q), jnp.asarray(w), jnp.asarray(seq), reps=1)
+    _, t3 = cd_sweep.sweep_repeated(jnp.asarray(q), jnp.asarray(w), jnp.asarray(seq), reps=3)
+    assert float(t3[0]) > float(t1[0]) > 0.0

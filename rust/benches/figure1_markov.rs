@@ -1,0 +1,118 @@
+//! Figure 1 — the §6 Markov-chain experiment: for random RBF-Gram
+//! quadratics in dimensions n ∈ {4, 5, 6, 7}, balance π with the Rprop
+//! procedure to get π̄ ≈ π*, then sweep the perturbation curves
+//! γ_{π̄,i}(t) for t ∈ {−1, −½, −¼, −⅒, 0, ⅒, ¼, ½, 1} and report
+//! ρ(γ)/ρ(π̄) per coordinate. Conjecture 1 predicts every curve is
+//! uni-modal with its maximum at t = 0.
+//!
+//! The same sweep mechanics run through the AOT `cd_sweep` Pallas kernel
+//! (L1) via the PJRT runtime as a cross-stack consistency check.
+//!
+//! Run: `cargo bench --bench figure1_markov [-- --quick]`
+
+use acf_cd::bench_util::{BenchConfig, Table};
+use acf_cd::markov::{self, BalanceConfig, Quadratic, T_GRID};
+use acf_cd::runtime::Runtime;
+use acf_cd::util::json::{arr_f64, Json};
+use acf_cd::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let dims: Vec<usize> = if cfg.quick { vec![4, 5] } else { vec![4, 5, 6, 7] };
+    let steps: u64 = if cfg.quick { 500_000 } else { 4_000_000 };
+    let mut results = Json::obj();
+    let mut peak_count = 0usize;
+    let mut curve_count = 0usize;
+    for &n in &dims {
+        let mut rng = Rng::new(cfg.seed ^ n as u64);
+        let q = Quadratic::rbf_gram(n, 3.0, &mut rng);
+        let bal = markov::balance(
+            &q,
+            &BalanceConfig {
+                steps_per_round: steps / 4,
+                max_rounds: 80,
+                tol: 0.02,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        eprintln!(
+            "n = {n}: balanced after {} rounds, imbalance {:.3}, ρ(π̄) = {:.6}",
+            bal.rounds, bal.imbalance, bal.rho
+        );
+        let curves = markov::curves_around(&q, &bal.pi, 4_000, steps, &mut rng);
+        let mut headers = vec!["coord".to_string()];
+        headers.extend(T_GRID.iter().map(|t| format!("t={t}")));
+        headers.push("max@0".into());
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Figure 1 (analog) — ρ(γ_π̄,i(t))/ρ(π̄), n = {n}"),
+            &header_refs,
+        );
+        let mut jn = Json::obj();
+        jn.set("pi_bar", arr_f64(&bal.pi)).set("rho", Json::Num(bal.rho));
+        let mut jcurves = Vec::new();
+        for c in &curves {
+            curve_count += 1;
+            let peaked = c.max_at_zero(0.02);
+            if peaked {
+                peak_count += 1;
+            }
+            let mut row = vec![format!("{}", c.coordinate)];
+            row.extend(c.relative_rho.iter().map(|r| format!("{r:.4}")));
+            row.push(if peaked { "yes".into() } else { "NO".into() });
+            t.row(row);
+            jcurves.push(arr_f64(&c.relative_rho));
+        }
+        jn.set("curves", Json::Arr(jcurves));
+        t.print();
+        results.set(&format!("n{n}"), jn);
+    }
+    println!(
+        "\n{peak_count}/{curve_count} curves peak at t = 0 (Conjecture 1 signature)"
+    );
+    results.set("curves_peaked", Json::Num(peak_count as f64));
+    results.set("curves_total", Json::Num(curve_count as f64));
+
+    // Cross-stack check: run a fixed coordinate sequence through the AOT
+    // Pallas cd_sweep kernel and the native Rust chain; log-progress must
+    // agree (documents that L1 composes with L3 on this experiment).
+    match Runtime::load_default() {
+        Ok(rt) => {
+            use acf_cd::runtime::{MARKOV_M, MARKOV_N};
+            let n = 6usize;
+            let mut rng = Rng::new(cfg.seed ^ 0xCD);
+            let quad = Quadratic::rbf_gram(n, 1.0, &mut rng);
+            let mut q = vec![0.0f32; MARKOV_N * MARKOV_N];
+            for i in 0..MARKOV_N {
+                for j in 0..MARKOV_N {
+                    q[i * MARKOV_N + j] = if i < n && j < n {
+                        quad.entry(i, j) as f32
+                    } else if i == j {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            let w0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut w_pad = vec![0.0f32; MARKOV_N];
+            for i in 0..n {
+                w_pad[i] = w0[i] as f32;
+            }
+            let seq: Vec<i32> = (0..MARKOV_M).map(|k| ((k * 5 + 1) % n) as i32).collect();
+            let (_w, total_pallas) = rt.cd_sweep_block(&q, &w_pad, &seq).expect("cd_sweep");
+            let mut chain = markov::Chain { q: &quad, w: w0 };
+            let sequ: Vec<u32> = seq.iter().map(|&i| i as u32).collect();
+            let total_rust = chain.apply_sequence(&sequ);
+            let rel = (total_pallas as f64 - total_rust).abs() / total_rust.abs().max(1.0);
+            println!(
+                "cross-stack cd_sweep: pallas {total_pallas:.4} vs rust {total_rust:.4} (rel {rel:.4})"
+            );
+            results.set("cross_stack_rel_err", Json::Num(rel));
+            assert!(rel < 0.05, "Pallas/Rust sweep mismatch");
+        }
+        Err(e) => eprintln!("skipping cross-stack check (artifacts not built): {e}"),
+    }
+    cfg.finish(results);
+}

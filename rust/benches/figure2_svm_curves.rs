@@ -1,0 +1,117 @@
+//! Figure 2 — linear SVM training-time curves as a function of C, for
+//! liblinear (shrinking) and ACF-CD at ε = 0.01 (solid) and ε = 0.001
+//! (dashed), with 3-fold cross-validation accuracy plotted alongside.
+//! This bench emits the same data series as the figure: per dataset, a
+//! (C, time_liblinear, time_acf) series per ε plus a (C, cv_accuracy)
+//! series.
+//!
+//! Run: `cargo bench --bench figure2_svm_curves [-- --quick]`
+
+use acf_cd::bench_util::{BenchConfig, Table};
+use acf_cd::coordinator::{cross_validate, run_sweep, JobSpec, Problem, SweepSpec};
+use acf_cd::data::Scale;
+use acf_cd::sched::Policy;
+use acf_cd::util::json::{arr_f64, Json};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let (scale, datasets, grid): (Scale, Vec<&str>, Vec<f64>) = if cfg.quick {
+        (Scale(0.12), vec!["rcv1-like"], vec![0.1, 1.0, 10.0])
+    } else {
+        (
+            Scale(0.6),
+            vec!["news20-like", "rcv1-like", "url-like", "covtype-like"],
+            vec![0.01, 0.1, 1.0, 10.0, 100.0, 1000.0],
+        )
+    };
+    let mut results = Json::obj();
+    for name in &datasets {
+        let mut series = Json::obj();
+        series.set("c_grid", arr_f64(&grid));
+        let mut t = Table::new(
+            &format!("Figure 2 (analog) — training time vs C on {name}"),
+            &["C", "lib ε=.01", "acf ε=.01", "lib ε=.001", "acf ε=.001", "3-fold CV"],
+        );
+        let mut rows: Vec<Vec<String>> = grid.iter().map(|c| vec![format!("{c}")]).collect();
+        for &eps in &[0.01, 0.001] {
+            let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, name, Policy::Acf);
+            base.scale = scale;
+            base.seed = cfg.seed;
+            base.eps = eps;
+            base.max_iterations = if cfg.quick { 5_000_000 } else { 60_000_000 };
+            let outcomes = run_sweep(&SweepSpec {
+                base,
+                grid: grid.clone(),
+                policies: vec![Policy::Acf],
+                include_shrinking: true,
+                workers: cfg.workers,
+            })
+            .expect("sweep");
+            let mut lib_times = Vec::new();
+            let mut acf_times = Vec::new();
+            for (gi, &c) in grid.iter().enumerate() {
+                let lib = outcomes
+                    .iter()
+                    .find(|o| {
+                        o.spec.problem.parameter() == c
+                            && o.spec.problem.family() == "svm-shrinking"
+                    })
+                    .unwrap();
+                let acf = outcomes
+                    .iter()
+                    .find(|o| o.spec.problem.parameter() == c && o.spec.policy == Policy::Acf)
+                    .unwrap();
+                let fmt = |o: &acf_cd::coordinator::JobOutcome| {
+                    if o.result.status.converged() {
+                        format!("{:.3}", o.result.seconds)
+                    } else {
+                        "—".to_string()
+                    }
+                };
+                rows[gi].push(fmt(lib));
+                rows[gi].push(fmt(acf));
+                lib_times.push(lib.result.seconds);
+                acf_times.push(acf.result.seconds);
+            }
+            series.set(&format!("liblinear_sec_eps{eps}"), arr_f64(&lib_times));
+            series.set(&format!("acf_sec_eps{eps}"), arr_f64(&acf_times));
+        }
+        // CV accuracy series (green curve in the paper's figure)
+        let mut cvs = Vec::new();
+        for (gi, &c) in grid.iter().enumerate() {
+            let acc = cross_validate(
+                Problem::Svm { c },
+                name,
+                Policy::Acf,
+                0.01,
+                scale,
+                3,
+                cfg.seed,
+                cfg.workers,
+            )
+            .unwrap_or(f64::NAN);
+            rows[gi].push(format!("{:.1}%", 100.0 * acc));
+            cvs.push(acc);
+        }
+        series.set("cv_accuracy", arr_f64(&cvs));
+        for r in rows {
+            t.row(r);
+        }
+        t.print();
+        // figure-shape audit: best CV accuracy should be interior
+        let best = cvs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!(
+            "best CV C = {} ({}) — interior of tested range: {}",
+            grid[best],
+            name,
+            best > 0 && best + 1 < grid.len()
+        );
+        results.set(name, series);
+    }
+    cfg.finish(results);
+}

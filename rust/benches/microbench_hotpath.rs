@@ -1,0 +1,185 @@
+//! Hot-path micro-benchmarks — the L3 profiling substrate for the perf
+//! pass (EXPERIMENTS.md §Perf). Times the primitives the CD inner loop
+//! is built from:
+//!
+//!   * scheduler next()+report() per policy (ACF overhead vs baselines),
+//!   * Algorithm 3 block generation,
+//!   * sparse dot / axpy at text-dataset sparsity,
+//!   * one full SVM CD step,
+//!   * PJRT margins-tile dispatch (validator path).
+//!
+//! Run: `cargo bench --bench microbench_hotpath [-- --quick]`
+
+use acf_cd::acf::{AcfParams, Preferences, SequenceGenerator};
+use acf_cd::bench_util::{bench_fn, black_box, BenchConfig};
+use acf_cd::data::synth;
+use acf_cd::sched::{
+    AcfSchedulerPolicy, CyclicScheduler, PermutationScheduler, Scheduler, UniformScheduler,
+};
+use acf_cd::util::json::Json;
+use acf_cd::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = if cfg.quick { 20 } else { 60 };
+    let n = 4096usize;
+    let mut reports = Vec::new();
+
+    // ---- scheduler overhead: 10k next()+report() cycles ---------------
+    let cycles = 10_000usize;
+    {
+        let mut s = CyclicScheduler::new(n);
+        reports.push(bench_fn("sched/cyclic 10k next+report", 3, iters, || {
+            let mut acc = 0usize;
+            for _ in 0..cycles {
+                let i = s.next();
+                s.report(i, 1.0);
+                acc += i;
+            }
+            acc
+        }));
+    }
+    {
+        let mut s = PermutationScheduler::new(n, Rng::new(1));
+        reports.push(bench_fn("sched/permutation 10k next+report", 3, iters, || {
+            let mut acc = 0usize;
+            for _ in 0..cycles {
+                let i = s.next();
+                s.report(i, 1.0);
+                acc += i;
+            }
+            acc
+        }));
+    }
+    {
+        let mut s = UniformScheduler::new(n, Rng::new(2));
+        reports.push(bench_fn("sched/uniform 10k next+report", 3, iters, || {
+            let mut acc = 0usize;
+            for _ in 0..cycles {
+                let i = s.next();
+                s.report(i, 1.0);
+                acc += i;
+            }
+            acc
+        }));
+    }
+    {
+        let mut s = AcfSchedulerPolicy::new(n, AcfParams::default(), Rng::new(3));
+        let mut g = 0.5f64;
+        reports.push(bench_fn("sched/acf 10k next+report", 3, iters, || {
+            let mut acc = 0usize;
+            for _ in 0..cycles {
+                let i = s.next();
+                g = (g * 1.1) % 2.0;
+                s.report(i, g);
+                acc += i;
+            }
+            acc
+        }));
+    }
+
+    // ---- Algorithm 3 block generation ---------------------------------
+    {
+        let mut prefs = Preferences::new(n, AcfParams::default());
+        for i in 0..n {
+            prefs.update(i, 1.0);
+        }
+        let mut gen = SequenceGenerator::new(n);
+        let mut rng = Rng::new(4);
+        let mut buf = Vec::with_capacity(2 * n);
+        reports.push(bench_fn("acf/block generation (n=4096)", 3, iters, || {
+            gen.next_block(&prefs, &mut rng, &mut buf);
+            buf.len()
+        }));
+    }
+
+    // ---- sparse kernel ops at text sparsity ----------------------------
+    let ds = synth::sparse_text(
+        &synth::SparseTextSpec {
+            name: "bench",
+            n: 2000,
+            d: 8000,
+            nnz_per_row: 50,
+            zipf_s: 1.0,
+            concept_k: 60,
+            noise: 0.03,
+        },
+        &mut Rng::new(5),
+    );
+    let w = vec![0.1f64; ds.n_features()];
+    {
+        let x = &ds.x;
+        reports.push(bench_fn("sparse/2000 row dots (50 nnz)", 3, iters, || {
+            let mut acc = 0.0;
+            for i in 0..x.rows() {
+                acc += x.row(i).dot_dense(&w);
+            }
+            acc
+        }));
+    }
+    {
+        let x = &ds.x;
+        let mut wmut = w.clone();
+        reports.push(bench_fn("sparse/2000 row axpy (50 nnz)", 3, iters, || {
+            for i in 0..x.rows() {
+                x.row(i).axpy_into(1e-9, &mut wmut);
+            }
+            wmut[0]
+        }));
+    }
+
+    // ---- one SVM CD epoch ----------------------------------------------
+    {
+        let q_diag = ds.x.row_norms_sq();
+        let mut alpha = vec![0.0f64; ds.n_instances()];
+        let mut wv = vec![0.0f64; ds.n_features()];
+        let c = 1.0;
+        reports.push(bench_fn("svm/one epoch of CD steps (2000)", 1, iters, || {
+            let mut progress = 0.0;
+            for i in 0..ds.n_instances() {
+                let row = ds.x.row(i);
+                let g = ds.y[i] * row.dot_dense(&wv) - 1.0;
+                let qii = q_diag[i];
+                if qii > 0.0 {
+                    let old = alpha[i];
+                    let new = (old - g / qii).clamp(0.0, c);
+                    let d = new - old;
+                    if d != 0.0 {
+                        alpha[i] = new;
+                        row.axpy_into(d * ds.y[i], &mut wv);
+                        progress += -(g * d + 0.5 * qii * d * d);
+                    }
+                }
+            }
+            progress
+        }));
+    }
+
+    // ---- PJRT validator dispatch ----------------------------------------
+    match acf_cd::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            use acf_cd::runtime::{BD, BL};
+            let mut rng = Rng::new(6);
+            let x: Vec<f32> = (0..BL * BD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let wt: Vec<f32> = (0..BD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            reports.push(bench_fn("pjrt/margins tile (256×256)", 2, iters.min(30), || {
+                black_box(rt.margins_tile(&x, &wt).unwrap())
+            }));
+            let m: Vec<f32> = (0..BL).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let y: Vec<f32> = (0..BL).map(|_| 1.0).collect();
+            let mask = vec![1.0f32; BL];
+            reports.push(bench_fn("pjrt/binary_eval block", 2, iters.min(30), || {
+                black_box(rt.binary_eval_block(&m, &y, &mask).unwrap())
+            }));
+        }
+        Err(e) => eprintln!("skipping PJRT microbench: {e}"),
+    }
+
+    println!();
+    for r in &reports {
+        r.print();
+    }
+    let mut results = Json::obj();
+    results.set("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+    cfg.finish(results);
+}

@@ -1,0 +1,110 @@
+//! Table 9 — dual logistic regression: liblinear (uniform sweeps in
+//! random order; no shrinking — the dual solution is dense) vs ACF-CD.
+//!
+//! Paper protocol: news20 / rcv1 / url analogs, C on a 10^k grid of 5
+//! values centered on the best 3-fold CV score, reporting CV accuracy,
+//! iterations, seconds and speed-ups. Shape expectation: near-parity or
+//! small losses at heavy regularization, speed-ups growing to 1–2 orders
+//! of magnitude at large C; baseline runs that exceed the budget are
+//! "—" (the paper's five-day DNFs).
+//!
+//! Run: `cargo bench --bench table9_logreg [-- --quick]`
+
+use acf_cd::bench_util::{BenchConfig, Table};
+use acf_cd::coordinator::{cross_validate, run_sweep, JobSpec, Problem, SweepSpec};
+use acf_cd::data::Scale;
+use acf_cd::sched::Policy;
+use acf_cd::util::json::Json;
+use acf_cd::util::timer::fmt_count;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let (scale, datasets): (Scale, Vec<(&str, Vec<f64>)>) = if cfg.quick {
+        (Scale(0.12), vec![("rcv1-like", vec![1.0, 10.0, 100.0])])
+    } else {
+        (
+            Scale(1.0),
+            vec![
+                ("news20-like", vec![1.0, 10.0, 100.0, 1000.0, 10000.0]),
+                ("rcv1-like", vec![1.0, 10.0, 100.0, 1000.0, 10000.0]),
+                ("url-like", vec![0.1, 1.0, 10.0, 100.0, 1000.0]),
+            ],
+        )
+    };
+    let mut results = Json::obj();
+    for (name, grid) in &datasets {
+        let mut base = JobSpec::new(Problem::LogReg { c: 1.0 }, name, Policy::Acf);
+        base.scale = scale;
+        base.seed = cfg.seed;
+        base.eps = 0.01;
+        base.max_iterations = if cfg.quick { 5_000_000 } else { 60_000_000 };
+        let sweep = SweepSpec {
+            base: base.clone(),
+            grid: grid.clone(),
+            policies: vec![Policy::Permutation, Policy::Acf],
+            include_shrinking: false,
+            workers: cfg.workers,
+        };
+        let outcomes = run_sweep(&sweep).expect("sweep");
+        let mut t = Table::new(
+            &format!("Table 9 (analog) — dual logistic regression on {name}"),
+            &[
+                "C", "3-fold CV", "liblinear iters", "liblinear sec", "acf iters", "acf sec",
+                "speedup iter", "speedup time",
+            ],
+        );
+        for &c in grid {
+            let lib = outcomes
+                .iter()
+                .find(|o| {
+                    o.spec.problem.parameter() == c && o.spec.policy == Policy::Permutation
+                })
+                .unwrap();
+            let acf = outcomes
+                .iter()
+                .find(|o| o.spec.problem.parameter() == c && o.spec.policy == Policy::Acf)
+                .unwrap();
+            let cv = cross_validate(
+                Problem::LogReg { c },
+                name,
+                Policy::Acf,
+                base.eps,
+                scale,
+                3,
+                cfg.seed,
+                cfg.workers,
+            )
+            .unwrap_or(f64::NAN);
+            let dnf_l = !lib.result.status.converged();
+            let dnf_a = !acf.result.status.converged();
+            let cell = |x: f64, dnf: bool| if dnf { "—".into() } else { fmt_count(x) };
+            let secf = |s: f64, dnf: bool| {
+                if dnf {
+                    "—".to_string()
+                } else {
+                    format!("{s:.3}")
+                }
+            };
+            let ratio = |a: f64, b: f64| {
+                if dnf_l || dnf_a || b <= 0.0 {
+                    "—".to_string()
+                } else {
+                    format!("{:.1}", a / b)
+                }
+            };
+            t.row(vec![
+                format!("{c}"),
+                format!("{:.1}%", 100.0 * cv),
+                cell(lib.result.iterations as f64, dnf_l),
+                secf(lib.result.seconds, dnf_l),
+                cell(acf.result.iterations as f64, dnf_a),
+                secf(acf.result.seconds, dnf_a),
+                ratio(lib.result.iterations as f64, acf.result.iterations as f64),
+                ratio(lib.result.seconds, acf.result.seconds),
+            ]);
+        }
+        t.print();
+        results.set(name, acf_cd::coordinator::outcomes_json(&outcomes));
+    }
+    cfg.finish(results);
+}

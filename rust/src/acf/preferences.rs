@@ -1,0 +1,363 @@
+//! Algorithm 2 — the **Adaptive Coordinate Frequencies update**.
+//!
+//! Maintains unnormalized preferences `p_i` with `π_i = p_i / p_sum` and
+//! an exponentially fading record `r̄` of average single-step progress.
+//! After a CD step on coordinate `i` with observed gain `Δf`:
+//!
+//! ```text
+//! p_new ← clip( exp(c · (Δf/r̄ − 1)) · p_i , p_min, p_max )
+//! p_sum ← p_sum + p_new − p_i
+//! p_i   ← p_new
+//! r̄     ← (1 − η)·r̄ + η·Δf
+//! ```
+//!
+//! Paper defaults (Table 1): `c = 1/5`, `p_min = 1/20`, `p_max = 20`,
+//! `η = 1/n`. The paper notes the algorithm is rather insensitive to
+//! these values.
+
+/// Tunable ACF parameters (paper Table 1 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct AcfParams {
+    /// learning rate of the preference update
+    pub c: f64,
+    /// lower clip bound for preferences
+    pub p_min: f64,
+    /// upper clip bound for preferences
+    pub p_max: f64,
+    /// fading rate of the average-progress record; `None` = 1/n
+    pub eta: Option<f64>,
+}
+
+impl Default for AcfParams {
+    fn default() -> Self {
+        Self { c: 0.2, p_min: 1.0 / 20.0, p_max: 20.0, eta: None }
+    }
+}
+
+/// Preference state of the ACF scheduler.
+#[derive(Clone, Debug)]
+pub struct Preferences {
+    params: AcfParams,
+    eta: f64,
+    p: Vec<f64>,
+    p_sum: f64,
+    /// fading average progress r̄; `None` until warm-up completes
+    r_bar: Option<f64>,
+    /// accumulated progress during warm-up (first sweep, no adaptation)
+    warmup_sum: f64,
+    warmup_count: usize,
+    warmup_target: usize,
+}
+
+impl Preferences {
+    /// Uniform initialization over `n` coordinates. Warm-up lasts one
+    /// sweep (`n` steps, paper §5): during warm-up, progress samples only
+    /// feed the initial estimate of r̄ and preferences stay uniform.
+    pub fn new(n: usize, params: AcfParams) -> Self {
+        assert!(n > 0);
+        assert!(params.p_min > 0.0 && params.p_min <= 1.0);
+        assert!(params.p_max >= 1.0);
+        assert!(params.c > 0.0);
+        let eta = params.eta.unwrap_or(1.0 / n as f64);
+        Self {
+            params,
+            eta,
+            p: vec![1.0; n],
+            p_sum: n as f64,
+            r_bar: None,
+            warmup_sum: 0.0,
+            warmup_count: 0,
+            warmup_target: n,
+        }
+    }
+
+    /// Initialize with an informed (non-uniform) preference vector.
+    pub fn with_initial(p: Vec<f64>, params: AcfParams) -> Self {
+        let n = p.len();
+        let mut s = Self::new(n, params);
+        s.p_sum = p.iter().sum();
+        assert!(s.p_sum > 0.0);
+        s.p = p;
+        for v in &s.p {
+            assert!(*v >= s.params.p_min && *v <= s.params.p_max);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    pub fn params(&self) -> &AcfParams {
+        self.params_ref()
+    }
+
+    fn params_ref(&self) -> &AcfParams {
+        &self.params
+    }
+
+    /// Raw preference of coordinate i.
+    #[inline]
+    pub fn preference(&self, i: usize) -> f64 {
+        self.p[i]
+    }
+
+    /// Selection probability π_i = p_i / p_sum.
+    #[inline]
+    pub fn probability(&self, i: usize) -> f64 {
+        self.p[i] / self.p_sum
+    }
+
+    pub fn p_sum(&self) -> f64 {
+        self.p_sum
+    }
+
+    pub fn probabilities(&self) -> Vec<f64> {
+        self.p.iter().map(|&v| v / self.p_sum).collect()
+    }
+
+    pub fn r_bar(&self) -> Option<f64> {
+        self.r_bar
+    }
+
+    pub fn in_warmup(&self) -> bool {
+        self.r_bar.is_none()
+    }
+
+    /// Algorithm 2: record progress `delta_f` of a step on coordinate `i`
+    /// and adapt the preference. `delta_f` must be the *decrease* of the
+    /// objective (non-negative for an exact one-dimensional solve; tiny
+    /// negatives from floating-point noise are clamped to 0).
+    #[inline]
+    pub fn update(&mut self, i: usize, delta_f: f64) {
+        let delta_f = delta_f.max(0.0);
+        match self.r_bar {
+            None => {
+                // Warm-up: collect average progress over ~one sweep.
+                self.warmup_sum += delta_f;
+                self.warmup_count += 1;
+                if self.warmup_count >= self.warmup_target {
+                    let mean = self.warmup_sum / self.warmup_count as f64;
+                    // Guard: an all-zero warm-up (already optimal) leaves
+                    // r̄ unset; adaptation stays off until progress shows.
+                    if mean > 0.0 {
+                        self.r_bar = Some(mean);
+                    } else {
+                        self.warmup_sum = 0.0;
+                        self.warmup_count = 0;
+                    }
+                }
+            }
+            Some(r_bar) => {
+                debug_assert!(r_bar > 0.0);
+                // Hot-path shortcuts (exact, by monotonicity of the
+                // update): a preference already pinned at a bound only
+                // moves if the multiplier points inward, so the common
+                // converged cases (Δf below average at p_min, above
+                // average at p_max) skip the exp() entirely.
+                let p_i = self.p[i];
+                let up = delta_f > r_bar;
+                if !((p_i <= self.params.p_min && !up) || (p_i >= self.params.p_max && up)) {
+                    // exp-argument clamped for numerical safety on wildly
+                    // non-stationary progress (e.g. the first step after
+                    // a constraint activates); bounds chosen so exp()
+                    // cannot overflow and a single sample cannot blow
+                    // past the clip range by more than e^±8.
+                    let arg = (self.params.c * (delta_f / r_bar - 1.0)).clamp(-8.0, 8.0);
+                    let p_new =
+                        (arg.exp() * p_i).clamp(self.params.p_min, self.params.p_max);
+                    self.p_sum += p_new - p_i;
+                    self.p[i] = p_new;
+                }
+                let r_new = (1.0 - self.eta) * r_bar + self.eta * delta_f;
+                // r̄ must stay strictly positive for the ratio to exist;
+                // freeze at a tiny floor when converged.
+                self.r_bar = Some(r_new.max(f64::MIN_POSITIVE * 1e16));
+            }
+        }
+    }
+
+    /// Re-normalize the stored sum (guards against floating-point drift
+    /// across billions of incremental updates; called once per epoch by
+    /// the scheduler).
+    pub fn refresh_sum(&mut self) {
+        self.p_sum = self.p.iter().sum();
+    }
+
+    /// Reset coordinate i's preference (used when a coordinate re-enters
+    /// the active set after unshrinking).
+    pub fn reset(&mut self, i: usize, value: f64) {
+        let v = value.clamp(self.params.p_min, self.params.p_max);
+        self.p_sum += v - self.p[i];
+        self.p[i] = v;
+    }
+
+    /// Invariant check for property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, &v) in self.p.iter().enumerate() {
+            if !(self.params.p_min..=self.params.p_max).contains(&v) {
+                return Err(format!("p[{i}] = {v} out of bounds"));
+            }
+        }
+        let direct: f64 = self.p.iter().sum();
+        if (direct - self.p_sum).abs() > 1e-6 * direct.max(1.0) {
+            return Err(format!("p_sum drift: stored {} vs direct {direct}", self.p_sum));
+        }
+        if let Some(r) = self.r_bar {
+            if !(r > 0.0) {
+                return Err(format!("r_bar not positive: {r}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn warmed(n: usize) -> Preferences {
+        let mut p = Preferences::new(n, AcfParams::default());
+        for i in 0..n {
+            p.update(i, 1.0);
+        }
+        assert!(!p.in_warmup());
+        p
+    }
+
+    #[test]
+    fn warmup_initializes_r_bar_to_mean() {
+        let mut p = Preferences::new(4, AcfParams::default());
+        for (i, g) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            assert!(p.in_warmup());
+            p.update(i, *g);
+        }
+        assert!((p.r_bar().unwrap() - 2.5).abs() < 1e-12);
+        // preferences untouched during warmup
+        assert!(p.probabilities().iter().all(|&x| (x - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn zero_warmup_defers_adaptation() {
+        let mut p = Preferences::new(3, AcfParams::default());
+        for i in 0..3 {
+            p.update(i, 0.0);
+        }
+        assert!(p.in_warmup());
+        // progress appears later
+        for i in 0..3 {
+            p.update(i, 0.5);
+        }
+        assert!(!p.in_warmup());
+    }
+
+    #[test]
+    fn above_average_progress_raises_preference() {
+        let mut p = warmed(4);
+        let before = p.preference(2);
+        p.update(2, 10.0); // way above r̄ ≈ 1
+        assert!(p.preference(2) > before);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn below_average_progress_lowers_preference() {
+        let mut p = warmed(4);
+        let before = p.preference(1);
+        p.update(1, 0.0);
+        assert!(p.preference(1) < before);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn average_progress_is_neutral() {
+        let mut p = warmed(4);
+        let r = p.r_bar().unwrap();
+        let before = p.preference(0);
+        p.update(0, r); // Δf = r̄ ⇒ exp(0) = 1
+        assert!((p.preference(0) - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_holds_under_extreme_updates() {
+        let mut p = warmed(4);
+        for _ in 0..200 {
+            p.update(0, 100.0);
+        }
+        assert!(p.preference(0) <= AcfParams::default().p_max + 1e-12);
+        for _ in 0..500 {
+            p.update(1, 0.0);
+        }
+        assert!(p.preference(1) >= AcfParams::default().p_min - 1e-12);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let mut p = warmed(8);
+        let mut g = 0.3;
+        for step in 0..1000 {
+            p.update(step % 8, g);
+            g = (g * 1.37) % 3.0;
+        }
+        let s: f64 = p.probabilities().iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn r_bar_tracks_fading_average() {
+        let params = AcfParams { eta: Some(0.5), ..Default::default() };
+        let mut p = Preferences::new(2, params);
+        p.update(0, 1.0);
+        p.update(1, 1.0); // warmup done, r̄ = 1
+        p.update(0, 3.0); // r̄ ← 0.5·1 + 0.5·3 = 2
+        assert!((p.r_bar().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_invariants_hold_under_random_updates() {
+        prop::check(50, |gen| {
+            let n = gen.usize_in(1, 40);
+            let mut p = Preferences::new(n, AcfParams::default());
+            let steps = gen.usize_in(n, 500);
+            for _ in 0..steps {
+                let i = gen.usize_in(0, n - 1);
+                let g = if gen.bool() { gen.f64_in(0.0, 5.0) } else { 0.0 };
+                p.update(i, g);
+            }
+            p.check_invariants().map_err(|e| e)
+        });
+    }
+
+    #[test]
+    fn negative_progress_is_clamped() {
+        let mut p = warmed(3);
+        let before = p.preference(0);
+        p.update(0, -1e-9); // fp noise: treated as 0 ⇒ preference drops
+        assert!(p.preference(0) <= before);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reset_and_refresh() {
+        let mut p = warmed(5);
+        p.update(3, 9.0);
+        p.reset(3, 1.0);
+        assert_eq!(p.preference(3), 1.0);
+        p.refresh_sum();
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn informed_initialization() {
+        let p = Preferences::with_initial(vec![0.5, 2.0, 1.0], AcfParams::default());
+        assert!((p.probability(1) - 2.0 / 3.5).abs() < 1e-12);
+        p.check_invariants().unwrap();
+    }
+}

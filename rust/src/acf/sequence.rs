@@ -1,0 +1,217 @@
+//! Algorithm 3 — deterministic block sampling from the coordinate
+//! distribution π in amortized O(1) per CD iteration.
+//!
+//! Per block: for every coordinate, `a_i ← a_i + n·p_i/p_sum`; append
+//! `⌊a_i⌋` copies of `i`; keep the fractional part; shuffle the block.
+//! The produced sequence respects π exactly over time, emits on average
+//! `n` (at most `2n`) indices per block at Θ(n) cost, and guarantees a
+//! waiting time of at most `⌈1/(n·π_min)⌉ ≤ ⌈p_sum/(n·p_min)⌉` blocks for
+//! every coordinate — the "essentially cyclic" property that carries the
+//! CD convergence guarantees over to ACF (paper §5).
+
+use super::preferences::Preferences;
+use crate::util::rng::Rng;
+
+/// Block sequence generator (accumulator state of Algorithm 3).
+#[derive(Clone, Debug)]
+pub struct SequenceGenerator {
+    accumulators: Vec<f64>,
+}
+
+impl SequenceGenerator {
+    pub fn new(n: usize) -> Self {
+        Self { accumulators: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.accumulators.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accumulators.is_empty()
+    }
+
+    /// Generate the next block of coordinate indices according to the
+    /// current preferences. Reuses `out` to avoid per-block allocation in
+    /// the hot loop.
+    pub fn next_block(&mut self, prefs: &Preferences, rng: &mut Rng, out: &mut Vec<u32>) {
+        let n = self.accumulators.len();
+        debug_assert_eq!(n, prefs.len());
+        out.clear();
+        let scale = n as f64 / prefs.p_sum();
+        for i in 0..n {
+            let a = self.accumulators[i] + prefs.preference(i) * scale;
+            let k = a as usize; // ⌊a⌋ (a ≥ 0 always)
+            for _ in 0..k {
+                out.push(i as u32);
+            }
+            self.accumulators[i] = a - k as f64;
+        }
+        rng.shuffle(out);
+    }
+
+    /// Like [`Self::next_block`] but allocates the output.
+    pub fn block(&mut self, prefs: &Preferences, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(2 * self.accumulators.len());
+        self.next_block(prefs, rng, &mut out);
+        out
+    }
+
+    /// Reset accumulator state (used after shrinking re-indexes
+    /// coordinates).
+    pub fn reset(&mut self, n: usize) {
+        self.accumulators.clear();
+        self.accumulators.resize(n, 0.0);
+    }
+
+    pub fn accumulator(&self, i: usize) -> f64 {
+        self.accumulators[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acf::preferences::AcfParams;
+    use crate::util::prop;
+
+    fn prefs_with(p: Vec<f64>) -> Preferences {
+        Preferences::with_initial(p, AcfParams::default())
+    }
+
+    #[test]
+    fn uniform_prefs_emit_each_coordinate_once() {
+        let prefs = prefs_with(vec![1.0; 10]);
+        let mut gen = SequenceGenerator::new(10);
+        let mut rng = Rng::new(1);
+        let block = gen.block(&prefs, &mut rng);
+        let mut sorted = block.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0u32..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn block_size_bounds() {
+        // average n, at most 2n per block
+        prop::check(40, |g| {
+            let n = g.usize_in(1, 64);
+            let p: Vec<f64> = (0..n).map(|_| g.f64_in(0.05, 20.0)).collect();
+            let prefs = prefs_with(p);
+            let mut gen = SequenceGenerator::new(n);
+            let mut rng = Rng::new(g.seed);
+            let mut total = 0usize;
+            let blocks = 50;
+            for _ in 0..blocks {
+                let b = gen.block(&prefs, &mut rng);
+                prop::assert_holds(b.len() <= 2 * n, "block ≤ 2n")?;
+                total += b.len();
+            }
+            // average exactly n up to the accumulated fractional parts
+            let avg = total as f64 / blocks as f64;
+            prop::assert_holds(
+                (avg - n as f64).abs() <= 1.0 + n as f64 / blocks as f64,
+                "average block size ≈ n",
+            )
+        });
+    }
+
+    #[test]
+    fn empirical_frequency_matches_pi() {
+        // Over many blocks the emitted counts converge to π exactly
+        // (deterministic accumulators ⇒ error ≤ 1 per coordinate).
+        let p = vec![0.05, 1.0, 3.0, 20.0, 0.5];
+        let prefs = prefs_with(p.clone());
+        let n = p.len();
+        let p_sum: f64 = p.iter().sum();
+        let mut gen = SequenceGenerator::new(n);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; n];
+        let blocks = 400;
+        let mut total = 0usize;
+        for _ in 0..blocks {
+            let b = gen.block(&prefs, &mut rng);
+            total += b.len();
+            for &i in &b {
+                counts[i as usize] += 1;
+            }
+        }
+        for i in 0..n {
+            let expect = p[i] / p_sum;
+            let got = counts[i] as f64 / total as f64;
+            assert!(
+                (got - expect).abs() < 2.0 / blocks as f64 + 1e-3,
+                "coord {i}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn waiting_time_bound_holds() {
+        // Every coordinate appears at least once every ⌈1/(n·π_min)⌉
+        // blocks.
+        prop::check(25, |g| {
+            let n = g.usize_in(2, 32);
+            let p: Vec<f64> = (0..n).map(|_| g.f64_in(0.05, 20.0)).collect();
+            let p_sum: f64 = p.iter().sum();
+            let pi_min = p.iter().cloned().fold(f64::INFINITY, f64::min) / p_sum;
+            let tau = (1.0 / (n as f64 * pi_min)).ceil() as usize;
+            let prefs = prefs_with(p);
+            let mut gen = SequenceGenerator::new(n);
+            let mut rng = Rng::new(g.seed);
+            let mut last_seen = vec![0usize; n];
+            let blocks = 30 * (tau + 1);
+            for b in 1..=blocks {
+                let blk = gen.block(&prefs, &mut rng);
+                for &i in &blk {
+                    let gap = b - last_seen[i as usize];
+                    prop::assert_holds(
+                        gap <= tau + 1,
+                        &format!("coord {i} waited {gap} blocks (τ = {tau})"),
+                    )?;
+                    last_seen[i as usize] = b;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulators_stay_in_unit_interval() {
+        let prefs = prefs_with(vec![0.07, 2.3, 11.0]);
+        let mut gen = SequenceGenerator::new(3);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let _ = gen.block(&prefs, &mut rng);
+            for i in 0..3 {
+                let a = gen.accumulator(i);
+                assert!((0.0..1.0).contains(&a), "a[{i}] = {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_avoids_allocation_and_matches() {
+        let prefs = prefs_with(vec![1.0; 6]);
+        let mut gen1 = SequenceGenerator::new(6);
+        let mut gen2 = SequenceGenerator::new(6);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let mut buf = Vec::new();
+        for _ in 0..10 {
+            gen1.next_block(&prefs, &mut r1, &mut buf);
+            let fresh = gen2.block(&prefs, &mut r2);
+            assert_eq!(buf, fresh);
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let prefs = prefs_with(vec![1.5, 0.5]);
+        let mut gen = SequenceGenerator::new(2);
+        let mut rng = Rng::new(4);
+        let _ = gen.block(&prefs, &mut rng);
+        gen.reset(5);
+        assert_eq!(gen.len(), 5);
+        assert!((0..5).all(|i| gen.accumulator(i) == 0.0));
+    }
+}

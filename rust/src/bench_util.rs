@@ -1,0 +1,242 @@
+//! Benchmark harness (no `criterion` in the offline build).
+//!
+//! Two kinds of benchmarks coexist in `rust/benches/`:
+//!
+//! 1. **Micro-benchmarks** — timed closures with warmup and repeated
+//!    samples, reporting mean/median/p10/p90 ([`bench_fn`]).
+//! 2. **Experiment regenerators** — each paper table/figure is a bench
+//!    binary that runs the relevant solvers and prints the same rows the
+//!    paper reports ([`Table`] pretty-printer + JSON dump).
+//!
+//! All benches accept `--quick` (reduced sizes for CI smoke) and
+//! `--out <path.json>` via [`BenchConfig`].
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::timer::Timer;
+
+/// Shared bench CLI configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Reduced problem sizes (used by `cargo bench` CI smoke runs).
+    pub quick: bool,
+    /// Where to write the JSON results (optional).
+    pub out: Option<String>,
+    /// Random seed for dataset generation.
+    pub seed: u64,
+    /// Worker threads for grid sweeps.
+    pub workers: usize,
+}
+
+impl BenchConfig {
+    pub fn from_env() -> Self {
+        let args = Args::from_env();
+        // `cargo bench` passes `--bench`; ignore it gracefully.
+        BenchConfig {
+            quick: args.has("quick"),
+            out: args.get("out").map(|s| s.to_string()),
+            seed: args.u64_or("seed", 20140103).unwrap_or(20140103),
+            workers: args
+                .usize_or("workers", crate::util::threadpool::default_workers())
+                .unwrap_or(4),
+        }
+    }
+
+    /// Write results JSON if `--out` was given; always returns the value.
+    pub fn finish(&self, results: Json) -> Json {
+        if let Some(path) = &self.out {
+            if let Err(e) = std::fs::write(path, results.to_string_pretty()) {
+                eprintln!("warning: could not write {path}: {e}");
+            } else {
+                eprintln!("results written to {path}");
+            }
+        }
+        results
+    }
+}
+
+/// Timing report of a micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchReport {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn p10(&self) -> f64 {
+        stats::percentile(&self.samples, 0.10)
+    }
+
+    pub fn p90(&self) -> f64 {
+        stats::percentile(&self.samples, 0.90)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>10}  median {:>10}  p10 {:>10}  p90 {:>10}  ({} samples)",
+            self.name,
+            crate::util::timer::fmt_secs(self.mean()),
+            crate::util::timer::fmt_secs(self.median()),
+            crate::util::timer::fmt_secs(self.p10()),
+            crate::util::timer::fmt_secs(self.p90()),
+            self.samples.len()
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("mean_s", Json::Num(self.mean()))
+            .set("median_s", Json::Num(self.median()))
+            .set("p10_s", Json::Num(self.p10()))
+            .set("p90_s", Json::Num(self.p90()))
+            .set("samples", Json::Num(self.samples.len() as f64));
+        o
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs followed by `iters` samples.
+/// `f` returns a value that is black-boxed to prevent dead-code
+/// elimination.
+pub fn bench_fn<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchReport {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        black_box(f());
+        samples.push(t.secs());
+    }
+    BenchReport { name: name.to_string(), samples }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper, kept here so bench
+/// code has a single import point).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A plain-text table mirroring the paper's layout. Columns are
+/// left-aligned strings; numeric formatting is the caller's concern so
+/// each bench can match the paper's notation (e.g. `7.06e8`).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len();
+        println!("\n=== {} ===", self.title);
+        let mut line = String::new();
+        for (h, w) in self.headers.iter().zip(&widths) {
+            line.push_str(&format!("{:<w$}   ", h, w = w));
+        }
+        println!("{}", line.trim_end());
+        println!("{}", "-".repeat(total.min(160)));
+        for row in &self.rows {
+            let mut line = String::new();
+            for (c, w) in row.iter().zip(&widths) {
+                line.push_str(&format!("{:<w$}   ", c, w = w));
+            }
+            println!("{}", line.trim_end());
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", Json::Str(self.title.clone()))
+            .set(
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            )
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+/// Format a speed-up ratio the way the paper does (one decimal).
+pub fn fmt_speedup(baseline: f64, ours: f64) -> String {
+    if ours <= 0.0 || baseline <= 0.0 {
+        "—".to_string()
+    } else {
+        format!("{:.1}", baseline / ours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_collects_samples() {
+        let r = bench_fn("noop", 2, 10, || 42u64);
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.mean() >= 0.0);
+        assert!(r.p10() <= r.p90());
+    }
+
+    #[test]
+    fn table_round_trip() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        t.row(vec!["2".into(), "yy".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("Demo"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(10.0, 2.0), "5.0");
+        assert_eq!(fmt_speedup(10.0, 0.0), "—");
+    }
+}

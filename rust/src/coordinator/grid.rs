@@ -1,0 +1,133 @@
+//! Grid sweeps: the paper's evaluation protocol is "vary C (or λ) over a
+//! grid, compare policies at each point, optionally with k-fold CV" —
+//! this module runs those sweeps in parallel over a shared dataset.
+
+use super::jobs::{run_job_on, JobOutcome, JobSpec, Problem};
+use crate::data::{self, Scale};
+use crate::sched::Policy;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+use anyhow::Result;
+
+/// A (policy × parameter-grid) sweep on one dataset.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// template whose `problem` parameter is replaced per grid point
+    pub base: JobSpec,
+    /// parameter grid (C or λ values)
+    pub grid: Vec<f64>,
+    /// policies to compare at each grid point
+    pub policies: Vec<Policy>,
+    /// include the liblinear shrinking baseline (SVM only)
+    pub include_shrinking: bool,
+    /// worker threads
+    pub workers: usize,
+}
+
+/// Build the concrete problem for a grid value, preserving the family.
+fn with_parameter(p: Problem, v: f64) -> Problem {
+    match p {
+        Problem::Svm { .. } => Problem::Svm { c: v },
+        Problem::SvmShrinking { .. } => Problem::SvmShrinking { c: v },
+        Problem::Lasso { .. } => Problem::Lasso { lambda: v },
+        Problem::LogReg { .. } => Problem::LogReg { c: v },
+        Problem::McSvm { .. } => Problem::McSvm { c: v },
+    }
+}
+
+/// Run the sweep; outcomes are ordered (grid-major, policy-minor, with
+/// the shrinking baseline appended per grid point when requested).
+pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
+    let ds = spec.base.load_dataset()?;
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for &v in &spec.grid {
+        for &policy in &spec.policies {
+            let mut j = spec.base.clone();
+            j.problem = with_parameter(spec.base.problem, v);
+            j.policy = policy;
+            jobs.push(j);
+        }
+        if spec.include_shrinking {
+            let mut j = spec.base.clone();
+            j.problem = Problem::SvmShrinking { c: v };
+            j.policy = Policy::Permutation;
+            jobs.push(j);
+        }
+    }
+    Ok(parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds)))
+}
+
+/// k-fold cross-validation accuracy of a problem family at one parameter
+/// point (used by Figure 2 / Table 9 to report CV performance next to
+/// training times). Returns mean test accuracy across folds.
+pub fn cross_validate(
+    problem: Problem,
+    dataset: &str,
+    policy: Policy,
+    eps: f64,
+    scale: Scale,
+    k: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<f64> {
+    let template = {
+        let mut t = JobSpec::new(problem, dataset, policy);
+        t.eps = eps;
+        t.scale = scale;
+        t.seed = seed;
+        t
+    };
+    let ds = template.load_dataset()?;
+    let mut rng = Rng::new(seed ^ 0xF01D);
+    let folds = data::k_fold(ds.n_instances(), k, &mut rng);
+    let accs = parallel_map(folds.len(), workers, |fi| {
+        let (train, test) = data::apply(&ds, &folds[fi]);
+        let out = run_job_on(&template, &train);
+        match (&out.w, &out.w_multi) {
+            (Some(w), _) => data::binary_accuracy(&test, w),
+            (_, Some(wm)) => data::multiclass_accuracy(&test, wm),
+            _ => 0.0,
+        }
+    });
+    Ok(accs.iter().sum::<f64>() / accs.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_grid_times_policies() {
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        let spec = SweepSpec {
+            base,
+            grid: vec![0.1, 1.0],
+            policies: vec![Policy::Acf, Policy::Permutation],
+            include_shrinking: true,
+            workers: 4,
+        };
+        let out = run_sweep(&spec).unwrap();
+        assert_eq!(out.len(), 2 * 3);
+        // ordering: first grid point first
+        assert_eq!(out[0].spec.problem.parameter(), 0.1);
+        assert_eq!(out[2].spec.problem.family(), "svm-shrinking");
+        assert!(out.iter().all(|o| o.result.status.converged()));
+    }
+
+    #[test]
+    fn cv_returns_sane_accuracy() {
+        let acc = cross_validate(
+            Problem::Svm { c: 1.0 },
+            "rcv1-like",
+            Policy::Acf,
+            0.01,
+            Scale(0.06),
+            3,
+            42,
+            3,
+        )
+        .unwrap();
+        assert!(acc > 0.55 && acc <= 1.0, "accuracy {acc}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Job specifications — one job = one solver run on one dataset at one
+//! hyper-parameter point with one scheduling policy.
+
+use crate::acf::AcfParams;
+use crate::data::{registry, Scale};
+use crate::sched::Policy;
+use crate::solvers::{self, SolveResult, SolverConfig};
+use crate::sparse::Dataset;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Which of the paper's four problem families to solve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Problem {
+    /// linear SVM dual; parameter = C
+    Svm { c: f64 },
+    /// liblinear baseline (permutation + shrinking); parameter = C
+    SvmShrinking { c: f64 },
+    /// LASSO; parameter = λ
+    Lasso { lambda: f64 },
+    /// dual logistic regression; parameter = C
+    LogReg { c: f64 },
+    /// Weston–Watkins multi-class SVM; parameter = C
+    McSvm { c: f64 },
+}
+
+impl Problem {
+    pub fn family(&self) -> &'static str {
+        match self {
+            Problem::Svm { .. } => "svm",
+            Problem::SvmShrinking { .. } => "svm-shrinking",
+            Problem::Lasso { .. } => "lasso",
+            Problem::LogReg { .. } => "logreg",
+            Problem::McSvm { .. } => "mcsvm",
+        }
+    }
+
+    pub fn parameter(&self) -> f64 {
+        match *self {
+            Problem::Svm { c }
+            | Problem::SvmShrinking { c }
+            | Problem::LogReg { c }
+            | Problem::McSvm { c } => c,
+            Problem::Lasso { lambda } => lambda,
+        }
+    }
+}
+
+/// A fully-specified solver run.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub problem: Problem,
+    pub dataset: String,
+    pub policy: Policy,
+    pub eps: f64,
+    pub seed: u64,
+    pub scale: Scale,
+    pub max_iterations: u64,
+    pub max_seconds: Option<f64>,
+    pub acf_params: AcfParams,
+}
+
+impl JobSpec {
+    pub fn new(problem: Problem, dataset: &str, policy: Policy) -> Self {
+        Self {
+            problem,
+            dataset: dataset.to_string(),
+            policy,
+            eps: 0.01,
+            seed: 20140103,
+            scale: Scale::default(),
+            max_iterations: 200_000_000,
+            max_seconds: None,
+            acf_params: AcfParams::default(),
+        }
+    }
+
+    pub fn solver_config(&self) -> SolverConfig {
+        SolverConfig {
+            eps: self.eps,
+            max_iterations: self.max_iterations,
+            max_seconds: self.max_seconds,
+            trace_every: 0,
+        }
+    }
+
+    /// Resolve the dataset for this job from the registry.
+    pub fn load_dataset(&self) -> Result<Dataset> {
+        let ds = match self.problem {
+            Problem::Lasso { .. } => {
+                registry::regression(&self.dataset, self.scale, self.seed).map(|(ds, _)| ds)
+            }
+            Problem::McSvm { .. } => registry::multiclass(&self.dataset, self.scale, self.seed),
+            _ => registry::binary(&self.dataset, self.scale, self.seed),
+        };
+        ds.ok_or_else(|| {
+            anyhow!("unknown dataset '{}' for problem family {}", self.dataset, self.problem.family())
+        })
+    }
+}
+
+/// Outcome of a job, with the trained model's primal weights when the
+/// problem has a single weight vector (binary problems / LASSO).
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub spec: JobSpec,
+    pub result: SolveResult,
+    /// primal weights (binary/lasso) — used for accuracy evaluation
+    pub w: Option<Vec<f64>>,
+    /// per-class weights (multi-class)
+    pub w_multi: Option<Vec<Vec<f64>>>,
+    /// non-zero coefficient count (LASSO sparsity report)
+    pub nnz_coeffs: Option<usize>,
+}
+
+impl JobOutcome {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("problem", Json::Str(self.spec.problem.family().into()))
+            .set("parameter", Json::Num(self.spec.problem.parameter()))
+            .set("dataset", Json::Str(self.spec.dataset.clone()))
+            .set("policy", Json::Str(self.spec.policy.name().into()))
+            .set("eps", Json::Num(self.spec.eps))
+            .set("converged", Json::Bool(self.result.status.converged()))
+            .set("iterations", Json::Num(self.result.iterations as f64))
+            .set("ops", Json::Num(self.result.ops as f64))
+            .set("seconds", Json::Num(self.result.seconds))
+            .set("objective", Json::Num(self.result.objective))
+            .set("violation", Json::Num(self.result.final_violation));
+        if let Some(k) = self.nnz_coeffs {
+            o.set("nnz_coeffs", Json::Num(k as f64));
+        }
+        o
+    }
+}
+
+/// Execute a job on an already-loaded dataset (lets sweeps share the
+/// dataset across grid points).
+pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
+    let cfg = spec.solver_config();
+    let rng = Rng::new(spec.seed ^ 0x5EED);
+    match spec.problem {
+        Problem::Svm { c } => {
+            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let (model, result) = solvers::svm::solve(ds, c, sched.as_mut(), cfg);
+            JobOutcome {
+                spec: spec.clone(),
+                result,
+                w: Some(model.w),
+                w_multi: None,
+                nnz_coeffs: None,
+            }
+        }
+        Problem::SvmShrinking { c } => {
+            let mut rng = rng;
+            let (model, result) = solvers::svm::solve_liblinear_shrinking(ds, c, &mut rng, cfg);
+            JobOutcome {
+                spec: spec.clone(),
+                result,
+                w: Some(model.w),
+                w_multi: None,
+                nnz_coeffs: None,
+            }
+        }
+        Problem::Lasso { lambda } => {
+            let mut sched = spec.policy.build(ds.n_features(), spec.acf_params, rng);
+            let (model, result) = solvers::lasso::solve(ds, lambda, sched.as_mut(), cfg);
+            let k = solvers::lasso::nnz_coefficients(&model);
+            JobOutcome {
+                spec: spec.clone(),
+                result,
+                w: Some(model.w),
+                w_multi: None,
+                nnz_coeffs: Some(k),
+            }
+        }
+        Problem::LogReg { c } => {
+            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let (model, result) = solvers::logreg::solve(ds, c, sched.as_mut(), cfg);
+            JobOutcome {
+                spec: spec.clone(),
+                result,
+                w: Some(model.w),
+                w_multi: None,
+                nnz_coeffs: None,
+            }
+        }
+        Problem::McSvm { c } => {
+            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let (model, result) = solvers::mcsvm::solve(ds, c, sched.as_mut(), cfg);
+            JobOutcome {
+                spec: spec.clone(),
+                result,
+                w: None,
+                w_multi: Some(model.w),
+                nnz_coeffs: None,
+            }
+        }
+    }
+}
+
+/// Load the dataset and execute.
+pub fn run_job(spec: &JobSpec) -> Result<JobOutcome> {
+    let ds = spec.load_dataset()?;
+    Ok(run_job_on(spec, &ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec(problem: Problem, dataset: &str, policy: Policy) -> JobSpec {
+        let mut s = JobSpec::new(problem, dataset, policy);
+        s.scale = Scale(0.05);
+        s.eps = 0.01;
+        s
+    }
+
+    #[test]
+    fn svm_job_runs() {
+        let spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+        assert!(out.w.is_some());
+        let j = out.to_json();
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("acf"));
+    }
+
+    #[test]
+    fn lasso_job_reports_sparsity() {
+        let spec = quick_spec(Problem::Lasso { lambda: 0.01 }, "rcv1-like", Policy::Cyclic);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+        assert!(out.nnz_coeffs.is_some());
+    }
+
+    #[test]
+    fn shrinking_job_runs() {
+        let spec =
+            quick_spec(Problem::SvmShrinking { c: 1.0 }, "rcv1-like", Policy::Permutation);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+    }
+
+    #[test]
+    fn mcsvm_job_runs() {
+        let spec = quick_spec(Problem::McSvm { c: 1.0 }, "iris-like", Policy::Acf);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+        assert!(out.w_multi.is_some());
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        let spec = quick_spec(Problem::Svm { c: 1.0 }, "nonexistent", Policy::Acf);
+        assert!(run_job(&spec).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment coordinator — the L3 launcher around the solvers: job
+//! specs, parallel grid sweeps, cross-validation, and report generation.
+//! The `acf-cd` CLI (rust/src/main.rs) and every bench binary drive the
+//! system through this module.
+
+pub mod grid;
+pub mod jobs;
+pub mod report;
+
+pub use grid::{cross_validate, run_sweep, SweepSpec};
+pub use jobs::{run_job, run_job_on, JobOutcome, JobSpec, Problem};
+pub use report::{comparison_table, geomean_speedups, outcomes_json};

@@ -1,0 +1,169 @@
+//! Turning sweep outcomes into the paper's table layouts and JSON dumps.
+
+use super::jobs::JobOutcome;
+use crate::bench_util::Table;
+use crate::util::json::Json;
+use crate::util::timer::fmt_count;
+
+/// Group outcomes of one sweep into per-grid-point rows comparing a
+/// baseline policy against ACF — the paper's table shape (baseline
+/// iterations/ops/seconds, ACF ditto, speed-up columns).
+pub fn comparison_table(
+    title: &str,
+    outcomes: &[JobOutcome],
+    baseline_name: &str,
+    param_label: &str,
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            param_label,
+            "baseline iters",
+            "baseline ops",
+            "baseline sec",
+            "acf iters",
+            "acf ops",
+            "acf sec",
+            "speedup iters",
+            "speedup ops",
+            "speedup time",
+        ],
+    );
+    // collect grid values in order of first appearance
+    let mut grid: Vec<f64> = Vec::new();
+    for o in outcomes {
+        let v = o.spec.problem.parameter();
+        if !grid.iter().any(|&g| g == v) {
+            grid.push(v);
+        }
+    }
+    for &v in &grid {
+        let base = outcomes.iter().find(|o| {
+            o.spec.problem.parameter() == v
+                && (o.spec.policy.name() == baseline_name
+                    || o.spec.problem.family() == baseline_name)
+        });
+        let acf = outcomes
+            .iter()
+            .find(|o| o.spec.problem.parameter() == v && o.spec.policy.name() == "acf");
+        let (Some(b), Some(a)) = (base, acf) else { continue };
+        let dnf = |o: &JobOutcome| !o.result.status.converged();
+        let cell = |x: f64, is_dnf: bool| if is_dnf { "—".to_string() } else { fmt_count(x) };
+        let sec = |o: &JobOutcome| {
+            if dnf(o) {
+                "—".to_string()
+            } else {
+                format!("{:.3}", o.result.seconds)
+            }
+        };
+        let ratio = |num: f64, den: f64, any_dnf: bool| {
+            if any_dnf || den <= 0.0 {
+                "—".to_string()
+            } else {
+                format!("{:.1}", num / den)
+            }
+        };
+        let any_dnf = dnf(b) || dnf(a);
+        t.row(vec![
+            format!("{v}"),
+            cell(b.result.iterations as f64, dnf(b)),
+            cell(b.result.ops as f64, dnf(b)),
+            sec(b),
+            cell(a.result.iterations as f64, dnf(a)),
+            cell(a.result.ops as f64, dnf(a)),
+            sec(a),
+            ratio(b.result.iterations as f64, a.result.iterations as f64, any_dnf),
+            ratio(b.result.ops as f64, a.result.ops as f64, any_dnf),
+            ratio(b.result.seconds, a.result.seconds, any_dnf),
+        ]);
+    }
+    t
+}
+
+/// JSON array of all outcomes (for EXPERIMENTS.md evidence files).
+pub fn outcomes_json(outcomes: &[JobOutcome]) -> Json {
+    Json::Arr(outcomes.iter().map(|o| o.to_json()).collect())
+}
+
+/// Geometric-mean speedups (iters, ops, time) of ACF over a baseline
+/// across all shared grid points where both converged.
+pub fn geomean_speedups(outcomes: &[JobOutcome], baseline_name: &str) -> Option<(f64, f64, f64)> {
+    let mut it = Vec::new();
+    let mut ops = Vec::new();
+    let mut secs = Vec::new();
+    let mut grid: Vec<f64> = Vec::new();
+    for o in outcomes {
+        let v = o.spec.problem.parameter();
+        if !grid.iter().any(|&g| g == v) {
+            grid.push(v);
+        }
+    }
+    for &v in &grid {
+        let base = outcomes.iter().find(|o| {
+            o.spec.problem.parameter() == v
+                && (o.spec.policy.name() == baseline_name
+                    || o.spec.problem.family() == baseline_name)
+        })?;
+        let acf = outcomes
+            .iter()
+            .find(|o| o.spec.problem.parameter() == v && o.spec.policy.name() == "acf")?;
+        if base.result.status.converged() && acf.result.status.converged() {
+            it.push(base.result.iterations as f64 / acf.result.iterations.max(1) as f64);
+            ops.push(base.result.ops as f64 / acf.result.ops.max(1) as f64);
+            if acf.result.seconds > 0.0 {
+                secs.push(base.result.seconds / acf.result.seconds);
+            }
+        }
+    }
+    if it.is_empty() {
+        return None;
+    }
+    use crate::util::stats::geomean;
+    Some((geomean(&it), geomean(&ops), geomean(&secs)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::{JobSpec, Problem};
+    use crate::coordinator::SweepSpec;
+    use crate::data::Scale;
+    use crate::sched::Policy;
+
+    fn small_sweep() -> Vec<JobOutcome> {
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        crate::coordinator::run_sweep(&SweepSpec {
+            base,
+            grid: vec![0.1, 1.0],
+            policies: vec![Policy::Acf, Policy::Permutation],
+            include_shrinking: false,
+            workers: 4,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn table_has_one_row_per_grid_point() {
+        let out = small_sweep();
+        let t = comparison_table("demo", &out, "random-permutation", "C");
+        assert_eq!(t.rows.len(), 2);
+        t.print();
+    }
+
+    #[test]
+    fn json_dump_covers_all() {
+        let out = small_sweep();
+        let j = outcomes_json(&out);
+        assert_eq!(j.as_arr().unwrap().len(), out.len());
+    }
+
+    #[test]
+    fn geomean_speedups_present() {
+        let out = small_sweep();
+        let s = geomean_speedups(&out, "random-permutation");
+        assert!(s.is_some());
+        let (it, ops, _) = s.unwrap();
+        assert!(it > 0.0 && ops > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: synthetic paper-analog generators, the named
+//! registry used by benches, and split/CV helpers.
+
+pub mod registry;
+pub mod split;
+pub mod synth;
+
+pub use registry::{binary, multiclass, regression, Scale};
+pub use split::{apply, binary_accuracy, k_fold, multiclass_accuracy, train_test_split, Split};

@@ -1,0 +1,231 @@
+//! Named registry of the paper-dataset analogs at laptop scale.
+//!
+//! Each entry mirrors one of the paper's benchmark datasets (Tables 2, 4,
+//! 7) with the same *structure* (sparsity profile, feature/instance
+//! ratio, class count) at roughly 100–1000× reduced scale. The mapping is
+//! documented in DESIGN.md §6. A `--scale` factor lets benches trade time
+//! for fidelity.
+
+use super::synth;
+use crate::sparse::Dataset;
+use crate::util::rng::Rng;
+
+/// Scale multiplier applied to instance counts (1.0 = the default laptop
+/// scale, which is already reduced vs the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale(1.0)
+    }
+}
+
+fn scaled(n: usize, s: Scale) -> usize {
+    ((n as f64 * s.0) as usize).max(16)
+}
+
+/// Binary-classification analogs (paper Table 4).
+pub fn binary(name: &str, scale: Scale, seed: u64) -> Option<Dataset> {
+    let mut rng = Rng::new(seed);
+    let ds = match name {
+        // news20: ℓ≈20k, d≈1.36M, very sparse, high-dim ≫ instances
+        "news20-like" => synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "news20-like",
+                n: scaled(2000, scale),
+                d: 40_000,
+                nnz_per_row: 60,
+                zipf_s: 1.05,
+                concept_k: 200,
+                noise: 0.02,
+            },
+            &mut rng,
+        ),
+        // rcv1: ℓ≈20k, d≈47k, ~74 nnz/row
+        "rcv1-like" => synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "rcv1-like",
+                n: scaled(2500, scale),
+                d: 8_000,
+                nnz_per_row: 50,
+                zipf_s: 1.3,
+                concept_k: 120,
+                noise: 0.03,
+            },
+            &mut rng,
+        ),
+        // url: ℓ≈2.4M, d≈3.2M; instances ≫ typical, mixed dense+sparse
+        "url-like" => synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "url-like",
+                n: scaled(8000, scale),
+                d: 12_000,
+                nnz_per_row: 30,
+                zipf_s: 0.9,
+                concept_k: 80,
+                noise: 0.05,
+            },
+            &mut rng,
+        ),
+        // kdd-a: ℓ≈8.4M, d≈20M — extreme scale; we keep the shape
+        // (instances ≈ features, very sparse) at reduced size
+        "kdda-like" => synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "kdda-like",
+                n: scaled(6000, scale),
+                d: 15_000,
+                nnz_per_row: 25,
+                zipf_s: 1.1,
+                concept_k: 100,
+                noise: 0.08,
+            },
+            &mut rng,
+        ),
+        // kdd-b: like kdd-a, bigger
+        "kddb-like" => synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "kddb-like",
+                n: scaled(9000, scale),
+                d: 22_000,
+                nnz_per_row: 25,
+                zipf_s: 1.1,
+                concept_k: 120,
+                noise: 0.08,
+            },
+            &mut rng,
+        ),
+        // cover type: ℓ≈581k, d=54 dense — the paper's negative case
+        "covtype-like" => synth::dense_lowdim("covtype-like", scaled(8000, scale), 54, &mut rng),
+        _ => return None,
+    };
+    Some(ds)
+}
+
+/// LASSO regression analogs (paper Table 2).
+pub fn regression(name: &str, scale: Scale, seed: u64) -> Option<(Dataset, Vec<f64>)> {
+    let mut rng = Rng::new(seed);
+    let out = match name {
+        // news20 (as regression design): d ≫ ℓ
+        "news20-like" => synth::regression_sparse(
+            "news20-like",
+            scaled(1500, scale),
+            30_000,
+            50,
+            40,
+            0.5,
+            &mut rng,
+        ),
+        // rcv1
+        "rcv1-like" => synth::regression_sparse(
+            "rcv1-like",
+            scaled(2000, scale),
+            6_000,
+            45,
+            60,
+            0.5,
+            &mut rng,
+        ),
+        // E2006-tfidf: ℓ≈16k, d≈150k, long documents (heavy rows)
+        "e2006-like" => synth::regression_sparse(
+            "e2006-like",
+            scaled(1200, scale),
+            20_000,
+            150,
+            50,
+            0.3,
+            &mut rng,
+        ),
+        _ => return None,
+    };
+    Some(out)
+}
+
+/// Multi-class analogs (paper Table 7).
+pub fn multiclass(name: &str, scale: Scale, seed: u64) -> Option<Dataset> {
+    let mut rng = Rng::new(seed);
+    let ds = match name {
+        // iris: 105 train, 4 features, 3 classes
+        "iris-like" => synth::multiclass_blobs("iris-like", 105, 4, 3, 0.6, &mut rng),
+        // soybean: 214 train, 35 features, 19 classes
+        "soybean-like" => synth::multiclass_blobs("soybean-like", 214, 35, 19, 0.5, &mut rng),
+        // news20 multi-class: ~16k × 62k, 20 classes
+        "news20mc-like" => synth::multiclass_text(
+            "news20mc-like",
+            scaled(2000, scale),
+            10_000,
+            20,
+            50,
+            0.03,
+            &mut rng,
+        ),
+        // rcv1 multi-class: ~15.5k × 47k, 53 classes
+        "rcv1mc-like" => synth::multiclass_text(
+            "rcv1mc-like",
+            scaled(2120, scale),
+            8_000,
+            53,
+            45,
+            0.03,
+            &mut rng,
+        ),
+        _ => return None,
+    };
+    Some(ds)
+}
+
+/// All names understood by [`binary`].
+pub const BINARY_NAMES: &[&str] =
+    &["covtype-like", "kdda-like", "kddb-like", "news20-like", "rcv1-like", "url-like"];
+
+/// All names understood by [`regression`].
+pub const REGRESSION_NAMES: &[&str] = &["news20-like", "rcv1-like", "e2006-like"];
+
+/// All names understood by [`multiclass`].
+pub const MULTICLASS_NAMES: &[&str] =
+    &["iris-like", "soybean-like", "news20mc-like", "rcv1mc-like"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_binary_names_resolve() {
+        for name in BINARY_NAMES {
+            let ds = binary(name, Scale(0.05), 1).unwrap_or_else(|| panic!("{name}"));
+            assert!(ds.n_instances() >= 16, "{name}");
+            ds.x.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_regression_names_resolve() {
+        for name in REGRESSION_NAMES {
+            let (ds, w) = regression(name, Scale(0.05), 1).unwrap();
+            assert!(ds.n_instances() >= 16);
+            assert_eq!(w.len(), ds.n_features());
+        }
+    }
+
+    #[test]
+    fn all_multiclass_names_resolve() {
+        for name in MULTICLASS_NAMES {
+            let ds = multiclass(name, Scale(0.05), 1).unwrap();
+            assert!(ds.classes().len() >= 3, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_names_are_none() {
+        assert!(binary("nope", Scale(1.0), 1).is_none());
+        assert!(regression("nope", Scale(1.0), 1).is_none());
+        assert!(multiclass("nope", Scale(1.0), 1).is_none());
+    }
+
+    #[test]
+    fn seed_determinism() {
+        let a = binary("rcv1-like", Scale(0.05), 9).unwrap();
+        let b = binary("rcv1-like", Scale(0.05), 9).unwrap();
+        assert_eq!(a.x, b.x);
+    }
+}

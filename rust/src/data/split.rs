@@ -1,0 +1,165 @@
+//! Train/test splitting and k-fold cross-validation (the paper reports
+//! 3-fold CV accuracy alongside training times in Figure 2 / Table 9).
+
+use crate::sparse::Dataset;
+use crate::util::rng::Rng;
+
+/// A train/test split by instance indices.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Random split with `test_frac` of instances held out.
+pub fn train_test_split(n: usize, test_frac: f64, rng: &mut Rng) -> Split {
+    assert!((0.0..1.0).contains(&test_frac));
+    let perm = rng.permutation(n);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    Split { test: perm[..n_test].to_vec(), train: perm[n_test..].to_vec() }
+}
+
+/// k-fold partition: returns `k` splits, each using one fold as test.
+pub fn k_fold(n: usize, k: usize, rng: &mut Rng) -> Vec<Split> {
+    assert!(k >= 2 && k <= n);
+    let perm = rng.permutation(n);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &idx) in perm.iter().enumerate() {
+        folds[i % k].push(idx);
+    }
+    (0..k)
+        .map(|t| {
+            let test = folds[t].clone();
+            let train =
+                folds.iter().enumerate().filter(|&(i, _)| i != t).flat_map(|(_, f)| f.iter().copied()).collect();
+            Split { train, test }
+        })
+        .collect()
+}
+
+/// Materialize (train, test) datasets from a split.
+pub fn apply(ds: &Dataset, split: &Split) -> (Dataset, Dataset) {
+    (ds.select(&split.train), ds.select(&split.test))
+}
+
+/// Binary classification accuracy of a linear model `w` on a dataset
+/// (labels ±1).
+pub fn binary_accuracy(ds: &Dataset, w: &[f64]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..ds.n_instances() {
+        let m = ds.x.row(i).dot_dense(w);
+        if m * ds.y[i] > 0.0 {
+            correct += 1;
+        }
+    }
+    correct as f64 / ds.n_instances().max(1) as f64
+}
+
+/// Multi-class accuracy with per-class weight vectors `w[k]`.
+pub fn multiclass_accuracy(ds: &Dataset, w: &[Vec<f64>]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..ds.n_instances() {
+        let row = ds.x.row(i);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (k, wk) in w.iter().enumerate() {
+            let s = row.dot_dense(wk);
+            if s > best_score {
+                best_score = s;
+                best = k;
+            }
+        }
+        if best == ds.y[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / ds.n_instances().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+    use crate::util::prop;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            x: Csr::from_rows(
+                2,
+                vec![
+                    vec![(0, 1.0)],
+                    vec![(0, -1.0)],
+                    vec![(1, 1.0)],
+                    vec![(1, -1.0)],
+                    vec![(0, 2.0)],
+                    vec![(0, -2.0)],
+                ],
+            ),
+            y: vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = Rng::new(1);
+        let s = train_test_split(100, 0.25, &mut rng);
+        assert_eq!(s.test.len(), 25);
+        assert_eq!(s.train.len(), 75);
+        let mut all: Vec<usize> = s.train.iter().chain(s.test.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn k_fold_covers_everything() {
+        prop::check(20, |g| {
+            let n = g.usize_in(6, 80);
+            let k = g.usize_in(2, 5.min(n));
+            let mut rng = Rng::new(g.seed);
+            let folds = k_fold(n, k, &mut rng);
+            prop::assert_holds(folds.len() == k, "k folds")?;
+            // test folds partition 0..n
+            let mut all: Vec<usize> = folds.iter().flat_map(|f| f.test.iter().copied()).collect();
+            all.sort_unstable();
+            prop::assert_holds(all == (0..n).collect::<Vec<_>>(), "partition")?;
+            // each split's train+test = 0..n
+            for f in &folds {
+                let mut u: Vec<usize> = f.train.iter().chain(f.test.iter()).copied().collect();
+                u.sort_unstable();
+                prop::assert_holds(u == (0..n).collect::<Vec<_>>(), "train+test")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accuracy_perfect_and_chance() {
+        let ds = tiny();
+        let w = vec![1.0, 1.0];
+        assert_eq!(binary_accuracy(&ds, &w), 1.0);
+        let w_bad = vec![-1.0, -1.0];
+        assert_eq!(binary_accuracy(&ds, &w_bad), 0.0);
+    }
+
+    #[test]
+    fn multiclass_accuracy_works() {
+        let ds = Dataset {
+            name: "mc".into(),
+            x: Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 1.0)]]),
+            y: vec![0.0, 1.0],
+        };
+        let w = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        assert_eq!(multiclass_accuracy(&ds, &w), 1.0);
+    }
+
+    #[test]
+    fn apply_materializes() {
+        let ds = tiny();
+        let mut rng = Rng::new(2);
+        let s = train_test_split(ds.n_instances(), 0.5, &mut rng);
+        let (tr, te) = apply(&ds, &s);
+        assert_eq!(tr.n_instances() + te.n_instances(), ds.n_instances());
+        assert_eq!(tr.n_features(), ds.n_features());
+    }
+}

@@ -1,0 +1,45 @@
+//! # acf-cd
+//!
+//! Full-system reproduction of **"Coordinate Descent with Online
+//! Adaptation of Coordinate Frequencies"** (Glasmachers & Dogan, 2014).
+//!
+//! The crate is a coordinate-descent optimization framework in which the
+//! paper's contribution — the **Adaptive Coordinate Frequencies (ACF)**
+//! scheduler — is a pluggable coordinate-selection policy evaluated
+//! against uniform / cyclic / random-permutation / shrinking baselines on
+//! the paper's four problem families:
+//!
+//! * LASSO regression (§3.1, Table 3),
+//! * linear SVM dual (§3.2, Tables 5–6, Figure 2),
+//! * Weston–Watkins multi-class SVM via subspace descent (§3.3, Table 8),
+//! * dual logistic regression (§3.4, Table 9),
+//!
+//! plus the §6 Markov-chain experiment (Figure 1).
+//!
+//! Architecture (three layers, Python never on the hot path):
+//!
+//! * **L3** — this crate: schedulers, solvers, data substrates,
+//!   experiment coordinator, benchmark harness.
+//! * **L2** — `python/compile/model.py`: JAX evaluation graphs (margins,
+//!   losses, dense-Q CD sweeps), AOT-lowered once to HLO text in
+//!   `artifacts/`.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and exposes them to the coordinator's *validation* path
+//! (objective audits, accuracy); the CD iteration hot loop is pure Rust.
+
+pub mod acf;
+pub mod bench_util;
+pub mod coordinator;
+pub mod data;
+pub mod markov;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod solvers;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

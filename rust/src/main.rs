@@ -1,0 +1,263 @@
+//! `acf-cd` — launcher for the ACF coordinate-descent framework.
+//!
+//! Subcommands:
+//!   train     one solver run (problem × dataset × policy × parameter)
+//!   sweep     parameter-grid comparison (ACF vs baselines), paper-style table
+//!   cv        k-fold cross-validation accuracy at one parameter point
+//!   markov    §6 Markov-chain experiment (balance π, Figure-1 curves)
+//!   datasets  list the paper-analog dataset registry
+//!   info      artifacts/runtime status (PJRT platform, manifest)
+//!
+//! Examples:
+//!   acf-cd train --problem svm --dataset rcv1-like --policy acf --c 1.0
+//!   acf-cd sweep --problem svm --dataset news20-like --grid 0.01,0.1,1,10 \
+//!                --policies acf,perm --shrinking --eps 0.01
+//!   acf-cd markov --n 5 --seed 7 --curves
+
+use acf_cd::coordinator::{self, JobSpec, Problem, SweepSpec};
+use acf_cd::data::{registry, Scale};
+use acf_cd::markov;
+use acf_cd::runtime::Runtime;
+use acf_cd::sched::Policy;
+use acf_cd::util::cli::Args;
+use acf_cd::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("cv") => cmd_cv(args),
+        Some("markov") => cmd_markov(args),
+        Some("datasets") => cmd_datasets(),
+        Some("info") => cmd_info(),
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (run without args for help)")),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "acf-cd — Adaptive Coordinate Frequencies CD framework\n\
+         \n\
+         subcommands: train | sweep | cv | markov | datasets | info\n\
+         common flags: --problem svm|lasso|logreg|mcsvm  --dataset <name>\n\
+         \u{20}             --policy acf|perm|cyclic|uniform  --c/--lambda <v>\n\
+         \u{20}             --eps <v>  --scale <f>  --seed <n>  --workers <n>\n\
+         run `cargo bench` for the paper's tables/figures."
+    );
+}
+
+fn parse_problem(args: &Args) -> Result<Problem> {
+    let fam = args.str_or("problem", "svm");
+    let c = args.f64_or("c", 1.0)?;
+    let lambda = args.f64_or("lambda", 0.01)?;
+    Ok(match fam {
+        "svm" => Problem::Svm { c },
+        "svm-shrinking" => Problem::SvmShrinking { c },
+        "lasso" => Problem::Lasso { lambda },
+        "logreg" => Problem::LogReg { c },
+        "mcsvm" => Problem::McSvm { c },
+        other => return Err(anyhow!("unknown problem family '{other}'")),
+    })
+}
+
+fn parse_spec(args: &Args) -> Result<JobSpec> {
+    let problem = parse_problem(args)?;
+    let default_ds = match problem {
+        Problem::McSvm { .. } => "iris-like",
+        _ => "rcv1-like",
+    };
+    let dataset = args.str_or("dataset", default_ds).to_string();
+    let policy = Policy::parse(args.str_or("policy", "acf"))
+        .ok_or_else(|| anyhow!("unknown policy"))?;
+    let mut spec = JobSpec::new(problem, &dataset, policy);
+    spec.eps = args.f64_or("eps", 0.01)?;
+    spec.seed = args.u64_or("seed", 20140103)?;
+    spec.scale = Scale(args.f64_or("scale", 1.0)?);
+    spec.max_iterations = args.u64_or("max-iterations", 200_000_000)?;
+    if let Some(s) = args.get("max-seconds") {
+        spec.max_seconds = Some(s.parse()?);
+    }
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = parse_spec(args)?;
+    let ds = spec.load_dataset()?;
+    eprintln!(
+        "dataset {}: {} instances × {} features, {} nnz",
+        ds.name,
+        ds.n_instances(),
+        ds.n_features(),
+        ds.nnz()
+    );
+    let out = coordinator::run_job_on(&spec, &ds);
+    println!("{}", out.result.summary());
+    if let Some(w) = &out.w {
+        if !matches!(spec.problem, Problem::Lasso { .. }) {
+            let acc = acf_cd::data::binary_accuracy(&ds, w);
+            println!("train accuracy: {:.2}%", 100.0 * acc);
+        }
+    }
+    if let Some(k) = out.nnz_coeffs {
+        println!("non-zero coefficients: {k}");
+    }
+    // Optional cross-stack audit through the AOT/PJRT validator.
+    if args.has("validate") {
+        let rt = Runtime::load_default()?;
+        if let Some(w) = &out.w {
+            let rep = acf_cd::runtime::validator::validate(&rt, &ds, w)?;
+            println!(
+                "validator [{}]: accuracy {:.2}%, hinge {:.4}, logistic {:.4}",
+                rt.platform(),
+                100.0 * rep.accuracy,
+                rep.hinge_sum,
+                rep.logistic_sum
+            );
+        }
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, out.to_json().to_string_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = parse_spec(args)?;
+    let grid = args.f64_list("grid")?.unwrap_or_else(|| vec![0.01, 0.1, 1.0, 10.0]);
+    let policies: Vec<Policy> = args
+        .str_list("policies")
+        .unwrap_or_else(|| vec!["acf".into(), "perm".into()])
+        .iter()
+        .map(|s| Policy::parse(s).ok_or_else(|| anyhow!("unknown policy '{s}'")))
+        .collect::<Result<_>>()?;
+    let spec = SweepSpec {
+        base,
+        grid,
+        policies,
+        include_shrinking: args.has("shrinking"),
+        workers: args.usize_or("workers", acf_cd::util::threadpool::default_workers())?,
+    };
+    let outcomes = coordinator::run_sweep(&spec)?;
+    let baseline = if spec.include_shrinking { "svm-shrinking" } else { "random-permutation" };
+    let table = coordinator::comparison_table(
+        &format!(
+            "{} on {} (ε = {})",
+            spec.base.problem.family(),
+            spec.base.dataset,
+            spec.base.eps
+        ),
+        &outcomes,
+        baseline,
+        "param",
+    );
+    table.print();
+    if let Some((it, ops, secs)) = coordinator::geomean_speedups(&outcomes, baseline) {
+        println!("\ngeomean speedups — iters {it:.2}×, ops {ops:.2}×, time {secs:.2}×");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, coordinator::outcomes_json(&outcomes).to_string_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cv(args: &Args) -> Result<()> {
+    let spec = parse_spec(args)?;
+    let k = args.usize_or("folds", 3)?;
+    let acc = coordinator::cross_validate(
+        spec.problem,
+        &spec.dataset,
+        spec.policy,
+        spec.eps,
+        spec.scale,
+        k,
+        spec.seed,
+        args.usize_or("workers", acf_cd::util::threadpool::default_workers())?,
+    )?;
+    println!("{k}-fold CV accuracy: {:.2}%", 100.0 * acc);
+    Ok(())
+}
+
+fn cmd_markov(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 5)?;
+    let seed = args.u64_or("seed", 1)?;
+    let steps = args.u64_or("steps", 200_000)?;
+    let mut rng = Rng::new(seed);
+    let q = markov::Quadratic::rbf_gram(n, 3.0, &mut rng);
+    println!("balancing π on a random RBF-Gram instance, n = {n} …");
+    let cfg = markov::BalanceConfig { steps_per_round: steps / 4, ..Default::default() };
+    let res = markov::balance(&q, &cfg, &mut rng);
+    println!(
+        "π̄ = {:?}\nρ(π̄) = {:.6}, imbalance {:.3} ({} rounds)",
+        res.pi.iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+        res.rho,
+        res.imbalance,
+        res.rounds
+    );
+    let uniform = markov::progress_rate(&q, &vec![1.0 / n as f64; n], 2_000, steps, &mut rng);
+    println!(
+        "ρ(uniform) = {:.6}  →  balanced/uniform = {:.3}",
+        uniform.rho,
+        res.rho / uniform.rho
+    );
+    if args.has("curves") {
+        let curves = markov::curves_around(&q, &res.pi, 2_000, steps, &mut rng);
+        for c in &curves {
+            println!(
+                "coord {}: {:?} (max at t=0: {})",
+                c.coordinate,
+                c.relative_rho.iter().map(|r| (r * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+                c.max_at_zero(0.02)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("binary (svm / logreg):");
+    for n in registry::BINARY_NAMES {
+        println!("  {n}");
+    }
+    println!("regression (lasso):");
+    for n in registry::REGRESSION_NAMES {
+        println!("  {n}");
+    }
+    println!("multiclass (mcsvm):");
+    for n in registry::MULTICLASS_NAMES {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    match Runtime::load_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("manifest: {}", rt.manifest.to_string_pretty());
+        }
+        Err(e) => {
+            println!("artifacts not loadable: {e:#}");
+            println!("run `make artifacts` first");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Rprop-style balancing of the coordinate distribution π — the procedure
+//! the paper uses to find π̄ ≈ π* for Figure 1: "adaptively increasing
+//! π_i if ρ_i > ρ and decreasing π_i if ρ_i < ρ with an Rprop-style
+//! algorithm" (§6.2).
+
+use super::chain::progress_rate;
+use super::quadratic::Quadratic;
+use crate::util::rng::Rng;
+
+/// Configuration of the balancer.
+#[derive(Clone, Debug)]
+pub struct BalanceConfig {
+    /// steps per ρ/ρ_i estimation round
+    pub steps_per_round: u64,
+    /// burn-in steps before each estimation
+    pub burn_in: u64,
+    /// maximum balancing rounds
+    pub max_rounds: usize,
+    /// stop when max_i |ρ_i − ρ|/ρ falls below this
+    pub tol: f64,
+    /// Rprop step-size growth / shrink factors
+    pub eta_plus: f64,
+    pub eta_minus: f64,
+    /// initial / min / max multiplicative step sizes
+    pub gamma0: f64,
+    pub gamma_min: f64,
+    pub gamma_max: f64,
+    /// floor for π entries
+    pub pi_min: f64,
+}
+
+impl Default for BalanceConfig {
+    fn default() -> Self {
+        Self {
+            steps_per_round: 40_000,
+            burn_in: 2_000,
+            max_rounds: 60,
+            tol: 0.02,
+            eta_plus: 1.2,
+            eta_minus: 0.5,
+            gamma0: 0.10,
+            gamma_min: 1e-4,
+            gamma_max: 0.5,
+            pi_min: 1e-4,
+        }
+    }
+}
+
+/// Result of balancing.
+#[derive(Clone, Debug)]
+pub struct BalanceResult {
+    /// the balanced distribution π̄
+    pub pi: Vec<f64>,
+    /// final progress rate ρ(π̄)
+    pub rho: f64,
+    /// final imbalance max|ρ_i − ρ|/ρ
+    pub imbalance: f64,
+    pub rounds: usize,
+}
+
+/// Balance π so that all per-coordinate rates ρ_i agree with ρ.
+pub fn balance(q: &Quadratic, cfg: &BalanceConfig, rng: &mut Rng) -> BalanceResult {
+    let n = q.n();
+    let mut pi = vec![1.0 / n as f64; n];
+    let mut gamma = vec![cfg.gamma0; n];
+    let mut last_sign = vec![0i8; n];
+    let mut rho = 0.0;
+    let mut imbalance = f64::INFINITY;
+    let mut rounds = 0;
+    for round in 0..cfg.max_rounds {
+        rounds = round + 1;
+        let est = progress_rate(q, &pi, cfg.burn_in, cfg.steps_per_round, rng);
+        rho = est.rho;
+        imbalance = est.imbalance();
+        if imbalance < cfg.tol {
+            break;
+        }
+        for i in 0..n {
+            let diff = est.rho_i[i] - est.rho;
+            let sign: i8 = if diff > 0.0 {
+                1
+            } else if diff < 0.0 {
+                -1
+            } else {
+                0
+            };
+            // Rprop: accelerate on agreement, back off on sign flip
+            if sign != 0 && last_sign[i] != 0 {
+                if sign == last_sign[i] {
+                    gamma[i] = (gamma[i] * cfg.eta_plus).min(cfg.gamma_max);
+                } else {
+                    gamma[i] = (gamma[i] * cfg.eta_minus).max(cfg.gamma_min);
+                }
+            }
+            last_sign[i] = sign;
+            // ρ_i above average ⇒ coordinate is under-visited ⇒ raise π_i
+            match sign {
+                1 => pi[i] *= 1.0 + gamma[i],
+                -1 => pi[i] /= 1.0 + gamma[i],
+                _ => {}
+            }
+            pi[i] = pi[i].max(cfg.pi_min);
+        }
+        let sum: f64 = pi.iter().sum();
+        for p in pi.iter_mut() {
+            *p /= sum;
+        }
+    }
+    BalanceResult { pi, rho, imbalance, rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 2-coordinate quadratic where the optimal π is analytically
+    /// non-uniform: heavily different diagonal scales.
+    fn skewed_quadratic() -> Quadratic {
+        // strong coupling and asymmetric diagonals
+        Quadratic::from_matrix(2, vec![4.0, 1.2, 1.2, 0.5])
+    }
+
+    #[test]
+    fn balancing_reduces_imbalance() {
+        let q = skewed_quadratic();
+        let mut rng = Rng::new(1);
+        let cfg = BalanceConfig {
+            steps_per_round: 20_000,
+            max_rounds: 40,
+            tol: 0.03,
+            ..Default::default()
+        };
+        let initial = progress_rate(&q, &[0.5, 0.5], 1_000, 20_000, &mut rng);
+        let res = balance(&q, &cfg, &mut rng);
+        assert!(
+            res.imbalance < initial.imbalance().max(0.05),
+            "imbalance {} not reduced from {}",
+            res.imbalance,
+            initial.imbalance()
+        );
+        let s: f64 = res.pi.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(res.pi.iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn balanced_pi_not_worse_than_uniform() {
+        let q = skewed_quadratic();
+        let mut rng = Rng::new(2);
+        let res = balance(
+            &q,
+            &BalanceConfig { steps_per_round: 30_000, max_rounds: 40, ..Default::default() },
+            &mut rng,
+        );
+        let uni = progress_rate(&q, &[0.5, 0.5], 2_000, 60_000, &mut rng);
+        let bal = progress_rate(&q, &res.pi, 2_000, 60_000, &mut rng);
+        // allow small estimation noise
+        assert!(
+            bal.rho >= uni.rho * 0.97,
+            "balanced rho {} worse than uniform {}",
+            bal.rho,
+            uni.rho
+        );
+    }
+
+    #[test]
+    fn symmetric_problem_stays_near_uniform() {
+        // Exchangeable coordinates: π* = uniform.
+        let q = Quadratic::from_matrix(3, vec![1.0, 0.4, 0.4, 0.4, 1.0, 0.4, 0.4, 0.4, 1.0]);
+        let mut rng = Rng::new(3);
+        let res = balance(
+            &q,
+            &BalanceConfig { steps_per_round: 30_000, max_rounds: 30, ..Default::default() },
+            &mut rng,
+        );
+        for &p in &res.pi {
+            assert!((p - 1.0 / 3.0).abs() < 0.08, "pi {:?}", res.pi);
+        }
+    }
+}

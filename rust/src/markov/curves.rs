@@ -1,0 +1,157 @@
+//! Figure 1's perturbation curves: starting from the balanced
+//! distribution π̄, vary it along the paper's curves
+//!
+//! ```text
+//! γ̃_{π,i}(t) = π + (2ᵗ − 1)·π_i·e_i
+//! γ_{π,i}(t) = γ̃ / ‖γ̃‖₁            (re-normalized to the simplex)
+//! ```
+//!
+//! and plot `ρ(γ_{π̄,i}(t)) / ρ(π̄)` over
+//! `t ∈ {−1, −½, −¼, −⅒, 0, ⅒, ¼, ½, 1}`. Conjecture 1 predicts all
+//! curves are uni-modal with the maximum at t = 0.
+
+use super::chain::progress_rate;
+use super::quadratic::Quadratic;
+use crate::util::rng::Rng;
+
+/// The paper's evaluation grid for t.
+pub const T_GRID: [f64; 9] = [-1.0, -0.5, -0.25, -0.1, 0.0, 0.1, 0.25, 0.5, 1.0];
+
+/// γ_{π,i}(t): scale coordinate i's probability by 2ᵗ, renormalize.
+pub fn gamma_curve(pi: &[f64], i: usize, t: f64) -> Vec<f64> {
+    let mut out = pi.to_vec();
+    out[i] += (2f64.powf(t) - 1.0) * pi[i];
+    let s: f64 = out.iter().sum();
+    for v in out.iter_mut() {
+        *v /= s;
+    }
+    out
+}
+
+/// One curve of Figure 1: relative rates ρ(γ(t))/ρ(π̄) over [`T_GRID`].
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub coordinate: usize,
+    pub t: Vec<f64>,
+    /// ρ(γ(t)) / ρ(π̄)
+    pub relative_rho: Vec<f64>,
+}
+
+impl Curve {
+    /// Uni-modality with maximum at t = 0, up to estimation noise `tol`
+    /// (relative). The conjecture's signature in the data.
+    pub fn max_at_zero(&self, tol: f64) -> bool {
+        let zero_idx = self.t.iter().position(|&t| t == 0.0).expect("grid contains 0");
+        let at_zero = self.relative_rho[zero_idx];
+        self.relative_rho.iter().all(|&r| r <= at_zero + tol)
+    }
+}
+
+/// Estimate all n curves around a distribution.
+pub fn curves_around(
+    q: &Quadratic,
+    pi: &[f64],
+    burn_in: u64,
+    steps: u64,
+    rng: &mut Rng,
+) -> Vec<Curve> {
+    let base = progress_rate(q, pi, burn_in, steps, rng).rho;
+    (0..q.n())
+        .map(|i| {
+            let mut rel = Vec::with_capacity(T_GRID.len());
+            for &t in &T_GRID {
+                if t == 0.0 {
+                    rel.push(1.0);
+                    continue;
+                }
+                let gamma = gamma_curve(pi, i, t);
+                let est = progress_rate(q, &gamma, burn_in, steps, rng);
+                rel.push(est.rho / base);
+            }
+            Curve { coordinate: i, t: T_GRID.to_vec(), relative_rho: rel }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_curve_is_distribution() {
+        let pi = vec![0.1, 0.2, 0.3, 0.4];
+        for i in 0..4 {
+            for &t in &T_GRID {
+                let g = gamma_curve(&pi, i, t);
+                let s: f64 = g.iter().sum();
+                assert!((s - 1.0).abs() < 1e-12);
+                assert!(g.iter().all(|&v| v > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_at_zero_is_identity() {
+        let pi = vec![0.25, 0.25, 0.5];
+        let g = gamma_curve(&pi, 1, 0.0);
+        for (a, b) in g.iter().zip(pi.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gamma_doubles_and_halves_mass() {
+        let pi = vec![0.5, 0.5];
+        let g_up = gamma_curve(&pi, 0, 1.0); // 2× mass on coord 0 before renorm
+        assert!(g_up[0] > g_up[1]);
+        let g_dn = gamma_curve(&pi, 0, -1.0); // ½× mass
+        assert!(g_dn[0] < g_dn[1]);
+        // exact values: up = (1.0, 0.5)/1.5, down = (0.25,0.5)/0.75
+        assert!((g_up[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((g_dn[0] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_max_detection() {
+        let c = Curve {
+            coordinate: 0,
+            t: T_GRID.to_vec(),
+            relative_rho: vec![0.8, 0.9, 0.95, 0.99, 1.0, 0.99, 0.97, 0.9, 0.85],
+        };
+        assert!(c.max_at_zero(0.0));
+        let bad = Curve {
+            coordinate: 0,
+            t: T_GRID.to_vec(),
+            relative_rho: vec![0.8, 0.9, 0.95, 0.99, 1.0, 1.05, 0.97, 0.9, 0.85],
+        };
+        assert!(!bad.max_at_zero(0.01));
+        assert!(bad.max_at_zero(0.06));
+    }
+
+    #[test]
+    fn small_instance_curves_peak_at_balanced_pi() {
+        // End-to-end miniature of Figure 1 on a 3-coordinate instance:
+        // balance, then verify all curves peak at t = 0 within noise.
+        let q = Quadratic::rbf_gram(3, 3.0, &mut Rng::new(11));
+        let mut rng = Rng::new(12);
+        let res = crate::markov::balance::balance(
+            &q,
+            &crate::markov::balance::BalanceConfig {
+                steps_per_round: 30_000,
+                max_rounds: 40,
+                tol: 0.02,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let curves = curves_around(&q, &res.pi, 2_000, 40_000, &mut rng);
+        for c in &curves {
+            assert!(
+                c.max_at_zero(0.02),
+                "coordinate {} curve not peaked at 0: {:?}",
+                c.coordinate,
+                c.relative_rho
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! §6 Markov-chain analysis of randomized CD: quadratic model problems,
+//! the projective-chain simulator with ρ / ρ_i estimation, the Rprop
+//! π-balancer, and Figure 1's perturbation curves.
+
+pub mod balance;
+pub mod chain;
+pub mod curves;
+pub mod quadratic;
+
+pub use balance::{balance, BalanceConfig, BalanceResult};
+pub use chain::{progress_rate, Chain, ProgressEstimate};
+pub use curves::{curves_around, gamma_curve, Curve, T_GRID};
+pub use quadratic::Quadratic;

@@ -1,0 +1,195 @@
+//! Unconstrained quadratic model problems `f(w) = ½ wᵀQw` for the §6
+//! Markov-chain analysis, with the paper's two instance generators:
+//!
+//! * RBF Gram matrices of random 2-D point sets (the kernel-learning
+//!   analog used for Figure 1), `Q_ij = exp(−‖x_i−x_j‖²/(2σ²))`, σ = 3;
+//! * `Q = AᵀA` with standard-normal `A` (mentioned as giving similar
+//!   results).
+
+use crate::util::rng::Rng;
+
+/// Dense symmetric positive-definite quadratic problem.
+#[derive(Clone, Debug)]
+pub struct Quadratic {
+    n: usize,
+    /// row-major n×n
+    q: Vec<f64>,
+}
+
+impl Quadratic {
+    pub fn from_matrix(n: usize, q: Vec<f64>) -> Self {
+        assert_eq!(q.len(), n * n);
+        Self { n, q }
+    }
+
+    /// RBF Gram matrix of `n` i.i.d. standard-normal points in R², with
+    /// kernel width σ (paper: σ = 3). A tiny ridge keeps the matrix
+    /// strictly positive definite for degenerate draws.
+    pub fn rbf_gram(n: usize, sigma: f64, rng: &mut Rng) -> Self {
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.gaussian(), rng.gaussian())).collect();
+        let mut q = vec![0.0; n * n];
+        let denom = 2.0 * sigma * sigma;
+        for i in 0..n {
+            for j in 0..n {
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                q[i * n + j] = (-(dx * dx + dy * dy) / denom).exp();
+            }
+            q[i * n + i] += 1e-10;
+        }
+        Self { n, q }
+    }
+
+    /// `Q = AᵀA + εI` with `A` standard normal `m×n` (m = 2n for good
+    /// conditioning without degeneracy).
+    pub fn gram_normal(n: usize, rng: &mut Rng) -> Self {
+        let m = 2 * n;
+        let a: Vec<f64> = (0..m * n).map(|_| rng.gaussian()).collect();
+        let mut q = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for r in 0..m {
+                    s += a[r * n + i] * a[r * n + j];
+                }
+                q[i * n + j] = s / m as f64;
+            }
+            q[i * n + i] += 1e-10;
+        }
+        Self { n, q }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        self.q[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.q[i * self.n..(i + 1) * self.n]
+    }
+
+    /// f(w) = ½ wᵀQw.
+    pub fn objective(&self, w: &[f64]) -> f64 {
+        debug_assert_eq!(w.len(), self.n);
+        let mut total = 0.0;
+        for i in 0..self.n {
+            let qi = self.row(i);
+            let mut s = 0.0;
+            for j in 0..self.n {
+                s += qi[j] * w[j];
+            }
+            total += w[i] * s;
+        }
+        0.5 * total
+    }
+
+    /// One CD projection step `w ← T_i w` (exact 1-D Newton step):
+    /// `w_i ← w_i − (Q_i·w)/Q_ii`. Returns the step Δw_i.
+    #[inline]
+    pub fn project(&self, w: &mut [f64], i: usize) -> f64 {
+        let qi = self.row(i);
+        let mut g = 0.0;
+        for j in 0..self.n {
+            g += qi[j] * w[j];
+        }
+        let d = -g / qi[i];
+        w[i] += d;
+        d
+    }
+
+    /// Exact single-step decrease of f for a step on coordinate i at w
+    /// (before the step): Δf = g²/(2Q_ii).
+    #[inline]
+    pub fn step_gain(&self, w: &[f64], i: usize) -> f64 {
+        let qi = self.row(i);
+        let mut g = 0.0;
+        for j in 0..self.n {
+            g += qi[j] * w[j];
+        }
+        g * g / (2.0 * qi[i])
+    }
+
+    /// Smallest/largest diagonal entries (sanity checks).
+    pub fn diag_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..self.n {
+            let d = self.entry(i, i);
+            lo = lo.min(d);
+            hi = hi.max(d);
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_gram_is_symmetric_unit_diagonal() {
+        let mut rng = Rng::new(1);
+        let q = Quadratic::rbf_gram(6, 3.0, &mut rng);
+        for i in 0..6 {
+            assert!((q.entry(i, i) - 1.0).abs() < 1e-9);
+            for j in 0..6 {
+                assert!((q.entry(i, j) - q.entry(j, i)).abs() < 1e-12);
+                assert!(q.entry(i, j) > 0.0 && q.entry(i, j) <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn objective_positive_definite() {
+        let mut rng = Rng::new(2);
+        for gen in 0..2 {
+            let q = if gen == 0 {
+                Quadratic::rbf_gram(5, 3.0, &mut rng)
+            } else {
+                Quadratic::gram_normal(5, &mut rng)
+            };
+            for _ in 0..50 {
+                let w: Vec<f64> = (0..5).map(|_| rng.gaussian()).collect();
+                let f = q.objective(&w);
+                assert!(f > 0.0, "non-PD objective {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_lands_on_hyperplane_and_descends() {
+        let mut rng = Rng::new(3);
+        let q = Quadratic::rbf_gram(7, 3.0, &mut rng);
+        let mut w: Vec<f64> = (0..7).map(|_| rng.gaussian()).collect();
+        for step in 0..100 {
+            let i = step % 7;
+            let before = q.objective(&w);
+            let gain = q.step_gain(&w, i);
+            q.project(&mut w, i);
+            let after = q.objective(&w);
+            // gradient along i vanishes after the step
+            let g: f64 = (0..7).map(|j| q.entry(i, j) * w[j]).sum();
+            assert!(g.abs() < 1e-9, "residual gradient {g}");
+            // descent and exact gain match
+            assert!(after <= before + 1e-12);
+            assert!((before - after - gain).abs() < 1e-9 * before.max(1.0));
+        }
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut rng = Rng::new(4);
+        let q = Quadratic::rbf_gram(5, 3.0, &mut rng);
+        let mut w: Vec<f64> = (0..5).map(|_| rng.gaussian()).collect();
+        q.project(&mut w, 2);
+        let w1 = w.clone();
+        let d = q.project(&mut w, 2);
+        assert!(d.abs() < 1e-12);
+        assert_eq!(w, w1);
+    }
+}

@@ -1,0 +1,69 @@
+//! Measurement substrate: the paper's *operations* metric (multiply-adds
+//! in derivative computations — its implementation-independent cost
+//! model, §7), plus convergence-trace recording.
+
+pub mod recorder;
+
+pub use recorder::{Trace, TracePoint};
+
+/// Counter for the paper's "number of operations" metric: multiplications
+/// and additions needed to compute derivatives. Solvers add `nnz(x_i)`
+/// per sparse dot / axpy touching instance (or feature) `i`.
+#[derive(Clone, Debug, Default)]
+pub struct OpCounter {
+    ops: u64,
+    iterations: u64,
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one CD iteration costing `ops` multiply-adds.
+    #[inline]
+    pub fn step(&mut self, ops: usize) {
+        self.ops += ops as u64;
+        self.iterations += 1;
+    }
+
+    /// Record extra operations that are not an iteration (e.g. a
+    /// stopping-criterion sweep or shrinking bookkeeping).
+    #[inline]
+    pub fn extra(&mut self, ops: usize) {
+        self.ops += ops as u64;
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    pub fn merge(&mut self, other: &OpCounter) {
+        self.ops += other.ops;
+        self.iterations += other.iterations;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut c = OpCounter::new();
+        c.step(10);
+        c.step(5);
+        c.extra(3);
+        assert_eq!(c.ops(), 18);
+        assert_eq!(c.iterations(), 2);
+        let mut d = OpCounter::new();
+        d.step(2);
+        c.merge(&d);
+        assert_eq!(c.ops(), 20);
+        assert_eq!(c.iterations(), 3);
+    }
+}

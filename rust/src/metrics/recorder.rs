@@ -1,0 +1,97 @@
+//! Convergence-trace recording: (iteration, operations, wall-clock,
+//! objective / KKT violation) samples along a solver run, for the
+//! figure-style outputs and EXPERIMENTS.md evidence.
+
+use crate::util::json::Json;
+
+/// One sample along an optimization run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    pub iteration: u64,
+    pub ops: u64,
+    pub seconds: f64,
+    pub objective: f64,
+    /// maximum KKT violation (or gradient-infinity-norm for unconstrained
+    /// problems) at this point — the stopping-criterion quantity
+    pub violation: f64,
+}
+
+/// A recorded convergence trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    /// Objective values are non-increasing along a CD run (descent
+    /// method); returns the first violating pair if any. Tolerance covers
+    /// floating-point noise on plateaus.
+    pub fn check_monotone(&self, tol: f64) -> Result<(), (usize, f64, f64)> {
+        for (i, w) in self.points.windows(2).enumerate() {
+            let scale = 1.0_f64.max(w[0].objective.abs());
+            if w[1].objective > w[0].objective + tol * scale {
+                return Err((i, w[0].objective, w[1].objective));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut o = Json::obj();
+                    o.set("iter", Json::Num(p.iteration as f64))
+                        .set("ops", Json::Num(p.ops as f64))
+                        .set("sec", Json::Num(p.seconds))
+                        .set("obj", Json::Num(p.objective))
+                        .set("viol", Json::Num(p.violation));
+                    o
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(it: u64, obj: f64) -> TracePoint {
+        TracePoint { iteration: it, ops: it * 10, seconds: it as f64, objective: obj, violation: 0.1 }
+    }
+
+    #[test]
+    fn monotone_check() {
+        let mut t = Trace::new();
+        t.push(p(1, 10.0));
+        t.push(p(2, 5.0));
+        t.push(p(3, 5.0));
+        assert!(t.check_monotone(1e-12).is_ok());
+        t.push(p(4, 6.0));
+        assert!(t.check_monotone(1e-12).is_err());
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Trace::new();
+        t.push(p(1, 2.0));
+        let j = t.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("obj").unwrap().as_f64(), Some(2.0));
+    }
+}

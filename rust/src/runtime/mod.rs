@@ -1,0 +1,240 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them from Rust via
+//! the `xla` crate's PJRT CPU client. Python never runs here.
+//!
+//! Graph contract (kept in sync with `python/compile/model.py`):
+//!
+//! | graph         | inputs                                   | outputs |
+//! |---------------|------------------------------------------|---------|
+//! | `margins`     | X (BL,BD) f32, w (BD,) f32               | (m (BL,) f32,) |
+//! | `binary_eval` | m (BL,) f32, y (BL,) f32, mask (BL,) f32 | ((4,) f32,) |
+//! | `cd_sweep`    | Q (N,N) f32, w (N,) f32, seq (M,) i32    | (w' (N,) f32, total (1,) f32) |
+//!
+//! The validator streams dense tiles of the (sparse) design matrix
+//! through `margins`, accumulates partial margins per row block, then
+//! reduces losses/accuracy with `binary_eval`. It lives on the
+//! *evaluation* path (objective audits, CV accuracy) — the CD iteration
+//! hot loop is pure Rust (see DESIGN.md §2).
+
+pub mod validator;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tile contract — must match python/compile/model.py.
+pub const BL: usize = 256;
+pub const BD: usize = 256;
+pub const MARKOV_N: usize = 8;
+pub const MARKOV_M: usize = 256;
+
+/// Loaded and compiled AOT artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    margins: xla::PjRtLoadedExecutable,
+    binary_eval: xla::PjRtLoadedExecutable,
+    cd_sweep: xla::PjRtLoadedExecutable,
+    pub manifest: Json,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+}
+
+impl Runtime {
+    /// Load from an artifacts directory (default: `artifacts/` next to
+    /// the current dir, or `$ACF_CD_ARTIFACTS`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {:?}/manifest.json — run `make artifacts`", dir))?;
+        let manifest = json::parse(&manifest_text).context("parsing manifest.json")?;
+        // verify the tile contract
+        let bl = manifest
+            .get("tile")
+            .and_then(|t| t.get("bl"))
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing tile.bl"))?;
+        if bl != BL {
+            return Err(anyhow!("artifact tile BL {bl} != runtime BL {BL}; rebuild artifacts"));
+        }
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let margins = compile(&client, &dir.join("margins.hlo.txt"))?;
+        let binary_eval = compile(&client, &dir.join("binary_eval.hlo.txt"))?;
+        let cd_sweep = compile(&client, &dir.join("cd_sweep.hlo.txt"))?;
+        Ok(Runtime { client, margins, binary_eval, cd_sweep, manifest })
+    }
+
+    /// Default artifacts directory: `$ACF_CD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ACF_CD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the margins graph on one dense tile.
+    /// `x_tile`: BL·BD row-major f32; `w_tile`: BD f32. Returns BL partial
+    /// margins.
+    pub fn margins_tile(&self, x_tile: &[f32], w_tile: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(x_tile.len(), BL * BD);
+        assert_eq!(w_tile.len(), BD);
+        let x = xla::Literal::vec1(x_tile).reshape(&[BL as i64, BD as i64])?;
+        let w = xla::Literal::vec1(w_tile);
+        let result = self.margins.execute::<xla::Literal>(&[x, w])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the fused loss/accuracy reduction on one margins block.
+    /// Returns `[hinge_sum, logistic_sum, correct, sq_err_sum]`.
+    pub fn binary_eval_block(&self, m: &[f32], y: &[f32], mask: &[f32]) -> Result<[f32; 4]> {
+        assert_eq!(m.len(), BL);
+        assert_eq!(y.len(), BL);
+        assert_eq!(mask.len(), BL);
+        let lm = xla::Literal::vec1(m);
+        let ly = xla::Literal::vec1(y);
+        let lmask = xla::Literal::vec1(mask);
+        let result =
+            self.binary_eval.execute::<xla::Literal>(&[lm, ly, lmask])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        Ok([v[0], v[1], v[2], v[3]])
+    }
+
+    /// Execute one CD sweep block on the dense quadratic. `q` is
+    /// MARKOV_N² row-major f32 (pad unused coordinates with identity
+    /// diagonal), `w` MARKOV_N f32, `seq` MARKOV_M i32 indices into the
+    /// *real* coordinates. Returns (w_out, total_log_progress).
+    pub fn cd_sweep_block(&self, q: &[f32], w: &[f32], seq: &[i32]) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(q.len(), MARKOV_N * MARKOV_N);
+        assert_eq!(w.len(), MARKOV_N);
+        assert_eq!(seq.len(), MARKOV_M);
+        let lq = xla::Literal::vec1(q).reshape(&[MARKOV_N as i64, MARKOV_N as i64])?;
+        let lw = xla::Literal::vec1(w);
+        let lseq = xla::Literal::vec1(seq);
+        let result =
+            self.cd_sweep.execute::<xla::Literal>(&[lq, lw, lseq])?[0][0].to_literal_sync()?;
+        let (w_out, total) = result.to_tuple2()?;
+        Ok((w_out.to_vec::<f32>()?, total.to_vec::<f32>()?[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // Tests are skipped gracefully when artifacts are not built; the
+        // Makefile/integration path always builds them first.
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("artifacts present but failed to load"))
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn margins_tile_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x: Vec<f32> = (0..BL * BD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let w: Vec<f32> = (0..BD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let got = rt.margins_tile(&x, &w).unwrap();
+        for r in 0..BL {
+            let want: f32 = (0..BD).map(|c| x[r * BD + c] * w[c]).sum();
+            assert!(
+                (got[r] - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "row {r}: {} vs {}",
+                got[r],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn binary_eval_block_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(2);
+        let m: Vec<f32> = (0..BL).map(|_| rng.normal(0.0, 2.0) as f32).collect();
+        let y: Vec<f32> = (0..BL).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let mask: Vec<f32> =
+            (0..BL).map(|i| if i < 200 { 1.0 } else { 0.0 }).collect();
+        let [hinge, logistic, correct, sq] = rt.binary_eval_block(&m, &y, &mask).unwrap();
+        let mut e_h = 0.0f64;
+        let mut e_l = 0.0f64;
+        let mut e_c = 0.0f64;
+        let mut e_s = 0.0f64;
+        for i in 0..200 {
+            let ym = (y[i] * m[i]) as f64;
+            e_h += (1.0 - ym).max(0.0);
+            e_l += (-ym).max(0.0) + (-(ym.abs())).exp().ln_1p();
+            if ym > 0.0 {
+                e_c += 1.0;
+            }
+            e_s += ((m[i] - y[i]) as f64).powi(2);
+        }
+        assert!((hinge as f64 - e_h).abs() < 1e-2 * e_h.max(1.0));
+        assert!((logistic as f64 - e_l).abs() < 1e-2 * e_l.max(1.0));
+        assert_eq!(correct as f64, e_c);
+        assert!((sq as f64 - e_s).abs() < 1e-2 * e_s.max(1.0));
+    }
+
+    #[test]
+    fn cd_sweep_block_matches_rust_chain() {
+        let Some(rt) = runtime() else { return };
+        // real n = 5 padded into MARKOV_N = 8 with identity diagonal
+        let n = 5usize;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let quad = crate::markov::Quadratic::rbf_gram(n, 1.0, &mut rng);
+        let mut q = vec![0.0f32; MARKOV_N * MARKOV_N];
+        for i in 0..MARKOV_N {
+            for j in 0..MARKOV_N {
+                q[i * MARKOV_N + j] = if i < n && j < n {
+                    quad.entry(i, j) as f32
+                } else if i == j {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+        let w0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mut w_pad = vec![0.0f32; MARKOV_N];
+        for i in 0..n {
+            w_pad[i] = w0[i] as f32;
+        }
+        let seq: Vec<i32> = (0..MARKOV_M).map(|k| (k % n) as i32).collect();
+        let (w_out, total) = rt.cd_sweep_block(&q, &w_pad, &seq).unwrap();
+        // rust chain replay
+        let mut chain = crate::markov::Chain { q: &quad, w: w0 };
+        let seq_u: Vec<u32> = seq.iter().map(|&i| i as u32).collect();
+        let total_rust = chain.apply_sequence(&seq_u);
+        assert!(
+            (total as f64 - total_rust).abs() < 0.05 * total_rust.abs().max(1.0),
+            "pallas {total} vs rust {total_rust}"
+        );
+        // padded coordinates untouched
+        for i in n..MARKOV_N {
+            assert_eq!(w_out[i], 0.0);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Tiled validator: streams a sparse dataset through the AOT `margins`
+//! and `binary_eval` graphs to produce implementation-independent audits
+//! of the Rust-native solvers — primal losses, accuracy, squared error —
+//! computed by a *different* stack (JAX/Pallas → XLA) than the solver
+//! itself. Used on the evaluation path only.
+
+use super::Runtime;
+use crate::sparse::Dataset;
+use anyhow::Result;
+
+/// Aggregated validation metrics over a dataset.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ValidationReport {
+    /// Σ max(0, 1 − y⟨w,x⟩)
+    pub hinge_sum: f64,
+    /// Σ log(1 + exp(−y⟨w,x⟩))
+    pub logistic_sum: f64,
+    /// fraction of correctly classified instances
+    pub accuracy: f64,
+    /// Σ (⟨w,x⟩ − y)²
+    pub sq_err_sum: f64,
+    pub instances: usize,
+}
+
+impl ValidationReport {
+    /// SVM primal objective ½‖w‖² + C·hinge_sum.
+    pub fn svm_primal(&self, w: &[f64], c: f64) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(w) + c * self.hinge_sum
+    }
+
+    /// Logistic primal objective ½‖w‖² + C·logistic_sum.
+    pub fn logreg_primal(&self, w: &[f64], c: f64) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(w) + c * self.logistic_sum
+    }
+}
+
+/// Run the tiled validation of a linear model over a dataset.
+///
+/// Tiling: rows in blocks of BL; for each row block, margins are
+/// accumulated over ⌈d/BD⌉ column tiles through the `margins` graph,
+/// then reduced by `binary_eval` with a padding mask.
+pub fn validate(rt: &Runtime, ds: &Dataset, w: &[f64]) -> Result<ValidationReport> {
+    use super::{BD, BL};
+    assert_eq!(w.len(), ds.n_features());
+    let l = ds.n_instances();
+    let d = ds.n_features();
+    let row_blocks = l.div_ceil(BL);
+    let col_blocks = d.div_ceil(BD).max(1);
+
+    let mut totals = [0.0f64; 4];
+    let mut x_tile = vec![0.0f32; BL * BD];
+    let mut w_tile = vec![0.0f32; BD];
+    let mut margins = vec![0.0f32; BL];
+    let mut y_block = vec![0.0f32; BL];
+    let mut mask = vec![0.0f32; BL];
+
+    for rb in 0..row_blocks {
+        let r0 = rb * BL;
+        let r1 = ((rb + 1) * BL).min(l);
+        margins.iter_mut().for_each(|m| *m = 0.0);
+        for cb in 0..col_blocks {
+            let c0 = cb * BD;
+            let c1 = ((cb + 1) * BD).min(d);
+            // dense tile extraction (padded)
+            let tile = ds.x.dense_block(r0, r0 + BL, c0, c0 + BD);
+            x_tile.copy_from_slice(&tile);
+            w_tile.iter_mut().for_each(|v| *v = 0.0);
+            for (k, c) in (c0..c1).enumerate() {
+                w_tile[k] = w[c] as f32;
+            }
+            let partial = rt.margins_tile(&x_tile, &w_tile)?;
+            for (m, p) in margins.iter_mut().zip(partial.iter()) {
+                *m += p;
+            }
+        }
+        for (k, slot) in y_block.iter_mut().enumerate() {
+            let r = r0 + k;
+            if r < r1 {
+                *slot = ds.y[r] as f32;
+                mask[k] = 1.0;
+            } else {
+                *slot = 0.0;
+                mask[k] = 0.0;
+            }
+        }
+        let part = rt.binary_eval_block(&margins, &y_block, &mask)?;
+        for (t, p) in totals.iter_mut().zip(part.iter()) {
+            *t += *p as f64;
+        }
+    }
+
+    Ok(ValidationReport {
+        hinge_sum: totals[0],
+        logistic_sum: totals[1],
+        accuracy: totals[2] / l.max(1) as f64,
+        sq_err_sum: totals[3],
+        instances: l,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping validator test: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn validator_matches_native_metrics() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(5);
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "v",
+                n: 300,
+                d: 290, // forces ragged row and column tiles
+                nnz_per_row: 12,
+                zipf_s: 1.0,
+                concept_k: 20,
+                noise: 0.05,
+            },
+            &mut rng,
+        );
+        let w: Vec<f64> = (0..ds.n_features()).map(|_| rng.normal(0.0, 0.3)).collect();
+        let rep = validate(&rt, &ds, &w).unwrap();
+        // native recomputation
+        let mut hinge = 0.0;
+        let mut logi = 0.0;
+        let mut correct = 0usize;
+        let mut sq = 0.0;
+        for i in 0..ds.n_instances() {
+            let m = ds.x.row(i).dot_dense(&w);
+            let ym = ds.y[i] * m;
+            hinge += (1.0 - ym).max(0.0);
+            logi += if ym > 0.0 { (-ym).exp().ln_1p() } else { -ym + ym.exp().ln_1p() };
+            if ym > 0.0 {
+                correct += 1;
+            }
+            sq += (m - ds.y[i]) * (m - ds.y[i]);
+        }
+        let acc = correct as f64 / ds.n_instances() as f64;
+        assert!((rep.hinge_sum - hinge).abs() < 1e-2 * hinge.max(1.0), "{} vs {hinge}", rep.hinge_sum);
+        assert!((rep.logistic_sum - logi).abs() < 1e-2 * logi.max(1.0));
+        assert!((rep.accuracy - acc).abs() < 1e-9, "{} vs {acc}", rep.accuracy);
+        assert!((rep.sq_err_sum - sq).abs() < 1e-2 * sq.max(1.0));
+        assert_eq!(rep.instances, 300);
+    }
+
+    #[test]
+    fn validator_agrees_with_solver_primal() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(6);
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "v2",
+                n: 200,
+                d: 150,
+                nnz_per_row: 10,
+                zipf_s: 1.0,
+                concept_k: 15,
+                noise: 0.02,
+            },
+            &mut rng,
+        );
+        let c = 1.0;
+        let mut sched =
+            crate::sched::PermutationScheduler::new(ds.n_instances(), Rng::new(7));
+        let (model, res) = crate::solvers::svm::solve(
+            &ds,
+            c,
+            &mut sched,
+            crate::solvers::SolverConfig::with_eps(1e-4),
+        );
+        assert!(res.status.converged());
+        let rep = validate(&rt, &ds, &model.w).unwrap();
+        let primal_xla = rep.svm_primal(&model.w, c);
+        let primal_native = crate::solvers::svm::primal_objective(&ds, &model.w, c);
+        assert!(
+            (primal_xla - primal_native).abs() < 1e-2 * primal_native.max(1.0),
+            "xla {primal_xla} vs native {primal_native}"
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! Coordinate-selection policies behind one interface.
+//!
+//! The CD solvers are generic over [`Scheduler`]; the paper's comparison
+//! is exactly a comparison of these policies:
+//!
+//! * [`CyclicScheduler`] — deterministic `i ← t mod n` sweeps (the
+//!   classic LASSO solver of Friedman et al.).
+//! * [`PermutationScheduler`] — epoch sweeps over a fresh random
+//!   permutation (liblinear's default).
+//! * [`UniformScheduler`] — i.i.d. uniform selection.
+//! * [`AcfSchedulerPolicy`] — the paper's contribution (wraps
+//!   [`crate::acf::AcfScheduler`]).
+//!
+//! Shrinking (liblinear's heuristic) is implemented *inside* the SVM
+//! solver — it is an active-set transformation of the problem rather than
+//! a pure selection policy — but from the CD perspective it is the
+//! baseline's form of online frequency adaptation (§3.2).
+
+use crate::acf::{AcfParams, AcfScheduler};
+use crate::util::rng::Rng;
+
+/// A coordinate-selection policy. `n` is fixed at construction; `next`
+/// yields the coordinate for iteration t; `report` feeds back the
+/// observed single-step progress Δf (ignored by non-adaptive policies).
+pub trait Scheduler: Send {
+    /// Select the next active coordinate.
+    fn next(&mut self) -> usize;
+
+    /// Report observed progress of the last step on coordinate `i`.
+    fn report(&mut self, _i: usize, _delta_f: f64) {}
+
+    /// Number of coordinates.
+    fn n(&self) -> usize;
+
+    /// Human-readable policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Current selection probabilities (diagnostics; uniform for
+    /// non-adaptive policies).
+    fn probabilities(&self) -> Vec<f64> {
+        vec![1.0 / self.n() as f64; self.n()]
+    }
+}
+
+/// Deterministic cyclic sweeps: 0, 1, …, n−1, 0, 1, …
+#[derive(Clone, Debug)]
+pub struct CyclicScheduler {
+    n: usize,
+    t: usize,
+}
+
+impl CyclicScheduler {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, t: 0 }
+    }
+}
+
+impl Scheduler for CyclicScheduler {
+    #[inline]
+    fn next(&mut self) -> usize {
+        let i = self.t;
+        self.t += 1;
+        if self.t == self.n {
+            self.t = 0;
+        }
+        i
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "cyclic"
+    }
+}
+
+/// Epoch sweeps over a fresh uniform random permutation (liblinear).
+#[derive(Clone, Debug)]
+pub struct PermutationScheduler {
+    perm: Vec<u32>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl PermutationScheduler {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        assert!(n > 0);
+        Self { perm: (0..n as u32).collect(), cursor: n, rng }
+    }
+}
+
+impl Scheduler for PermutationScheduler {
+    #[inline]
+    fn next(&mut self) -> usize {
+        if self.cursor >= self.perm.len() {
+            self.rng.shuffle(&mut self.perm);
+            self.cursor = 0;
+        }
+        let i = self.perm[self.cursor];
+        self.cursor += 1;
+        i as usize
+    }
+
+    fn n(&self) -> usize {
+        self.perm.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "random-permutation"
+    }
+}
+
+/// I.i.d. uniform selection.
+#[derive(Clone, Debug)]
+pub struct UniformScheduler {
+    n: usize,
+    rng: Rng,
+}
+
+impl UniformScheduler {
+    pub fn new(n: usize, rng: Rng) -> Self {
+        assert!(n > 0);
+        Self { n, rng }
+    }
+}
+
+impl Scheduler for UniformScheduler {
+    #[inline]
+    fn next(&mut self) -> usize {
+        self.rng.below(self.n)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform-iid"
+    }
+}
+
+/// The ACF policy (paper Algorithms 2+3).
+#[derive(Clone, Debug)]
+pub struct AcfSchedulerPolicy {
+    inner: AcfScheduler,
+}
+
+impl AcfSchedulerPolicy {
+    pub fn new(n: usize, params: AcfParams, rng: Rng) -> Self {
+        Self { inner: AcfScheduler::new(n, params, rng) }
+    }
+
+    pub fn inner(&self) -> &AcfScheduler {
+        &self.inner
+    }
+}
+
+impl Scheduler for AcfSchedulerPolicy {
+    #[inline]
+    fn next(&mut self) -> usize {
+        self.inner.next()
+    }
+
+    #[inline]
+    fn report(&mut self, i: usize, delta_f: f64) {
+        self.inner.report(i, delta_f);
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn name(&self) -> &'static str {
+        "acf"
+    }
+
+    fn probabilities(&self) -> Vec<f64> {
+        self.inner.preferences().probabilities()
+    }
+}
+
+/// Named policy selector used by the CLI / coordinator / benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Cyclic,
+    Permutation,
+    Uniform,
+    Acf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "cyclic" => Some(Policy::Cyclic),
+            "permutation" | "perm" | "random-permutation" => Some(Policy::Permutation),
+            "uniform" | "uniform-iid" => Some(Policy::Uniform),
+            "acf" => Some(Policy::Acf),
+            _ => None,
+        }
+    }
+
+    pub fn build(self, n: usize, params: AcfParams, rng: Rng) -> Box<dyn Scheduler> {
+        match self {
+            Policy::Cyclic => Box::new(CyclicScheduler::new(n)),
+            Policy::Permutation => Box::new(PermutationScheduler::new(n, rng)),
+            Policy::Uniform => Box::new(UniformScheduler::new(n, rng)),
+            Policy::Acf => Box::new(AcfSchedulerPolicy::new(n, params, rng)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Cyclic => "cyclic",
+            Policy::Permutation => "random-permutation",
+            Policy::Uniform => "uniform-iid",
+            Policy::Acf => "acf",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn cyclic_order() {
+        let mut s = CyclicScheduler::new(3);
+        let seq: Vec<usize> = (0..7).map(|_| s.next()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn permutation_each_epoch_is_permutation() {
+        prop::check(20, |g| {
+            let n = g.usize_in(1, 50);
+            let mut s = PermutationScheduler::new(n, Rng::new(g.seed));
+            for _ in 0..3 {
+                let mut epoch: Vec<usize> = (0..n).map(|_| s.next()).collect();
+                epoch.sort_unstable();
+                prop::assert_holds(epoch == (0..n).collect::<Vec<_>>(), "epoch is a permutation")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uniform_covers_everything_eventually() {
+        let n = 20;
+        let mut s = UniformScheduler::new(n, Rng::new(5));
+        let mut seen = vec![false; n];
+        for _ in 0..2000 {
+            seen[s.next()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn policy_parse_and_build() {
+        for (name, expect) in [
+            ("cyclic", Policy::Cyclic),
+            ("perm", Policy::Permutation),
+            ("uniform", Policy::Uniform),
+            ("acf", Policy::Acf),
+        ] {
+            assert_eq!(Policy::parse(name), Some(expect));
+            let s = expect.build(4, AcfParams::default(), Rng::new(1));
+            assert_eq!(s.n(), 4);
+        }
+        assert_eq!(Policy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn probabilities_default_uniform() {
+        let s = CyclicScheduler::new(4);
+        assert_eq!(s.probabilities(), vec![0.25; 4]);
+    }
+
+    #[test]
+    fn acf_policy_adapts_probabilities() {
+        let mut s = AcfSchedulerPolicy::new(4, AcfParams::default(), Rng::new(6));
+        for _ in 0..2000 {
+            let i = s.next();
+            s.report(i, if i == 2 { 5.0 } else { 0.1 });
+        }
+        let p = s.probabilities();
+        assert!(p[2] > 0.3, "{p:?}");
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+}

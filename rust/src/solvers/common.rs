@@ -1,0 +1,200 @@
+//! Shared solver configuration, result types and stopping criteria.
+//!
+//! All four solvers follow the paper's experimental protocol (§7):
+//!
+//! * stop when the maximum KKT violation (or gradient-infinity norm for
+//!   unconstrained problems) drops below ε,
+//! * count *iterations* (CD steps) and *operations* (multiply-adds in
+//!   derivative computations — the implementation-independent metric),
+//! * report wall-clock seconds,
+//! * expose the single-step progress `Δf` to the scheduler as a cheap
+//!   by-product of each step.
+
+use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::util::timer::Timer;
+
+/// Why a solver run terminated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// KKT / gradient criterion met (max violation < ε).
+    Converged,
+    /// Iteration budget exhausted — reported as "—" (DNF) in the paper's
+    /// style for runs that did not finish.
+    IterLimit,
+    /// Wall-clock budget exhausted.
+    TimeLimit,
+}
+
+impl SolveStatus {
+    pub fn converged(&self) -> bool {
+        matches!(self, SolveStatus::Converged)
+    }
+}
+
+/// Common solver knobs.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// stopping threshold on the max KKT violation (paper: 0.01 / 0.001)
+    pub eps: f64,
+    /// hard cap on CD iterations (DNF guard; the paper's huge runs are
+    /// capped the same way at our reduced scale)
+    pub max_iterations: u64,
+    /// optional wall-clock cap in seconds
+    pub max_seconds: Option<f64>,
+    /// record a convergence trace point every `trace_every` iterations
+    /// (0 = no tracing)
+    pub trace_every: u64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self { eps: 0.01, max_iterations: 200_000_000, max_seconds: None, trace_every: 0 }
+    }
+}
+
+impl SolverConfig {
+    pub fn with_eps(eps: f64) -> Self {
+        Self { eps, ..Default::default() }
+    }
+}
+
+/// Outcome of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub status: SolveStatus,
+    /// CD iterations performed (inner steps for subspace descent count
+    /// as the paper counts them: one iteration = one dual variable
+    /// update).
+    pub iterations: u64,
+    /// multiply-add operations in derivative computations
+    pub ops: u64,
+    pub seconds: f64,
+    /// final objective value
+    pub objective: f64,
+    /// final max KKT violation seen in the verification pass
+    pub final_violation: f64,
+    /// number of full passes (epochs / blocks) executed
+    pub epochs: u64,
+    pub trace: Trace,
+}
+
+impl SolveResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:?}: iters {}, ops {}, {:.3}s, obj {:.6e}, viol {:.3e}",
+            self.status,
+            self.iterations,
+            self.ops,
+            self.seconds,
+            self.objective,
+            self.final_violation
+        )
+    }
+}
+
+/// Book-keeping helper shared by the solver loops: iteration/ops
+/// counting, wall-clock budget, trace sampling.
+pub struct RunState {
+    pub counter: OpCounter,
+    pub timer: Timer,
+    pub trace: Trace,
+    config: SolverConfig,
+}
+
+impl RunState {
+    pub fn new(config: SolverConfig) -> Self {
+        Self { counter: OpCounter::new(), timer: Timer::start(), trace: Trace::new(), config }
+    }
+
+    #[inline]
+    pub fn eps(&self) -> f64 {
+        self.config.eps
+    }
+
+    /// Record one CD step of `ops` multiply-adds; returns false when a
+    /// budget is exhausted.
+    #[inline]
+    pub fn step(&mut self, ops: usize) -> bool {
+        self.counter.step(ops);
+        self.counter.iterations() < self.config.max_iterations
+    }
+
+    #[inline]
+    pub fn over_time(&self) -> bool {
+        match self.config.max_seconds {
+            Some(cap) => self.timer.secs() > cap,
+            None => false,
+        }
+    }
+
+    /// Sample a trace point if due.
+    #[inline]
+    pub fn maybe_trace(&mut self, objective: impl FnOnce() -> f64, violation: f64) {
+        let every = self.config.trace_every;
+        if every > 0 && self.counter.iterations() % every == 0 {
+            self.trace.push(TracePoint {
+                iteration: self.counter.iterations(),
+                ops: self.counter.ops(),
+                seconds: self.timer.secs(),
+                objective: objective(),
+                violation,
+            });
+        }
+    }
+
+    pub fn finish(
+        self,
+        status: SolveStatus,
+        objective: f64,
+        final_violation: f64,
+        epochs: u64,
+    ) -> SolveResult {
+        SolveResult {
+            status,
+            iterations: self.counter.iterations(),
+            ops: self.counter.ops(),
+            seconds: self.timer.secs(),
+            objective,
+            final_violation,
+            epochs,
+            trace: self.trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_state_budgets() {
+        let cfg = SolverConfig { max_iterations: 3, ..Default::default() };
+        let mut rs = RunState::new(cfg);
+        assert!(rs.step(10));
+        assert!(rs.step(10));
+        assert!(!rs.step(10)); // 3rd iteration hits the cap
+        let r = rs.finish(SolveStatus::IterLimit, 1.0, 0.5, 1);
+        assert_eq!(r.iterations, 3);
+        assert_eq!(r.ops, 30);
+        assert!(!r.status.converged());
+    }
+
+    #[test]
+    fn tracing_samples_at_interval() {
+        let cfg = SolverConfig { trace_every: 2, ..Default::default() };
+        let mut rs = RunState::new(cfg);
+        for _ in 0..6 {
+            rs.step(1);
+            rs.maybe_trace(|| 1.0, 0.1);
+        }
+        assert_eq!(rs.trace.points.len(), 3);
+    }
+
+    #[test]
+    fn time_budget() {
+        let cfg = SolverConfig { max_seconds: Some(0.0), ..Default::default() };
+        let rs = RunState::new(cfg);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert!(rs.over_time());
+    }
+}

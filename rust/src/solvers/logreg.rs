@@ -1,0 +1,328 @@
+//! Dual coordinate descent for L2-regularized logistic regression
+//! (Yu, Huang & Lin, 2011) — the paper's §3.4 testbed (Table 9).
+//!
+//! Problem (3):
+//!
+//! ```text
+//! min_α  f(α) = ½ Σ_ij α_i α_j y_i y_j ⟨x_i,x_j⟩
+//!               + Σ_i [ α_i log α_i + (C−α_i) log(C−α_i) ]
+//! s.t.   0 ≤ α_i ≤ C
+//! ```
+//!
+//! The one-dimensional sub-problem has no closed form (the logarithmic
+//! terms); following liblinear we run a few guarded Newton iterations on
+//! the scalar function
+//!
+//! ```text
+//! g(z) = Q_ii·(z − α_i) + m_i + log(z / (C − z)),   m_i = y_i⟨w,x_i⟩
+//! ```
+//!
+//! which is strictly increasing on (0, C) with g(0⁺) = −∞, g(C⁻) = +∞, so
+//! a bisection-safeguarded Newton always converges. The solution is
+//! interior (never exactly 0 or C) — hence no shrinking, and liblinear's
+//! baseline policy is uniform sweeps in random order (§3.4).
+//!
+//! `Δf` is computed exactly in O(1) from the quadratic change plus the
+//! entropy terms before/after.
+
+use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use crate::sched::Scheduler;
+use crate::sparse::Dataset;
+
+/// Trained dual logistic-regression model.
+#[derive(Clone, Debug)]
+pub struct LogRegModel {
+    pub alpha: Vec<f64>,
+    pub w: Vec<f64>,
+    pub c: f64,
+}
+
+/// Entropy-like term `a log a + (C−a) log(C−a)` with the 0·log0 = 0
+/// convention.
+#[inline]
+fn ent(a: f64, c: f64) -> f64 {
+    let mut s = 0.0;
+    if a > 0.0 {
+        s += a * a.ln();
+    }
+    let b = c - a;
+    if b > 0.0 {
+        s += b * b.ln();
+    }
+    s
+}
+
+/// Inner solver: minimize `½q(z−a₀)² + m·(z−a₀) + ent(z)` over z ∈ (0,C).
+/// Returns the new α_i. Newton with bisection safeguards; ~O(10) scalar
+/// iterations, independent of data size.
+#[inline]
+fn solve_1d(q: f64, m: f64, a0: f64, c: f64, tol: f64, max_newton: usize) -> f64 {
+    // derivative: g(z) = q(z − a0) + m + ln(z/(C−z))
+    let g = |z: f64| q * (z - a0) + m + (z / (c - z)).ln();
+    // bracket: derivative is −∞ at 0⁺, +∞ at C⁻
+    let mut lo = 0.0f64;
+    let mut hi = c;
+    let mut z = a0.clamp(c * 1e-12, c * (1.0 - 1e-12));
+    for _ in 0..max_newton {
+        let gz = g(z);
+        if gz.abs() < tol {
+            return z;
+        }
+        if gz > 0.0 {
+            hi = z;
+        } else {
+            lo = z;
+        }
+        let h = q + c / (z * (c - z)); // g'(z) > 0
+        let mut z_new = z - gz / h;
+        if !(z_new > lo && z_new < hi) {
+            z_new = 0.5 * (lo + hi); // bisection fallback
+        }
+        z = z_new;
+    }
+    z
+}
+
+/// Violation measure: |∂f/∂α_i| (solution is interior, so the stopping
+/// criterion is a plain gradient-infinity norm, paper §7).
+#[inline]
+fn grad_violation(g: f64) -> f64 {
+    g.abs()
+}
+
+/// Scheduler-driven dual CD for logistic regression.
+pub fn solve(
+    ds: &Dataset,
+    c: f64,
+    sched: &mut dyn Scheduler,
+    config: SolverConfig,
+) -> (LogRegModel, SolveResult) {
+    let n = ds.n_instances();
+    assert_eq!(sched.n(), n);
+    let d = ds.n_features();
+    let q_diag = ds.x.row_norms_sq();
+    // Interior initialization (liblinear-style): α_i a small fraction of
+    // C, with w built consistently.
+    let a_init = (0.001 * c).min(1e-3).max(1e-10);
+    let mut alpha = vec![a_init; n];
+    let mut w = vec![0.0f64; d];
+    for i in 0..n {
+        ds.x.row(i).axpy_into(alpha[i] * ds.y[i], &mut w);
+    }
+    let mut rs = RunState::new(config);
+    let mut status = SolveStatus::IterLimit;
+    let mut window_max = 0.0f64;
+    let mut window_count = 0usize;
+    let mut epochs = 0u64;
+    let mut final_viol = f64::INFINITY;
+
+    let objective = |alpha: &[f64], w: &[f64]| -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(w)
+            + alpha.iter().map(|&a| ent(a, c)).sum::<f64>()
+    };
+
+    'outer: loop {
+        let i = sched.next();
+        let row = ds.x.row(i);
+        let m = ds.y[i] * row.dot_dense(&w);
+        let a_old = alpha[i];
+        // gradient at the current point: the Qα term is y_i⟨w,x_i⟩ = m
+        let g = m + (a_old / (c - a_old)).ln();
+        let viol = grad_violation(g);
+        window_max = window_max.max(viol);
+        window_count += 1;
+
+        let mut ops = row.nnz();
+        let mut delta_f = 0.0;
+        {
+            let a_new = solve_1d(q_diag[i], m, a_old, c, 1e-10, 25);
+            let step_d = a_new - a_old;
+            if step_d.abs() > 1e-15 {
+                alpha[i] = a_new;
+                row.axpy_into(step_d * ds.y[i], &mut w);
+                ops += row.nnz();
+                // exact decrease: quadratic part m·d + ½q·d² plus entropy
+                delta_f = -(m * step_d + 0.5 * q_diag[i] * step_d * step_d)
+                    - (ent(a_new, c) - ent(a_old, c));
+            }
+        }
+        sched.report(i, delta_f.max(0.0));
+
+        let budget_ok = rs.step(ops);
+        rs.maybe_trace(|| objective(&alpha, &w), viol);
+        if !budget_ok || rs.over_time() {
+            if rs.over_time() {
+                status = SolveStatus::TimeLimit;
+            }
+            let (v, extra) = verify(ds, &alpha, &w, c);
+            rs.counter.extra(extra);
+            final_viol = v;
+            break 'outer;
+        }
+
+        if window_count >= n {
+            epochs += 1;
+            if window_max < rs.eps() {
+                let (v, extra) = verify(ds, &alpha, &w, c);
+                rs.counter.extra(extra);
+                if v < rs.eps() {
+                    status = SolveStatus::Converged;
+                    final_viol = v;
+                    break 'outer;
+                }
+            }
+            window_max = 0.0;
+            window_count = 0;
+        }
+    }
+
+    let obj = objective(&alpha, &w);
+    let model = LogRegModel { alpha, w, c };
+    (model, rs.finish(status, obj, final_viol, epochs))
+}
+
+fn verify(ds: &Dataset, alpha: &[f64], w: &[f64], c: f64) -> (f64, usize) {
+    let mut max_viol = 0.0f64;
+    let mut ops = 0usize;
+    for i in 0..ds.n_instances() {
+        let row = ds.x.row(i);
+        let m = ds.y[i] * row.dot_dense(w);
+        ops += row.nnz();
+        let g = m + (alpha[i] / (c - alpha[i])).ln();
+        max_viol = max_viol.max(grad_violation(g));
+    }
+    (max_viol, ops)
+}
+
+/// Primal objective `½‖w‖² + C Σ log(1+exp(−y⟨w,x⟩))` for duality-gap
+/// audits.
+pub fn primal_objective(ds: &Dataset, w: &[f64], c: f64) -> f64 {
+    let mut loss = 0.0;
+    for i in 0..ds.n_instances() {
+        let m = ds.y[i] * ds.x.row(i).dot_dense(w);
+        // numerically stable log1p(exp(−m))
+        loss += if m > 0.0 { (-m).exp().ln_1p() } else { -m + m.exp().ln_1p() };
+    }
+    0.5 * crate::sparse::ops::norm_sq(w) + c * loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acf::AcfParams;
+    use crate::data::synth;
+    use crate::sched::{AcfSchedulerPolicy, PermutationScheduler};
+    use crate::sparse::Csr;
+    use crate::util::rng::Rng;
+
+    fn text_ds(seed: u64) -> Dataset {
+        synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "t",
+                n: 250,
+                d: 400,
+                nnz_per_row: 12,
+                zipf_s: 1.0,
+                concept_k: 25,
+                noise: 0.05,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn solve_1d_finds_root() {
+        // check that the returned point zeroes the derivative
+        for (q, m, a0, c) in [(1.0, 0.5, 0.3, 1.0), (10.0, -2.0, 0.9, 2.0), (0.0, 1.0, 0.1, 0.5)]
+        {
+            let z = solve_1d(q, m, a0, c, 1e-12, 50);
+            let g = q * (z - a0) + m + (z / (c - z)).ln();
+            assert!(g.abs() < 1e-8, "g({z}) = {g}");
+            assert!(z > 0.0 && z < c);
+        }
+    }
+
+    #[test]
+    fn converges_and_interior() {
+        let ds = text_ds(1);
+        let c = 1.0;
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(1));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-4));
+        assert!(res.status.converged(), "{}", res.summary());
+        // dual solution strictly interior
+        assert!(model.alpha.iter().all(|&a| a > 0.0 && a < c));
+    }
+
+    #[test]
+    fn duality_gap_closes() {
+        let ds = text_ds(2);
+        let c = 2.0;
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(2));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-6));
+        assert!(res.status.converged());
+        // dual value = −f(α) + constant C·log C·ℓ? For our f the duality
+        // relation is P(w*) = −f(α*) + ℓ·C·ln C; check the gap with that
+        // constant folded in.
+        let l = ds.n_instances() as f64;
+        let dual_value = -(res.objective) + l * c * c.ln();
+        let primal = primal_objective(&ds, &model.w, c);
+        let gap = (primal - dual_value).abs() / primal.abs().max(1.0);
+        assert!(gap < 1e-3, "gap {gap}: primal {primal} dual {dual_value}");
+    }
+
+    #[test]
+    fn gradient_norm_small_at_solution() {
+        let ds = text_ds(3);
+        let c = 1.0;
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(3));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-5));
+        assert!(res.status.converged());
+        let (v, _) = verify(&ds, &model.alpha, &model.w, c);
+        assert!(v < 1e-5, "violation {v}");
+    }
+
+    #[test]
+    fn acf_matches_uniform_objective() {
+        let ds = text_ds(4);
+        let c = 10.0;
+        let cfg = SolverConfig::with_eps(1e-4);
+        let mut perm = PermutationScheduler::new(ds.n_instances(), Rng::new(4));
+        let (_, r1) = solve(&ds, c, &mut perm, cfg.clone());
+        let mut acf =
+            AcfSchedulerPolicy::new(ds.n_instances(), AcfParams::default(), Rng::new(5));
+        let (_, r2) = solve(&ds, c, &mut acf, cfg);
+        assert!(r1.status.converged() && r2.status.converged());
+        let rel = (r1.objective - r2.objective).abs() / r1.objective.abs().max(1.0);
+        assert!(rel < 1e-3, "{} vs {}", r1.objective, r2.objective);
+    }
+
+    #[test]
+    fn model_predicts_toy() {
+        let ds = Dataset {
+            name: "toy".into(),
+            x: Csr::from_rows(
+                2,
+                vec![
+                    vec![(0, 1.0)],
+                    vec![(0, 2.0), (1, 0.5)],
+                    vec![(0, -1.5)],
+                    vec![(0, -1.0), (1, -1.0)],
+                ],
+            ),
+            y: vec![1.0, 1.0, -1.0, -1.0],
+        };
+        let mut sched = PermutationScheduler::new(4, Rng::new(6));
+        let (model, res) = solve(&ds, 5.0, &mut sched, SolverConfig::with_eps(1e-6));
+        assert!(res.status.converged());
+        assert_eq!(crate::data::split::binary_accuracy(&ds, &model.w), 1.0);
+    }
+
+    #[test]
+    fn objective_monotone() {
+        let ds = text_ds(7);
+        let cfg = SolverConfig { eps: 1e-4, trace_every: 50, ..Default::default() };
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(7));
+        let (_, res) = solve(&ds, 1.0, &mut sched, cfg);
+        res.trace.check_monotone(1e-9).expect("monotone descent");
+    }
+}

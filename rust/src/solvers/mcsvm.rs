@@ -1,0 +1,457 @@
+//! Weston–Watkins multi-class SVM via **subspace descent** — the paper's
+//! §3.3 testbed (Table 8).
+//!
+//! Primal:
+//!
+//! ```text
+//! min  ½ Σ_k ‖w_k‖² + C Σ_i Σ_{k≠y_i} max(0, 1 − (⟨w_{y_i},x_i⟩ − ⟨w_k,x_i⟩))
+//! ```
+//!
+//! Dual variables `α_{ik} ∈ [0, C]` for `k ≠ y_i`, with
+//!
+//! ```text
+//! w_k = Σ_i x_i · ( [y_i = k]·Σ_m α_{im}  −  [y_i ≠ k]·α_{ik} )
+//! f(α) = ½ Σ_k ‖w_k‖² − Σ_{i,k≠y_i} α_{ik}        (minimize)
+//! ∂f/∂α_{ik} = ⟨w_{y_i} − w_k, x_i⟩ − 1
+//! ```
+//!
+//! A *subspace* step picks example `i`, computes the K−1 partial
+//! derivatives at the cost of K sparse dots (O(K·nnz(x_i))), then solves
+//! the (K−1)-dimensional box-constrained QP with an SMO-style inner CD
+//! loop: repeatedly pick the inner coordinate with the largest projected
+//! gradient and make a clipped Newton step, updating cached margins in
+//! O(K) per inner step — up to `10·K` inner iterations (paper §7.3). The
+//! aggregated exact decrease `Δf` over the sub-problem solve is the
+//! progress signal reported to ACF.
+//!
+//! The subspace Hessian for example `i` is `‖x_i‖²·(I + 1·1ᵀ)` restricted
+//! to `k ≠ y_i`: diagonal `2‖x_i‖²`, off-diagonal `‖x_i‖²`.
+
+use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use crate::sched::Scheduler;
+use crate::sparse::Dataset;
+
+/// Trained multi-class model.
+#[derive(Clone, Debug)]
+pub struct McSvmModel {
+    /// per-class primal weights, K × d
+    pub w: Vec<Vec<f64>>,
+    /// dual variables, flattened ℓ × K (entry (i,k) unused when k = y_i)
+    pub alpha: Vec<f64>,
+    pub c: f64,
+    pub k_classes: usize,
+}
+
+impl McSvmModel {
+    /// Dual objective ½Σ‖w_k‖² − Σα.
+    pub fn objective(&self) -> f64 {
+        let quad: f64 = self.w.iter().map(|wk| crate::sparse::ops::norm_sq(wk)).sum();
+        let lin: f64 = self.alpha.iter().sum();
+        0.5 * quad - lin
+    }
+}
+
+/// Result of one subspace solve.
+struct SubspaceOutcome {
+    delta_f: f64,
+    max_viol_entry: f64,
+    inner_steps: u64,
+    ops: usize,
+}
+
+/// Solve the K−1 dimensional sub-problem for example `i` in place.
+///
+/// `margins[k] = ⟨w_k, x_i⟩` are computed by the caller; `alpha_i` is the
+/// slice of the K dual variables of example i. Updates `alpha_i`,
+/// returns the deltas to apply to the weight vectors via
+/// `delta_beta[k]`.
+#[allow(clippy::too_many_arguments)]
+fn solve_subspace(
+    yi: usize,
+    k_classes: usize,
+    xi_norm_sq: f64,
+    c: f64,
+    margins: &mut [f64],
+    alpha_i: &mut [f64],
+    delta_beta: &mut [f64],
+    max_inner: usize,
+    eps_inner: f64,
+) -> SubspaceOutcome {
+    // g_k = ⟨w_{y_i} − w_k, x_i⟩ − 1 changes when any inner variable
+    // moves: raising α_{ik'} adds x_i to w_{y_i} (affects all g) and
+    // subtracts x_i from w_{k'} (affects g_{k'} only).
+    // Track s = Σ_m α_{im} implicitly through margin updates.
+    for b in delta_beta.iter_mut() {
+        *b = 0.0;
+    }
+    let q = xi_norm_sq;
+    let mut delta_f = 0.0f64;
+    let mut inner_steps = 0u64;
+    let mut max_viol_first = 0.0f64;
+    if q <= 0.0 {
+        // empty row: gradient is −1 for every k ⇒ all α go to C
+        let mut moved = 0.0;
+        for k in 0..k_classes {
+            if k == yi {
+                continue;
+            }
+            let d = c - alpha_i[k];
+            if d > 0.0 {
+                alpha_i[k] = c;
+                delta_beta[k] -= d;
+                delta_beta[yi] += d;
+                moved += d;
+                max_viol_first = 1.0;
+            }
+        }
+        return SubspaceOutcome {
+            delta_f: moved,
+            max_viol_entry: max_viol_first,
+            inner_steps: 1,
+            ops: k_classes,
+        };
+    }
+
+    for step in 0..max_inner {
+        // pick the inner coordinate with the largest projected gradient
+        let myi = margins[yi];
+        let mut best_k = usize::MAX;
+        let mut best_v = 0.0f64;
+        for k in 0..k_classes {
+            if k == yi {
+                continue;
+            }
+            let g = myi - margins[k] - 1.0;
+            let a = alpha_i[k];
+            let v = if a <= 0.0 {
+                (-g).max(0.0)
+            } else if a >= c {
+                g.max(0.0)
+            } else {
+                g.abs()
+            };
+            if v > best_v {
+                best_v = v;
+                best_k = k;
+            }
+        }
+        if step == 0 {
+            max_viol_first = best_v;
+        }
+        if best_k == usize::MAX || best_v < eps_inner {
+            break;
+        }
+        let k = best_k;
+        let g = myi - margins[k] - 1.0;
+        // diagonal curvature: 2‖x_i‖²
+        let h = 2.0 * q;
+        let old = alpha_i[k];
+        let new = (old - g / h).clamp(0.0, c);
+        let d = new - old;
+        if d == 0.0 {
+            break;
+        }
+        alpha_i[k] = new;
+        // margins: w_{y_i} += d·x_i ⇒ m_{y_i} += d·q ; w_k −= d·x_i ⇒ m_k −= d·q
+        margins[yi] += d * q;
+        margins[k] -= d * q;
+        delta_beta[yi] += d;
+        delta_beta[k] -= d;
+        // exact decrease along this inner coordinate
+        delta_f += -(g * d + 0.5 * h * d * d);
+        inner_steps += 1;
+    }
+    SubspaceOutcome {
+        delta_f,
+        max_viol_entry: max_viol_first,
+        inner_steps: inner_steps.max(1),
+        ops: 0,
+    }
+}
+
+/// Scheduler-driven subspace descent. The scheduler selects *examples*
+/// (subspaces); iteration counts follow the paper's convention of
+/// counting inner CD steps.
+pub fn solve(
+    ds: &Dataset,
+    c: f64,
+    sched: &mut dyn Scheduler,
+    config: SolverConfig,
+) -> (McSvmModel, SolveResult) {
+    let n = ds.n_instances();
+    assert_eq!(sched.n(), n);
+    let d = ds.n_features();
+    let classes = ds.classes();
+    let k_classes = classes.len();
+    assert!(k_classes >= 2);
+    // labels must be 0..K−1
+    let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
+    assert!(y.iter().all(|&v| v < k_classes));
+
+    let norms = ds.x.row_norms_sq();
+    let mut w: Vec<Vec<f64>> = vec![vec![0.0; d]; k_classes];
+    let mut alpha = vec![0.0f64; n * k_classes];
+    let max_inner = 10 * k_classes;
+
+    let mut rs = RunState::new(config);
+    let mut status = SolveStatus::IterLimit;
+    let mut window_max = 0.0f64;
+    let mut window_count = 0usize;
+    let mut epochs = 0u64;
+    let mut final_viol = f64::INFINITY;
+    let mut margins = vec![0.0f64; k_classes];
+    let mut delta_beta = vec![0.0f64; k_classes];
+
+    'outer: loop {
+        let i = sched.next();
+        let yi = y[i];
+        let row = ds.x.row(i);
+        // K margins: O(K · nnz)
+        for (k, m) in margins.iter_mut().enumerate() {
+            *m = row.dot_dense(&w[k]);
+        }
+        let mut ops = k_classes * row.nnz();
+
+        let out = solve_subspace(
+            yi,
+            k_classes,
+            norms[i],
+            c,
+            &mut margins,
+            &mut alpha[i * k_classes..(i + 1) * k_classes],
+            &mut delta_beta,
+            max_inner,
+            rs.eps() * 0.1,
+        );
+        // apply weight updates: O(nnz) per class actually moved
+        for (k, &b) in delta_beta.iter().enumerate() {
+            if b != 0.0 {
+                row.axpy_into(b, &mut w[k]);
+                ops += row.nnz();
+            }
+        }
+        ops += out.ops;
+        sched.report(i, out.delta_f.max(0.0));
+        window_max = window_max.max(out.max_viol_entry);
+        window_count += 1;
+
+        // count inner steps as iterations (paper's convention)
+        let mut budget_ok = true;
+        for _ in 0..out.inner_steps {
+            budget_ok = rs.step(0);
+            if !budget_ok {
+                break;
+            }
+        }
+        // attribute the ops to the subspace solve
+        rs.counter.extra(ops);
+        rs.maybe_trace(
+            || {
+                let quad: f64 = w.iter().map(|wk| crate::sparse::ops::norm_sq(wk)).sum();
+                0.5 * quad - alpha.iter().sum::<f64>()
+            },
+            out.max_viol_entry,
+        );
+        if !budget_ok || rs.over_time() {
+            if rs.over_time() {
+                status = SolveStatus::TimeLimit;
+            }
+            let (v, extra) = verify(ds, &y, &alpha, &w, c, k_classes);
+            rs.counter.extra(extra);
+            final_viol = v;
+            break 'outer;
+        }
+
+        if window_count >= n {
+            epochs += 1;
+            if window_max < rs.eps() {
+                let (v, extra) = verify(ds, &y, &alpha, &w, c, k_classes);
+                rs.counter.extra(extra);
+                if v < rs.eps() {
+                    status = SolveStatus::Converged;
+                    final_viol = v;
+                    break 'outer;
+                }
+            }
+            window_max = 0.0;
+            window_count = 0;
+        }
+    }
+
+    let model = McSvmModel { w, alpha, c, k_classes };
+    let obj = model.objective();
+    (model, rs.finish(status, obj, final_viol, epochs))
+}
+
+/// Full KKT verification over all (i, k≠y_i) pairs.
+fn verify(
+    ds: &Dataset,
+    y: &[usize],
+    alpha: &[f64],
+    w: &[Vec<f64>],
+    c: f64,
+    k_classes: usize,
+) -> (f64, usize) {
+    let mut max_viol = 0.0f64;
+    let mut ops = 0usize;
+    for i in 0..ds.n_instances() {
+        let row = ds.x.row(i);
+        let myi = row.dot_dense(&w[y[i]]);
+        ops += k_classes * row.nnz();
+        for k in 0..k_classes {
+            if k == y[i] {
+                continue;
+            }
+            let g = myi - row.dot_dense(&w[k]) - 1.0;
+            let a = alpha[i * k_classes + k];
+            let v = if a <= 0.0 {
+                (-g).max(0.0)
+            } else if a >= c {
+                g.max(0.0)
+            } else {
+                g.abs()
+            };
+            max_viol = max_viol.max(v);
+        }
+    }
+    (max_viol, ops)
+}
+
+/// Primal objective for duality-gap audits.
+pub fn primal_objective(ds: &Dataset, w: &[Vec<f64>], c: f64) -> f64 {
+    let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
+    let mut loss = 0.0;
+    for i in 0..ds.n_instances() {
+        let row = ds.x.row(i);
+        let myi = row.dot_dense(&w[y[i]]);
+        for (k, wk) in w.iter().enumerate() {
+            if k == y[i] {
+                continue;
+            }
+            loss += (1.0 - (myi - row.dot_dense(wk))).max(0.0);
+        }
+    }
+    let quad: f64 = w.iter().map(|wk| crate::sparse::ops::norm_sq(wk)).sum();
+    0.5 * quad + c * loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acf::AcfParams;
+    use crate::data::synth;
+    use crate::sched::{AcfSchedulerPolicy, PermutationScheduler, UniformScheduler};
+    use crate::util::rng::Rng;
+
+    fn blobs(seed: u64) -> Dataset {
+        synth::multiclass_blobs("b", 90, 5, 3, 0.4, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn converges_and_classifies_blobs() {
+        let ds = blobs(1);
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(1));
+        let (model, res) = solve(&ds, 1.0, &mut sched, SolverConfig::with_eps(1e-4));
+        assert!(res.status.converged(), "{}", res.summary());
+        let acc = crate::data::split::multiclass_accuracy(&ds, &model.w);
+        assert!(acc > 0.95, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn kkt_holds_at_solution() {
+        let ds = blobs(2);
+        let c = 0.5;
+        let mut sched = UniformScheduler::new(ds.n_instances(), Rng::new(2));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-5));
+        assert!(res.status.converged());
+        let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
+        let (v, _) = verify(&ds, &y, &model.alpha, &model.w, c, model.k_classes);
+        assert!(v < 1e-5, "violation {v}");
+        // box feasibility
+        assert!(model.alpha.iter().all(|&a| (0.0..=c).contains(&a)));
+    }
+
+    #[test]
+    fn duality_gap_closes() {
+        let ds = blobs(3);
+        let c = 1.0;
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(3));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-6));
+        assert!(res.status.converged());
+        let dual = -res.objective;
+        let primal = primal_objective(&ds, &model.w, c);
+        let gap = (primal - dual) / primal.abs().max(1.0);
+        assert!(gap >= -1e-9, "weak duality violated: {gap}");
+        assert!(gap < 1e-3, "gap {gap}");
+    }
+
+    #[test]
+    fn acf_matches_uniform_objective() {
+        let ds = synth::multiclass_text("mc", 150, 300, 4, 10, 0.02, &mut Rng::new(4));
+        let c = 1.0;
+        let cfg = SolverConfig::with_eps(1e-3);
+        let mut perm = PermutationScheduler::new(ds.n_instances(), Rng::new(4));
+        let (_, r1) = solve(&ds, c, &mut perm, cfg.clone());
+        let mut acf =
+            AcfSchedulerPolicy::new(ds.n_instances(), AcfParams::default(), Rng::new(5));
+        let (_, r2) = solve(&ds, c, &mut acf, cfg);
+        assert!(r1.status.converged() && r2.status.converged());
+        let rel = (r1.objective - r2.objective).abs() / r1.objective.abs().max(1.0);
+        assert!(rel < 5e-3, "{} vs {}", r1.objective, r2.objective);
+    }
+
+    #[test]
+    fn two_class_ww_reduces_to_binary_like_solution() {
+        // With K=2 the WW dual is equivalent to binary SVM up to scaling;
+        // check both models classify identically.
+        let mut rng = Rng::new(6);
+        let bin = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "b2",
+                n: 120,
+                d: 200,
+                nnz_per_row: 10,
+                zipf_s: 1.0,
+                concept_k: 12,
+                noise: 0.0,
+            },
+            &mut rng,
+        );
+        // convert ±1 labels to {0,1}
+        let mc = Dataset {
+            name: "b2mc".into(),
+            x: bin.x.clone(),
+            y: bin.y.iter().map(|&l| if l > 0.0 { 1.0 } else { 0.0 }).collect(),
+        };
+        let mut s1 = PermutationScheduler::new(mc.n_instances(), Rng::new(7));
+        let (m_mc, r_mc) = solve(&mc, 1.0, &mut s1, SolverConfig::with_eps(1e-5));
+        assert!(r_mc.status.converged());
+        // WW with K = 2 and parameter C is equivalent to the binary SVM
+        // with parameter 2C (the WW regularizer splits ½‖v‖² in half
+        // across w₀ = −w₁).
+        let mut s2 = PermutationScheduler::new(bin.n_instances(), Rng::new(8));
+        let (m_bin, r_bin) =
+            crate::solvers::svm::solve(&bin, 2.0, &mut s2, SolverConfig::with_eps(1e-6));
+        assert!(r_bin.status.converged());
+        let mut agree = 0usize;
+        for i in 0..bin.n_instances() {
+            let row = bin.x.row(i);
+            let mc_pred = row.dot_dense(&m_mc.w[1]) - row.dot_dense(&m_mc.w[0]);
+            let bin_pred = row.dot_dense(&m_bin.w);
+            if mc_pred * bin_pred > 0.0 {
+                agree += 1;
+            }
+        }
+        let frac = agree as f64 / bin.n_instances() as f64;
+        assert!(frac > 0.97, "agreement {frac}");
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let ds = blobs(9);
+        let cfg = SolverConfig { eps: 1e-12, max_iterations: 100, ..Default::default() };
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(9));
+        let (_, res) = solve(&ds, 100.0, &mut sched, cfg);
+        assert_eq!(res.status, SolveStatus::IterLimit);
+    }
+}

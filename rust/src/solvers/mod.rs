@@ -1,0 +1,18 @@
+//! CD solvers for the paper's four problem families (§3), all generic
+//! over [`crate::sched::Scheduler`] and instrumented with the paper's
+//! iteration / operation / wall-clock metrics.
+//!
+//! | module | problem | paper | experiments |
+//! |--------|---------|-------|-------------|
+//! | [`lasso`] | L1-regularized least squares | §3.1 | Table 3 |
+//! | [`svm`] | linear SVM dual (+ liblinear shrinking baseline) | §3.2 | Tables 5–6, Fig. 2 |
+//! | [`mcsvm`] | Weston–Watkins multi-class, subspace descent | §3.3 | Table 8 |
+//! | [`logreg`] | dual logistic regression (inner Newton) | §3.4 | Table 9 |
+
+pub mod common;
+pub mod lasso;
+pub mod logreg;
+pub mod mcsvm;
+pub mod svm;
+
+pub use common::{SolveResult, SolveStatus, SolverConfig};

@@ -1,0 +1,371 @@
+//! Compressed sparse row (CSR) matrix — the instance-major layout used by
+//! the dual solvers (SVM, logistic regression, multi-class SVM), where a
+//! CD step on dual variable `α_i` touches exactly row `i`.
+
+/// CSR sparse matrix with f64 values and usize column indices.
+///
+/// Invariants: `indptr.len() == rows + 1`, `indptr` non-decreasing,
+/// `indices[indptr[r]..indptr[r+1]]` strictly increasing per row, all
+/// `indices[k] < cols`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+/// Borrowed view of one sparse row.
+#[derive(Clone, Copy, Debug)]
+pub struct RowView<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f64],
+}
+
+impl<'a> RowView<'a> {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot product against a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            acc += v * w[j as usize];
+        }
+        acc
+    }
+
+    /// w += scale * row (scatter-add).
+    #[inline]
+    pub fn axpy_into(&self, scale: f64, w: &mut [f64]) {
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            w[j as usize] += scale * v;
+        }
+    }
+
+    /// Squared Euclidean norm of the row.
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+}
+
+impl Csr {
+    /// Build from triplet rows: `rows_data[r]` is a list of (col, value)
+    /// pairs (will be sorted and deduplicated by summation).
+    pub fn from_rows(cols: usize, rows_data: Vec<Vec<(usize, f64)>>) -> Csr {
+        let rows = rows_data.len();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for mut row in rows_data {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            let mut last: Option<usize> = None;
+            for (c, v) in row {
+                assert!(c < cols, "column index {c} out of bounds ({cols})");
+                if last == Some(c) {
+                    // duplicate column: accumulate
+                    *values.last_mut().unwrap() += v;
+                } else if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                    last = Some(c);
+                } else {
+                    last = Some(c);
+                    // skip explicit zeros, but remember the column so a
+                    // duplicate still merges correctly
+                    indices.push(c as u32);
+                    values.push(0.0);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from raw parts (trusted, checked by debug assertions).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Csr {
+        debug_assert_eq!(indptr.len(), rows + 1);
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> RowView<'_> {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        RowView { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Per-row squared norms (precomputed once by the SVM solvers).
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row(r).norm_sq()).collect()
+    }
+
+    /// Dense matvec `y = A x` (reference / validation path).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|r| self.row(r).dot_dense(x)).collect()
+    }
+
+    /// Transposed matvec `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            self.row(r).axpy_into(x[r], &mut y);
+        }
+        y
+    }
+
+    /// Transpose to CSC-equivalent CSR (i.e. a CSR matrix of the
+    /// transpose). Counting sort over columns — O(nnz + cols).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            counts[c + 1] += counts[c];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                let dst = cursor[j as usize];
+                indices[dst] = r as u32;
+                values[dst] = v;
+                cursor[j as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Extract a dense row-major block [r0..r1) × [c0..c1), padded with
+    /// zeros; used by the PJRT validator which runs on fixed-shape tiles.
+    pub fn dense_block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Vec<f32> {
+        let h = r1 - r0;
+        let w = c1 - c0;
+        let mut out = vec![0.0f32; h * w];
+        for r in r0..r1.min(self.rows) {
+            let row = self.row(r);
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                let j = j as usize;
+                if j >= c0 && j < c1 {
+                    out[(r - r0) * w + (j - c0)] = v as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert the full matrix to a dense row-major f64 buffer (tests /
+    /// tiny problems only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                out[r * self.cols + j as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows (dataset splits).
+    pub fn select_rows(&self, idx: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &r in idx {
+            let row = self.row(r);
+            indices.extend_from_slice(row.indices);
+            values.extend_from_slice(row.values);
+            indptr.push(indices.len());
+        }
+        Csr { rows: idx.len(), cols: self.cols, indptr, indices, values }
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr endpoints".into());
+        }
+        for r in 0..self.rows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr decreasing at {r}"));
+            }
+            let row = self.row(r);
+            for w in row.indices.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} indices not strictly increasing"));
+                }
+            }
+            if let Some(&j) = row.indices.last() {
+                if j as usize >= self.cols {
+                    return Err(format!("row {r} column out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_rows(3, vec![vec![(0, 1.0), (2, 2.0)], vec![], vec![(1, 4.0), (0, 3.0)]])
+    }
+
+    #[test]
+    fn construction_sorts_and_counts() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(2).indices, &[0, 1]);
+        assert_eq!(m.row(2).values, &[3.0, 4.0]);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_columns_accumulate() {
+        let m = Csr::from_rows(4, vec![vec![(1, 2.0), (1, 3.0), (0, 1.0)]]);
+        assert_eq!(m.row(0).indices, &[0, 1]);
+        assert_eq!(m.row(0).values, &[1.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&x), vec![7.0, 0.0, 11.0]);
+        let y = vec![1.0, 1.0, 1.0];
+        assert_eq!(m.matvec_t(&y), vec![4.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        t.check_invariants().unwrap();
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_matches_dense_property() {
+        prop::check(50, |g| {
+            let rows = g.usize_in(1, 20);
+            let cols = g.usize_in(1, 20);
+            let mut data = Vec::new();
+            for _ in 0..rows {
+                let k = g.usize_in(0, cols.min(8));
+                let pat = g.sparse_pattern(cols, k);
+                data.push(pat.into_iter().map(|c| (c, g.f64_in(-2.0, 2.0))).collect());
+            }
+            let m = Csr::from_rows(cols, data);
+            m.check_invariants()?;
+            let t = m.transpose();
+            t.check_invariants()?;
+            let d = m.to_dense();
+            let td = t.to_dense();
+            for r in 0..rows {
+                for c in 0..cols {
+                    prop::assert_close(d[r * cols + c], td[c * rows + r], 1e-12, "transpose")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose_matvec_property() {
+        prop::check(30, |g| {
+            let rows = g.usize_in(1, 15);
+            let cols = g.usize_in(1, 15);
+            let mut data = Vec::new();
+            for _ in 0..rows {
+                let k = g.usize_in(0, cols.min(6));
+                let pat = g.sparse_pattern(cols, k);
+                data.push(pat.into_iter().map(|c| (c, g.f64_in(-1.0, 1.0))).collect());
+            }
+            let m = Csr::from_rows(cols, data);
+            let x = g.vec_f64(rows, -3.0, 3.0);
+            let a = m.matvec_t(&x);
+            let b = m.transpose().matvec(&x);
+            for (u, v) in a.iter().zip(b.iter()) {
+                prop::assert_close(*u, *v, 1e-12, "matvec_t == transpose.matvec")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_block_extraction() {
+        let m = sample();
+        let b = m.dense_block(0, 2, 1, 3); // rows 0..2, cols 1..3
+        assert_eq!(b, vec![0.0, 2.0, 0.0, 0.0]);
+        // padding beyond matrix bounds
+        let b2 = m.dense_block(2, 4, 0, 2);
+        assert_eq!(b2, vec![3.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0).values, &[3.0, 4.0]);
+        assert_eq!(s.row(1).values, &[1.0, 2.0]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn norms() {
+        let m = sample();
+        let n = m.row_norms_sq();
+        assert_eq!(n, vec![5.0, 0.0, 25.0]);
+    }
+}

@@ -1,0 +1,254 @@
+//! Reader/writer for the libsvm sparse data format used by all the
+//! paper's datasets:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices in files are 1-based; we convert to 0-based internally. Labels
+//! may be real-valued (regression), ±1 (binary), or small integers
+//! (multi-class).
+
+use super::csr::Csr;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// A labelled sparse dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// name for reporting
+    pub name: String,
+    /// ℓ × d design matrix, one row per instance
+    pub x: Csr,
+    /// labels, length ℓ
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n_instances(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Distinct labels, sorted (for multi-class problems).
+    pub fn classes(&self) -> Vec<i64> {
+        let mut c: Vec<i64> = self.y.iter().map(|&v| v as i64).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Subset by instance indices.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {message}")]
+    Parse { line: usize, message: String },
+}
+
+/// Parse libsvm text. `min_features` lets callers force a feature-space
+/// dimension (e.g. to align train/test splits).
+pub fn parse_libsvm(text: &str, name: &str, min_features: usize) -> Result<Dataset, LibsvmError> {
+    parse_reader(text.as_bytes(), name, min_features)
+}
+
+/// Read a libsvm file from disk.
+pub fn read_libsvm(path: &Path, min_features: usize) -> Result<Dataset, LibsvmError> {
+    let f = std::fs::File::open(path)?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
+    parse_reader(BufReader::new(f), &name, min_features)
+}
+
+fn parse_reader<R: Read>(r: R, name: &str, min_features: usize) -> Result<Dataset, LibsvmError> {
+    let reader = BufReader::new(r);
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_ascii_whitespace();
+        let label_tok = toks.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            message: "missing label".into(),
+        })?;
+        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            message: format!("bad label '{label_tok}'"),
+        })?;
+        let mut row = Vec::new();
+        for tok in toks {
+            let (idx, val) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                message: format!("bad feature token '{tok}'"),
+            })?;
+            let idx: usize = idx.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                message: format!("bad feature index '{idx}'"),
+            })?;
+            if idx == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    message: "libsvm feature indices are 1-based".into(),
+                });
+            }
+            let val: f64 = val.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                message: format!("bad feature value '{val}'"),
+            })?;
+            max_col = max_col.max(idx);
+            row.push((idx - 1, val));
+        }
+        rows.push(row);
+        y.push(label);
+    }
+    let cols = max_col.max(min_features);
+    Ok(Dataset { name: name.to_string(), x: Csr::from_rows(cols, rows), y })
+}
+
+/// Serialize a dataset to libsvm text.
+pub fn write_libsvm<W: Write>(ds: &Dataset, mut out: W) -> std::io::Result<()> {
+    for i in 0..ds.n_instances() {
+        let label = ds.y[i];
+        if label == label.trunc() {
+            write!(out, "{}", label as i64)?;
+        } else {
+            write!(out, "{}", label)?;
+        }
+        let row = ds.x.row(i);
+        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            write!(out, " {}:{}", j + 1, v)?;
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+pub fn to_libsvm_string(ds: &Dataset) -> String {
+    let mut buf = Vec::new();
+    write_libsvm(ds, &mut buf).expect("in-memory write");
+    String::from_utf8(buf).expect("utf8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.25
+-1 2:2 4:-0.5
++1 1:1
+";
+
+    #[test]
+    fn parses_basic() {
+        let ds = parse_libsvm(SAMPLE, "t", 0).unwrap();
+        assert_eq!(ds.n_instances(), 3);
+        assert_eq!(ds.n_features(), 4);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.row(0).indices, &[0, 2]);
+        assert_eq!(ds.x.row(1).values, &[2.0, -0.5]);
+    }
+
+    #[test]
+    fn handles_comments_blank_lines() {
+        let text = "# header\n\n+1 1:1 # trailing\n";
+        let ds = parse_libsvm(text, "t", 0).unwrap();
+        assert_eq!(ds.n_instances(), 1);
+    }
+
+    #[test]
+    fn min_features_pads() {
+        let ds = parse_libsvm("+1 1:1\n", "t", 10).unwrap();
+        assert_eq!(ds.n_features(), 10);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm("notalabel 1:1\n", "t", 0).is_err());
+        assert!(parse_libsvm("+1 0:1\n", "t", 0).is_err()); // 0-based index
+        assert!(parse_libsvm("+1 1:abc\n", "t", 0).is_err());
+        assert!(parse_libsvm("+1 11\n", "t", 0).is_err());
+    }
+
+    #[test]
+    fn multiclass_classes() {
+        let ds = parse_libsvm("0 1:1\n2 1:1\n1 1:1\n2 2:1\n", "t", 0).unwrap();
+        assert_eq!(ds.classes(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop::check(30, |g| {
+            let n = g.usize_in(1, 20);
+            let d = g.usize_in(1, 30);
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                let k = g.usize_in(0, d.min(6));
+                let pat = g.sparse_pattern(d, k);
+                // values with exact decimal representation survive the
+                // text round-trip bit-exactly
+                rows.push(
+                    pat.into_iter()
+                        .map(|c| (c, (g.usize_in(1, 100) as f64) / 8.0))
+                        .collect::<Vec<_>>(),
+                );
+                y.push(if g.bool() { 1.0 } else { -1.0 });
+            }
+            let ds = Dataset {
+                name: "prop".into(),
+                x: super::super::csr::Csr::from_rows(d, rows),
+                y,
+            };
+            let text = to_libsvm_string(&ds);
+            let back = parse_libsvm(&text, "prop", d).unwrap();
+            prop::assert_holds(back.y == ds.y, "labels")?;
+            prop::assert_holds(back.x == ds.x, "matrix")
+        });
+    }
+
+    #[test]
+    fn select_subsets_dataset() {
+        let ds = parse_libsvm(SAMPLE, "t", 0).unwrap();
+        let s = ds.select(&[2, 0]);
+        assert_eq!(s.y, vec![1.0, 1.0]);
+        assert_eq!(s.x.row(0).indices, &[0]);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let ds = parse_libsvm(SAMPLE, "t", 0).unwrap();
+        let dir = std::env::temp_dir().join("acf_cd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.libsvm");
+        std::fs::write(&path, to_libsvm_string(&ds)).unwrap();
+        let back = read_libsvm(&path, 4).unwrap();
+        let mut rng = Rng::new(0);
+        let _ = rng.next_u64(); // silence unused warnings in some cfgs
+        assert_eq!(back.x, ds.x);
+        std::fs::remove_file(&path).ok();
+    }
+}

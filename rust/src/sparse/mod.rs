@@ -1,0 +1,9 @@
+//! Sparse linear-algebra substrate: CSR matrices, the libsvm data format,
+//! and dense-vector helpers used by the CD solvers.
+
+pub mod csr;
+pub mod libsvm;
+pub mod ops;
+
+pub use csr::{Csr, RowView};
+pub use libsvm::{parse_libsvm, read_libsvm, to_libsvm_string, Dataset};

@@ -1,0 +1,87 @@
+//! Dense-vector helpers shared by the solvers. Kept tiny and `#[inline]`
+//! — these appear in the CD inner loop.
+
+/// Clip `x` to `[lo, hi]` — the paper's `[x]_a^b` truncation.
+#[inline(always)]
+pub fn clip(x: f64, lo: f64, hi: f64) -> f64 {
+    // branch-light form; NaN-free inputs assumed in the hot loop
+    x.max(lo).min(hi)
+}
+
+/// Dense dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Infinity norm.
+#[inline]
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, &x| m.max(x.abs()))
+}
+
+/// Soft-threshold operator `S(x, t) = sign(x)·max(|x|−t, 0)` — the LASSO
+/// proximal step.
+#[inline(always)]
+pub fn soft_threshold(x: f64, t: f64) -> f64 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_works() {
+        assert_eq!(clip(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clip(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clip(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn dot_axpy_norms() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+        assert_eq!(norm_sq(&a), 14.0);
+        assert_eq!(norm_inf(&[-5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny command-line argument parser (no `clap` in the offline build).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style used by the `acf-cd` launcher, with typed accessors and
+//! good error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required flag --{0}")]
+    Missing(String),
+    #[error("flag --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => {
+                        // Look ahead: next token is the value unless it is
+                        // another flag.
+                        let next_is_value =
+                            iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if next_is_value {
+                            (body.to_string(), iter.next())
+                        } else {
+                            (body.to_string(), None)
+                        }
+                    }
+                };
+                flags.entry(key).or_default().push(val.unwrap_or_else(|| "true".to_string()));
+            } else if command.is_none() {
+                command = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args { command, positional, flags }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        self.get(key).ok_or_else(|| CliError::Missing(key.to_string()))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::BadValue(key.into(), v.into(), "float"))
+            }
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::BadValue(key.into(), v.into(), "integer"))
+            }
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::BadValue(key.into(), v.into(), "integer"))
+            }
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(CliError::BadValue(key.into(), v.into(), "bool")),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--grid 0.01,0.1,1`.
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .map_err(|_| CliError::BadValue(key.into(), t.into(), "float list"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| v.split(',').map(|t| t.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args(&["train", "--dataset", "rcv1-like", "--c", "1.5", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("rcv1-like"));
+        assert_eq!(a.f64_or("c", 0.0).unwrap(), 1.5);
+        assert!(a.has("verbose"));
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args(&["bench", "--eps=0.01", "--n=100"]);
+        assert_eq!(a.f64_or("eps", 0.0).unwrap(), 0.01);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn lists() {
+        let a = args(&["x", "--grid", "0.01,0.1,1", "--names", "a, b"]);
+        assert_eq!(a.f64_list("grid").unwrap().unwrap(), vec![0.01, 0.1, 1.0]);
+        assert_eq!(a.str_list("names").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn missing_and_bad() {
+        let a = args(&["x", "--k", "abc"]);
+        assert!(a.require("absent").is_err());
+        assert!(a.usize_or("k", 1).is_err());
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_flags_last_wins_and_all_available() {
+        let a = args(&["x", "--p", "1", "--p", "2"]);
+        assert_eq!(a.get("p"), Some("2"));
+        assert_eq!(a.get_all("p"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args(&["run", "file1", "file2", "--flag"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value starting with '-' but not '--' is accepted as a value.
+        let a = args(&["x", "--shift", "-3.5"]);
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -3.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! deterministic RNG, JSON, CLI parsing, a scoped threadpool, statistics,
+//! timing, and a mini property-testing framework.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,164 @@
+//! Mini property-based testing framework (no `proptest` in the offline
+//! build).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(100, |g| {
+//!     let n = g.usize_in(1, 50);
+//!     let xs = g.vec_f64(n, -10.0, 10.0);
+//!     prop::assert_holds(xs.len() == n, "length preserved")
+//! });
+//! ```
+//! Each case gets a fresh deterministic generator; on failure the seed of
+//! the failing case is printed so it can be replayed with
+//! [`check_seeded`].
+
+use crate::util::rng::Rng;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// A vector of strictly positive weights.
+    pub fn weights(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(1e-3, 10.0)).collect()
+    }
+
+    /// Random sparse pattern: k distinct indices in [0, n).
+    pub fn sparse_pattern(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut ids = self.rng.sample_indices(n, k.min(n));
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+pub fn assert_holds(cond: bool, msg: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, msg: &str) -> CaseResult {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` property cases with deterministic per-case seeds derived
+/// from a fixed base. Panics with the failing seed + message on the first
+/// failure.
+pub fn check<F: FnMut(&mut Gen) -> CaseResult>(cases: usize, mut prop: F) {
+    check_base_seed(0xACF0_0001, cases, &mut prop);
+}
+
+/// Replay a single failing case.
+pub fn check_seeded<F: FnMut(&mut Gen) -> CaseResult>(seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed for seed {seed}: {msg}");
+    }
+}
+
+pub fn check_base_seed<F: FnMut(&mut Gen) -> CaseResult>(base: u64, cases: usize, prop: &mut F) {
+    for case in 0..cases {
+        let seed = base.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed on case {case} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, |g| {
+            count += 1;
+            let n = g.usize_in(1, 10);
+            assert_holds((1..=10).contains(&n), "range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert_holds(x < 0.0, "impossible")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_assertion_relative() {
+        assert!(assert_close(1000.0, 1000.0001, 1e-6, "rel").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-6, "rel").is_err());
+    }
+
+    #[test]
+    fn sparse_pattern_sorted_distinct() {
+        check(30, |g| {
+            let n = g.usize_in(1, 100);
+            let k = g.usize_in(0, n);
+            let p = g.sparse_pattern(n, k);
+            assert_holds(p.len() == k, "len")?;
+            assert_holds(p.windows(2).all(|w| w[0] < w[1]), "sorted distinct")
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = 0.0;
+        check_seeded(12345, |g| {
+            v1 = g.f64_in(0.0, 1.0);
+            Ok(())
+        });
+        let mut v2 = 0.0;
+        check_seeded(12345, |g| {
+            v2 = g.f64_in(0.0, 1.0);
+            Ok(())
+        });
+        assert_eq!(v1, v2);
+    }
+}

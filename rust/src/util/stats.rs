@@ -1,0 +1,246 @@
+//! Online and batch statistics used by the benchmark harness and the
+//! Markov-chain experiments.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            (self.sample_variance() / self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge two accumulators (parallel reduction).
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exponentially fading average — the `r̄` state of ACF (Algorithm 2) and
+/// general smoothing.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    eta: f64,
+    value: f64,
+    initialized: bool,
+}
+
+impl Ewma {
+    pub fn new(eta: f64) -> Self {
+        Self { eta, value: 0.0, initialized: false }
+    }
+
+    pub fn with_initial(eta: f64, value: f64) -> Self {
+        Self { eta, value, initialized: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.initialized {
+            self.value = (1.0 - self.eta) * self.value + self.eta * x;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+
+    pub fn set(&mut self, v: f64) {
+        self.value = v;
+        self.initialized = true;
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+/// Percentile of a sample (linear interpolation between order statistics;
+/// `q` in [0,1]). Sorts a copy — intended for bench reporting sizes.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Geometric mean of strictly positive values (used to aggregate speedup
+/// factors across table rows, as is standard for ratio data).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let m = mean(&xs);
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+        assert!((o.mean() - m).abs() < 1e-12);
+        assert!((o.variance() - var).abs() < 1e-12);
+        assert_eq!(o.min(), -1.0);
+        assert_eq!(o.max(), 3.5);
+    }
+
+    #[test]
+    fn online_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut full = Online::new();
+        for &x in &xs {
+            full.push(x);
+        }
+        let mut a = Online::new();
+        let mut b = Online::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - full.mean()).abs() < 1e-10);
+        assert!((a.variance() - full.variance()).abs() < 1e-10);
+        assert_eq!(a.count(), full.count());
+    }
+
+    #[test]
+    fn ewma_first_sample_initializes() {
+        let mut e = Ewma::new(0.1);
+        e.push(5.0);
+        assert_eq!(e.get(), 5.0);
+        e.push(0.0);
+        assert!((e.get() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..60 {
+            e.push(3.0);
+        }
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+}

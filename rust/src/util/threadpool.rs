@@ -1,0 +1,135 @@
+//! Minimal parallel-execution helpers on std::thread (no tokio/rayon in
+//! the offline build).
+//!
+//! The coordinator's unit of parallelism is a *job* (one solver run on one
+//! dataset/parameter point), which is long-running and coarse-grained, so
+//! a simple scoped fork-join with a bounded worker count is the right
+//! tool — no work stealing needed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: physical parallelism, capped.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Apply `f` to every index `0..n` using up to `workers` threads, and
+/// collect results in input order. Panics in workers are propagated.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
+        .collect()
+}
+
+/// Apply `f` to each item of `items` in parallel, preserving order.
+pub fn parallel_map_items<I, T, F>(items: Vec<I>, workers: usize, f: F) -> Vec<T>
+where
+    I: Send + Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let refs: Vec<&I> = items.iter().collect();
+    parallel_map(refs.len(), workers, |i| f(refs[i]))
+}
+
+/// A monotone progress counter shared across workers (used by the
+/// coordinator to print sweep progress).
+pub struct Progress {
+    done: AtomicUsize,
+    total: usize,
+    label: String,
+    quiet: bool,
+}
+
+impl Progress {
+    pub fn new(total: usize, label: &str, quiet: bool) -> Self {
+        Self { done: AtomicUsize::new(0), total, label: label.to_string(), quiet }
+    }
+
+    pub fn tick(&self) {
+        let d = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.quiet {
+            eprintln!("[{}] {}/{}", self.label, d, self.total);
+        }
+    }
+
+    pub fn done(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_worker() {
+        let out = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_items() {
+        let items = vec!["a".to_string(), "bb".to_string(), "ccc".to_string()];
+        let out = parallel_map_items(items, 2, |s| s.len());
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn progress_counts() {
+        let p = Progress::new(5, "t", true);
+        for _ in 0..5 {
+            p.tick();
+        }
+        assert_eq!(p.done(), 5);
+    }
+
+    #[test]
+    fn heavy_contention_smoke() {
+        // More tasks than workers; each does real work.
+        let out = parallel_map(1000, 16, |i| {
+            let mut acc = 0u64;
+            for k in 0..100 {
+                acc = acc.wrapping_add((i as u64).wrapping_mul(k));
+            }
+            acc
+        });
+        assert_eq!(out.len(), 1000);
+    }
+}

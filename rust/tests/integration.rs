@@ -1,0 +1,220 @@
+//! Integration tests across modules: coordinator → solvers → schedulers
+//! → datasets, plus the cross-stack PJRT paths when artifacts are built.
+
+use acf_cd::acf::AcfParams;
+use acf_cd::coordinator::{
+    comparison_table, cross_validate, run_job, run_sweep, JobSpec, Problem, SweepSpec,
+};
+use acf_cd::data::{registry, Scale};
+use acf_cd::sched::Policy;
+use acf_cd::util::rng::Rng;
+
+fn quick(problem: Problem, ds: &str, policy: Policy) -> JobSpec {
+    let mut s = JobSpec::new(problem, ds, policy);
+    s.scale = Scale(0.08);
+    s.eps = 0.01;
+    s
+}
+
+#[test]
+fn all_four_problem_families_run_through_the_coordinator() {
+    for (problem, ds) in [
+        (Problem::Svm { c: 1.0 }, "rcv1-like"),
+        (Problem::Lasso { lambda: 0.01 }, "rcv1-like"),
+        (Problem::LogReg { c: 1.0 }, "rcv1-like"),
+        (Problem::McSvm { c: 1.0 }, "iris-like"),
+    ] {
+        let out = run_job(&quick(problem, ds, Policy::Acf)).unwrap();
+        assert!(
+            out.result.status.converged(),
+            "{} did not converge: {}",
+            problem.family(),
+            out.result.summary()
+        );
+    }
+}
+
+#[test]
+fn outcomes_are_deterministic_given_seed() {
+    let spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+    let a = run_job(&spec).unwrap();
+    let b = run_job(&spec).unwrap();
+    assert_eq!(a.result.iterations, b.result.iterations);
+    assert_eq!(a.result.ops, b.result.ops);
+    assert_eq!(a.result.objective, b.result.objective);
+}
+
+#[test]
+fn acf_beats_uniform_on_hard_svm_problem() {
+    // C large ⇒ outlier coordinates need many visits ⇒ ACF's regime.
+    // (paper Tables 5–6: speedups grow with C)
+    let mut base = quick(Problem::Svm { c: 100.0 }, "rcv1-like", Policy::Acf);
+    base.scale = Scale(0.2);
+    let ds = base.load_dataset().unwrap();
+    let acf = acf_cd::coordinator::run_job_on(&base, &ds);
+    let mut uni = base.clone();
+    uni.policy = Policy::Permutation;
+    let uni = acf_cd::coordinator::run_job_on(&uni, &ds);
+    assert!(acf.result.status.converged() && uni.result.status.converged());
+    assert!(
+        (acf.result.iterations as f64) < 0.8 * uni.result.iterations as f64,
+        "ACF {} iters vs uniform {} — expected a clear win at C = 100",
+        acf.result.iterations,
+        uni.result.iterations
+    );
+}
+
+#[test]
+fn acf_beats_cyclic_on_lasso_small_lambda() {
+    let mut base = quick(Problem::Lasso { lambda: 0.0001 }, "rcv1-like", Policy::Acf);
+    base.scale = Scale(1.0);
+    base.eps = 2e-5;
+    let ds = base.load_dataset().unwrap();
+    let acf = acf_cd::coordinator::run_job_on(&base, &ds);
+    let mut cyc = base.clone();
+    cyc.policy = Policy::Cyclic;
+    let cyc = acf_cd::coordinator::run_job_on(&cyc, &ds);
+    assert!(acf.result.status.converged() && cyc.result.status.converged());
+    assert!(
+        (acf.result.iterations as f64) < cyc.result.iterations as f64,
+        "ACF {} vs cyclic {}",
+        acf.result.iterations,
+        cyc.result.iterations
+    );
+}
+
+#[test]
+fn sweep_and_report_pipeline() {
+    let base = quick(Problem::Svm { c: 1.0 }, "news20-like", Policy::Acf);
+    let outcomes = run_sweep(&SweepSpec {
+        base,
+        grid: vec![0.1, 1.0],
+        policies: vec![Policy::Acf, Policy::Permutation],
+        include_shrinking: true,
+        workers: 4,
+    })
+    .unwrap();
+    assert_eq!(outcomes.len(), 6);
+    let t = comparison_table("it", &outcomes, "svm-shrinking", "C");
+    assert_eq!(t.rows.len(), 2);
+    // JSON dump parses back
+    let text = acf_cd::coordinator::outcomes_json(&outcomes).to_string_pretty();
+    let parsed = acf_cd::util::json::parse(&text).unwrap();
+    assert_eq!(parsed.as_arr().unwrap().len(), 6);
+}
+
+#[test]
+fn cross_validation_accuracy_beats_chance_on_all_binary_analogs() {
+    for name in registry::BINARY_NAMES {
+        let acc = cross_validate(
+            Problem::Svm { c: 1.0 },
+            name,
+            Policy::Acf,
+            0.01,
+            Scale(0.05),
+            3,
+            9,
+            3,
+        )
+        .unwrap();
+        assert!(acc > 0.52, "{name}: CV accuracy {acc}");
+    }
+}
+
+#[test]
+fn solvers_agree_across_policies_on_objective() {
+    // All selection policies must converge to the same optimum (the
+    // problem is convex); this is the paper's "equal quality" claim.
+    let mut base = quick(Problem::Svm { c: 1.0 }, "url-like", Policy::Acf);
+    base.eps = 1e-4;
+    let ds = base.load_dataset().unwrap();
+    let mut objectives = Vec::new();
+    for policy in [Policy::Acf, Policy::Permutation, Policy::Uniform, Policy::Cyclic] {
+        let mut s = base.clone();
+        s.policy = policy;
+        let out = acf_cd::coordinator::run_job_on(&s, &ds);
+        assert!(out.result.status.converged(), "{:?}", policy);
+        objectives.push(out.result.objective);
+    }
+    let lo = objectives.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = objectives.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    assert!((hi - lo).abs() < 1e-3 * lo.abs().max(1.0), "{objectives:?}");
+}
+
+#[test]
+fn shrinking_failure_recovers_via_warm_restart() {
+    // Tight eps with aggressive shrinking must still converge to the
+    // same objective as the plain solver (warm-restart correctness).
+    let mut rng = Rng::new(33);
+    let ds = registry::binary("rcv1-like", Scale(0.1), 5).unwrap();
+    let cfg = acf_cd::solvers::SolverConfig::with_eps(1e-5);
+    let (m1, r1) = acf_cd::solvers::svm::solve_liblinear_shrinking(&ds, 10.0, &mut rng, cfg.clone());
+    let mut perm = Policy::Permutation.build(ds.n_instances(), AcfParams::default(), Rng::new(6));
+    let (_m2, r2) = acf_cd::solvers::svm::solve(&ds, 10.0, perm.as_mut(), cfg);
+    assert!(r1.status.converged() && r2.status.converged());
+    let rel = (r1.objective - r2.objective).abs() / r2.objective.abs().max(1.0);
+    assert!(rel < 1e-4, "shrinking {} vs plain {}", r1.objective, r2.objective);
+    assert!(m1.alpha.iter().all(|&a| (0.0..=10.0).contains(&a)));
+}
+
+// ---------------------------------------------------------------- PJRT
+
+fn runtime() -> Option<acf_cd::runtime::Runtime> {
+    let dir = acf_cd::runtime::Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT integration test: artifacts not built");
+        return None;
+    }
+    Some(acf_cd::runtime::Runtime::load(&dir).unwrap())
+}
+
+#[test]
+fn e2e_train_then_cross_stack_validate() {
+    let Some(rt) = runtime() else { return };
+    let spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+    let ds = spec.load_dataset().unwrap();
+    let out = acf_cd::coordinator::run_job_on(&spec, &ds);
+    assert!(out.result.status.converged());
+    let w = out.w.unwrap();
+    let rep = acf_cd::runtime::validator::validate(&rt, &ds, &w).unwrap();
+    let native_acc = acf_cd::data::binary_accuracy(&ds, &w);
+    assert!((rep.accuracy - native_acc).abs() < 1e-9);
+    let native_primal = acf_cd::solvers::svm::primal_objective(&ds, &w, 1.0);
+    let xla_primal = rep.svm_primal(&w, 1.0);
+    let rel = (native_primal - xla_primal).abs() / native_primal.abs().max(1.0);
+    assert!(rel < 1e-2, "primal mismatch: {rel}");
+}
+
+#[test]
+fn markov_chain_agrees_with_pallas_kernel_across_instances() {
+    let Some(rt) = runtime() else { return };
+    use acf_cd::runtime::{MARKOV_M, MARKOV_N};
+    for (n, seed) in [(3usize, 1u64), (5, 2), (7, 3), (8, 4)] {
+        let mut rng = Rng::new(seed);
+        let quad = acf_cd::markov::Quadratic::rbf_gram(n, 1.0, &mut rng);
+        let mut q = vec![0.0f32; MARKOV_N * MARKOV_N];
+        for i in 0..MARKOV_N {
+            for j in 0..MARKOV_N {
+                q[i * MARKOV_N + j] = if i < n && j < n {
+                    quad.entry(i, j) as f32
+                } else if i == j {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+        let w0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mut wpad = vec![0.0f32; MARKOV_N];
+        for i in 0..n {
+            wpad[i] = w0[i] as f32;
+        }
+        let seq: Vec<i32> = (0..MARKOV_M).map(|k| ((k * 7 + seed as usize) % n) as i32).collect();
+        let (_w, t_pallas) = rt.cd_sweep_block(&q, &wpad, &seq).unwrap();
+        let mut chain = acf_cd::markov::Chain { q: &quad, w: w0 };
+        let t_rust =
+            chain.apply_sequence(&seq.iter().map(|&i| i as u32).collect::<Vec<u32>>());
+        let rel = (t_pallas as f64 - t_rust).abs() / t_rust.abs().max(1.0);
+        assert!(rel < 0.05, "n = {n}: pallas {t_pallas} vs rust {t_rust}");
+    }
+}
