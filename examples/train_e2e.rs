@@ -24,7 +24,7 @@ use acf_cd::solvers::{svm, SolverConfig};
 use acf_cd::util::json::{arr_f64, Json};
 use acf_cd::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> acf_cd::Result<()> {
     let mut evidence = Json::obj();
 
     // ------------------------------------------------ L3: train + trace

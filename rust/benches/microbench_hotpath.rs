@@ -181,5 +181,13 @@ fn main() {
     }
     let mut results = Json::obj();
     results.set("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+    // machine-readable medians for the cross-PR perf trajectory
+    let mut medians = Json::obj();
+    for r in &reports {
+        medians.set(&r.name, Json::Num(r.median()));
+    }
+    let mut summary = Json::obj();
+    summary.set("bench", Json::Str("microbench_hotpath".into())).set("median_s", medians);
+    acf_cd::bench_util::write_bench_summary("microbench_hotpath", &summary);
     cfg.finish(results);
 }

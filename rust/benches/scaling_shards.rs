@@ -1,0 +1,198 @@
+//! Shard-scaling benchmark — wall-clock speedup and solution-quality
+//! parity of the sharded parallel CD engine (`acf_cd::shard`) vs. the
+//! serial ACF path, across S ∈ {1, 2, 4, 8} on large synthetic datasets
+//! (LASSO: features sharded; SVM dual: instances sharded).
+//!
+//! Reported per S:
+//!   * time-to-convergence wall clock + speedup over the serial solver,
+//!   * relative final-objective difference vs. serial (parity target:
+//!     ≤ 1e-4),
+//!   * epochs and total CD steps,
+//!   * determinism audit: S = 4 is run twice and must agree exactly.
+//!
+//! Run: `cargo bench --bench scaling_shards [-- --quick]`
+//! Writes `BENCH_scaling_shards.json` next to the report.
+
+use acf_cd::bench_util::{summary_entry, write_bench_summary, BenchConfig, Table};
+use acf_cd::data::synth;
+use acf_cd::sched::{AcfSchedulerPolicy, Scheduler};
+use acf_cd::shard::{lasso as shard_lasso, svm as shard_svm, ShardSpec};
+use acf_cd::solvers::{lasso, svm, SolveResult, SolverConfig};
+use acf_cd::util::json::Json;
+use acf_cd::util::rng::Rng;
+use acf_cd::util::timer::fmt_secs;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn shard_spec(shards: usize, eps: f64, seed: u64) -> ShardSpec {
+    ShardSpec::new(shards).with_seed(seed).with_config(SolverConfig::with_eps(eps))
+}
+
+struct Row {
+    shards: usize,
+    seconds: f64,
+    result: SolveResult,
+    rel_obj: f64,
+}
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(1e-12)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn report_family(
+    family: &str,
+    serial_secs: f64,
+    serial: &SolveResult,
+    rows: &[Row],
+    deterministic: bool,
+    out: &mut Json,
+) {
+    let mut table = Table::new(
+        &format!("{family}: sharded engine vs serial ACF (time to convergence)"),
+        &["S", "seconds", "speedup", "rel Δobj vs serial", "epochs", "steps"],
+    );
+    table.row(vec![
+        "serial".into(),
+        fmt_secs(serial_secs),
+        "1.0".into(),
+        "—".into(),
+        serial.epochs.to_string(),
+        serial.iterations.to_string(),
+    ]);
+    for r in rows {
+        table.row(vec![
+            r.shards.to_string(),
+            fmt_secs(r.seconds),
+            format!("{:.2}", serial_secs / r.seconds.max(1e-12)),
+            format!("{:.2e}", r.rel_obj),
+            r.result.epochs.to_string(),
+            r.result.iterations.to_string(),
+        ]);
+    }
+    table.print();
+    println!("determinism (S = 4, two runs identical): {deterministic}");
+
+    let mut fam = Json::obj();
+    let mut serial_entry = summary_entry(serial_secs, serial.epochs, serial.objective);
+    serial_entry.set("steps", Json::Num(serial.iterations as f64));
+    fam.set("serial", serial_entry);
+    for r in rows {
+        let mut e = summary_entry(r.seconds, r.result.epochs, r.result.objective);
+        e.set("speedup", Json::Num(serial_secs / r.seconds.max(1e-12)))
+            .set("rel_obj_vs_serial", Json::Num(r.rel_obj))
+            .set("steps", Json::Num(r.result.iterations as f64))
+            .set("converged", Json::Bool(r.result.status.converged()));
+        fam.set(&format!("shards_{}", r.shards), e);
+    }
+    fam.set("deterministic", Json::Bool(deterministic));
+    out.set(family, fam);
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("shard scaling bench — {cores} hardware threads available");
+    if cores < 4 {
+        println!("note: fewer than 4 cores; speedups at S ≥ 4 will be machine-bound");
+    }
+    let mut out = Json::obj();
+    out.set("cores", Json::Num(cores as f64));
+
+    // ---------------- LASSO (features sharded) ------------------------
+    {
+        let (n, d, nnz) = if cfg.quick { (1_500, 4_000, 30) } else { (8_000, 30_000, 80) };
+        let (ds, _) = synth::regression_sparse("scale-reg", n, d, nnz, 60, 0.05, &mut Rng::new(cfg.seed));
+        let lambda = 0.002;
+        let eps = 1e-5;
+        println!(
+            "\nLASSO dataset: {} instances × {} features, {} nnz",
+            ds.n_instances(),
+            ds.n_features(),
+            ds.nnz()
+        );
+
+        // serial baseline: flat ACF (prepared problem, transpose excluded
+        // from all timings on both paths)
+        let prob = lasso::LassoProblem::new(&ds);
+        let t = acf_cd::util::timer::Timer::start();
+        let mut sched = AcfSchedulerPolicy::new(ds.n_features(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) = lasso::solve_prepared(&prob, lambda, &mut sched as &mut dyn Scheduler, SolverConfig::with_eps(eps));
+        let serial_secs = t.secs();
+        println!("serial: {}", serial.summary());
+
+        let sharded_prob = shard_lasso::ShardedLasso::new(&ds, lambda);
+        let rows: Vec<Row> = SHARD_COUNTS
+            .iter()
+            .map(|&s| {
+                let t = acf_cd::util::timer::Timer::start();
+                let o = shard_lasso::run_prepared(&sharded_prob, shard_spec(s, eps, cfg.seed));
+                let seconds = t.secs();
+                println!("S = {s}: {}", o.result.summary());
+                Row { shards: s, seconds, rel_obj: rel_diff(serial.objective, o.result.objective), result: o.result }
+            })
+            .collect();
+        let a = shard_lasso::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
+        let b = shard_lasso::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
+        let deterministic = a.result.iterations == b.result.iterations
+            && a.result.objective == b.result.objective
+            && a.values == b.values;
+        report_family("lasso", serial_secs, &serial, &rows, deterministic, &mut out);
+    }
+
+    // ---------------- SVM dual (instances sharded) ---------------------
+    {
+        let (n, d, nnz) = if cfg.quick { (2_000, 6_000, 30) } else { (12_000, 40_000, 80) };
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "scale-svm",
+                n,
+                d,
+                nnz_per_row: nnz,
+                zipf_s: 1.0,
+                concept_k: 200,
+                noise: 0.03,
+            },
+            &mut Rng::new(cfg.seed ^ 1),
+        );
+        let c = 1.0;
+        let eps = 1e-3;
+        println!(
+            "\nSVM dataset: {} instances × {} features, {} nnz",
+            ds.n_instances(),
+            ds.n_features(),
+            ds.nnz()
+        );
+
+        let t = acf_cd::util::timer::Timer::start();
+        let mut sched = AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) = svm::solve(&ds, c, &mut sched as &mut dyn Scheduler, SolverConfig::with_eps(eps));
+        let serial_secs = t.secs();
+        println!("serial: {}", serial.summary());
+
+        // ShardedSvm::new computes q_diag (row_norms_sq), which the serial
+        // svm::solve also does inside its timed region — construct inside
+        // the timer so both paths pay the same prep cost.
+        let rows: Vec<Row> = SHARD_COUNTS
+            .iter()
+            .map(|&s| {
+                let t = acf_cd::util::timer::Timer::start();
+                let sharded_prob = shard_svm::ShardedSvm::new(&ds, c);
+                let o = shard_svm::run_prepared(&sharded_prob, shard_spec(s, eps, cfg.seed));
+                let seconds = t.secs();
+                println!("S = {s}: {}", o.result.summary());
+                Row { shards: s, seconds, rel_obj: rel_diff(serial.objective, o.result.objective), result: o.result }
+            })
+            .collect();
+        let sharded_prob = shard_svm::ShardedSvm::new(&ds, c);
+        let a = shard_svm::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
+        let b = shard_svm::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
+        let deterministic = a.result.iterations == b.result.iterations
+            && a.result.objective == b.result.objective
+            && a.values == b.values;
+        report_family("svm", serial_secs, &serial, &rows, deterministic, &mut out);
+    }
+
+    write_bench_summary("scaling_shards", &out);
+    cfg.finish(out);
+}

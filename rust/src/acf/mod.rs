@@ -134,6 +134,28 @@ mod tests {
     }
 
     #[test]
+    fn next_terminates_and_covers_with_saturated_preferences() {
+        // Companion to `sequence::tests::no_livelock_under_extreme_preference_skew`:
+        // drive the preferences to the p_min/p_max clip bounds through
+        // reports, then check the degenerate-block loop in `next` keeps
+        // emitting and the waiting-time bound still covers every
+        // coordinate.
+        let n = 12;
+        let mut s = AcfScheduler::new(n, AcfParams::default(), Rng::new(11));
+        for _ in 0..20_000 {
+            let i = s.next();
+            s.report(i, if i == 0 { 100.0 } else { 0.0 });
+        }
+        let p = s.preferences();
+        assert!(p.preference(0) >= p.params().p_max - 1e-9, "skew not saturated");
+        let mut seen = vec![false; n];
+        for _ in 0..n * 500 {
+            seen[s.next()] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let run = |seed: u64| {
             let mut s = AcfScheduler::new(5, AcfParams::default(), Rng::new(seed));

@@ -176,6 +176,52 @@ mod tests {
     }
 
     #[test]
+    fn no_livelock_under_extreme_preference_skew() {
+        // Guards the degenerate-block loop in `acf/mod.rs` (AcfScheduler::next):
+        // that loop terminates iff blocks cannot stay empty forever. The
+        // accumulator increments of one block sum to exactly n, so every
+        // block must emit ≥ 1 index — even with every preference pinned
+        // at the p_min/p_max clip bounds — and the Algorithm-3 waiting
+        // -time bound τ = ⌈1/(n·π_min)⌉ guarantees every coordinate is
+        // eventually emitted. Checked here as a property over adversarial
+        // bound-saturated preference vectors.
+        let params = AcfParams::default();
+        prop::check(40, |g| {
+            let n = g.usize_in(1, 48);
+            // adversarial skew: each preference at one of the clip
+            // bounds (with a few mid-range values mixed in)
+            let p: Vec<f64> = (0..n)
+                .map(|_| *g.choose(&[params.p_min, params.p_min, params.p_max, 1.0]))
+                .collect();
+            let p_sum: f64 = p.iter().sum();
+            let pi_min = p.iter().cloned().fold(f64::INFINITY, f64::min) / p_sum;
+            let tau = (1.0 / (n as f64 * pi_min)).ceil() as usize;
+            let prefs = prefs_with(p);
+            let mut gen = SequenceGenerator::new(n);
+            let mut rng = Rng::new(g.seed);
+            let mut last_seen = vec![0usize; n];
+            let blocks = 5 * (tau + 1);
+            for b in 1..=blocks {
+                let blk = gen.block(&prefs, &mut rng);
+                prop::assert_holds(!blk.is_empty(), "a block can never be empty")?;
+                for &i in &blk {
+                    last_seen[i as usize] = b;
+                }
+                for (i, &seen) in last_seen.iter().enumerate() {
+                    prop::assert_holds(
+                        b - seen <= tau + 1,
+                        &format!("coord {i} starved for {} blocks (τ = {tau})", b - seen),
+                    )?;
+                }
+            }
+            prop::assert_holds(
+                last_seen.iter().all(|&s| s > 0),
+                "every coordinate eventually emitted",
+            )
+        });
+    }
+
+    #[test]
     fn accumulators_stay_in_unit_interval() {
         let prefs = prefs_with(vec![0.07, 2.3, 11.0]);
         let mut gen = SequenceGenerator::new(3);

@@ -56,6 +56,40 @@ impl BenchConfig {
     }
 }
 
+/// Write the machine-readable `BENCH_<name>.json` summary next to the
+/// human-readable report (working directory). Benches call this with
+/// their headline numbers — median wall-clock, epochs, final objective —
+/// so the repository accumulates a perf trajectory across PRs that tools
+/// can diff without parsing stdout. Returns the path on success.
+pub fn write_bench_summary(name: &str, summary: &Json) -> Option<String> {
+    write_bench_summary_to(std::path::Path::new("."), name, summary)
+}
+
+/// [`write_bench_summary`] with an explicit output directory.
+pub fn write_bench_summary_to(dir: &std::path::Path, name: &str, summary: &Json) -> Option<String> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, summary.to_string_pretty()) {
+        Ok(()) => {
+            eprintln!("bench summary written to {}", path.display());
+            Some(path.display().to_string())
+        }
+        Err(e) => {
+            eprintln!("warning: could not write {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+/// Conventional summary entry for one measured configuration: the three
+/// headline metrics every bench reports, plus free-form extras.
+pub fn summary_entry(median_wall_clock_s: f64, epochs: u64, final_objective: f64) -> Json {
+    let mut o = Json::obj();
+    o.set("median_wall_clock_s", Json::Num(median_wall_clock_s))
+        .set("epochs", Json::Num(epochs as f64))
+        .set("final_objective", Json::Num(final_objective));
+    o
+}
+
 /// Timing report of a micro-benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -238,5 +272,27 @@ mod tests {
     fn speedup_formatting() {
         assert_eq!(fmt_speedup(10.0, 2.0), "5.0");
         assert_eq!(fmt_speedup(10.0, 0.0), "—");
+    }
+
+    #[test]
+    fn summary_entry_has_conventional_fields() {
+        let e = summary_entry(1.25, 7, -3.5);
+        assert_eq!(e.get("median_wall_clock_s").unwrap().as_f64(), Some(1.25));
+        assert_eq!(e.get("epochs").unwrap().as_usize(), Some(7));
+        assert_eq!(e.get("final_objective").unwrap().as_f64(), Some(-3.5));
+    }
+
+    #[test]
+    fn bench_summary_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("acf_cd_bench_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Json::obj();
+        s.set("bench", Json::Str("demo".into())).set("entry", summary_entry(0.5, 3, 1.0));
+        let path = write_bench_summary_to(&dir, "demo", &s).expect("writable temp dir");
+        assert!(path.ends_with("BENCH_demo.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(parsed.get("entry").unwrap().get("epochs").unwrap().as_usize(), Some(3));
     }
 }

@@ -7,7 +7,7 @@ use crate::data::{self, Scale};
 use crate::sched::Policy;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// A (policy × parameter-grid) sweep on one dataset.
 #[derive(Clone, Debug)]

@@ -2,13 +2,15 @@
 //! hyper-parameter point with one scheduling policy.
 
 use crate::acf::AcfParams;
+use crate::anyhow;
 use crate::data::{registry, Scale};
 use crate::sched::Policy;
+use crate::shard::{self, Partitioner, ShardSpec};
 use crate::solvers::{self, SolveResult, SolverConfig};
 use crate::sparse::Dataset;
+use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Result};
 
 /// Which of the paper's four problem families to solve.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,6 +61,14 @@ pub struct JobSpec {
     pub max_iterations: u64,
     pub max_seconds: Option<f64>,
     pub acf_params: AcfParams,
+    /// > 1 routes ACF-policy SVM/LASSO jobs through the sharded parallel
+    /// engine ([`crate::shard`]); 0/1 keeps the serial path.
+    pub shards: usize,
+    /// coordinate→shard assignment strategy for sharded runs
+    pub partitioner: Partitioner,
+    /// worker-thread cap for the sharded engine (0 = bounded by shard
+    /// count and hardware parallelism)
+    pub shard_workers: usize,
 }
 
 impl JobSpec {
@@ -73,7 +83,35 @@ impl JobSpec {
             max_iterations: 200_000_000,
             max_seconds: None,
             acf_params: AcfParams::default(),
+            shards: 0,
+            partitioner: Partitioner::Contiguous,
+            shard_workers: 0,
         }
+    }
+
+    /// Sharded-engine configuration derived from this job.
+    fn shard_spec(&self) -> ShardSpec {
+        let mut spec = ShardSpec::new(self.shards);
+        spec.partitioner = self.partitioner;
+        spec.seed = self.seed ^ 0x5EED;
+        spec.inner_params = self.acf_params;
+        spec.outer_params = self.acf_params;
+        spec.workers = self.shard_workers;
+        spec.config = self.solver_config();
+        spec
+    }
+
+    /// Whether this job routes through the sharded parallel engine.
+    ///
+    /// Only the ACF policy has a sharded execution (the engine *is*
+    /// hierarchical ACF); every other policy keeps its serial semantics
+    /// so policy-comparison sweeps stay meaningful with `--shards` set,
+    /// and `Policy::Hierarchical` keeps the serial two-level scheduler
+    /// it names. Only SVM and LASSO have shard-aware train loops.
+    pub fn uses_sharded_engine(&self) -> bool {
+        self.shards > 1
+            && self.policy == Policy::Acf
+            && matches!(self.problem, Problem::Svm { .. } | Problem::Lasso { .. })
     }
 
     pub fn solver_config(&self) -> SolverConfig {
@@ -131,6 +169,10 @@ impl JobOutcome {
         if let Some(k) = self.nnz_coeffs {
             o.set("nnz_coeffs", Json::Num(k as f64));
         }
+        if self.spec.uses_sharded_engine() {
+            o.set("shards", Json::Num(self.spec.shards as f64))
+                .set("partitioner", Json::Str(self.spec.partitioner.name().into()));
+        }
         o
     }
 }
@@ -140,6 +182,43 @@ impl JobOutcome {
 pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
     let cfg = spec.solver_config();
     let rng = Rng::new(spec.seed ^ 0x5EED);
+    // Sharded engine path (ACF policy on SVM/LASSO only — see
+    // `JobSpec::uses_sharded_engine`); everything else falls through to
+    // the serial solvers.
+    if spec.uses_sharded_engine() {
+        match spec.problem {
+            Problem::Svm { c } => {
+                let (model, result) = shard::svm::solve_sharded(ds, c, spec.shard_spec());
+                return JobOutcome {
+                    spec: spec.clone(),
+                    result,
+                    w: Some(model.w),
+                    w_multi: None,
+                    nnz_coeffs: None,
+                };
+            }
+            Problem::Lasso { lambda } => {
+                let (model, result) = shard::lasso::solve_sharded(ds, lambda, spec.shard_spec());
+                let k = solvers::lasso::nnz_coefficients(&model);
+                return JobOutcome {
+                    spec: spec.clone(),
+                    result,
+                    w: Some(model.w),
+                    w_multi: None,
+                    nnz_coeffs: Some(k),
+                };
+            }
+            _ => unreachable!("uses_sharded_engine restricts to svm/lasso"),
+        }
+    } else if spec.shards > 1 && !matches!(spec.policy, Policy::Hierarchical { .. }) {
+        // (Policy::Hierarchical consumes --shards itself, serially.)
+        eprintln!(
+            "note: --shards engages the parallel engine only for --policy acf on svm/lasso; \
+             running {} with the serial {} policy",
+            spec.problem.family(),
+            spec.policy.name()
+        );
+    }
     match spec.problem {
         Problem::Svm { c } => {
             let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
@@ -255,5 +334,28 @@ mod tests {
     fn unknown_dataset_errors() {
         let spec = quick_spec(Problem::Svm { c: 1.0 }, "nonexistent", Policy::Acf);
         assert!(run_job(&spec).is_err());
+    }
+
+    #[test]
+    fn sharded_svm_job_matches_serial() {
+        let serial = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        let mut sharded = serial.clone();
+        sharded.shards = 4;
+        let a = run_job(&serial).unwrap();
+        let b = run_job(&sharded).unwrap();
+        assert!(a.result.status.converged() && b.result.status.converged());
+        let rel = (a.result.objective - b.result.objective).abs() / a.result.objective.abs().max(1.0);
+        assert!(rel < 1e-2, "{} vs {}", a.result.objective, b.result.objective);
+        let j = b.to_json();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("partitioner").unwrap().as_str(), Some("contiguous"));
+    }
+
+    #[test]
+    fn hierarchical_policy_job_runs() {
+        let policy = Policy::parse("hier").unwrap();
+        let spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", policy);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
     }
 }

@@ -18,16 +18,26 @@
 //!
 //! Architecture (three layers, Python never on the hot path):
 //!
-//! * **L3** — this crate: schedulers, solvers, data substrates,
-//!   experiment coordinator, benchmark harness.
+//! * **L3** — this crate: schedulers, solvers, the [`shard`] scaling
+//!   subsystem, data substrates, experiment coordinator, benchmark
+//!   harness.
 //! * **L2** — `python/compile/model.py`: JAX evaluation graphs (margins,
 //!   losses, dense-Q CD sweeps), AOT-lowered once to HLO text in
 //!   `artifacts/`.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels called by L2.
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) and exposes them to the coordinator's *validation* path
-//! (objective audits, accuracy); the CD iteration hot loop is pure Rust.
+//! (`xla` crate, behind the `pjrt` cargo feature) and exposes them to the
+//! coordinator's *validation* path (objective audits, accuracy); the CD
+//! iteration hot loop is pure Rust.
+//!
+//! Scaling axis: [`shard`] partitions the coordinate set into S shards,
+//! runs an inner ACF scheduler per shard on worker threads with
+//! epoch-synchronized merges, and adapts shard visit frequencies with an
+//! *outer* ACF instance — hierarchical ACF, the paper's Algorithms 2+3
+//! applied at two levels. Serial solvers get the same idea through
+//! [`sched::Policy::Hierarchical`]; the CLI exposes it as
+//! `--policy hier --shards S --partitioner contiguous|hash`.
 
 pub mod acf;
 pub mod bench_util;
@@ -37,9 +47,11 @@ pub mod markov;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod solvers;
 pub mod sparse;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result and error types (first-party `anyhow` analog —
+/// the offline build carries no external dependencies).
+pub use util::error::{Error, Result};

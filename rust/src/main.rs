@@ -19,9 +19,10 @@ use acf_cd::data::{registry, Scale};
 use acf_cd::markov;
 use acf_cd::runtime::Runtime;
 use acf_cd::sched::Policy;
+use acf_cd::shard::Partitioner;
 use acf_cd::util::cli::Args;
 use acf_cd::util::rng::Rng;
-use anyhow::{anyhow, Result};
+use acf_cd::{anyhow, Result};
 
 fn main() {
     let args = Args::from_env();
@@ -57,9 +58,18 @@ fn print_help() {
          \n\
          subcommands: train | sweep | cv | markov | datasets | info\n\
          common flags: --problem svm|lasso|logreg|mcsvm  --dataset <name>\n\
-         \u{20}             --policy acf|perm|cyclic|uniform  --c/--lambda <v>\n\
+         \u{20}             --policy acf|perm|cyclic|uniform|hier  --c/--lambda <v>\n\
          \u{20}             --eps <v>  --scale <f>  --seed <n>  --workers <n>\n\
-         run `cargo bench` for the paper's tables/figures."
+         sharding:     --shards <S>  runs svm/lasso on the parallel sharded\n\
+         \u{20}             engine (per-shard ACF + outer ACF over shards;\n\
+         \u{20}             engages with --policy acf, the default — other\n\
+         \u{20}             policies keep their serial semantics for fair\n\
+         \u{20}             comparisons); --partitioner contiguous|hash picks\n\
+         \u{20}             the coordinate split; --shard-workers <n> caps the\n\
+         \u{20}             engine's threads; `--policy hier` is the serial\n\
+         \u{20}             two-level ACF (shard count from --shards, 0 = √n)\n\
+         run `cargo bench` for the paper's tables/figures and\n\
+         `cargo bench --bench scaling_shards` for the shard-scaling curve."
     );
 }
 
@@ -84,8 +94,13 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
         _ => "rcv1-like",
     };
     let dataset = args.str_or("dataset", default_ds).to_string();
+    let shards = args.usize_or("shards", 0)?;
+    let partitioner = Partitioner::parse(args.str_or("partitioner", "contiguous"))
+        .map_err(|e| anyhow!("{e}"))?;
     let policy = Policy::parse(args.str_or("policy", "acf"))
-        .ok_or_else(|| anyhow!("unknown policy"))?;
+        .map_err(|e| anyhow!("{e}"))?
+        .with_shards(shards)
+        .with_partitioner(partitioner);
     let mut spec = JobSpec::new(problem, &dataset, policy);
     spec.eps = args.f64_or("eps", 0.01)?;
     spec.seed = args.u64_or("seed", 20140103)?;
@@ -94,6 +109,11 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
     if let Some(s) = args.get("max-seconds") {
         spec.max_seconds = Some(s.parse()?);
     }
+    spec.shards = shards;
+    spec.partitioner = partitioner;
+    // deliberately a separate flag from --workers (the sweep job pool):
+    // a sharded sweep would otherwise square the thread count
+    spec.shard_workers = args.usize_or("shard-workers", 0)?;
     Ok(spec)
 }
 
@@ -107,6 +127,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         ds.n_features(),
         ds.nnz()
     );
+    if spec.uses_sharded_engine() {
+        eprintln!("sharded engine: {} shards, {} partition", spec.shards, spec.partitioner.name());
+    }
     let out = coordinator::run_job_on(&spec, &ds);
     println!("{}", out.result.summary());
     if let Some(w) = &out.w {
@@ -146,7 +169,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .str_list("policies")
         .unwrap_or_else(|| vec!["acf".into(), "perm".into()])
         .iter()
-        .map(|s| Policy::parse(s).ok_or_else(|| anyhow!("unknown policy '{s}'")))
+        .map(|s| Policy::parse(s).map_err(|e| anyhow!("{e}")))
         .collect::<Result<_>>()?;
     let spec = SweepSpec {
         base,

@@ -13,14 +13,24 @@
 //! The validator streams dense tiles of the (sparse) design matrix
 //! through `margins`, accumulates partial margins per row block, then
 //! reduces losses/accuracy with `binary_eval`. It lives on the
-//! *evaluation* path (objective audits, CV accuracy) — the CD iteration
+//! *evaluation* path (objective audits, accuracy) — the CD iteration
 //! hot loop is pure Rust (see DESIGN.md §2).
+//!
+//! # Offline builds
+//!
+//! The PJRT path requires the `xla` crate and built artifacts, neither of
+//! which exists in the dependency-free offline build. It is therefore
+//! gated behind the `pjrt` cargo feature: without it, [`Runtime`] keeps
+//! the same API but every entry point returns an explicit "unavailable"
+//! error, so the CLI (`acf-cd info`, `--validate`) and the coordinator
+//! degrade gracefully instead of failing to link.
 
 pub mod validator;
 
-use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
+use crate::anyhow;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use std::path::PathBuf;
 
 /// Tile contract — must match python/compile/model.py.
 pub const BL: usize = 256;
@@ -28,7 +38,64 @@ pub const BD: usize = 256;
 pub const MARKOV_N: usize = 8;
 pub const MARKOV_M: usize = 256;
 
+impl Runtime {
+    /// Default artifacts directory: `$ACF_CD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ACF_CD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Self::default_dir())
+    }
+}
+
+/// Loaded and compiled AOT artifacts (stub: the crate was built without
+/// the `pjrt` feature, so nothing can be loaded or executed).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Json,
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn unavailable() -> crate::Error {
+    anyhow!(
+        "PJRT runtime unavailable: built without the `pjrt` feature \
+         (add the `xla` dependency, build the AOT artifacts with `make artifacts`, \
+         then rebuild with `--features pjrt`)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub loader — always fails with an actionable message.
+    pub fn load(_dir: &std::path::Path) -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Execute the margins graph on one dense tile (stub).
+    pub fn margins_tile(&self, _x_tile: &[f32], _w_tile: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    /// Execute the fused loss/accuracy reduction on one margins block
+    /// (stub).
+    pub fn binary_eval_block(&self, _m: &[f32], _y: &[f32], _mask: &[f32]) -> Result<[f32; 4]> {
+        Err(unavailable())
+    }
+
+    /// Execute one CD sweep block on the dense quadratic (stub).
+    pub fn cd_sweep_block(&self, _q: &[f32], _w: &[f32], _seq: &[i32]) -> Result<(Vec<f32>, f32)> {
+        Err(unavailable())
+    }
+}
+
 /// Loaded and compiled AOT artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     margins: xla::PjRtLoadedExecutable,
@@ -37,17 +104,21 @@ pub struct Runtime {
     pub manifest: Json,
 }
 
-fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+#[cfg(feature = "pjrt")]
+fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
         .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
     let comp = xla::XlaComputation::from_proto(&proto);
     client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load from an artifacts directory (default: `artifacts/` next to
     /// the current dir, or `$ACF_CD_ARTIFACTS`).
-    pub fn load(dir: &Path) -> Result<Runtime> {
+    pub fn load(dir: &std::path::Path) -> Result<Runtime> {
+        use crate::util::error::Context;
+        use crate::util::json;
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {:?}/manifest.json — run `make artifacts`", dir))?;
         let manifest = json::parse(&manifest_text).context("parsing manifest.json")?;
@@ -60,24 +131,11 @@ impl Runtime {
         if bl != BL {
             return Err(anyhow!("artifact tile BL {bl} != runtime BL {BL}; rebuild artifacts"));
         }
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
         let margins = compile(&client, &dir.join("margins.hlo.txt"))?;
         let binary_eval = compile(&client, &dir.join("binary_eval.hlo.txt"))?;
         let cd_sweep = compile(&client, &dir.join("cd_sweep.hlo.txt"))?;
         Ok(Runtime { client, margins, binary_eval, cd_sweep, manifest })
-    }
-
-    /// Default artifacts directory: `$ACF_CD_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("ACF_CD_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
-    }
-
-    /// Load from the default directory.
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(&Self::default_dir())
     }
 
     pub fn platform(&self) -> String {
@@ -106,8 +164,7 @@ impl Runtime {
         let lm = xla::Literal::vec1(m);
         let ly = xla::Literal::vec1(y);
         let lmask = xla::Literal::vec1(mask);
-        let result =
-            self.binary_eval.execute::<xla::Literal>(&[lm, ly, lmask])?[0][0].to_literal_sync()?;
+        let result = self.binary_eval.execute::<xla::Literal>(&[lm, ly, lmask])?[0][0].to_literal_sync()?;
         let out = result.to_tuple1()?;
         let v = out.to_vec::<f32>()?;
         Ok([v[0], v[1], v[2], v[3]])
@@ -124,8 +181,7 @@ impl Runtime {
         let lq = xla::Literal::vec1(q).reshape(&[MARKOV_N as i64, MARKOV_N as i64])?;
         let lw = xla::Literal::vec1(w);
         let lseq = xla::Literal::vec1(seq);
-        let result =
-            self.cd_sweep.execute::<xla::Literal>(&[lq, lw, lseq])?[0][0].to_literal_sync()?;
+        let result = self.cd_sweep.execute::<xla::Literal>(&[lq, lw, lseq])?[0][0].to_literal_sync()?;
         let (w_out, total) = result.to_tuple2()?;
         Ok((w_out.to_vec::<f32>()?, total.to_vec::<f32>()?[0]))
     }
@@ -147,12 +203,14 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn loads_and_reports_platform() {
         let Some(rt) = runtime() else { return };
         assert!(rt.platform().to_lowercase().contains("cpu"));
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn margins_tile_matches_native() {
         let Some(rt) = runtime() else { return };
         let mut rng = crate::util::rng::Rng::new(1);
@@ -161,23 +219,18 @@ mod tests {
         let got = rt.margins_tile(&x, &w).unwrap();
         for r in 0..BL {
             let want: f32 = (0..BD).map(|c| x[r * BD + c] * w[c]).sum();
-            assert!(
-                (got[r] - want).abs() <= 1e-3 * want.abs().max(1.0),
-                "row {r}: {} vs {}",
-                got[r],
-                want
-            );
+            assert!((got[r] - want).abs() <= 1e-3 * want.abs().max(1.0), "row {r}: {} vs {}", got[r], want);
         }
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn binary_eval_block_matches_native() {
         let Some(rt) = runtime() else { return };
         let mut rng = crate::util::rng::Rng::new(2);
         let m: Vec<f32> = (0..BL).map(|_| rng.normal(0.0, 2.0) as f32).collect();
         let y: Vec<f32> = (0..BL).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
-        let mask: Vec<f32> =
-            (0..BL).map(|i| if i < 200 { 1.0 } else { 0.0 }).collect();
+        let mask: Vec<f32> = (0..BL).map(|i| if i < 200 { 1.0 } else { 0.0 }).collect();
         let [hinge, logistic, correct, sq] = rt.binary_eval_block(&m, &y, &mask).unwrap();
         let mut e_h = 0.0f64;
         let mut e_l = 0.0f64;
@@ -199,6 +252,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn cd_sweep_block_matches_rust_chain() {
         let Some(rt) = runtime() else { return };
         // real n = 5 padded into MARKOV_N = 8 with identity diagonal

@@ -6,7 +6,7 @@
 
 use super::Runtime;
 use crate::sparse::Dataset;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Aggregated validation metrics over a dataset.
 #[derive(Clone, Copy, Debug, Default)]
@@ -114,6 +114,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn validator_matches_native_metrics() {
         let Some(rt) = runtime() else { return };
         let mut rng = Rng::new(5);
@@ -155,6 +156,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
     fn validator_agrees_with_solver_primal() {
         let Some(rt) = runtime() else { return };
         let mut rng = Rng::new(6);

@@ -10,6 +10,9 @@
 //! * [`UniformScheduler`] — i.i.d. uniform selection.
 //! * [`AcfSchedulerPolicy`] — the paper's contribution (wraps
 //!   [`crate::acf::AcfScheduler`]).
+//! * [`Policy::Hierarchical`] — two-level ACF over a shard partition
+//!   (implemented by [`crate::shard::HierarchicalScheduler`]); the serial
+//!   twin of the parallel engine in [`crate::shard`].
 //!
 //! Shrinking (liblinear's heuristic) is implemented *inside* the SVM
 //! solver — it is an active-set transformation of the problem rather than
@@ -188,16 +191,30 @@ pub enum Policy {
     Permutation,
     Uniform,
     Acf,
+    /// Two-level ACF over a shard partition (see
+    /// [`crate::shard::HierarchicalScheduler`]). `shards = 0` selects
+    /// √n automatically.
+    Hierarchical { shards: usize, partitioner: crate::shard::Partitioner },
 }
 
+/// Valid policy names, kept in sync with [`Policy::parse`] (shown in CLI
+/// error messages and help).
+pub const POLICY_NAMES: &str = "cyclic, permutation|perm, uniform, acf, hierarchical|hier";
+
 impl Policy {
-    pub fn parse(s: &str) -> Option<Policy> {
-        match s {
-            "cyclic" => Some(Policy::Cyclic),
-            "permutation" | "perm" | "random-permutation" => Some(Policy::Permutation),
-            "uniform" | "uniform-iid" => Some(Policy::Uniform),
-            "acf" => Some(Policy::Acf),
-            _ => None,
+    /// Case-insensitive name lookup. On failure the error lists every
+    /// valid policy name, so a typo like `ACF→AFC` is self-explaining.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "cyclic" => Ok(Policy::Cyclic),
+            "permutation" | "perm" | "random-permutation" => Ok(Policy::Permutation),
+            "uniform" | "uniform-iid" => Ok(Policy::Uniform),
+            "acf" => Ok(Policy::Acf),
+            "hierarchical" | "hier" | "hierarchical-acf" => Ok(Policy::Hierarchical {
+                shards: 0,
+                partitioner: crate::shard::Partitioner::Contiguous,
+            }),
+            other => Err(format!("unknown policy '{other}' (valid: {POLICY_NAMES})")),
         }
     }
 
@@ -207,6 +224,9 @@ impl Policy {
             Policy::Permutation => Box::new(PermutationScheduler::new(n, rng)),
             Policy::Uniform => Box::new(UniformScheduler::new(n, rng)),
             Policy::Acf => Box::new(AcfSchedulerPolicy::new(n, params, rng)),
+            Policy::Hierarchical { shards, partitioner } => {
+                Box::new(crate::shard::HierarchicalScheduler::new(n, shards, partitioner, params, rng))
+            }
         }
     }
 
@@ -216,6 +236,25 @@ impl Policy {
             Policy::Permutation => "random-permutation",
             Policy::Uniform => "uniform-iid",
             Policy::Acf => "acf",
+            Policy::Hierarchical { .. } => "hierarchical-acf",
+        }
+    }
+
+    /// Pin the shard count of the hierarchical policy (no-op for flat
+    /// policies).
+    pub fn with_shards(self, shards: usize) -> Policy {
+        match self {
+            Policy::Hierarchical { partitioner, .. } => Policy::Hierarchical { shards, partitioner },
+            other => other,
+        }
+    }
+
+    /// Pin the partitioner of the hierarchical policy (no-op for flat
+    /// policies).
+    pub fn with_partitioner(self, partitioner: crate::shard::Partitioner) -> Policy {
+        match self {
+            Policy::Hierarchical { shards, .. } => Policy::Hierarchical { shards, partitioner },
+            other => other,
         }
     }
 }
@@ -264,12 +303,41 @@ mod tests {
             ("perm", Policy::Permutation),
             ("uniform", Policy::Uniform),
             ("acf", Policy::Acf),
+            ("hier", Policy::Hierarchical { shards: 0, partitioner: crate::shard::Partitioner::Contiguous }),
         ] {
-            assert_eq!(Policy::parse(name), Some(expect));
+            assert_eq!(Policy::parse(name), Ok(expect));
             let s = expect.build(4, AcfParams::default(), Rng::new(1));
             assert_eq!(s.n(), 4);
         }
-        assert_eq!(Policy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn policy_parse_is_case_insensitive() {
+        assert_eq!(Policy::parse("ACF"), Ok(Policy::Acf));
+        assert_eq!(Policy::parse("Cyclic"), Ok(Policy::Cyclic));
+        assert_eq!(
+            Policy::parse("HIERARCHICAL"),
+            Ok(Policy::Hierarchical { shards: 0, partitioner: crate::shard::Partitioner::Contiguous })
+        );
+    }
+
+    #[test]
+    fn policy_parse_error_lists_valid_names() {
+        let e = Policy::parse("bogus").unwrap_err();
+        for name in ["cyclic", "perm", "uniform", "acf", "hier"] {
+            assert!(e.contains(name), "error message misses '{name}': {e}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_policy_shards_pinnable() {
+        let p = Policy::parse("hier").unwrap().with_shards(3);
+        assert_eq!(p, Policy::Hierarchical { shards: 3, partitioner: crate::shard::Partitioner::Contiguous });
+        assert_eq!(p.name(), "hierarchical-acf");
+        let s = p.build(12, AcfParams::default(), Rng::new(2));
+        assert_eq!(s.n(), 12);
+        // flat policies ignore the shard hint
+        assert_eq!(Policy::Acf.with_shards(5), Policy::Acf);
     }
 
     #[test]

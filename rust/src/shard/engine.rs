@@ -1,0 +1,448 @@
+//! The sharded coordinate-descent engine.
+//!
+//! [`ShardedDriver`] partitions the coordinate set into S shards, runs an
+//! independent inner [`AcfScheduler`] inside each shard, and layers an
+//! *outer* ACF instance (paper Algorithms 2+3, applied one level up) over
+//! the shards themselves. Execution is epoch-synchronized:
+//!
+//! 1. **Quota** — the outer sequence generator (Algorithm 3 over shard
+//!    preferences) emits a block of shard visits; each visit grants the
+//!    shard one local sweep (`n_s` CD steps). Hot shards therefore get
+//!    proportionally more steps per epoch, exactly as hot coordinates get
+//!    more visits in the flat algorithm.
+//! 2. **Local epochs** — every shard copies the shared solver state
+//!    (LASSO residual / SVM primal vector), then runs its quota of exact
+//!    CD steps on its own coordinates against that private copy, driven
+//!    by its inner ACF scheduler. Shards run on worker threads; nothing
+//!    is shared mutably, so the epoch is embarrassingly parallel.
+//! 3. **Merge** — shared-state deltas are summed in fixed shard order.
+//!    The additive merge (θ = 1) is tried first and kept whenever the
+//!    objective does not increase; otherwise the engine falls back to the
+//!    averaged merge θ = 1/S, which is *guaranteed* not to increase the
+//!    objective: each shard's endpoint is an exact-CD iterate from the
+//!    epoch-start point, the shared state is linear in the coordinate
+//!    values, and f is convex, so f(mean of endpoints) ≤ mean of
+//!    f(endpoints) ≤ f(start). The per-epoch objective sequence is thus
+//!    monotone by construction.
+//! 4. **Adapt** — each shard's aggregate progress Δf per step is reported
+//!    to the outer preference vector (Algorithm 2 over shards), closing
+//!    the hierarchical-ACF loop.
+//!
+//! Determinism: shard partitions are stateless, every RNG stream is
+//! derived from `(seed, shard index)`, quotas come from the deterministic
+//! outer accumulators, and merges run in fixed shard order — so results
+//! are bit-identical given `(seed, shard count)` regardless of thread
+//! scheduling or worker count.
+
+use crate::acf::{AcfParams, AcfScheduler, Preferences, SequenceGenerator};
+use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::shard::partition::{Partition, Partitioner};
+use crate::solvers::{SolveResult, SolveStatus, SolverConfig};
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+use crate::util::timer::Timer;
+use std::sync::Mutex;
+
+/// Configuration of a sharded run.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    /// number of shards S (clamped to the coordinate count)
+    pub shards: usize,
+    /// how coordinates are assigned to shards
+    pub partitioner: Partitioner,
+    /// master seed; all shard/outer streams derive from it
+    pub seed: u64,
+    /// ACF parameters of the per-shard inner schedulers
+    pub inner_params: AcfParams,
+    /// ACF parameters of the outer (shard-level) adaptation
+    pub outer_params: AcfParams,
+    /// worker threads (0 = one per shard, bounded by hardware
+    /// parallelism)
+    pub workers: usize,
+    /// stopping criteria; `trace_every > 0` records one trace point per
+    /// epoch (the engine's natural sampling unit)
+    pub config: SolverConfig,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize) -> ShardSpec {
+        ShardSpec {
+            shards,
+            partitioner: Partitioner::Contiguous,
+            seed: 20140103,
+            inner_params: AcfParams::default(),
+            outer_params: AcfParams::default(),
+            workers: 0,
+            config: SolverConfig::default(),
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ShardSpec {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_config(mut self, config: SolverConfig) -> ShardSpec {
+        self.config = config;
+        self
+    }
+}
+
+/// Outcome of one CD step performed through [`ShardProblem::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// exact objective decrease of the step (≥ 0 up to fp noise)
+    pub delta_f: f64,
+    /// KKT violation of the coordinate *before* the step
+    pub violation: f64,
+    /// multiply-add operations spent
+    pub ops: usize,
+}
+
+/// A problem family pluggable into the sharded engine.
+///
+/// The contract mirrors the serial solvers: one *coordinate value* per
+/// coordinate (w_j for LASSO, α_i for the SVM dual) plus one dense
+/// *shared state* vector that is linear in the values (residual r = Xw−y,
+/// primal w = Σ α_i y_i x_i). `step` must perform the exact
+/// one-dimensional CD update and keep `shared` consistent; the engine
+/// owns snapshotting, merging and scheduling.
+pub trait ShardProblem: Sync {
+    /// Number of coordinates n.
+    fn n_coords(&self) -> usize;
+
+    /// Dimension of the shared state vector.
+    fn shared_dim(&self) -> usize;
+
+    /// Shared state at the all-values-initial point.
+    fn initial_shared(&self) -> Vec<f64>;
+
+    /// Initial value of coordinate `i` (0 for both LASSO and SVM dual).
+    fn initial_value(&self, _i: usize) -> f64 {
+        0.0
+    }
+
+    /// Exact CD step on coordinate `i`: update `value` and `shared` in
+    /// place, report progress / violation / cost.
+    fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome;
+
+    /// KKT violation of coordinate `i` at the given state, with its
+    /// operation cost (used by the synchronized verification pass).
+    fn violation(&self, i: usize, value: f64, shared: &[f64]) -> (f64, usize);
+
+    /// Non-separable objective part, a function of the shared state only
+    /// (½‖r‖²/ℓ for LASSO, ½‖w‖² for the SVM dual).
+    fn shared_objective(&self, shared: &[f64]) -> f64;
+
+    /// Separable objective contribution of one coordinate (λ|w_j|, −α_i).
+    fn coord_objective(&self, i: usize, value: f64) -> f64;
+}
+
+/// Result of a sharded run: final coordinate values (global indexing),
+/// final shared state, solver metrics, and the outer ACF's final
+/// shard-selection probabilities (diagnostics).
+pub struct ShardedOutcome {
+    pub values: Vec<f64>,
+    pub shared: Vec<f64>,
+    pub result: SolveResult,
+    pub outer_probabilities: Vec<f64>,
+}
+
+/// Per-shard mutable state. Lives behind a `Mutex` purely so the scoped
+/// worker threads can claim disjoint shards through a shared slice; there
+/// is never lock contention (each shard is touched by exactly one worker
+/// per epoch).
+struct ShardState {
+    ids: Vec<u32>,
+    /// accepted coordinate values (aligned with `ids`)
+    values: Vec<f64>,
+    /// scratch: values after the local epoch, before merge acceptance
+    trial: Vec<f64>,
+    /// scratch: private copy of the shared state
+    local_shared: Vec<f64>,
+    sched: AcfScheduler,
+}
+
+/// What a shard reports back from one local epoch.
+struct EpochReport {
+    delta_f: f64,
+    window_viol: f64,
+    steps: u64,
+    counter: OpCounter,
+}
+
+/// Epochs to wait after a failed full verification before re-verifying
+/// (the stale-window heuristic can stay optimistic for a few epochs).
+const VERIFY_COOLDOWN: u64 = 3;
+
+/// The sharded parallel CD driver.
+pub struct ShardedDriver<'a, P: ShardProblem> {
+    problem: &'a P,
+    partition: Partition,
+    spec: ShardSpec,
+}
+
+impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
+    pub fn new(problem: &'a P, spec: ShardSpec) -> Self {
+        let partition = Partition::new(problem.n_coords(), spec.shards.max(1), spec.partitioner);
+        Self { problem, partition, spec }
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Run to convergence (or budget); see the module docs for the epoch
+    /// protocol.
+    pub fn run(&self) -> ShardedOutcome {
+        let p = self.problem;
+        let s_count = self.partition.n_shards();
+        let dim = p.shared_dim();
+        let workers = if self.spec.workers == 0 {
+            // one thread per shard, but never oversubscribe the machine
+            s_count.min(crate::util::threadpool::default_workers())
+        } else {
+            self.spec.workers.max(1)
+        };
+        let cfg = &self.spec.config;
+
+        // ---- per-shard state -----------------------------------------
+        let states: Vec<Mutex<ShardState>> = (0..s_count)
+            .map(|k| {
+                let ids = self.partition.shard(k).to_vec();
+                let values: Vec<f64> = ids.iter().map(|&i| p.initial_value(i as usize)).collect();
+                let sched = AcfScheduler::new(
+                    ids.len(),
+                    self.spec.inner_params,
+                    Rng::new(self.spec.seed ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                );
+                Mutex::new(ShardState {
+                    trial: values.clone(),
+                    values,
+                    local_shared: vec![0.0; dim],
+                    ids,
+                    sched,
+                })
+            })
+            .collect();
+
+        // ---- outer (shard-level) ACF ---------------------------------
+        let mut outer_prefs = Preferences::new(s_count, self.spec.outer_params);
+        let mut outer_gen = SequenceGenerator::new(s_count);
+        let mut outer_rng = Rng::new(self.spec.seed ^ 0x07E2_ACF0);
+        let mut outer_block: Vec<u32> = Vec::with_capacity(2 * s_count);
+
+        // ---- bookkeeping ---------------------------------------------
+        let mut shared = p.initial_shared();
+        let mut sep: Vec<f64> = (0..s_count)
+            .map(|k| {
+                let st = states[k].lock().unwrap();
+                st.ids.iter().zip(&st.values).map(|(&i, &v)| p.coord_objective(i as usize, v)).sum()
+            })
+            .collect();
+        let mut f_curr = p.shared_objective(&shared) + sep.iter().sum::<f64>();
+
+        let mut counter = OpCounter::new();
+        let timer = Timer::start();
+        let mut trace = Trace::new();
+        let mut epochs = 0u64;
+        let mut status = SolveStatus::IterLimit;
+        let mut final_viol = f64::INFINITY;
+        let mut last_failed_verify: Option<u64> = None;
+
+        let mut sum_diff = vec![0.0f64; dim];
+        let mut trial_shared = vec![0.0f64; dim];
+
+        'outer: loop {
+            // ---- quotas from the outer ACF level ---------------------
+            outer_gen.next_block(&outer_prefs, &mut outer_rng, &mut outer_block);
+            let mut quotas = vec![0u64; s_count];
+            for &s in &outer_block {
+                quotas[s as usize] += self.partition.shard(s as usize).len() as u64;
+            }
+            let total: u64 = quotas.iter().sum();
+            let remaining = cfg.max_iterations.saturating_sub(counter.iterations());
+            if remaining == 0 {
+                let (v, vops) = self.verify(&states, &shared, workers);
+                counter.extra(vops);
+                final_viol = v;
+                status = if v < cfg.eps { SolveStatus::Converged } else { SolveStatus::IterLimit };
+                break 'outer;
+            }
+            if total > remaining {
+                for q in quotas.iter_mut() {
+                    *q = *q * remaining / total;
+                }
+                if quotas.iter().sum::<u64>() == 0 {
+                    // Give the whole tail budget to the largest shard so
+                    // the loop always makes progress.
+                    let big = (0..s_count).max_by_key(|&k| self.partition.shard(k).len()).unwrap_or(0);
+                    quotas[big] = remaining;
+                }
+            }
+            epochs += 1;
+
+            // ---- parallel local epochs -------------------------------
+            let reports: Vec<EpochReport> = parallel_map(s_count, workers, |k| {
+                let mut guard = states[k].lock().unwrap();
+                let st = &mut *guard;
+                st.local_shared.copy_from_slice(&shared);
+                st.trial.copy_from_slice(&st.values);
+                let mut local = OpCounter::new();
+                let mut df_sum = 0.0f64;
+                let mut viol_max = 0.0f64;
+                for _ in 0..quotas[k] {
+                    let kk = st.sched.next();
+                    let i = st.ids[kk] as usize;
+                    let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
+                    st.sched.report(kk, out.delta_f.max(0.0));
+                    df_sum += out.delta_f;
+                    viol_max = viol_max.max(out.violation);
+                    local.step(out.ops);
+                }
+                EpochReport { delta_f: df_sum, window_viol: viol_max, steps: quotas[k], counter: local }
+            });
+            for r in &reports {
+                counter.merge(&r.counter);
+            }
+
+            // ---- merge (fixed shard order ⇒ deterministic) -----------
+            sum_diff.fill(0.0);
+            for state in states.iter() {
+                let st = state.lock().unwrap();
+                for (d, (&l, &g)) in sum_diff.iter_mut().zip(st.local_shared.iter().zip(shared.iter())) {
+                    *d += l - g;
+                }
+            }
+            for t in 0..dim {
+                trial_shared[t] = shared[t] + sum_diff[t];
+            }
+            let sep_trial: Vec<f64> = (0..s_count)
+                .map(|k| {
+                    let st = states[k].lock().unwrap();
+                    st.ids.iter().zip(&st.trial).map(|(&i, &v)| p.coord_objective(i as usize, v)).sum()
+                })
+                .collect();
+            let f_full = p.shared_objective(&trial_shared) + sep_trial.iter().sum::<f64>();
+            let tol = 1e-12 * f_curr.abs().max(1.0);
+            if f_full <= f_curr + tol {
+                // additive merge accepted
+                std::mem::swap(&mut shared, &mut trial_shared);
+                for (k, state) in states.iter().enumerate() {
+                    let mut st = state.lock().unwrap();
+                    let st = &mut *st;
+                    st.values.copy_from_slice(&st.trial);
+                    sep[k] = sep_trial[k];
+                }
+                f_curr = f_full;
+            } else {
+                // averaged merge θ = 1/S: never increases f (convexity)
+                let theta = 1.0 / s_count as f64;
+                for t in 0..dim {
+                    shared[t] += theta * sum_diff[t];
+                }
+                for (k, state) in states.iter().enumerate() {
+                    let mut st = state.lock().unwrap();
+                    let st = &mut *st;
+                    let mut sk = 0.0;
+                    for (kk, &i) in st.ids.iter().enumerate() {
+                        st.values[kk] += theta * (st.trial[kk] - st.values[kk]);
+                        sk += p.coord_objective(i as usize, st.values[kk]);
+                    }
+                    sep[k] = sk;
+                }
+                f_curr = p.shared_objective(&shared) + sep.iter().sum::<f64>();
+            }
+
+            // ---- hierarchical adaptation: outer Δf report ------------
+            for (k, r) in reports.iter().enumerate() {
+                if r.steps > 0 {
+                    outer_prefs.update(k, (r.delta_f / r.steps as f64).max(0.0));
+                }
+            }
+            if epochs % 64 == 0 {
+                outer_prefs.refresh_sum();
+            }
+
+            let window_viol =
+                reports.iter().filter(|r| r.steps > 0).map(|r| r.window_viol).fold(0.0f64, f64::max);
+            if cfg.trace_every > 0 {
+                trace.push(TracePoint {
+                    iteration: counter.iterations(),
+                    ops: counter.ops(),
+                    seconds: timer.secs(),
+                    objective: f_curr,
+                    violation: window_viol,
+                });
+            }
+
+            // ---- stopping --------------------------------------------
+            let budget_hit = counter.iterations() >= cfg.max_iterations;
+            let time_hit = match cfg.max_seconds {
+                Some(cap) => timer.secs() > cap,
+                None => false,
+            };
+            let verify_cooled = match last_failed_verify {
+                Some(at) => epochs >= at + VERIFY_COOLDOWN,
+                None => true,
+            };
+            let window_converged = window_viol < cfg.eps && verify_cooled;
+            if window_converged || budget_hit || time_hit {
+                let (v, vops) = self.verify(&states, &shared, workers);
+                counter.extra(vops);
+                final_viol = v;
+                if v < cfg.eps {
+                    status = SolveStatus::Converged;
+                    break 'outer;
+                }
+                if budget_hit {
+                    status = SolveStatus::IterLimit;
+                    break 'outer;
+                }
+                if time_hit {
+                    status = SolveStatus::TimeLimit;
+                    break 'outer;
+                }
+                last_failed_verify = Some(epochs);
+            }
+        }
+
+        // ---- assemble global views -----------------------------------
+        let mut values = vec![0.0f64; p.n_coords()];
+        for state in states.iter() {
+            let st = state.lock().unwrap();
+            for (kk, &i) in st.ids.iter().enumerate() {
+                values[i as usize] = st.values[kk];
+            }
+        }
+        let result = SolveResult {
+            status,
+            iterations: counter.iterations(),
+            ops: counter.ops(),
+            seconds: timer.secs(),
+            objective: f_curr,
+            final_violation: final_viol,
+            epochs,
+            trace,
+        };
+        ShardedOutcome { values, shared, result, outer_probabilities: outer_prefs.probabilities() }
+    }
+
+    /// Synchronized full KKT pass over the merged state, parallel over
+    /// shards. Returns (max violation, ops spent).
+    fn verify(&self, states: &[Mutex<ShardState>], shared: &[f64], workers: usize) -> (f64, usize) {
+        let p = self.problem;
+        let per_shard: Vec<(f64, usize)> = parallel_map(states.len(), workers, |k| {
+            let st = states[k].lock().unwrap();
+            let mut vmax = 0.0f64;
+            let mut ops = 0usize;
+            for (kk, &i) in st.ids.iter().enumerate() {
+                let (v, o) = p.violation(i as usize, st.values[kk], shared);
+                vmax = vmax.max(v);
+                ops += o;
+            }
+            (vmax, ops)
+        });
+        per_shard.into_iter().fold((0.0, 0), |(vm, os), (v, o)| (vm.max(v), os + o))
+    }
+}

@@ -1,0 +1,160 @@
+//! Serial two-level ACF — the hierarchical policy behind
+//! [`crate::sched::Policy::Hierarchical`].
+//!
+//! An outer [`AcfScheduler`] adapts frequencies over *shards*; each shard
+//! owns an inner [`AcfScheduler`] over its coordinates. `next()` first
+//! asks the outer level for a shard, then the shard's inner level for a
+//! coordinate; `report()` feeds the observed Δf to both levels. The
+//! stationary selection distribution is the product
+//! `π_outer(shard) · π_inner(coord | shard)`, so the effective preference
+//! range widens to `(p_max/p_min)²` — useful when coordinate importance
+//! is clustered (feature blocks, class groups) and the flat clip range
+//! saturates.
+//!
+//! This is the single-threaded twin of the parallel engine in
+//! [`crate::shard::engine`]: same two-level adaptation, no threads, fully
+//! deterministic given the seed, pluggable wherever a
+//! [`Scheduler`](crate::sched::Scheduler) is accepted.
+
+use crate::acf::{AcfParams, AcfScheduler};
+use crate::sched::Scheduler;
+use crate::shard::partition::{Partition, Partitioner};
+use crate::util::rng::Rng;
+
+/// Two-level (shards × coordinates) ACF scheduler.
+#[derive(Clone, Debug)]
+pub struct HierarchicalScheduler {
+    partition: Partition,
+    outer: AcfScheduler,
+    inners: Vec<AcfScheduler>,
+}
+
+/// Default shard count when the caller does not pin one: √n balances the
+/// two levels (each adapts over a set of comparable size).
+pub fn auto_shards(n: usize) -> usize {
+    (n as f64).sqrt().round().max(1.0) as usize
+}
+
+impl HierarchicalScheduler {
+    /// `shards = 0` selects [`auto_shards`]; the count is clamped to `n`.
+    pub fn new(
+        n: usize,
+        shards: usize,
+        partitioner: Partitioner,
+        params: AcfParams,
+        mut rng: Rng,
+    ) -> HierarchicalScheduler {
+        assert!(n > 0);
+        let s = if shards == 0 { auto_shards(n) } else { shards }.min(n);
+        let partition = Partition::new(n, s, partitioner);
+        let outer = AcfScheduler::new(partition.n_shards(), params, rng.split());
+        let inners = (0..partition.n_shards())
+            .map(|k| AcfScheduler::new(partition.shard(k).len(), params, rng.split()))
+            .collect();
+        HierarchicalScheduler { partition, outer, inners }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.partition.n_shards()
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+}
+
+impl Scheduler for HierarchicalScheduler {
+    #[inline]
+    fn next(&mut self) -> usize {
+        let s = self.outer.next();
+        let kk = self.inners[s].next();
+        self.partition.shard(s)[kk] as usize
+    }
+
+    #[inline]
+    fn report(&mut self, i: usize, delta_f: f64) {
+        let s = self.partition.shard_of(i);
+        self.inners[s].report(self.partition.local_of(i), delta_f);
+        self.outer.report(s, delta_f);
+    }
+
+    fn n(&self) -> usize {
+        self.partition.n()
+    }
+
+    fn name(&self) -> &'static str {
+        "hierarchical-acf"
+    }
+
+    fn probabilities(&self) -> Vec<f64> {
+        let outer = self.outer.preferences().probabilities();
+        let mut out = vec![0.0; self.partition.n()];
+        for (s, inner) in self.inners.iter().enumerate() {
+            let pi = inner.preferences().probabilities();
+            for (kk, &i) in self.partition.shard(s).iter().enumerate() {
+                out[i as usize] = outer[s] * pi[kk];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_coordinates() {
+        let mut s =
+            HierarchicalScheduler::new(40, 5, Partitioner::Contiguous, AcfParams::default(), Rng::new(1));
+        let mut seen = vec![false; 40];
+        for _ in 0..4000 {
+            seen[s.next()] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn auto_shard_count_is_sqrt() {
+        assert_eq!(auto_shards(1), 1);
+        assert_eq!(auto_shards(100), 10);
+        let s = HierarchicalScheduler::new(100, 0, Partitioner::Hash, AcfParams::default(), Rng::new(2));
+        assert_eq!(s.n_shards(), 10);
+        assert_eq!(s.n(), 100);
+    }
+
+    #[test]
+    fn probabilities_form_a_distribution_and_adapt() {
+        let mut s =
+            HierarchicalScheduler::new(30, 3, Partitioner::Contiguous, AcfParams::default(), Rng::new(3));
+        for _ in 0..6000 {
+            let i = s.next();
+            // coordinate 7 (shard 0) is the only productive one
+            s.report(i, if i == 7 { 5.0 } else { 0.01 });
+        }
+        let p = s.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let max = p.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(p[7], max, "{p:?}");
+        // hierarchical range: coordinate 7 beats same-shard peers *and*
+        // its shard beats the other shards
+        assert!(p[7] > 4.0 * p[20], "{p:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed: u64| {
+            let mut s =
+                HierarchicalScheduler::new(25, 4, Partitioner::Hash, AcfParams::default(), Rng::new(seed));
+            (0..300)
+                .map(|k| {
+                    let i = s.next();
+                    s.report(i, (k % 5) as f64);
+                    i
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

@@ -1,0 +1,98 @@
+//! Sharded LASSO: features are the coordinates, the residual `r = Xw − y`
+//! is the shared state. The per-step math is identical to
+//! [`crate::solvers::lasso`]; this module only adapts it to the
+//! [`ShardProblem`] contract.
+
+use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome};
+use crate::solvers::lasso::{subgrad_violation, LassoModel, LassoProblem};
+use crate::solvers::SolveResult;
+use crate::sparse::ops::soft_threshold;
+use crate::sparse::Dataset;
+
+/// LASSO adapted to the sharded engine. Owns the transposed problem view
+/// so one instance can be reused across shard counts (benches amortize
+/// the transpose).
+pub struct ShardedLasso {
+    prob: LassoProblem,
+    lambda: f64,
+}
+
+impl ShardedLasso {
+    pub fn new(ds: &Dataset, lambda: f64) -> ShardedLasso {
+        ShardedLasso { prob: LassoProblem::new(ds), lambda }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl ShardProblem for ShardedLasso {
+    fn n_coords(&self) -> usize {
+        self.prob.n_features
+    }
+
+    fn shared_dim(&self) -> usize {
+        self.prob.n_instances
+    }
+
+    fn initial_shared(&self) -> Vec<f64> {
+        // r = Xw − y = −y at w = 0
+        self.prob.y.iter().map(|&v| -v).collect()
+    }
+
+    #[inline]
+    fn step(&self, j: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+        let l = self.prob.n_instances as f64;
+        let col = self.prob.xt.row(j);
+        let g = col.dot_dense(shared) / l;
+        let h = self.prob.h[j];
+        let violation = subgrad_violation(*value, g, self.lambda);
+        let mut ops = col.nnz();
+        let mut delta_f = 0.0;
+        if h > 0.0 {
+            let old = *value;
+            let new = soft_threshold(old - g / h, self.lambda / h);
+            let d = new - old;
+            if d != 0.0 {
+                *value = new;
+                col.axpy_into(d, shared);
+                ops += col.nnz();
+                // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
+                // term change
+                delta_f = -(g * d + 0.5 * h * d * d) - self.lambda * (new.abs() - old.abs());
+            }
+        }
+        StepOutcome { delta_f, violation, ops }
+    }
+
+    fn violation(&self, j: usize, value: f64, shared: &[f64]) -> (f64, usize) {
+        let l = self.prob.n_instances as f64;
+        let col = self.prob.xt.row(j);
+        let g = col.dot_dense(shared) / l;
+        (subgrad_violation(value, g, self.lambda), col.nnz())
+    }
+
+    fn shared_objective(&self, shared: &[f64]) -> f64 {
+        crate::sparse::ops::norm_sq(shared) / (2.0 * self.prob.n_instances as f64)
+    }
+
+    #[inline]
+    fn coord_objective(&self, _j: usize, value: f64) -> f64 {
+        self.lambda * value.abs()
+    }
+}
+
+/// Solve the LASSO on the sharded engine; drop-in analog of
+/// [`crate::solvers::lasso::solve`].
+pub fn solve_sharded(ds: &Dataset, lambda: f64, spec: ShardSpec) -> (LassoModel, SolveResult) {
+    let problem = ShardedLasso::new(ds, lambda);
+    let out = run_prepared(&problem, spec);
+    (LassoModel { w: out.values, lambda }, out.result)
+}
+
+/// Run on an already-prepared problem (amortizes the transpose across
+/// shard counts / λ values).
+pub fn run_prepared(problem: &ShardedLasso, spec: ShardSpec) -> ShardedOutcome {
+    ShardedDriver::new(problem, spec).run()
+}

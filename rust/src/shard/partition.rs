@@ -1,0 +1,222 @@
+//! Coordinate partitioning — how the coordinate set `0..n` is split into
+//! S disjoint shards.
+//!
+//! Two strategies:
+//!
+//! * [`Partitioner::Contiguous`] — balanced index ranges. Preserves any
+//!   locality in the coordinate ordering (feature blocks, class-grouped
+//!   instances) and gives perfectly even shard sizes.
+//! * [`Partitioner::Hash`] — deterministic SplitMix64 hash of the
+//!   coordinate id. Breaks up correlated neighborhoods so each shard sees
+//!   a statistically similar slice of the problem (useful when contiguous
+//!   blocks would concentrate all the hard coordinates in one shard).
+//!
+//! Both are pure functions of `(n, shards)` — no RNG state — so sharded
+//! runs stay deterministic given `(seed, shard count)`.
+
+use crate::util::rng::SplitMix64;
+
+/// Partitioning strategy selector (CLI: `--partitioner contiguous|hash`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Balanced contiguous index ranges.
+    Contiguous,
+    /// Deterministic hash of the coordinate id.
+    Hash,
+}
+
+/// Valid partitioner names, kept in sync with [`Partitioner::parse`].
+pub const PARTITIONER_NAMES: &str = "contiguous, hash";
+
+impl Partitioner {
+    /// Case-insensitive name lookup with an actionable error message.
+    pub fn parse(s: &str) -> Result<Partitioner, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" | "range" => Ok(Partitioner::Contiguous),
+            "hash" | "hashed" => Ok(Partitioner::Hash),
+            other => Err(format!("unknown partitioner '{other}' (valid: {PARTITIONER_NAMES})")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Partitioner::Contiguous => "contiguous",
+            Partitioner::Hash => "hash",
+        }
+    }
+}
+
+/// A disjoint, exhaustive split of `0..n` into shards, with O(1) lookup
+/// of both the owning shard and the position within it.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    shards: Vec<Vec<u32>>,
+    shard_of: Vec<u32>,
+    local_of: Vec<u32>,
+}
+
+impl Partition {
+    /// Split `0..n` into (at most) `shards` non-empty shards. `shards` is
+    /// clamped to `n` so every shard owns at least one coordinate.
+    pub fn new(n: usize, shards: usize, strategy: Partitioner) -> Partition {
+        assert!(n > 0, "cannot partition an empty coordinate set");
+        assert!(shards > 0, "need at least one shard");
+        let s = shards.min(n);
+        let mut buckets: Vec<Vec<u32>> = (0..s).map(|_| Vec::with_capacity(n / s + 1)).collect();
+        match strategy {
+            Partitioner::Contiguous => {
+                let base = n / s;
+                let rem = n % s;
+                let mut next = 0u32;
+                for (k, bucket) in buckets.iter_mut().enumerate() {
+                    let size = base + usize::from(k < rem);
+                    bucket.extend(next..next + size as u32);
+                    next += size as u32;
+                }
+            }
+            Partitioner::Hash => {
+                for i in 0..n {
+                    // One SplitMix64 step per id: a high-quality, stateless
+                    // mix that spreads consecutive ids across shards.
+                    let h = SplitMix64::new(i as u64).next_u64();
+                    buckets[(h % s as u64) as usize].push(i as u32);
+                }
+                // Hashing can leave a shard empty when n is barely above
+                // s; repair deterministically by stealing from the
+                // largest shard.
+                loop {
+                    let Some(empty) = buckets.iter().position(|b| b.is_empty()) else { break };
+                    let donor = (0..s).max_by_key(|&k| buckets[k].len()).unwrap();
+                    let moved = buckets[donor].pop().unwrap();
+                    buckets[empty].push(moved);
+                }
+            }
+        }
+        let mut shard_of = vec![0u32; n];
+        let mut local_of = vec![0u32; n];
+        for (k, bucket) in buckets.iter().enumerate() {
+            for (pos, &i) in bucket.iter().enumerate() {
+                shard_of[i as usize] = k as u32;
+                local_of[i as usize] = pos as u32;
+            }
+        }
+        Partition { shards: buckets, shard_of, local_of }
+    }
+
+    /// Number of shards (≥ 1, ≤ n).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total number of coordinates.
+    pub fn n(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    /// Global coordinate ids owned by shard `s`.
+    pub fn shard(&self, s: usize) -> &[u32] {
+        &self.shards[s]
+    }
+
+    /// Owning shard of global coordinate `i`.
+    #[inline]
+    pub fn shard_of(&self, i: usize) -> usize {
+        self.shard_of[i] as usize
+    }
+
+    /// Position of global coordinate `i` within its owning shard.
+    #[inline]
+    pub fn local_of(&self, i: usize) -> usize {
+        self.local_of[i] as usize
+    }
+
+    /// Structural invariants (property tests): disjoint, exhaustive,
+    /// non-empty shards with consistent reverse maps.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.n();
+        let mut seen = vec![false; n];
+        for (k, bucket) in self.shards.iter().enumerate() {
+            if bucket.is_empty() {
+                return Err(format!("shard {k} is empty"));
+            }
+            for (pos, &i) in bucket.iter().enumerate() {
+                let i = i as usize;
+                if i >= n {
+                    return Err(format!("shard {k} holds out-of-range id {i}"));
+                }
+                if seen[i] {
+                    return Err(format!("coordinate {i} assigned twice"));
+                }
+                seen[i] = true;
+                if self.shard_of(i) != k || self.local_of(i) != pos {
+                    return Err(format!("reverse map inconsistent for coordinate {i}"));
+                }
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("partition is not exhaustive".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn parse_is_case_insensitive_with_good_errors() {
+        assert_eq!(Partitioner::parse("Contiguous").unwrap(), Partitioner::Contiguous);
+        assert_eq!(Partitioner::parse("HASH").unwrap(), Partitioner::Hash);
+        let e = Partitioner::parse("modulo").unwrap_err();
+        assert!(e.contains("contiguous") && e.contains("hash"), "{e}");
+    }
+
+    #[test]
+    fn contiguous_is_balanced_and_ordered() {
+        let p = Partition::new(10, 3, Partitioner::Contiguous);
+        assert_eq!(p.shard(0), &[0, 1, 2, 3]);
+        assert_eq!(p.shard(1), &[4, 5, 6]);
+        assert_eq!(p.shard(2), &[7, 8, 9]);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shards_clamped_to_n() {
+        let p = Partition::new(3, 8, Partitioner::Contiguous);
+        assert_eq!(p.n_shards(), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hash_partition_is_deterministic() {
+        let a = Partition::new(1000, 7, Partitioner::Hash);
+        let b = Partition::new(1000, 7, Partitioner::Hash);
+        for s in 0..7 {
+            assert_eq!(a.shard(s), b.shard(s));
+        }
+    }
+
+    #[test]
+    fn hash_partition_spreads_reasonably() {
+        let p = Partition::new(10_000, 8, Partitioner::Hash);
+        for s in 0..8 {
+            let size = p.shard(s).len();
+            assert!((1000..1600).contains(&size), "shard {s} has {size} coordinates");
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_invariants_hold() {
+        prop::check(60, |g| {
+            let n = g.usize_in(1, 300);
+            let s = g.usize_in(1, 16);
+            let strategy = *g.choose(&[Partitioner::Contiguous, Partitioner::Hash]);
+            let p = Partition::new(n, s, strategy);
+            prop::assert_holds(p.n_shards() == s.min(n), "shard count clamped")?;
+            p.check_invariants()
+        });
+    }
+}

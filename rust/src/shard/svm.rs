@@ -1,0 +1,99 @@
+//! Sharded linear SVM dual: instances are the coordinates, the primal
+//! vector `w = Σ α_i y_i x_i` is the shared state. The per-step math is
+//! identical to [`crate::solvers::svm`]; this module only adapts it to
+//! the [`ShardProblem`] contract. The averaged-merge fallback keeps α
+//! inside the box `[0, C]` automatically (a convex combination of
+//! feasible points).
+
+use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome};
+use crate::solvers::svm::{pg_violation, SvmModel};
+use crate::solvers::SolveResult;
+use crate::sparse::Dataset;
+
+/// SVM dual adapted to the sharded engine.
+pub struct ShardedSvm<'a> {
+    ds: &'a Dataset,
+    q_diag: Vec<f64>,
+    c: f64,
+}
+
+impl<'a> ShardedSvm<'a> {
+    pub fn new(ds: &'a Dataset, c: f64) -> ShardedSvm<'a> {
+        ShardedSvm { ds, q_diag: ds.x.row_norms_sq(), c }
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl ShardProblem for ShardedSvm<'_> {
+    fn n_coords(&self) -> usize {
+        self.ds.n_instances()
+    }
+
+    fn shared_dim(&self) -> usize {
+        self.ds.n_features()
+    }
+
+    fn initial_shared(&self) -> Vec<f64> {
+        vec![0.0; self.ds.n_features()]
+    }
+
+    #[inline]
+    fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+        let row = self.ds.x.row(i);
+        let yi = self.ds.y[i];
+        let g = yi * row.dot_dense(shared) - 1.0;
+        let violation = pg_violation(*value, g, self.c);
+        let qii = self.q_diag[i];
+        let old = *value;
+        let new = if qii > 0.0 {
+            (old - g / qii).clamp(0.0, self.c)
+        } else if g < 0.0 {
+            // empty row: the linear term −α_i drives α_i to the bound
+            self.c
+        } else {
+            0.0
+        };
+        let d = new - old;
+        let mut ops = row.nnz();
+        let mut delta_f = 0.0;
+        if d != 0.0 {
+            *value = new;
+            row.axpy_into(d * yi, shared);
+            ops += row.nnz();
+            // exact decrease of the dual objective along this coordinate
+            delta_f = -(g * d + 0.5 * qii * d * d);
+        }
+        StepOutcome { delta_f, violation, ops }
+    }
+
+    fn violation(&self, i: usize, value: f64, shared: &[f64]) -> (f64, usize) {
+        let row = self.ds.x.row(i);
+        let g = self.ds.y[i] * row.dot_dense(shared) - 1.0;
+        (pg_violation(value, g, self.c), row.nnz())
+    }
+
+    fn shared_objective(&self, shared: &[f64]) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(shared)
+    }
+
+    #[inline]
+    fn coord_objective(&self, _i: usize, value: f64) -> f64 {
+        -value
+    }
+}
+
+/// Solve the SVM dual on the sharded engine; drop-in analog of
+/// [`crate::solvers::svm::solve`].
+pub fn solve_sharded(ds: &Dataset, c: f64, spec: ShardSpec) -> (SvmModel, SolveResult) {
+    let problem = ShardedSvm::new(ds, c);
+    let out = run_prepared(&problem, spec);
+    (SvmModel { alpha: out.values, w: out.shared, c }, out.result)
+}
+
+/// Run on an already-prepared problem.
+pub fn run_prepared(problem: &ShardedSvm<'_>, spec: ShardSpec) -> ShardedOutcome {
+    ShardedDriver::new(problem, spec).run()
+}

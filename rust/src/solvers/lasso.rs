@@ -64,9 +64,10 @@ impl LassoProblem {
 }
 
 /// Subgradient violation of coordinate j: distance of 0 from the
-/// subdifferential of f restricted to w_j.
+/// subdifferential of f restricted to w_j (shared with the sharded
+/// engine in [`crate::shard`]).
 #[inline]
-fn subgrad_violation(w_j: f64, g: f64, lambda: f64) -> f64 {
+pub(crate) fn subgrad_violation(w_j: f64, g: f64, lambda: f64) -> f64 {
     if w_j > 0.0 {
         (g + lambda).abs()
     } else if w_j < 0.0 {
@@ -122,6 +123,8 @@ pub fn solve_prepared(
         window_max = window_max.max(viol);
         window_count += 1;
 
+        // NOTE: keep in sync with `crate::shard::lasso::ShardedLasso::step`,
+        // which carries the same update for the sharded engine
         let mut ops = col.nnz();
         let mut delta_f = 0.0;
         if h > 0.0 {

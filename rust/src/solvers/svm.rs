@@ -47,53 +47,16 @@ impl SvmModel {
 }
 
 /// Projected-gradient KKT violation of coordinate `i` (the quantity whose
-/// maximum defines the stopping criterion).
+/// maximum defines the stopping criterion; shared with the sharded engine
+/// in [`crate::shard`]).
 #[inline]
-fn pg_violation(alpha_i: f64, g: f64, c: f64) -> f64 {
+pub(crate) fn pg_violation(alpha_i: f64, g: f64, c: f64) -> f64 {
     if alpha_i <= 0.0 {
         (-g).max(0.0)
     } else if alpha_i >= c {
         g.max(0.0)
     } else {
         g.abs()
-    }
-}
-
-/// Shared per-step Newton update. Returns `(delta_alpha, delta_f, ops)`.
-#[inline]
-fn newton_step(
-    ds: &Dataset,
-    q_diag: &[f64],
-    alpha: &mut [f64],
-    w: &mut [f64],
-    i: usize,
-    c: f64,
-) -> (f64, f64, usize) {
-    let row = ds.x.row(i);
-    let yi = ds.y[i];
-    let nnz = row.nnz();
-    let g = yi * row.dot_dense(w) - 1.0;
-    let qii = q_diag[i];
-    let old = alpha[i];
-    let new = if qii > 0.0 {
-        (old - g / qii).clamp(0.0, c)
-    } else {
-        // empty row: the linear term −α_i drives α_i to the bound
-        if g < 0.0 {
-            c
-        } else {
-            0.0
-        }
-    };
-    let d = new - old;
-    if d != 0.0 {
-        alpha[i] = new;
-        row.axpy_into(d * yi, w);
-        // exact decrease of the dual objective along this coordinate
-        let delta_f = -(g * d + 0.5 * qii * d * d);
-        (d, delta_f, 2 * nnz)
-    } else {
-        (0.0, 0.0, nnz)
     }
 }
 
@@ -143,6 +106,8 @@ pub fn solve(
         window_count += 1;
 
         // newton step (reuses the gradient we just computed)
+        // NOTE: keep in sync with `crate::shard::svm::ShardedSvm::step`,
+        // which carries the same update for the sharded engine
         let qii = q_diag[i];
         let old = alpha[i];
         let new = if qii > 0.0 {

@@ -55,12 +55,34 @@ impl Dataset {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {message}")]
+    Io(std::io::Error),
     Parse { line: usize, message: String },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "I/O error: {e}"),
+            LibsvmError::Parse { line, message } => write!(f, "line {line}: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            LibsvmError::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse libsvm text. `min_features` lets callers force a feature-space

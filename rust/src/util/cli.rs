@@ -15,13 +15,24 @@ pub struct Args {
     flags: BTreeMap<String, Vec<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required flag --{0}")]
     Missing(String),
-    #[error("flag --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(flag) => write!(f, "missing required flag --{flag}"),
+            CliError::BadValue(flag, value, ty) => {
+                write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of argument strings (without argv[0]).

@@ -1,0 +1,181 @@
+//! First-party error type — a small, dependency-free stand-in for the
+//! `anyhow` idiom the rest of the crate is written against (the offline
+//! build has no crates.io access).
+//!
+//! Provides:
+//! * [`Error`] — message + context chain, `{}` prints the outermost
+//!   message, `{:#}` the full `outer: inner: root` chain;
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * the [`anyhow!`](crate::anyhow) and [`bail!`](crate::bail) macros.
+
+use std::fmt;
+
+/// Crate-wide error: an outermost message plus the chain of underlying
+/// causes (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Result alias with the crate error defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (becomes the outermost
+    /// message).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the anyhow-style single-line chain.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment on fallible values (`anyhow::Context` analog).
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` analog).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert!(parse("1.5").is_ok());
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty slot").unwrap_err();
+        assert_eq!(format!("{e}"), "empty slot");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("refused");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "refused");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("loading artifacts").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("loading artifacts"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("missing file"));
+    }
+}

@@ -3,6 +3,7 @@
 //! timing, and a mini property-testing framework.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -169,6 +169,7 @@ fn runtime() -> Option<acf_cd::runtime::Runtime> {
 }
 
 #[test]
+#[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
 fn e2e_train_then_cross_stack_validate() {
     let Some(rt) = runtime() else { return };
     let spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
@@ -186,6 +187,7 @@ fn e2e_train_then_cross_stack_validate() {
 }
 
 #[test]
+#[ignore = "requires PJRT/JAX AOT artifacts: run `make artifacts` and build with --features pjrt"]
 fn markov_chain_agrees_with_pallas_kernel_across_instances() {
     let Some(rt) = runtime() else { return };
     use acf_cd::runtime::{MARKOV_M, MARKOV_N};
