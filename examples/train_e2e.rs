@@ -64,7 +64,7 @@ fn main() -> acf_cd::Result<()> {
     println!("uniform : {}", res_uni.summary());
     let mut shr_spec = spec.clone();
     shr_spec.problem = Problem::SvmShrinking { c: 10.0 };
-    let res_shr = run_job_on(&shr_spec, &train);
+    let res_shr = run_job_on(&shr_spec, &train).expect("shrinking job failed");
     println!("shrink  : {}", res_shr.result.summary());
 
     let acc_train = data::binary_accuracy(&train, &model.w);

@@ -51,7 +51,7 @@ fn main() {
     // uniform baseline for reference
     let mut uni_spec = base.clone();
     uni_spec.policy = Policy::Permutation;
-    let uni = run_job_on(&uni_spec, &ds);
+    let uni = run_job_on(&uni_spec, &ds).expect("job failed");
 
     let mut t = Table::new(
         &format!("ACF parameter ablation — linear SVM, rcv1-like, C = {c_svm}"),
@@ -65,7 +65,7 @@ fn main() {
         |k| {
             let mut spec = base.clone();
             spec.acf_params = variants[k].1;
-            run_job_on(&spec, &ds)
+            run_job_on(&spec, &ds).expect("job failed")
         },
     );
     let default_iters = outcomes[0].result.iterations as f64;

@@ -1,51 +1,128 @@
 //! Shard-scaling benchmark — wall-clock speedup and solution-quality
 //! parity of the sharded parallel CD engine (`acf_cd::shard`) vs. the
 //! serial ACF path, across S ∈ {1, 2, 4, 8} on large synthetic datasets
-//! (LASSO: features sharded; SVM dual: instances sharded).
+//! (LASSO: features sharded; SVM dual: instances sharded), for **both**
+//! merge protocols: the epoch-synchronized barrier (`shards_S` entries)
+//! and the asynchronous bounded-staleness merge (`async_shards_S`).
 //!
-//! Reported per S:
+//! Reported per (S, merge mode):
 //!   * time-to-convergence wall clock + speedup over the serial solver,
 //!   * relative final-objective difference vs. serial (parity target:
-//!     ≤ 1e-4),
-//!   * epochs and total CD steps,
-//!   * determinism audit: S = 4 is run twice and must agree exactly.
+//!     ≤ 1e-4 sync, ≤ 1e-3 async),
+//!   * epochs (sync) / published versions (async) and total CD steps,
+//!   * determinism audit: sync S = 4 is run twice and must agree
+//!     exactly; async S = 4 is instead audited for a monotone published
+//!     objective (async runs are not bit-reproducible by design).
 //!
-//! Run: `cargo bench --bench scaling_shards [-- --quick]`
-//! Writes `BENCH_scaling_shards.json` next to the report.
+//! Run: `cargo bench --bench scaling_shards [-- --quick] [-- --max-iters N]`
+//! (env mirrors for CI: `ACF_BENCH_QUICK=1`, `ACF_BENCH_MAX_ITERS=N`).
+//! Writes `BENCH_scaling_shards.json` next to the report; the CI
+//! `bench-smoke` job gates on the S = 4 speedups recorded there.
 
 use acf_cd::bench_util::{summary_entry, write_bench_summary, BenchConfig, Table};
 use acf_cd::data::synth;
 use acf_cd::sched::{AcfSchedulerPolicy, Scheduler};
-use acf_cd::shard::{lasso as shard_lasso, svm as shard_svm, ShardSpec};
-use acf_cd::solvers::{lasso, svm, SolveResult, SolverConfig};
+use acf_cd::shard::{
+    lasso as shard_lasso, svm as shard_svm, ShardSpec, ShardedOutcome, DEFAULT_STALENESS_BOUND,
+};
+use acf_cd::solvers::{lasso, svm, SolveResult};
 use acf_cd::util::json::Json;
 use acf_cd::util::rng::Rng;
-use acf_cd::util::timer::fmt_secs;
+use acf_cd::util::timer::{fmt_secs, Timer};
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
-fn shard_spec(shards: usize, eps: f64, seed: u64) -> ShardSpec {
-    ShardSpec::new(shards).with_seed(seed).with_config(SolverConfig::with_eps(eps))
+fn shard_spec(shards: usize, cfg: &BenchConfig, eps: f64, asynchronous: bool) -> ShardSpec {
+    let spec = ShardSpec::new(shards).with_seed(cfg.seed).with_config(cfg.solver_config(eps));
+    if asynchronous {
+        spec.with_async(DEFAULT_STALENESS_BOUND)
+    } else {
+        spec
+    }
 }
 
 struct Row {
-    shards: usize,
+    label: String,
+    json_key: String,
     seconds: f64,
     result: SolveResult,
     rel_obj: f64,
+    /// async rows: staleness-bound discards (τ-tuning diagnostic)
+    stale_drops: Option<u64>,
 }
 
 fn rel_diff(a: f64, b: f64) -> f64 {
     (a - b).abs() / a.abs().max(1e-12)
 }
 
-#[allow(clippy::too_many_arguments)]
+fn make_row(
+    label: &str,
+    key: &str,
+    seconds: f64,
+    serial_obj: f64,
+    result: SolveResult,
+    stale_drops: Option<u64>,
+) -> Row {
+    Row {
+        label: label.to_string(),
+        json_key: key.to_string(),
+        seconds,
+        rel_obj: rel_diff(serial_obj, result.objective),
+        result,
+        stale_drops,
+    }
+}
+
+/// Run one problem family across both merge modes and all shard counts,
+/// plus the sync determinism and async monotonicity audits. `run` maps a
+/// spec to a sharded outcome (any per-run prep it performs — e.g. the
+/// SVM q_diag — is inside the timed region, matching the serial path);
+/// the single code path keeps the JSON schema identical for every
+/// family, which the CI bench-smoke gate depends on.
+fn run_family(
+    family: &str,
+    serial_secs: f64,
+    serial: &SolveResult,
+    cfg: &BenchConfig,
+    eps: f64,
+    run: impl Fn(ShardSpec) -> acf_cd::Result<ShardedOutcome>,
+    out: &mut Json,
+) {
+    let mut rows: Vec<Row> = Vec::new();
+    for asynchronous in [false, true] {
+        for &s in &SHARD_COUNTS {
+            let t = Timer::start();
+            let o = run(shard_spec(s, cfg, eps, asynchronous)).expect("sharded run failed");
+            let seconds = t.secs();
+            let (label, key) = if asynchronous {
+                (format!("{s} async"), format!("async_shards_{s}"))
+            } else {
+                (s.to_string(), format!("shards_{s}"))
+            };
+            println!("S = {label}: {}", o.result.summary());
+            let drops = if asynchronous { Some(o.stale_drops) } else { None };
+            rows.push(make_row(&label, &key, seconds, serial.objective, o.result, drops));
+        }
+    }
+    let a = run(shard_spec(4, cfg, eps, false)).expect("determinism run failed");
+    let b = run(shard_spec(4, cfg, eps, false)).expect("determinism run failed");
+    let deterministic = a.result.iterations == b.result.iterations
+        && a.result.objective == b.result.objective
+        && a.values == b.values;
+    let mut mono_spec = shard_spec(4, cfg, eps, true);
+    mono_spec.config.trace_every = 1;
+    let mono = run(mono_spec).expect("monotone audit run failed");
+    let async_monotone = mono.result.trace.check_monotone(1e-9).is_ok();
+    report_family(family, serial_secs, serial, &rows, deterministic, async_monotone, out);
+}
+
 fn report_family(
     family: &str,
     serial_secs: f64,
     serial: &SolveResult,
     rows: &[Row],
     deterministic: bool,
+    async_monotone: bool,
     out: &mut Json,
 ) {
     let mut table = Table::new(
@@ -62,7 +139,7 @@ fn report_family(
     ]);
     for r in rows {
         table.row(vec![
-            r.shards.to_string(),
+            r.label.clone(),
             fmt_secs(r.seconds),
             format!("{:.2}", serial_secs / r.seconds.max(1e-12)),
             format!("{:.2e}", r.rel_obj),
@@ -71,7 +148,8 @@ fn report_family(
         ]);
     }
     table.print();
-    println!("determinism (S = 4, two runs identical): {deterministic}");
+    println!("determinism (sync S = 4, two runs identical): {deterministic}");
+    println!("async published objective monotone (S = 4): {async_monotone}");
 
     let mut fam = Json::obj();
     let mut serial_entry = summary_entry(serial_secs, serial.epochs, serial.objective);
@@ -83,9 +161,13 @@ fn report_family(
             .set("rel_obj_vs_serial", Json::Num(r.rel_obj))
             .set("steps", Json::Num(r.result.iterations as f64))
             .set("converged", Json::Bool(r.result.status.converged()));
-        fam.set(&format!("shards_{}", r.shards), e);
+        if let Some(drops) = r.stale_drops {
+            e.set("stale_drops", Json::Num(drops as f64));
+        }
+        fam.set(&r.json_key, e);
     }
     fam.set("deterministic", Json::Bool(deterministic));
+    fam.set("async_monotone", Json::Bool(async_monotone));
     out.set(family, fam);
 }
 
@@ -98,11 +180,17 @@ fn main() {
     }
     let mut out = Json::obj();
     out.set("cores", Json::Num(cores as f64));
+    out.set("quick", Json::Bool(cfg.quick));
+    if let Some(m) = cfg.max_iterations {
+        out.set("max_iterations_cap", Json::Num(m as f64));
+    }
+    out.set("staleness_bound", Json::Num(DEFAULT_STALENESS_BOUND as f64));
 
     // ---------------- LASSO (features sharded) ------------------------
     {
         let (n, d, nnz) = if cfg.quick { (1_500, 4_000, 30) } else { (8_000, 30_000, 80) };
-        let (ds, _) = synth::regression_sparse("scale-reg", n, d, nnz, 60, 0.05, &mut Rng::new(cfg.seed));
+        let (ds, _) =
+            synth::regression_sparse("scale-reg", n, d, nnz, 60, 0.05, &mut Rng::new(cfg.seed));
         let lambda = 0.002;
         let eps = 1e-5;
         println!(
@@ -116,28 +204,29 @@ fn main() {
         // from all timings on both paths)
         let prob = lasso::LassoProblem::new(&ds);
         let t = acf_cd::util::timer::Timer::start();
-        let mut sched = AcfSchedulerPolicy::new(ds.n_features(), Default::default(), Rng::new(cfg.seed));
-        let (_, serial) = lasso::solve_prepared(&prob, lambda, &mut sched as &mut dyn Scheduler, SolverConfig::with_eps(eps));
+        let mut sched =
+            AcfSchedulerPolicy::new(ds.n_features(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) = lasso::solve_prepared(
+            &prob,
+            lambda,
+            &mut sched as &mut dyn Scheduler,
+            cfg.solver_config(eps),
+        );
         let serial_secs = t.secs();
         println!("serial: {}", serial.summary());
 
+        // prepared problem reused across runs (transpose excluded from
+        // timings on both the serial and sharded paths)
         let sharded_prob = shard_lasso::ShardedLasso::new(&ds, lambda);
-        let rows: Vec<Row> = SHARD_COUNTS
-            .iter()
-            .map(|&s| {
-                let t = acf_cd::util::timer::Timer::start();
-                let o = shard_lasso::run_prepared(&sharded_prob, shard_spec(s, eps, cfg.seed));
-                let seconds = t.secs();
-                println!("S = {s}: {}", o.result.summary());
-                Row { shards: s, seconds, rel_obj: rel_diff(serial.objective, o.result.objective), result: o.result }
-            })
-            .collect();
-        let a = shard_lasso::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
-        let b = shard_lasso::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
-        let deterministic = a.result.iterations == b.result.iterations
-            && a.result.objective == b.result.objective
-            && a.values == b.values;
-        report_family("lasso", serial_secs, &serial, &rows, deterministic, &mut out);
+        run_family(
+            "lasso",
+            serial_secs,
+            &serial,
+            &cfg,
+            eps,
+            |spec| shard_lasso::run_prepared(&sharded_prob, spec),
+            &mut out,
+        );
     }
 
     // ---------------- SVM dual (instances sharded) ---------------------
@@ -165,32 +254,28 @@ fn main() {
         );
 
         let t = acf_cd::util::timer::Timer::start();
-        let mut sched = AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
-        let (_, serial) = svm::solve(&ds, c, &mut sched as &mut dyn Scheduler, SolverConfig::with_eps(eps));
+        let mut sched =
+            AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) =
+            svm::solve(&ds, c, &mut sched as &mut dyn Scheduler, cfg.solver_config(eps));
         let serial_secs = t.secs();
         println!("serial: {}", serial.summary());
 
         // ShardedSvm::new computes q_diag (row_norms_sq), which the serial
         // svm::solve also does inside its timed region — construct inside
-        // the timer so both paths pay the same prep cost.
-        let rows: Vec<Row> = SHARD_COUNTS
-            .iter()
-            .map(|&s| {
-                let t = acf_cd::util::timer::Timer::start();
+        // the run closure (timed) so both paths pay the same prep cost.
+        run_family(
+            "svm",
+            serial_secs,
+            &serial,
+            &cfg,
+            eps,
+            |spec| {
                 let sharded_prob = shard_svm::ShardedSvm::new(&ds, c);
-                let o = shard_svm::run_prepared(&sharded_prob, shard_spec(s, eps, cfg.seed));
-                let seconds = t.secs();
-                println!("S = {s}: {}", o.result.summary());
-                Row { shards: s, seconds, rel_obj: rel_diff(serial.objective, o.result.objective), result: o.result }
-            })
-            .collect();
-        let sharded_prob = shard_svm::ShardedSvm::new(&ds, c);
-        let a = shard_svm::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
-        let b = shard_svm::run_prepared(&sharded_prob, shard_spec(4, eps, cfg.seed));
-        let deterministic = a.result.iterations == b.result.iterations
-            && a.result.objective == b.result.objective
-            && a.values == b.values;
-        report_family("svm", serial_secs, &serial, &rows, deterministic, &mut out);
+                shard_svm::run_prepared(&sharded_prob, spec)
+            },
+            &mut out,
+        );
     }
 
     write_bench_summary("scaling_shards", &out);

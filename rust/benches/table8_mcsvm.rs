@@ -60,7 +60,7 @@ fn main() {
             }
         }
         let outcomes = acf_cd::util::threadpool::parallel_map(jobs.len(), cfg.workers, |k| {
-            acf_cd::coordinator::run_job_on(&jobs[k], &train)
+            acf_cd::coordinator::run_job_on(&jobs[k], &train).expect("job failed")
         });
         let mut t = Table::new(
             &format!("Table 8 (analog) — WW multi-class SVM on {name}"),

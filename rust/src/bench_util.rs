@@ -27,20 +27,55 @@ pub struct BenchConfig {
     pub seed: u64,
     /// Worker threads for grid sweeps.
     pub workers: usize,
+    /// Hard cap on solver iterations per run (CI smoke guard; `None` =
+    /// each bench's own default budget).
+    pub max_iterations: Option<u64>,
 }
 
 impl BenchConfig {
+    /// Parse from CLI flags and environment variables. `cargo bench`
+    /// cannot always forward flags (e.g. in CI wrappers), so the env
+    /// vars `ACF_BENCH_QUICK=1` and `ACF_BENCH_MAX_ITERS=<n>` mirror
+    /// `--quick` and `--max-iters`.
     pub fn from_env() -> Self {
         let args = Args::from_env();
+        let env_quick = std::env::var("ACF_BENCH_QUICK")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        // A malformed cap must not silently run unbounded — the CI smoke
+        // job relies on it to stay within the runner's time budget.
+        let parse_cap = |source: &str, v: &str| -> Option<u64> {
+            match v.parse() {
+                Ok(n) => Some(n),
+                Err(_) => {
+                    eprintln!("warning: {source}='{v}' is not an integer; iteration cap IGNORED");
+                    None
+                }
+            }
+        };
+        let env_iters: Option<u64> = std::env::var("ACF_BENCH_MAX_ITERS")
+            .ok()
+            .and_then(|v| parse_cap("ACF_BENCH_MAX_ITERS", &v));
         // `cargo bench` passes `--bench`; ignore it gracefully.
         BenchConfig {
-            quick: args.has("quick"),
+            quick: args.has("quick") || env_quick,
             out: args.get("out").map(|s| s.to_string()),
             seed: args.u64_or("seed", 20140103).unwrap_or(20140103),
             workers: args
                 .usize_or("workers", crate::util::threadpool::default_workers())
                 .unwrap_or(4),
+            max_iterations: args.get("max-iters").and_then(|v| parse_cap("--max-iters", v)).or(env_iters),
         }
+    }
+
+    /// A [`crate::solvers::SolverConfig`] at `eps` honoring the bench's
+    /// iteration cap.
+    pub fn solver_config(&self, eps: f64) -> crate::solvers::SolverConfig {
+        let mut c = crate::solvers::SolverConfig::with_eps(eps);
+        if let Some(m) = self.max_iterations {
+            c.max_iterations = m;
+        }
+        c
     }
 
     /// Write results JSON if `--out` was given; always returns the value.
@@ -272,6 +307,22 @@ mod tests {
     fn speedup_formatting() {
         assert_eq!(fmt_speedup(10.0, 2.0), "5.0");
         assert_eq!(fmt_speedup(10.0, 0.0), "—");
+    }
+
+    #[test]
+    fn solver_config_honors_iteration_cap() {
+        let mut cfg = BenchConfig {
+            quick: true,
+            out: None,
+            seed: 1,
+            workers: 1,
+            max_iterations: Some(1234),
+        };
+        assert_eq!(cfg.solver_config(0.01).max_iterations, 1234);
+        assert_eq!(cfg.solver_config(0.01).eps, 0.01);
+        cfg.max_iterations = None;
+        let default = crate::solvers::SolverConfig::default().max_iterations;
+        assert_eq!(cfg.solver_config(0.01).max_iterations, default);
     }
 
     #[test]

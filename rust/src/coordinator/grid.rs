@@ -54,7 +54,9 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
             jobs.push(j);
         }
     }
-    Ok(parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds)))
+    parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds))
+        .into_iter()
+        .collect()
 }
 
 /// k-fold cross-validation accuracy of a problem family at one parameter
@@ -80,15 +82,17 @@ pub fn cross_validate(
     let ds = template.load_dataset()?;
     let mut rng = Rng::new(seed ^ 0xF01D);
     let folds = data::k_fold(ds.n_instances(), k, &mut rng);
-    let accs = parallel_map(folds.len(), workers, |fi| {
+    let accs: Vec<f64> = parallel_map(folds.len(), workers, |fi| -> Result<f64> {
         let (train, test) = data::apply(&ds, &folds[fi]);
-        let out = run_job_on(&template, &train);
-        match (&out.w, &out.w_multi) {
+        let out = run_job_on(&template, &train)?;
+        Ok(match (&out.w, &out.w_multi) {
             (Some(w), _) => data::binary_accuracy(&test, w),
             (_, Some(wm)) => data::multiclass_accuracy(&test, wm),
             _ => 0.0,
-        }
-    });
+        })
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
     Ok(accs.iter().sum::<f64>() / accs.len() as f64)
 }
 

@@ -5,7 +5,7 @@ use crate::acf::AcfParams;
 use crate::anyhow;
 use crate::data::{registry, Scale};
 use crate::sched::Policy;
-use crate::shard::{self, Partitioner, ShardSpec};
+use crate::shard::{self, MergeMode, Partitioner, ShardSpec};
 use crate::solvers::{self, SolveResult, SolverConfig};
 use crate::sparse::Dataset;
 use crate::util::error::Result;
@@ -69,6 +69,13 @@ pub struct JobSpec {
     /// worker-thread cap for the sharded engine (0 = bounded by shard
     /// count and hardware parallelism)
     pub shard_workers: usize,
+    /// use the asynchronous bounded-staleness merge instead of the
+    /// epoch-synchronized (bit-deterministic) default
+    pub async_merge: bool,
+    /// staleness bound τ of the async merge: submissions (and their Δf
+    /// reports to the outer ACF) lagging the published version by more
+    /// than τ flips are discarded
+    pub staleness_bound: u64,
 }
 
 impl JobSpec {
@@ -86,6 +93,8 @@ impl JobSpec {
             shards: 0,
             partitioner: Partitioner::Contiguous,
             shard_workers: 0,
+            async_merge: false,
+            staleness_bound: shard::DEFAULT_STALENESS_BOUND,
         }
     }
 
@@ -97,6 +106,9 @@ impl JobSpec {
         spec.inner_params = self.acf_params;
         spec.outer_params = self.acf_params;
         spec.workers = self.shard_workers;
+        if self.async_merge {
+            spec.merge = MergeMode::Async { staleness_bound: self.staleness_bound };
+        }
         spec.config = self.solver_config();
         spec
     }
@@ -171,15 +183,24 @@ impl JobOutcome {
         }
         if self.spec.uses_sharded_engine() {
             o.set("shards", Json::Num(self.spec.shards as f64))
-                .set("partitioner", Json::Str(self.spec.partitioner.name().into()));
+                .set("partitioner", Json::Str(self.spec.partitioner.name().into()))
+                .set(
+                    "merge",
+                    Json::Str(if self.spec.async_merge { "async" } else { "sync" }.into()),
+                );
+            if self.spec.async_merge {
+                o.set("staleness_bound", Json::Num(self.spec.staleness_bound as f64));
+            }
         }
         o
     }
 }
 
 /// Execute a job on an already-loaded dataset (lets sweeps share the
-/// dataset across grid points).
-pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
+/// dataset across grid points). Fallible since the sharded engine
+/// surfaces worker failures as
+/// [`crate::util::error::ErrorKind::ShardWorker`] errors.
+pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     let cfg = spec.solver_config();
     let rng = Rng::new(spec.seed ^ 0x5EED);
     // Sharded engine path (ACF policy on SVM/LASSO only — see
@@ -188,25 +209,25 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
     if spec.uses_sharded_engine() {
         match spec.problem {
             Problem::Svm { c } => {
-                let (model, result) = shard::svm::solve_sharded(ds, c, spec.shard_spec());
-                return JobOutcome {
+                let (model, result) = shard::svm::solve_sharded(ds, c, spec.shard_spec())?;
+                return Ok(JobOutcome {
                     spec: spec.clone(),
                     result,
                     w: Some(model.w),
                     w_multi: None,
                     nnz_coeffs: None,
-                };
+                });
             }
             Problem::Lasso { lambda } => {
-                let (model, result) = shard::lasso::solve_sharded(ds, lambda, spec.shard_spec());
+                let (model, result) = shard::lasso::solve_sharded(ds, lambda, spec.shard_spec())?;
                 let k = solvers::lasso::nnz_coefficients(&model);
-                return JobOutcome {
+                return Ok(JobOutcome {
                     spec: spec.clone(),
                     result,
                     w: Some(model.w),
                     w_multi: None,
                     nnz_coeffs: Some(k),
-                };
+                });
             }
             _ => unreachable!("uses_sharded_engine restricts to svm/lasso"),
         }
@@ -219,7 +240,15 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
             spec.policy.name()
         );
     }
-    match spec.problem {
+    // Reaching here means the sharded branch above did not engage (it
+    // returns early), so an async-merge request is necessarily inert.
+    if spec.async_merge {
+        eprintln!(
+            "note: --async-merge applies only to the sharded engine (--shards > 1 with \
+             --policy acf on svm/lasso); this run is serial, the flag has no effect"
+        );
+    }
+    Ok(match spec.problem {
         Problem::Svm { c } => {
             let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
             let (model, result) = solvers::svm::solve(ds, c, sched.as_mut(), cfg);
@@ -276,13 +305,13 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> JobOutcome {
                 nnz_coeffs: None,
             }
         }
-    }
+    })
 }
 
 /// Load the dataset and execute.
 pub fn run_job(spec: &JobSpec) -> Result<JobOutcome> {
     let ds = spec.load_dataset()?;
-    Ok(run_job_on(spec, &ds))
+    run_job_on(spec, &ds)
 }
 
 #[cfg(test)]
@@ -349,6 +378,20 @@ mod tests {
         let j = b.to_json();
         assert_eq!(j.get("shards").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("partitioner").unwrap().as_str(), Some("contiguous"));
+        assert_eq!(j.get("merge").unwrap().as_str(), Some("sync"));
+    }
+
+    #[test]
+    fn async_sharded_job_runs_and_reports_merge_mode() {
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 4;
+        spec.async_merge = true;
+        spec.staleness_bound = 3;
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let j = out.to_json();
+        assert_eq!(j.get("merge").unwrap().as_str(), Some("async"));
+        assert_eq!(j.get("staleness_bound").unwrap().as_usize(), Some(3));
     }
 
     #[test]

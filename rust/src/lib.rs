@@ -32,12 +32,16 @@
 //! iteration hot loop is pure Rust.
 //!
 //! Scaling axis: [`shard`] partitions the coordinate set into S shards,
-//! runs an inner ACF scheduler per shard on worker threads with
-//! epoch-synchronized merges, and adapts shard visit frequencies with an
-//! *outer* ACF instance — hierarchical ACF, the paper's Algorithms 2+3
-//! applied at two levels. Serial solvers get the same idea through
-//! [`sched::Policy::Hierarchical`]; the CLI exposes it as
-//! `--policy hier --shards S --partitioner contiguous|hash`.
+//! runs an inner ACF scheduler per shard on a persistent worker pool,
+//! and adapts shard visit frequencies with an *outer* ACF instance —
+//! hierarchical ACF, the paper's Algorithms 2+3 applied at two levels.
+//! Shared state merges either at an epoch barrier (default,
+//! bit-deterministic) or asynchronously against versioned published
+//! buffers with a bounded staleness τ (`--async-merge
+//! --staleness-bound t`, Wright's async-CD regime). Serial solvers get
+//! the same idea through [`sched::Policy::Hierarchical`]; the CLI
+//! exposes it as `--policy hier --shards S --partitioner
+//! contiguous|hash`.
 
 pub mod acf;
 pub mod bench_util;

@@ -68,6 +68,11 @@ fn print_help() {
          \u{20}             the coordinate split; --shard-workers <n> caps the\n\
          \u{20}             engine's threads; `--policy hier` is the serial\n\
          \u{20}             two-level ACF (shard count from --shards, 0 = √n)\n\
+         async merge:  --async-merge drops the per-epoch barrier: workers\n\
+         \u{20}             snapshot versioned shared-state buffers and a\n\
+         \u{20}             merger publishes monotone flips (fast, but not\n\
+         \u{20}             bit-deterministic); --staleness-bound <t> caps how\n\
+         \u{20}             many versions a merge/Δf report may lag (default 2)\n\
          run `cargo bench` for the paper's tables/figures and\n\
          `cargo bench --bench scaling_shards` for the shard-scaling curve."
     );
@@ -114,6 +119,9 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
     // deliberately a separate flag from --workers (the sweep job pool):
     // a sharded sweep would otherwise square the thread count
     spec.shard_workers = args.usize_or("shard-workers", 0)?;
+    spec.async_merge = args.bool_or("async-merge", false)?;
+    spec.staleness_bound =
+        args.u64_or("staleness-bound", acf_cd::shard::DEFAULT_STALENESS_BOUND)?;
     Ok(spec)
 }
 
@@ -128,9 +136,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         ds.nnz()
     );
     if spec.uses_sharded_engine() {
-        eprintln!("sharded engine: {} shards, {} partition", spec.shards, spec.partitioner.name());
+        eprintln!(
+            "sharded engine: {} shards, {} partition, {} merge",
+            spec.shards,
+            spec.partitioner.name(),
+            if spec.async_merge {
+                format!("async (staleness bound {})", spec.staleness_bound)
+            } else {
+                "synchronized".to_string()
+            }
+        );
     }
-    let out = coordinator::run_job_on(&spec, &ds);
+    let out = coordinator::run_job_on(&spec, &ds)?;
     println!("{}", out.result.summary());
     if let Some(w) = &out.w {
         if !matches!(spec.problem, Problem::Lasso { .. }) {

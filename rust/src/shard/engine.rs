@@ -3,7 +3,10 @@
 //! [`ShardedDriver`] partitions the coordinate set into S shards, runs an
 //! independent inner [`AcfScheduler`] inside each shard, and layers an
 //! *outer* ACF instance (paper Algorithms 2+3, applied one level up) over
-//! the shards themselves. Execution is epoch-synchronized:
+//! the shards themselves. Two merge protocols are available, selected by
+//! [`ShardSpec::merge`]:
+//!
+//! # Synchronized mode ([`MergeMode::Sync`], the default)
 //!
 //! 1. **Quota** — the outer sequence generator (Algorithm 3 over shard
 //!    preferences) emits a block of shard visits; each visit grants the
@@ -13,8 +16,10 @@
 //! 2. **Local epochs** — every shard copies the shared solver state
 //!    (LASSO residual / SVM primal vector), then runs its quota of exact
 //!    CD steps on its own coordinates against that private copy, driven
-//!    by its inner ACF scheduler. Shards run on worker threads; nothing
-//!    is shared mutably, so the epoch is embarrassingly parallel.
+//!    by its inner ACF scheduler. Shards run on the persistent
+//!    [`RoundPool`] workers (spawned once per run, parked between
+//!    epochs); nothing is shared mutably, so the epoch is embarrassingly
+//!    parallel.
 //! 3. **Merge** — shared-state deltas are summed in fixed shard order.
 //!    The additive merge (θ = 1) is tried first and kept whenever the
 //!    objective does not increase; otherwise the engine falls back to the
@@ -33,15 +38,88 @@
 //! outer accumulators, and merges run in fixed shard order — so results
 //! are bit-identical given `(seed, shard count)` regardless of thread
 //! scheduling or worker count.
+//!
+//! # Asynchronous mode ([`MergeMode::Async`])
+//!
+//! The per-epoch barrier is removed: fast shards never wait for slow
+//! ones (Wright's asynchronous-CD regime, arXiv:1502.04759). The shared
+//! state lives in *versioned published buffers*: workers snapshot the
+//! currently published buffer (an O(1) `Arc` clone), run their local
+//! epoch against the snapshot, and submit the resulting shared-state
+//! delta to the merger (the driving thread). The merger evaluates the
+//! candidate objective *exactly* against its authoritative copy and
+//! publishes a fresh buffer via a version bump — an atomic pointer flip
+//! under a mutex held only for the O(1) swap. Retired buffers are
+//! recycled once the last reader drops its snapshot, so steady state
+//! ping-pongs between a small fixed set of buffers (the classic double
+//! buffer, generalized because a snapshot may be held across a whole
+//! local epoch).
+//!
+//! Merge acceptance is three-tiered, and the *published objective is
+//! monotone non-increasing by construction* because every candidate is
+//! evaluated exactly before the flip:
+//!
+//! 1. additive (θ = 1) if the objective does not increase;
+//! 2. otherwise averaged (θ = 1/S) — the convexity guarantee of the
+//!    synchronized merge degrades under staleness, so this tier is also
+//!    checked rather than trusted;
+//! 3. otherwise the submission is **rejected**: nothing is published and
+//!    the worker rolls back to its pre-epoch values before re-reading a
+//!    fresh snapshot.
+//!
+//! A submission whose base version lags the published version by more
+//! than the **staleness bound τ** (the `staleness_bound` field of
+//! [`MergeMode::Async`]) is discarded outright, and — per the
+//! bounded-staleness contract for
+//! the outer ACF — its Δf report is *not* fed to the outer preference
+//! update (Algorithm 2 stays driven by sufficiently fresh progress
+//! only). State consistency survives staleness exactly: the shared state
+//! is linear in the coordinate values and each coordinate is owned by
+//! exactly one shard, so applying shard k's delta `L(trial_k − values_k)`
+//! to a *newer* published state still yields the shared state of the
+//! merged coordinate values (up to fp rounding).
+//!
+//! Asynchronous runs are **not bit-deterministic** — merge order depends
+//! on thread scheduling. Use the synchronized mode (the default) when
+//! reproducibility matters; use async for wall-clock speed.
+//!
+//! # Failure containment
+//!
+//! A panic inside a worker (e.g. a `ShardProblem::step` bug) no longer
+//! surfaces as an opaque poisoned-mutex panic: workers catch the unwind
+//! and the engine returns [`crate::util::error::ErrorKind::ShardWorker`]
+//! naming the failing shard.
 
 use crate::acf::{AcfParams, AcfScheduler, Preferences, SequenceGenerator};
 use crate::metrics::{OpCounter, Trace, TracePoint};
 use crate::shard::partition::{Partition, Partitioner};
 use crate::solvers::{SolveResult, SolveStatus, SolverConfig};
+use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{panic_message, Pop, RoundPool, WorkQueue};
 use crate::util::timer::Timer;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Duration;
+
+/// Default staleness bound τ for the asynchronous merge: a Δf report (and
+/// its delta) may lag the published version by at most this many flips.
+pub const DEFAULT_STALENESS_BOUND: u64 = 2;
+
+/// Merge protocol of the sharded engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Epoch-synchronized barrier merge — bit-deterministic given
+    /// `(seed, shards)`, independent of the worker count.
+    Sync,
+    /// Asynchronous bounded-staleness merge — fast shards never wait;
+    /// not bit-deterministic (see the module docs).
+    Async {
+        /// staleness bound τ: submissions (and their Δf reports to the
+        /// outer ACF) older than τ published versions are discarded
+        staleness_bound: u64,
+    },
+}
 
 /// Configuration of a sharded run.
 #[derive(Clone, Debug)]
@@ -59,8 +137,10 @@ pub struct ShardSpec {
     /// worker threads (0 = one per shard, bounded by hardware
     /// parallelism)
     pub workers: usize,
+    /// merge protocol (synchronized by default, for determinism)
+    pub merge: MergeMode,
     /// stopping criteria; `trace_every > 0` records one trace point per
-    /// epoch (the engine's natural sampling unit)
+    /// epoch (sync) or per published version (async)
     pub config: SolverConfig,
 }
 
@@ -73,6 +153,7 @@ impl ShardSpec {
             inner_params: AcfParams::default(),
             outer_params: AcfParams::default(),
             workers: 0,
+            merge: MergeMode::Sync,
             config: SolverConfig::default(),
         }
     }
@@ -84,6 +165,12 @@ impl ShardSpec {
 
     pub fn with_config(mut self, config: SolverConfig) -> ShardSpec {
         self.config = config;
+        self
+    }
+
+    /// Select the asynchronous merge with the given staleness bound τ.
+    pub fn with_async(mut self, staleness_bound: u64) -> ShardSpec {
+        self.merge = MergeMode::Async { staleness_bound };
         self
     }
 }
@@ -141,17 +228,22 @@ pub trait ShardProblem: Sync {
 /// Result of a sharded run: final coordinate values (global indexing),
 /// final shared state, solver metrics, and the outer ACF's final
 /// shard-selection probabilities (diagnostics).
+#[derive(Clone, Debug)]
 pub struct ShardedOutcome {
     pub values: Vec<f64>,
     pub shared: Vec<f64>,
     pub result: SolveResult,
     pub outer_probabilities: Vec<f64>,
+    /// async mode: submissions discarded for exceeding the staleness
+    /// bound τ (always 0 in sync mode). The observed drop rate is the
+    /// input for tuning τ.
+    pub stale_drops: u64,
 }
 
-/// Per-shard mutable state. Lives behind a `Mutex` purely so the scoped
-/// worker threads can claim disjoint shards through a shared slice; there
-/// is never lock contention (each shard is touched by exactly one worker
-/// per epoch).
+/// Per-shard mutable state. Behind a `Mutex` so pool workers can claim
+/// disjoint shards through a shared slice; there is never lock contention
+/// (each shard is touched by exactly one worker at a time — per epoch in
+/// sync mode, per ready-queue pop in async mode).
 struct ShardState {
     ids: Vec<u32>,
     /// accepted coordinate values (aligned with `ids`)
@@ -163,7 +255,7 @@ struct ShardState {
     sched: AcfScheduler,
 }
 
-/// What a shard reports back from one local epoch.
+/// What a shard reports back from one synchronized local epoch.
 struct EpochReport {
     delta_f: f64,
     window_viol: f64,
@@ -171,9 +263,220 @@ struct EpochReport {
     counter: OpCounter,
 }
 
-/// Epochs to wait after a failed full verification before re-verifying
-/// (the stale-window heuristic can stay optimistic for a few epochs).
+/// Task selector for the synchronized round workers (one fixed closure
+/// serves both the epoch and the verification rounds).
+enum SyncTask {
+    Epoch,
+    Verify,
+}
+
+/// Epoch-varying inputs of the synchronized round workers. Workers take
+/// read locks during a round; the driving thread rewrites the contents
+/// between rounds (never concurrently).
+struct SyncCtx {
+    shared: Vec<f64>,
+    quotas: Vec<u64>,
+    task: SyncTask,
+}
+
+/// Round output slot content (sync mode).
+enum SyncReport {
+    Epoch(EpochReport),
+    Verify { viol: f64, ops: usize },
+}
+
+/// How a worker must fold its last submission into its accepted values.
+#[derive(Clone, Copy, Debug)]
+enum Apply {
+    /// nothing pending (fresh shard, or after a verify)
+    None,
+    /// additive merge accepted: `values ← trial`
+    Accept,
+    /// averaged merge accepted: `values ← values + θ (trial − values)`
+    Damp,
+    /// merge rejected (objective increase or staleness): keep `values`
+    Reject,
+}
+
+/// What a shard should do after applying its pending merge decision.
+#[derive(Clone, Copy, Debug)]
+enum Work {
+    /// run one local epoch of `quota` CD steps against a fresh snapshot
+    Epoch { quota: u64 },
+    /// run a full KKT pass against the (final) published state
+    Verify,
+    /// report quiescence and stop until re-dispatched
+    Park,
+}
+
+/// Merge decision + next assignment for one shard (async mode); written
+/// by the merger, consumed by the next worker that picks the shard up
+/// from the ready queue.
+struct Directive {
+    apply: Apply,
+    work: Work,
+    /// recycled delta buffer, handed back to the worker
+    delta_back: Option<Vec<f64>>,
+}
+
+/// One shard's asynchronous local-epoch submission.
+struct Submission {
+    shard: usize,
+    /// published version the epoch's snapshot was taken from
+    base_version: u64,
+    /// shared-state delta: `local_shared − snapshot`
+    delta: Vec<f64>,
+    /// separable objective of this shard at θ = 1 (trial values)
+    sep_trial: f64,
+    /// separable objective of this shard at θ = 1/S (damped values)
+    sep_damped: f64,
+    window_viol: f64,
+    counter: OpCounter,
+}
+
+/// Worker → merger messages (async mode).
+enum AsyncMsg {
+    Epoch(Submission),
+    Verified { shard: usize, viol: f64, ops: usize },
+    Parked(usize),
+    Failed { shard: usize, message: String },
+}
+
+/// Why the async engine is draining towards a verification pass.
+#[derive(Clone, Copy, Debug)]
+enum Drain {
+    Converge,
+    Budget,
+    Time,
+}
+
+/// The versioned publish slot of the async engine: `(version, buffer)`.
+/// The mutex is held only for the O(1) pointer clone / swap.
+struct PublishSlot {
+    slot: Mutex<(u64, Arc<Vec<f64>>)>,
+}
+
+impl PublishSlot {
+    fn new(initial: Vec<f64>) -> PublishSlot {
+        PublishSlot { slot: Mutex::new((0, Arc::new(initial))) }
+    }
+
+    fn snapshot(&self) -> (u64, Arc<Vec<f64>>) {
+        let g = self.slot.lock().unwrap();
+        (g.0, g.1.clone())
+    }
+
+    /// Publish `buf` as `version`; returns the retired buffer.
+    fn publish(&self, version: u64, buf: Arc<Vec<f64>>) -> Arc<Vec<f64>> {
+        let mut g = self.slot.lock().unwrap();
+        g.0 = version;
+        std::mem::replace(&mut g.1, buf)
+    }
+}
+
+/// Quota allocator of the async engine: converts outer-ACF shard visits
+/// into per-shard step quotas on demand, respecting the global iteration
+/// budget (issued, not merely completed, steps are counted so in-flight
+/// epochs can never overshoot).
+struct QuotaSource {
+    gen: SequenceGenerator,
+    rng: Rng,
+    block: Vec<u32>,
+    pending: Vec<u64>,
+    issued: u64,
+    max_iterations: u64,
+}
+
+impl QuotaSource {
+    /// Next quota for shard `k`; 0 means the iteration budget is spent.
+    fn next(&mut self, prefs: &Preferences, partition: &Partition, k: usize) -> u64 {
+        let remaining = self.max_iterations.saturating_sub(self.issued);
+        if remaining == 0 {
+            return 0;
+        }
+        while self.pending[k] == 0 {
+            // The outer generator is essentially cyclic (every shard's
+            // accumulator grows each block), so this terminates.
+            self.gen.next_block(prefs, &mut self.rng, &mut self.block);
+            for &s in &self.block {
+                self.pending[s as usize] += 1;
+            }
+        }
+        let quota = (self.pending[k] * partition.shard(k).len() as u64).min(remaining);
+        self.pending[k] = 0;
+        self.issued += quota;
+        quota
+    }
+}
+
+/// Epochs (sync) or merge batches (async, scaled by S) to wait after a
+/// failed full verification before re-verifying (the stale-window
+/// heuristic can stay optimistic for a few epochs).
 const VERIFY_COOLDOWN: u64 = 3;
+
+/// Issue shard `k` its merge decision plus next assignment and put it
+/// back on the ready queue: an epoch quota from the outer ACF, or Park
+/// once the iteration budget is spent / a drain is in progress (the
+/// budget case enters the budget drain). The single dispatch point of
+/// the async engine — kick-off, steady state and verify-resume all go
+/// through here so their drain behavior cannot diverge.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_shard(
+    k: usize,
+    apply: Apply,
+    delta_back: Option<Vec<f64>>,
+    partition: &Partition,
+    outer_prefs: &Preferences,
+    quotas: &mut QuotaSource,
+    draining: &mut Option<Drain>,
+    directives: &[Mutex<Directive>],
+    ready: &WorkQueue<usize>,
+) {
+    let quota = if draining.is_some() { 0 } else { quotas.next(outer_prefs, partition, k) };
+    let work = if quota == 0 {
+        draining.get_or_insert(Drain::Budget);
+        Work::Park
+    } else {
+        Work::Epoch { quota }
+    };
+    {
+        let mut d = directives[k].lock().unwrap();
+        d.apply = apply;
+        d.work = work;
+        // None callers (kick-off, resume) must not evict a buffer left
+        // resident by a Verify/Park round trip
+        if delta_back.is_some() {
+            d.delta_back = delta_back;
+        }
+    }
+    ready.push(k);
+}
+
+/// Shutdown-on-drop guards so no exit path can leave pool workers parked
+/// forever (which would deadlock the enclosing `thread::scope`).
+struct PoolGuard<'a>(&'a RoundPool);
+
+impl Drop for PoolGuard<'_> {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+struct QueueGuard<'a, T>(&'a WorkQueue<T>);
+
+impl<T> Drop for QueueGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+/// Lock a shard's state, mapping mutex poisoning (a worker panicked
+/// while holding it) to the first-party shard-worker error.
+fn lock_state<'m>(states: &'m [Mutex<ShardState>], k: usize) -> Result<MutexGuard<'m, ShardState>> {
+    states[k]
+        .lock()
+        .map_err(|_| Error::shard_worker(k, "state mutex poisoned by an earlier worker panic"))
+}
 
 /// The sharded parallel CD driver.
 pub struct ShardedDriver<'a, P: ShardProblem> {
@@ -192,22 +495,29 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         &self.partition
     }
 
-    /// Run to convergence (or budget); see the module docs for the epoch
-    /// protocol.
-    pub fn run(&self) -> ShardedOutcome {
-        let p = self.problem;
-        let s_count = self.partition.n_shards();
-        let dim = p.shared_dim();
-        let workers = if self.spec.workers == 0 {
+    /// Run to convergence (or budget); see the module docs for the two
+    /// merge protocols. Returns
+    /// [`crate::util::error::ErrorKind::ShardWorker`] if a shard's
+    /// worker panics.
+    pub fn run(&self) -> Result<ShardedOutcome> {
+        match self.spec.merge {
+            MergeMode::Sync => self.run_sync(),
+            MergeMode::Async { staleness_bound } => self.run_async(staleness_bound),
+        }
+    }
+
+    fn worker_count(&self, s_count: usize) -> usize {
+        if self.spec.workers == 0 {
             // one thread per shard, but never oversubscribe the machine
             s_count.min(crate::util::threadpool::default_workers())
         } else {
-            self.spec.workers.max(1)
-        };
-        let cfg = &self.spec.config;
+            self.spec.workers.max(1).min(s_count)
+        }
+    }
 
-        // ---- per-shard state -----------------------------------------
-        let states: Vec<Mutex<ShardState>> = (0..s_count)
+    fn init_states(&self, dim: usize) -> Vec<Mutex<ShardState>> {
+        let p = self.problem;
+        (0..self.partition.n_shards())
             .map(|k| {
                 let ids = self.partition.shard(k).to_vec();
                 let values: Vec<f64> = ids.iter().map(|&i| p.initial_value(i as usize)).collect();
@@ -224,7 +534,161 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     sched,
                 })
             })
-            .collect();
+            .collect()
+    }
+
+    /// Separable objective of every shard at its current accepted values.
+    fn initial_sep(&self, states: &[Mutex<ShardState>]) -> Result<Vec<f64>> {
+        let p = self.problem;
+        (0..states.len())
+            .map(|k| {
+                let st = lock_state(states, k)?;
+                Ok(st
+                    .ids
+                    .iter()
+                    .zip(&st.values)
+                    .map(|(&i, &v)| p.coord_objective(i as usize, v))
+                    .sum())
+            })
+            .collect()
+    }
+
+    /// Gather per-coordinate values into global indexing.
+    fn collect_values(&self, states: &[Mutex<ShardState>]) -> Result<Vec<f64>> {
+        let mut values = vec![0.0f64; self.problem.n_coords()];
+        for k in 0..states.len() {
+            let st = lock_state(states, k)?;
+            for (kk, &i) in st.ids.iter().enumerate() {
+                values[i as usize] = st.values[kk];
+            }
+        }
+        Ok(values)
+    }
+
+    // ------------------------------------------------------------------
+    // synchronized path
+    // ------------------------------------------------------------------
+
+    fn run_sync(&self) -> Result<ShardedOutcome> {
+        let p = self.problem;
+        let s_count = self.partition.n_shards();
+        let dim = p.shared_dim();
+        let workers = self.worker_count(s_count);
+
+        let states = self.init_states(dim);
+        let ctx = RwLock::new(SyncCtx {
+            shared: p.initial_shared(),
+            quotas: vec![0; s_count],
+            task: SyncTask::Epoch,
+        });
+        let reports: Vec<Mutex<Option<SyncReport>>> =
+            (0..s_count).map(|_| Mutex::new(None)).collect();
+        let pool = RoundPool::new();
+
+        // The one fixed task closure served to the persistent workers;
+        // `ctx.task` selects between epoch and verification rounds.
+        let task = |k: usize| {
+            // A read-guard panic does not poison an RwLock, so a crashed
+            // sibling worker cannot wedge this lock.
+            let ctx = ctx.read().unwrap();
+            let Ok(mut guard) = states[k].lock() else {
+                return; // already-poisoned shard: its panic is the root error
+            };
+            let st = &mut *guard;
+            let report = match ctx.task {
+                SyncTask::Epoch => {
+                    st.local_shared.copy_from_slice(&ctx.shared);
+                    st.trial.copy_from_slice(&st.values);
+                    let mut local = OpCounter::new();
+                    let mut df_sum = 0.0f64;
+                    let mut viol_max = 0.0f64;
+                    for _ in 0..ctx.quotas[k] {
+                        let kk = st.sched.next();
+                        let i = st.ids[kk] as usize;
+                        let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
+                        st.sched.report(kk, out.delta_f.max(0.0));
+                        df_sum += out.delta_f;
+                        viol_max = viol_max.max(out.violation);
+                        local.step(out.ops);
+                    }
+                    SyncReport::Epoch(EpochReport {
+                        delta_f: df_sum,
+                        window_viol: viol_max,
+                        steps: ctx.quotas[k],
+                        counter: local,
+                    })
+                }
+                SyncTask::Verify => {
+                    let mut vmax = 0.0f64;
+                    let mut ops = 0usize;
+                    for (kk, &i) in st.ids.iter().enumerate() {
+                        let (v, o) = p.violation(i as usize, st.values[kk], &ctx.shared);
+                        vmax = vmax.max(v);
+                        ops += o;
+                    }
+                    SyncReport::Verify { viol: vmax, ops }
+                }
+            };
+            *reports[k].lock().unwrap() = Some(report);
+        };
+
+        std::thread::scope(|scope| {
+            let _shutdown = PoolGuard(&pool);
+            for _ in 0..workers {
+                scope.spawn(|| pool.worker_loop(&task));
+            }
+            self.sync_loop(&states, &ctx, &reports, &pool)
+        })
+    }
+
+    /// Dispatch one round and collect every shard's report.
+    fn sync_round(
+        &self,
+        pool: &RoundPool,
+        reports: &[Mutex<Option<SyncReport>>],
+    ) -> Result<Vec<SyncReport>> {
+        pool.run_round(reports.len())
+            .map_err(|p| Error::shard_worker(p.task, format!("panicked: {}", p.message)))?;
+        reports
+            .iter()
+            .enumerate()
+            .map(|(k, slot)| {
+                slot.lock()
+                    .map_err(|_| Error::shard_worker(k, "report slot poisoned"))?
+                    .take()
+                    .ok_or_else(|| Error::shard_worker(k, "produced no epoch report"))
+            })
+            .collect()
+    }
+
+    /// Full KKT pass over the merged state, parallel over shards on the
+    /// persistent pool. Returns (max violation, ops spent).
+    fn sync_verify(
+        &self,
+        ctx: &RwLock<SyncCtx>,
+        pool: &RoundPool,
+        reports: &[Mutex<Option<SyncReport>>],
+    ) -> Result<(f64, usize)> {
+        ctx.write().unwrap().task = SyncTask::Verify;
+        let outcome = self.sync_round(pool, reports);
+        ctx.write().unwrap().task = SyncTask::Epoch;
+        outcome?.into_iter().try_fold((0.0f64, 0usize), |(vm, os), r| match r {
+            SyncReport::Verify { viol, ops } => Ok((vm.max(viol), os + ops)),
+            SyncReport::Epoch(_) => Err(Error::msg("verify round produced an epoch report")),
+        })
+    }
+
+    fn sync_loop(
+        &self,
+        states: &[Mutex<ShardState>],
+        ctx: &RwLock<SyncCtx>,
+        reports: &[Mutex<Option<SyncReport>>],
+        pool: &RoundPool,
+    ) -> Result<ShardedOutcome> {
+        let p = self.problem;
+        let s_count = self.partition.n_shards();
+        let dim = p.shared_dim();
+        let cfg = &self.spec.config;
 
         // ---- outer (shard-level) ACF ---------------------------------
         let mut outer_prefs = Preferences::new(s_count, self.spec.outer_params);
@@ -233,14 +697,11 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let mut outer_block: Vec<u32> = Vec::with_capacity(2 * s_count);
 
         // ---- bookkeeping ---------------------------------------------
-        let mut shared = p.initial_shared();
-        let mut sep: Vec<f64> = (0..s_count)
-            .map(|k| {
-                let st = states[k].lock().unwrap();
-                st.ids.iter().zip(&st.values).map(|(&i, &v)| p.coord_objective(i as usize, v)).sum()
-            })
-            .collect();
-        let mut f_curr = p.shared_objective(&shared) + sep.iter().sum::<f64>();
+        let mut sep = self.initial_sep(states)?;
+        let mut f_curr = {
+            let ctx = ctx.read().unwrap();
+            p.shared_objective(&ctx.shared) + sep.iter().sum::<f64>()
+        };
 
         let mut counter = OpCounter::new();
         let timer = Timer::start();
@@ -263,7 +724,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             let total: u64 = quotas.iter().sum();
             let remaining = cfg.max_iterations.saturating_sub(counter.iterations());
             if remaining == 0 {
-                let (v, vops) = self.verify(&states, &shared, workers);
+                let (v, vops) = self.sync_verify(ctx, pool, reports)?;
                 counter.extra(vops);
                 final_viol = v;
                 status = if v < cfg.eps { SolveStatus::Converged } else { SolveStatus::IterLimit };
@@ -276,41 +737,38 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 if quotas.iter().sum::<u64>() == 0 {
                     // Give the whole tail budget to the largest shard so
                     // the loop always makes progress.
-                    let big = (0..s_count).max_by_key(|&k| self.partition.shard(k).len()).unwrap_or(0);
+                    let big =
+                        (0..s_count).max_by_key(|&k| self.partition.shard(k).len()).unwrap_or(0);
                     quotas[big] = remaining;
                 }
             }
             epochs += 1;
 
-            // ---- parallel local epochs -------------------------------
-            let reports: Vec<EpochReport> = parallel_map(s_count, workers, |k| {
-                let mut guard = states[k].lock().unwrap();
-                let st = &mut *guard;
-                st.local_shared.copy_from_slice(&shared);
-                st.trial.copy_from_slice(&st.values);
-                let mut local = OpCounter::new();
-                let mut df_sum = 0.0f64;
-                let mut viol_max = 0.0f64;
-                for _ in 0..quotas[k] {
-                    let kk = st.sched.next();
-                    let i = st.ids[kk] as usize;
-                    let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
-                    st.sched.report(kk, out.delta_f.max(0.0));
-                    df_sum += out.delta_f;
-                    viol_max = viol_max.max(out.violation);
-                    local.step(out.ops);
-                }
-                EpochReport { delta_f: df_sum, window_viol: viol_max, steps: quotas[k], counter: local }
-            });
-            for r in &reports {
+            // ---- parallel local epochs on the persistent pool --------
+            ctx.write().unwrap().quotas.copy_from_slice(&quotas);
+            let round = self.sync_round(pool, reports)?;
+            let epoch_reports: Vec<EpochReport> = round
+                .into_iter()
+                .map(|r| match r {
+                    SyncReport::Epoch(e) => Ok(e),
+                    SyncReport::Verify { .. } => {
+                        Err(Error::msg("epoch round produced a verify report"))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            for r in &epoch_reports {
                 counter.merge(&r.counter);
             }
 
             // ---- merge (fixed shard order ⇒ deterministic) -----------
+            let mut ctx_g = ctx.write().unwrap();
+            let shared = &mut ctx_g.shared;
             sum_diff.fill(0.0);
-            for state in states.iter() {
-                let st = state.lock().unwrap();
-                for (d, (&l, &g)) in sum_diff.iter_mut().zip(st.local_shared.iter().zip(shared.iter())) {
+            for k in 0..s_count {
+                let st = lock_state(states, k)?;
+                for (d, (&l, &g)) in
+                    sum_diff.iter_mut().zip(st.local_shared.iter().zip(shared.iter()))
+                {
                     *d += l - g;
                 }
             }
@@ -319,17 +777,22 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             }
             let sep_trial: Vec<f64> = (0..s_count)
                 .map(|k| {
-                    let st = states[k].lock().unwrap();
-                    st.ids.iter().zip(&st.trial).map(|(&i, &v)| p.coord_objective(i as usize, v)).sum()
+                    let st = lock_state(states, k)?;
+                    Ok(st
+                        .ids
+                        .iter()
+                        .zip(&st.trial)
+                        .map(|(&i, &v)| p.coord_objective(i as usize, v))
+                        .sum())
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             let f_full = p.shared_objective(&trial_shared) + sep_trial.iter().sum::<f64>();
             let tol = 1e-12 * f_curr.abs().max(1.0);
             if f_full <= f_curr + tol {
                 // additive merge accepted
-                std::mem::swap(&mut shared, &mut trial_shared);
-                for (k, state) in states.iter().enumerate() {
-                    let mut st = state.lock().unwrap();
+                std::mem::swap(shared, &mut trial_shared);
+                for k in 0..s_count {
+                    let mut st = lock_state(states, k)?;
                     let st = &mut *st;
                     st.values.copy_from_slice(&st.trial);
                     sep[k] = sep_trial[k];
@@ -341,8 +804,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 for t in 0..dim {
                     shared[t] += theta * sum_diff[t];
                 }
-                for (k, state) in states.iter().enumerate() {
-                    let mut st = state.lock().unwrap();
+                for k in 0..s_count {
+                    let mut st = lock_state(states, k)?;
                     let st = &mut *st;
                     let mut sk = 0.0;
                     for (kk, &i) in st.ids.iter().enumerate() {
@@ -351,11 +814,12 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     }
                     sep[k] = sk;
                 }
-                f_curr = p.shared_objective(&shared) + sep.iter().sum::<f64>();
+                f_curr = p.shared_objective(shared) + sep.iter().sum::<f64>();
             }
+            drop(ctx_g);
 
             // ---- hierarchical adaptation: outer Δf report ------------
-            for (k, r) in reports.iter().enumerate() {
+            for (k, r) in epoch_reports.iter().enumerate() {
                 if r.steps > 0 {
                     outer_prefs.update(k, (r.delta_f / r.steps as f64).max(0.0));
                 }
@@ -364,8 +828,11 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 outer_prefs.refresh_sum();
             }
 
-            let window_viol =
-                reports.iter().filter(|r| r.steps > 0).map(|r| r.window_viol).fold(0.0f64, f64::max);
+            let window_viol = epoch_reports
+                .iter()
+                .filter(|r| r.steps > 0)
+                .map(|r| r.window_viol)
+                .fold(0.0f64, f64::max);
             if cfg.trace_every > 0 {
                 trace.push(TracePoint {
                     iteration: counter.iterations(),
@@ -388,7 +855,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             };
             let window_converged = window_viol < cfg.eps && verify_cooled;
             if window_converged || budget_hit || time_hit {
-                let (v, vops) = self.verify(&states, &shared, workers);
+                let (v, vops) = self.sync_verify(ctx, pool, reports)?;
                 counter.extra(vops);
                 final_viol = v;
                 if v < cfg.eps {
@@ -408,13 +875,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         }
 
         // ---- assemble global views -----------------------------------
-        let mut values = vec![0.0f64; p.n_coords()];
-        for state in states.iter() {
-            let st = state.lock().unwrap();
-            for (kk, &i) in st.ids.iter().enumerate() {
-                values[i as usize] = st.values[kk];
-            }
-        }
+        let values = self.collect_values(states)?;
+        let shared = std::mem::take(&mut ctx.write().unwrap().shared);
         let result = SolveResult {
             status,
             iterations: counter.iterations(),
@@ -425,24 +887,539 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             epochs,
             trace,
         };
-        ShardedOutcome { values, shared, result, outer_probabilities: outer_prefs.probabilities() }
+        Ok(ShardedOutcome {
+            values,
+            shared,
+            result,
+            outer_probabilities: outer_prefs.probabilities(),
+            stale_drops: 0,
+        })
     }
 
-    /// Synchronized full KKT pass over the merged state, parallel over
-    /// shards. Returns (max violation, ops spent).
-    fn verify(&self, states: &[Mutex<ShardState>], shared: &[f64], workers: usize) -> (f64, usize) {
+    // ------------------------------------------------------------------
+    // asynchronous path
+    // ------------------------------------------------------------------
+
+    /// One unit of async worker work for shard `k`: apply the pending
+    /// merge decision, then run the assigned work item.
+    fn async_shard_task(
+        &self,
+        k: usize,
+        states: &[Mutex<ShardState>],
+        directives: &[Mutex<Directive>],
+        published: &PublishSlot,
+        theta: f64,
+    ) -> AsyncMsg {
         let p = self.problem;
-        let per_shard: Vec<(f64, usize)> = parallel_map(states.len(), workers, |k| {
-            let st = states[k].lock().unwrap();
-            let mut vmax = 0.0f64;
-            let mut ops = 0usize;
-            for (kk, &i) in st.ids.iter().enumerate() {
-                let (v, o) = p.violation(i as usize, st.values[kk], shared);
-                vmax = vmax.max(v);
-                ops += o;
+        let Ok(mut guard) = states[k].lock() else {
+            return AsyncMsg::Failed {
+                shard: k,
+                message: "state mutex poisoned by an earlier worker panic".to_string(),
+            };
+        };
+        let st = &mut *guard;
+        let (apply, work, mut delta) = {
+            let mut d = directives[k].lock().unwrap();
+            // only an epoch consumes the recycled delta buffer; leave it
+            // resident across Verify/Park so it survives verify cycles
+            let delta = match d.work {
+                Work::Epoch { .. } => d.delta_back.take().unwrap_or_default(),
+                Work::Verify | Work::Park => Vec::new(),
+            };
+            (std::mem::replace(&mut d.apply, Apply::None), d.work, delta)
+        };
+        match apply {
+            Apply::Accept => st.values.copy_from_slice(&st.trial),
+            Apply::Damp => {
+                for kk in 0..st.values.len() {
+                    st.values[kk] += theta * (st.trial[kk] - st.values[kk]);
+                }
             }
-            (vmax, ops)
-        });
-        per_shard.into_iter().fold((0.0, 0), |(vm, os), (v, o)| (vm.max(v), os + o))
+            Apply::None | Apply::Reject => {}
+        }
+        match work {
+            Work::Park => AsyncMsg::Parked(k),
+            Work::Verify => {
+                let (_, snap) = published.snapshot();
+                let mut vmax = 0.0f64;
+                let mut ops = 0usize;
+                for (kk, &i) in st.ids.iter().enumerate() {
+                    let (v, o) = p.violation(i as usize, st.values[kk], &snap);
+                    vmax = vmax.max(v);
+                    ops += o;
+                }
+                AsyncMsg::Verified { shard: k, viol: vmax, ops }
+            }
+            Work::Epoch { quota } => {
+                let (base_version, snap) = published.snapshot();
+                st.local_shared.copy_from_slice(&snap);
+                st.trial.copy_from_slice(&st.values);
+                let mut counter = OpCounter::new();
+                let mut viol = 0.0f64;
+                for _ in 0..quota {
+                    let kk = st.sched.next();
+                    let i = st.ids[kk] as usize;
+                    let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
+                    // inner scheduler still adapts on the worker's own
+                    // (possibly stale-based) per-step Δf; the *outer*
+                    // level is fed the merger's achieved decrease instead
+                    st.sched.report(kk, out.delta_f.max(0.0));
+                    viol = viol.max(out.violation);
+                    counter.step(out.ops);
+                }
+                delta.clear();
+                delta.extend(st.local_shared.iter().zip(snap.iter()).map(|(l, s)| l - s));
+                let mut sep_trial = 0.0f64;
+                let mut sep_damped = 0.0f64;
+                for (kk, &i) in st.ids.iter().enumerate() {
+                    sep_trial += p.coord_objective(i as usize, st.trial[kk]);
+                    // must match Apply::Damp bit-for-bit (same formula on
+                    // the same values), so the merger's f bookkeeping is
+                    // exact
+                    let damped = st.values[kk] + theta * (st.trial[kk] - st.values[kk]);
+                    sep_damped += p.coord_objective(i as usize, damped);
+                }
+                AsyncMsg::Epoch(Submission {
+                    shard: k,
+                    base_version,
+                    delta,
+                    sep_trial,
+                    sep_damped,
+                    window_viol: viol,
+                    counter,
+                })
+            }
+        }
+    }
+
+    fn run_async(&self, tau: u64) -> Result<ShardedOutcome> {
+        let p = self.problem;
+        let s_count = self.partition.n_shards();
+        let dim = p.shared_dim();
+        let workers = self.worker_count(s_count);
+        let cfg = &self.spec.config;
+        let theta = 1.0 / s_count as f64;
+
+        let states = self.init_states(dim);
+        let published = PublishSlot::new(p.initial_shared());
+        let ready: WorkQueue<usize> = WorkQueue::new();
+        let msgs: WorkQueue<AsyncMsg> = WorkQueue::new();
+        let directives: Vec<Mutex<Directive>> = (0..s_count)
+            .map(|_| {
+                Mutex::new(Directive { apply: Apply::None, work: Work::Park, delta_back: None })
+            })
+            .collect();
+
+        std::thread::scope(|scope| {
+            let _rg = QueueGuard(&ready);
+            let _mg = QueueGuard(&msgs);
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    while let Some(k) = ready.pop() {
+                        let msg = match catch_unwind(AssertUnwindSafe(|| {
+                            self.async_shard_task(k, &states, &directives, &published, theta)
+                        })) {
+                            Ok(m) => m,
+                            Err(payload) => AsyncMsg::Failed {
+                                shard: k,
+                                message: format!("panicked: {}", panic_message(payload.as_ref())),
+                            },
+                        };
+                        msgs.push(msg);
+                    }
+                });
+            }
+            self.async_loop(tau, theta, cfg, &states, &published, &ready, &msgs, &directives)
+        })
+    }
+
+    /// The merger: consumes worker submissions, evaluates candidates
+    /// exactly, publishes versions, adapts the outer ACF, and drives the
+    /// drain → verify → (resume | finish) protocol.
+    #[allow(clippy::too_many_arguments)]
+    fn async_loop(
+        &self,
+        tau: u64,
+        theta: f64,
+        cfg: &SolverConfig,
+        states: &[Mutex<ShardState>],
+        published: &PublishSlot,
+        ready: &WorkQueue<usize>,
+        msgs: &WorkQueue<AsyncMsg>,
+        directives: &[Mutex<Directive>],
+    ) -> Result<ShardedOutcome> {
+        let p = self.problem;
+        let s_count = self.partition.n_shards();
+        let dim = p.shared_dim();
+
+        // ---- outer ACF + quota allocation ----------------------------
+        let mut outer_prefs = Preferences::new(s_count, self.spec.outer_params);
+        let mut quotas = QuotaSource {
+            gen: SequenceGenerator::new(s_count),
+            rng: Rng::new(self.spec.seed ^ 0x07E2_ACF0),
+            block: Vec::with_capacity(2 * s_count),
+            pending: vec![0; s_count],
+            issued: 0,
+            max_iterations: cfg.max_iterations,
+        };
+
+        // ---- merger state --------------------------------------------
+        let mut cur = p.initial_shared();
+        let mut scratch = vec![0.0f64; dim];
+        let mut version = 0u64;
+        let mut retired: Vec<Arc<Vec<f64>>> = Vec::new();
+        let mut sep = self.initial_sep(states)?;
+        let mut sep_total: f64 = sep.iter().sum();
+        let mut f_cur = p.shared_objective(&cur) + sep_total;
+
+        let mut counter = OpCounter::new();
+        let timer = Timer::start();
+        let mut trace = Trace::new();
+        let mut merges = 0u64; // published versions (reported as epochs)
+        let mut stale_drops = 0u64;
+        let mut last_viol = vec![f64::INFINITY; s_count];
+        let mut last_failed_verify: Option<u64> = None;
+
+        let mut draining: Option<Drain> = None;
+        let mut parked = 0usize;
+        let mut verified = 0usize;
+        let mut verify_viol = 0.0f64;
+
+        // ---- kick-off: every shard gets a first epoch ----------------
+        for k in 0..s_count {
+            dispatch_shard(
+                k,
+                Apply::None,
+                None,
+                &self.partition,
+                &outer_prefs,
+                &mut quotas,
+                &mut draining,
+                directives,
+                ready,
+            );
+        }
+
+        let (status, final_viol) = loop {
+            let msg = match msgs.pop_timeout(Duration::from_millis(50)) {
+                Pop::Item(m) => m,
+                Pop::TimedOut => {
+                    let over_time = match cfg.max_seconds {
+                        Some(cap) => timer.secs() > cap,
+                        None => false,
+                    };
+                    if over_time && draining.is_none() {
+                        draining = Some(Drain::Time);
+                    }
+                    continue;
+                }
+                Pop::Shutdown => {
+                    return Err(Error::msg("async merge queue shut down unexpectedly"))
+                }
+            };
+            match msg {
+                AsyncMsg::Failed { shard, message } => {
+                    return Err(Error::shard_worker(shard, message));
+                }
+                AsyncMsg::Parked(_) => {
+                    parked += 1;
+                    if parked == s_count {
+                        // all shards quiescent and every merge applied:
+                        // the published state is final for this round —
+                        // dispatch the parallel verification pass
+                        parked = 0;
+                        verified = 0;
+                        verify_viol = 0.0;
+                        for k in 0..s_count {
+                            let mut d = directives[k].lock().unwrap();
+                            d.apply = Apply::None;
+                            d.work = Work::Verify;
+                            drop(d);
+                            ready.push(k);
+                        }
+                    }
+                }
+                AsyncMsg::Verified { shard, viol, ops } => {
+                    counter.extra(ops);
+                    last_viol[shard] = viol;
+                    verify_viol = verify_viol.max(viol);
+                    verified += 1;
+                    if verified == s_count {
+                        let reason = draining.take().unwrap_or(Drain::Converge);
+                        if verify_viol < cfg.eps {
+                            break (SolveStatus::Converged, verify_viol);
+                        }
+                        match reason {
+                            Drain::Budget => break (SolveStatus::IterLimit, verify_viol),
+                            Drain::Time => break (SolveStatus::TimeLimit, verify_viol),
+                            Drain::Converge => {
+                                // stale-window false positive: resume
+                                last_failed_verify = Some(merges);
+                                for k in 0..s_count {
+                                    dispatch_shard(
+                                        k,
+                                        Apply::None,
+                                        None,
+                                        &self.partition,
+                                        &outer_prefs,
+                                        &mut quotas,
+                                        &mut draining,
+                                        directives,
+                                        ready,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                AsyncMsg::Epoch(sub) => {
+                    counter.merge(&sub.counter);
+                    let k = sub.shard;
+                    last_viol[k] = sub.window_viol;
+                    let staleness = version.saturating_sub(sub.base_version);
+                    let steps = sub.counter.iterations().max(1);
+                    let mut apply = Apply::Reject;
+                    if staleness > tau {
+                        // bounded staleness: discard the delta AND the Δf
+                        // report — the outer ACF only consumes
+                        // sufficiently fresh progress
+                        stale_drops += 1;
+                    } else {
+                        let tol = 1e-12 * f_cur.abs().max(1.0);
+                        // tier 1: additive candidate, evaluated exactly
+                        for t in 0..dim {
+                            scratch[t] = cur[t] + sub.delta[t];
+                        }
+                        let f_add =
+                            p.shared_objective(&scratch) + (sep_total - sep[k] + sub.sep_trial);
+                        if f_add <= f_cur + tol {
+                            std::mem::swap(&mut cur, &mut scratch);
+                            sep_total += sub.sep_trial - sep[k];
+                            sep[k] = sub.sep_trial;
+                            let achieved = f_cur - f_add;
+                            f_cur = f_add;
+                            apply = Apply::Accept;
+                            outer_prefs.update(k, (achieved / steps as f64).max(0.0));
+                        } else {
+                            // tier 2: averaged candidate θ = 1/S
+                            for t in 0..dim {
+                                scratch[t] = cur[t] + theta * sub.delta[t];
+                            }
+                            let f_damp = p.shared_objective(&scratch)
+                                + (sep_total - sep[k] + sub.sep_damped);
+                            if f_damp <= f_cur + tol {
+                                std::mem::swap(&mut cur, &mut scratch);
+                                sep_total += sub.sep_damped - sep[k];
+                                sep[k] = sub.sep_damped;
+                                let achieved = f_cur - f_damp;
+                                f_cur = f_damp;
+                                apply = Apply::Damp;
+                                outer_prefs.update(k, (achieved / steps as f64).max(0.0));
+                            } else {
+                                // tier 3: reject — the shard burned its
+                                // steps, tell the outer ACF so
+                                outer_prefs.update(k, 0.0);
+                            }
+                        }
+                        if matches!(apply, Apply::Accept | Apply::Damp) {
+                            version += 1;
+                            merges += 1;
+                            let mut buf = take_spare(&mut retired)
+                                .unwrap_or_else(|| Vec::with_capacity(dim));
+                            buf.clear();
+                            buf.extend_from_slice(&cur);
+                            let old = published.publish(version, Arc::new(buf));
+                            retired.push(old);
+                            if retired.len() > s_count + 4 {
+                                retired.remove(0);
+                            }
+                            if merges % 64 == 0 {
+                                outer_prefs.refresh_sum();
+                            }
+                            if cfg.trace_every > 0 {
+                                trace.push(TracePoint {
+                                    iteration: counter.iterations(),
+                                    ops: counter.ops(),
+                                    seconds: timer.secs(),
+                                    objective: f_cur,
+                                    violation: sub.window_viol,
+                                });
+                            }
+                        }
+                    }
+
+                    // ---- convergence / budget / time checks ----------
+                    if draining.is_none() {
+                        let over_time = match cfg.max_seconds {
+                            Some(cap) => timer.secs() > cap,
+                            None => false,
+                        };
+                        if over_time {
+                            draining = Some(Drain::Time);
+                        } else {
+                            let cooled = match last_failed_verify {
+                                Some(at) => merges >= at + VERIFY_COOLDOWN * s_count as u64,
+                                None => true,
+                            };
+                            if cooled && last_viol.iter().all(|&v| v < cfg.eps) {
+                                draining = Some(Drain::Converge);
+                            }
+                        }
+                    }
+
+                    // ---- respond: merge decision + next assignment ---
+                    dispatch_shard(
+                        k,
+                        apply,
+                        Some(sub.delta),
+                        &self.partition,
+                        &outer_prefs,
+                        &mut quotas,
+                        &mut draining,
+                        directives,
+                        ready,
+                    );
+                }
+            }
+        };
+
+        // ---- assemble global views -----------------------------------
+        let values = self.collect_values(states)?;
+        let result = SolveResult {
+            status,
+            iterations: counter.iterations(),
+            ops: counter.ops(),
+            seconds: timer.secs(),
+            objective: f_cur,
+            final_violation: final_viol,
+            epochs: merges,
+            trace,
+        };
+        Ok(ShardedOutcome {
+            values,
+            shared: cur,
+            result,
+            outer_probabilities: outer_prefs.probabilities(),
+            stale_drops,
+        })
+    }
+}
+
+/// Reclaim a retired publish buffer whose last snapshot holder is gone.
+/// Retired arcs are no longer in the publish slot, so their strong count
+/// can only decrease — `try_unwrap` after the count check cannot race.
+fn take_spare(retired: &mut Vec<Arc<Vec<f64>>>) -> Option<Vec<f64>> {
+    for i in 0..retired.len() {
+        if Arc::strong_count(&retired[i]) == 1 {
+            let arc = retired.swap_remove(i);
+            return Arc::try_unwrap(arc).ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::ErrorKind;
+
+    /// Minimal separable quadratic for engine-level tests:
+    /// f(x) = Σ ½ (x_i − 1)², with the shared state being x itself (a
+    /// linear — identity — function of the coordinate values).
+    struct Quad {
+        n: usize,
+        /// coordinate whose step panics (usize::MAX = never)
+        boom: usize,
+    }
+
+    impl Quad {
+        fn new(n: usize) -> Quad {
+            Quad { n, boom: usize::MAX }
+        }
+    }
+
+    impl ShardProblem for Quad {
+        fn n_coords(&self) -> usize {
+            self.n
+        }
+
+        fn shared_dim(&self) -> usize {
+            self.n
+        }
+
+        fn initial_shared(&self) -> Vec<f64> {
+            vec![0.0; self.n]
+        }
+
+        fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+            if i == self.boom {
+                panic!("boom on coordinate {i}");
+            }
+            let old = *value;
+            let delta_f = 0.5 * (old - 1.0) * (old - 1.0);
+            *value = 1.0;
+            shared[i] += 1.0 - old;
+            StepOutcome { delta_f, violation: (old - 1.0).abs(), ops: 1 }
+        }
+
+        fn violation(&self, i: usize, _value: f64, shared: &[f64]) -> (f64, usize) {
+            ((shared[i] - 1.0).abs(), 1)
+        }
+
+        fn shared_objective(&self, shared: &[f64]) -> f64 {
+            shared.iter().map(|&s| 0.5 * (s - 1.0) * (s - 1.0)).sum()
+        }
+
+        fn coord_objective(&self, _i: usize, _value: f64) -> f64 {
+            0.0
+        }
+    }
+
+    fn spec(shards: usize) -> ShardSpec {
+        ShardSpec::new(shards).with_config(SolverConfig::with_eps(1e-10))
+    }
+
+    #[test]
+    fn quad_sync_converges_exactly() {
+        let p = Quad::new(16);
+        let out = ShardedDriver::new(&p, spec(4)).run().unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        assert!(out.values.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        assert_eq!(out.stale_drops, 0, "sync mode never discards for staleness");
+    }
+
+    #[test]
+    fn quad_async_converges_exactly() {
+        let p = Quad::new(16);
+        let out = ShardedDriver::new(&p, spec(4).with_async(2)).run().unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        assert!(out.values.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn sync_worker_panic_names_the_failing_shard() {
+        // coordinate 1 lives in shard 0 under the contiguous split of
+        // 16 coordinates into 4 shards of 4
+        let p = Quad { n: 16, boom: 1 };
+        let err = ShardedDriver::new(&p, spec(4)).run().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::ShardWorker { shard: 0 }, "{err:#}");
+        assert!(format!("{err:#}").contains("boom"), "{err:#}");
+    }
+
+    #[test]
+    fn async_worker_panic_names_the_failing_shard() {
+        // coordinate 9 lives in shard 2 (shards of 4: 8..12)
+        let p = Quad { n: 16, boom: 9 };
+        let err = ShardedDriver::new(&p, spec(4).with_async(2)).run().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::ShardWorker { shard: 2 }, "{err:#}");
+    }
+
+    #[test]
+    fn async_single_shard_matches_sync() {
+        let p = Quad::new(9);
+        let sync = ShardedDriver::new(&p, spec(1)).run().unwrap();
+        let asy = ShardedDriver::new(&p, spec(1).with_async(0)).run().unwrap();
+        assert!(sync.result.status.converged() && asy.result.status.converged());
+        assert_eq!(sync.values, asy.values);
     }
 }

@@ -14,7 +14,12 @@
 //! This is the single-threaded twin of the parallel engine in
 //! [`crate::shard::engine`]: same two-level adaptation, no threads, fully
 //! deterministic given the seed, pluggable wherever a
-//! [`Scheduler`](crate::sched::Scheduler) is accepted.
+//! [`Scheduler`](crate::sched::Scheduler) is accepted. It is unaffected
+//! by the engine's merge protocol ([`crate::shard::MergeMode`]): there is
+//! no shared-state merging here at all — one thread owns the full state,
+//! so `--async-merge` / `--staleness-bound` apply only to the parallel
+//! engine, and this policy remains the right baseline when comparing
+//! hierarchical adaptation in isolation from merge effects.
 
 use crate::acf::{AcfParams, AcfScheduler};
 use crate::sched::Scheduler;

@@ -8,6 +8,7 @@ use crate::solvers::lasso::{subgrad_violation, LassoModel, LassoProblem};
 use crate::solvers::SolveResult;
 use crate::sparse::ops::soft_threshold;
 use crate::sparse::Dataset;
+use crate::util::error::Result;
 
 /// LASSO adapted to the sharded engine. Owns the transposed problem view
 /// so one instance can be reused across shard counts (benches amortize
@@ -84,15 +85,16 @@ impl ShardProblem for ShardedLasso {
 }
 
 /// Solve the LASSO on the sharded engine; drop-in analog of
-/// [`crate::solvers::lasso::solve`].
-pub fn solve_sharded(ds: &Dataset, lambda: f64, spec: ShardSpec) -> (LassoModel, SolveResult) {
+/// [`crate::solvers::lasso::solve`]. Errs with
+/// [`crate::util::error::ErrorKind::ShardWorker`] if a shard worker dies.
+pub fn solve_sharded(ds: &Dataset, lambda: f64, spec: ShardSpec) -> Result<(LassoModel, SolveResult)> {
     let problem = ShardedLasso::new(ds, lambda);
-    let out = run_prepared(&problem, spec);
-    (LassoModel { w: out.values, lambda }, out.result)
+    let out = run_prepared(&problem, spec)?;
+    Ok((LassoModel { w: out.values, lambda }, out.result))
 }
 
 /// Run on an already-prepared problem (amortizes the transpose across
 /// shard counts / λ values).
-pub fn run_prepared(problem: &ShardedLasso, spec: ShardSpec) -> ShardedOutcome {
+pub fn run_prepared(problem: &ShardedLasso, spec: ShardSpec) -> Result<ShardedOutcome> {
     ShardedDriver::new(problem, spec).run()
 }

@@ -9,6 +9,7 @@ use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcom
 use crate::solvers::svm::{pg_violation, SvmModel};
 use crate::solvers::SolveResult;
 use crate::sparse::Dataset;
+use crate::util::error::Result;
 
 /// SVM dual adapted to the sharded engine.
 pub struct ShardedSvm<'a> {
@@ -86,14 +87,15 @@ impl ShardProblem for ShardedSvm<'_> {
 }
 
 /// Solve the SVM dual on the sharded engine; drop-in analog of
-/// [`crate::solvers::svm::solve`].
-pub fn solve_sharded(ds: &Dataset, c: f64, spec: ShardSpec) -> (SvmModel, SolveResult) {
+/// [`crate::solvers::svm::solve`]. Errs with
+/// [`crate::util::error::ErrorKind::ShardWorker`] if a shard worker dies.
+pub fn solve_sharded(ds: &Dataset, c: f64, spec: ShardSpec) -> Result<(SvmModel, SolveResult)> {
     let problem = ShardedSvm::new(ds, c);
-    let out = run_prepared(&problem, spec);
-    (SvmModel { alpha: out.values, w: out.shared, c }, out.result)
+    let out = run_prepared(&problem, spec)?;
+    Ok((SvmModel { alpha: out.values, w: out.shared, c }, out.result))
 }
 
 /// Run on an already-prepared problem.
-pub fn run_prepared(problem: &ShardedSvm<'_>, spec: ShardSpec) -> ShardedOutcome {
+pub fn run_prepared(problem: &ShardedSvm<'_>, spec: ShardSpec) -> Result<ShardedOutcome> {
     ShardedDriver::new(problem, spec).run()
 }

@@ -12,9 +12,23 @@
 
 use std::fmt;
 
-/// Crate-wide error: an outermost message plus the chain of underlying
-/// causes (outermost first).
+/// Machine-readable classification of an [`Error`], beyond its message
+/// chain. Most errors are [`ErrorKind::Generic`]; dedicated variants
+/// exist where callers need to react programmatically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// An ordinary error with no special classification.
+    Generic,
+    /// A worker thread of the sharded CD engine ([`crate::shard`]) died
+    /// (panicked, or left its shard's state mutex poisoned); `shard` is
+    /// the index of the failing shard.
+    ShardWorker { shard: usize },
+}
+
+/// Crate-wide error: a [`kind`](Error::kind) plus an outermost message
+/// and the chain of underlying causes (outermost first).
 pub struct Error {
+    kind: ErrorKind,
     chain: Vec<String>,
 }
 
@@ -24,7 +38,22 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from a displayable message.
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { chain: vec![m.to_string()] }
+        Error { kind: ErrorKind::Generic, chain: vec![m.to_string()] }
+    }
+
+    /// Build the [`ErrorKind::ShardWorker`] variant: a shard-engine
+    /// worker failure that names the failing shard instead of surfacing
+    /// as an opaque poisoned-mutex panic.
+    pub fn shard_worker(shard: usize, detail: impl fmt::Display) -> Error {
+        Error {
+            kind: ErrorKind::ShardWorker { shard },
+            chain: vec![format!("shard {shard} worker failed: {detail}")],
+        }
+    }
+
+    /// The error's classification (context wrapping preserves it).
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 
     /// Wrap with an additional layer of context (becomes the outermost
@@ -72,7 +101,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { kind: ErrorKind::Generic, chain }
     }
 }
 
@@ -168,6 +197,18 @@ mod tests {
         }
         assert_eq!(f(false).unwrap(), 1);
         assert_eq!(format!("{}", f(true).unwrap_err()), "refused");
+    }
+
+    #[test]
+    fn shard_worker_kind_survives_context() {
+        let e = Error::shard_worker(3, "step panicked: boom");
+        assert_eq!(e.kind(), ErrorKind::ShardWorker { shard: 3 });
+        assert!(format!("{e}").contains("shard 3"), "{e}");
+        let wrapped = e.context("running sharded lasso");
+        assert_eq!(wrapped.kind(), ErrorKind::ShardWorker { shard: 3 });
+        assert_eq!(format!("{wrapped:#}"), "running sharded lasso: shard 3 worker failed: step panicked: boom");
+        // plain errors stay generic
+        assert_eq!(anyhow!("x").kind(), ErrorKind::Generic);
     }
 
     #[test]

@@ -1,13 +1,25 @@
 //! Minimal parallel-execution helpers on std::thread (no tokio/rayon in
 //! the offline build).
 //!
-//! The coordinator's unit of parallelism is a *job* (one solver run on one
-//! dataset/parameter point), which is long-running and coarse-grained, so
-//! a simple scoped fork-join with a bounded worker count is the right
-//! tool — no work stealing needed.
+//! Three tools, matched to the three shapes of parallelism in the crate:
+//!
+//! * [`parallel_map`] — one-shot scoped fork-join for coarse-grained jobs
+//!   (the coordinator's sweeps); threads are spawned per call.
+//! * [`RoundPool`] — a *persistent* fork-join pool for repeated rounds of
+//!   the same task (the sharded engine's epochs): workers are spawned
+//!   once, park between rounds, and are unparked by [`RoundPool::run_round`].
+//!   Tickets are claimed lock-free (CAS on a round-tagged counter), and a
+//!   panicking task is captured and reported instead of deadlocking the
+//!   round.
+//! * [`WorkQueue`] — a blocking multi-producer/multi-consumer queue with
+//!   shutdown, used by the asynchronous shard engine for its ready-shard
+//!   and merge-submission channels.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Number of workers to use by default: physical parallelism, capped.
 pub fn default_workers() -> usize {
@@ -82,6 +94,266 @@ impl Progress {
     }
 }
 
+/// Best-effort extraction of a panic payload's message (panics carry
+/// `&str` or `String` payloads in practice).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A task of a [`RoundPool`] round that panicked.
+#[derive(Clone, Debug)]
+pub struct TaskPanic {
+    /// index of the failing task within its round
+    pub task: usize,
+    /// extracted panic message
+    pub message: String,
+}
+
+struct RoundState {
+    /// round sequence number (0 = no round dispatched yet)
+    round: u64,
+    /// task count of the current round
+    n: usize,
+    /// tasks of the current round not yet completed
+    remaining: usize,
+    /// panics captured during the current round
+    panics: Vec<TaskPanic>,
+    shutdown: bool,
+}
+
+/// Persistent fork-join pool: spawn `worker_loop` on long-lived threads
+/// once, then dispatch any number of rounds of indexed tasks with
+/// [`run_round`](RoundPool::run_round). Workers park on a condvar between
+/// rounds, so per-round overhead is one unpark instead of a thread spawn.
+///
+/// The caller owns the threads (spawn the workers inside a
+/// `std::thread::scope` so task closures can borrow locals) and must call
+/// [`shutdown`](RoundPool::shutdown) before the scope ends, or the parked
+/// workers keep the scope joined forever.
+///
+/// Task indices are claimed lock-free via CAS on a round-tagged ticket
+/// counter, so a straggler from a finished round can never steal or
+/// double-run a ticket of the next round. A panicking task is caught
+/// (the worker survives for later rounds) and surfaced as the round's
+/// [`TaskPanic`]; any mutexes the task held are left poisoned for the
+/// caller to map to a first-party error.
+pub struct RoundPool {
+    state: Mutex<RoundState>,
+    /// workers park here between rounds
+    work_cv: Condvar,
+    /// the round dispatcher parks here until `remaining == 0`
+    done_cv: Condvar,
+    /// `(round & 0xffff_ffff) << 32 | next_task_index`
+    ticket: AtomicU64,
+}
+
+impl Default for RoundPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoundPool {
+    pub fn new() -> RoundPool {
+        RoundPool {
+            state: Mutex::new(RoundState {
+                round: 0,
+                n: 0,
+                remaining: 0,
+                panics: Vec::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            ticket: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim the next task index of `round`, or `None` when the round is
+    /// exhausted (or a newer round has been dispatched).
+    fn claim(&self, round: u64, n: usize) -> Option<usize> {
+        let tag = round & 0xffff_ffff;
+        let mut cur = self.ticket.load(Ordering::Acquire);
+        loop {
+            let (r, i) = (cur >> 32, (cur & 0xffff_ffff) as usize);
+            if r != tag || i >= n {
+                return None;
+            }
+            match self.ticket.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(i),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Worker body: park until a round is dispatched, claim and run its
+    /// tasks, repeat until [`shutdown`](RoundPool::shutdown). Call from a
+    /// dedicated (scoped) thread.
+    pub fn worker_loop<F: Fn(usize)>(&self, f: F) {
+        let mut seen = 0u64;
+        loop {
+            let n;
+            {
+                let mut st = self.state.lock().unwrap();
+                while !st.shutdown && st.round == seen {
+                    st = self.work_cv.wait(st).unwrap();
+                }
+                if st.shutdown {
+                    return;
+                }
+                seen = st.round;
+                n = st.n;
+            }
+            while let Some(i) = self.claim(seen, n) {
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let mut st = self.state.lock().unwrap();
+                if let Err(payload) = outcome {
+                    st.panics.push(TaskPanic { task: i, message: panic_message(payload.as_ref()) });
+                }
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    self.done_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Dispatch one round of tasks `0..n` to the parked workers and block
+    /// until all complete. Returns the first captured [`TaskPanic`] if
+    /// any task panicked. Requires at least one running `worker_loop`.
+    pub fn run_round(&self, n: usize) -> Result<(), TaskPanic> {
+        assert!(n < u32::MAX as usize, "round too large");
+        if n == 0 {
+            return Ok(());
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            st.round += 1;
+            st.n = n;
+            st.remaining = n;
+            st.panics.clear();
+            self.ticket.store((st.round & 0xffff_ffff) << 32, Ordering::Release);
+            self.work_cv.notify_all();
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+        match st.panics.first() {
+            Some(p) => Err(p.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Wake every parked worker and make `worker_loop` return. Must be
+    /// called before the spawning scope ends.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.work_cv.notify_all();
+    }
+}
+
+/// Outcome of [`WorkQueue::pop_timeout`].
+pub enum Pop<T> {
+    Item(T),
+    TimedOut,
+    Shutdown,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    shutdown: bool,
+}
+
+/// Blocking multi-producer/multi-consumer queue with explicit shutdown.
+/// After [`shutdown`](WorkQueue::shutdown), blocked and future pops
+/// return `None` immediately (queued items are intentionally dropped —
+/// shutdown means "stop now", not "drain").
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> WorkQueue<T> {
+        WorkQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, item: T) {
+        let mut st = self.state.lock().unwrap();
+        st.items.push_back(item);
+        self.cv.notify_one();
+    }
+
+    /// Block until an item is available; `None` once the queue is shut
+    /// down.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// [`pop`](WorkQueue::pop) with a bounded wait, so consumers can
+    /// interleave time-based bookkeeping with queue processing.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Pop::Shutdown;
+            }
+            if let Some(item) = st.items.pop_front() {
+                return Pop::Item(item);
+            }
+            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+            if res.timed_out() {
+                return if st.shutdown {
+                    Pop::Shutdown
+                } else if let Some(item) = st.items.pop_front() {
+                    Pop::Item(item)
+                } else {
+                    Pop::TimedOut
+                };
+            }
+        }
+    }
+
+    /// Wake all blocked consumers; subsequent pops return `None`.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +403,96 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn round_pool_runs_many_rounds_on_persistent_workers() {
+        let pool = RoundPool::new();
+        let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| pool.worker_loop(|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            for _ in 0..50 {
+                pool.run_round(32).unwrap();
+            }
+            pool.shutdown();
+        });
+        // every task ran exactly once per round — no lost or stolen tickets
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 50), "{hits:?}");
+    }
+
+    #[test]
+    fn round_pool_reports_panicking_task_and_survives() {
+        let pool = RoundPool::new();
+        let ok_runs = AtomicUsize::new(0);
+        let armed = std::sync::atomic::AtomicBool::new(true);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| pool.worker_loop(|i| {
+                    if i == 5 && armed.swap(false, Ordering::Relaxed) {
+                        panic!("task five exploded");
+                    }
+                    ok_runs.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            let err = pool.run_round(8).unwrap_err();
+            assert_eq!(err.task, 5);
+            assert!(err.message.contains("exploded"), "{}", err.message);
+            // the pool stays usable after a captured panic
+            pool.run_round(8).unwrap();
+            pool.shutdown();
+        });
+        assert_eq!(ok_runs.load(Ordering::Relaxed), 7 + 8);
+    }
+
+    #[test]
+    fn work_queue_roundtrip_and_shutdown() {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        let got = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    while let Some(v) = q.pop() {
+                        got.lock().unwrap().push(v);
+                    }
+                });
+            }
+            for v in 0..100 {
+                q.push(v);
+            }
+            // spin until the consumers drained everything, then release them
+            loop {
+                if got.lock().unwrap().len() == 100 {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            q.shutdown();
+        });
+        let mut vs = got.into_inner().unwrap();
+        vs.sort_unstable();
+        assert_eq!(vs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn work_queue_pop_timeout_times_out_when_empty() {
+        let q: WorkQueue<u8> = WorkQueue::new();
+        match q.pop_timeout(Duration::from_millis(5)) {
+            Pop::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        q.push(7);
+        match q.pop_timeout(Duration::from_millis(5)) {
+            Pop::Item(7) => {}
+            _ => panic!("expected item"),
+        }
+        q.shutdown();
+        match q.pop_timeout(Duration::from_millis(5)) {
+            Pop::Shutdown => {}
+            _ => panic!("expected shutdown"),
+        }
     }
 }

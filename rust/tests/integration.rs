@@ -51,10 +51,10 @@ fn acf_beats_uniform_on_hard_svm_problem() {
     let mut base = quick(Problem::Svm { c: 100.0 }, "rcv1-like", Policy::Acf);
     base.scale = Scale(0.2);
     let ds = base.load_dataset().unwrap();
-    let acf = acf_cd::coordinator::run_job_on(&base, &ds);
+    let acf = acf_cd::coordinator::run_job_on(&base, &ds).unwrap();
     let mut uni = base.clone();
     uni.policy = Policy::Permutation;
-    let uni = acf_cd::coordinator::run_job_on(&uni, &ds);
+    let uni = acf_cd::coordinator::run_job_on(&uni, &ds).unwrap();
     assert!(acf.result.status.converged() && uni.result.status.converged());
     assert!(
         (acf.result.iterations as f64) < 0.8 * uni.result.iterations as f64,
@@ -70,10 +70,10 @@ fn acf_beats_cyclic_on_lasso_small_lambda() {
     base.scale = Scale(1.0);
     base.eps = 2e-5;
     let ds = base.load_dataset().unwrap();
-    let acf = acf_cd::coordinator::run_job_on(&base, &ds);
+    let acf = acf_cd::coordinator::run_job_on(&base, &ds).unwrap();
     let mut cyc = base.clone();
     cyc.policy = Policy::Cyclic;
-    let cyc = acf_cd::coordinator::run_job_on(&cyc, &ds);
+    let cyc = acf_cd::coordinator::run_job_on(&cyc, &ds).unwrap();
     assert!(acf.result.status.converged() && cyc.result.status.converged());
     assert!(
         (acf.result.iterations as f64) < cyc.result.iterations as f64,
@@ -132,7 +132,7 @@ fn solvers_agree_across_policies_on_objective() {
     for policy in [Policy::Acf, Policy::Permutation, Policy::Uniform, Policy::Cyclic] {
         let mut s = base.clone();
         s.policy = policy;
-        let out = acf_cd::coordinator::run_job_on(&s, &ds);
+        let out = acf_cd::coordinator::run_job_on(&s, &ds).unwrap();
         assert!(out.result.status.converged(), "{:?}", policy);
         objectives.push(out.result.objective);
     }
@@ -174,7 +174,7 @@ fn e2e_train_then_cross_stack_validate() {
     let Some(rt) = runtime() else { return };
     let spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
     let ds = spec.load_dataset().unwrap();
-    let out = acf_cd::coordinator::run_job_on(&spec, &ds);
+    let out = acf_cd::coordinator::run_job_on(&spec, &ds).unwrap();
     assert!(out.result.status.converged());
     let w = out.w.unwrap();
     let rep = acf_cd::runtime::validator::validate(&rt, &ds, &w).unwrap();
