@@ -1,0 +1,134 @@
+//! Sparse-kernel micro-benchmark — ns per CD-step primitive, across row
+//! densities nnz ∈ {4, 32, 256, 4096}:
+//!
+//!   * gather dot: sequential bounds-checked reference
+//!     (`kernels::dot_dense_scalar`) vs the 4-way unrolled unchecked
+//!     kernel behind `RowView::dot_dense`,
+//!   * scatter axpy: `kernels::axpy_scalar` vs `RowView::axpy_into`,
+//!   * one full CD step: split `dot_dense` + `axpy_into` vs the fused
+//!     `RowView::step` (same slices, one bounds gate).
+//!
+//! Rows share one index pattern so the numbers isolate kernel
+//! instruction overhead (bounds checks, dependency chains) rather than
+//! cache-miss behavior — the end-to-end story lives in
+//! `scaling_shards` / `microbench_hotpath`.
+//!
+//! Run: `cargo bench --bench kernel_microbench [-- --quick]`
+//! Writes `BENCH_kernel_microbench.json`; the CI `bench-smoke` job fails
+//! if the fused step is slower than the split dot+axpy reference.
+
+use acf_cd::bench_util::{bench_fn, write_bench_summary, BenchConfig, BenchReport};
+use acf_cd::sparse::{kernels, RowView};
+use acf_cd::util::json::Json;
+use acf_cd::util::rng::Rng;
+
+const NNZ_SIZES: [usize; 4] = [4, 32, 256, 4096];
+
+/// Per-step scatter scale: tiny so thousands of repeated sweeps cannot
+/// drift `w` out of its magnitude range, non-zero so the scatter always
+/// executes.
+const SCALE: f64 = 1e-12;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let iters = if cfg.quick { 25 } else { 80 };
+    let warmup = 3;
+    let sweep_elems = if cfg.quick { 1usize << 16 } else { 1 << 18 };
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("kernel_microbench".into()));
+    out.set("quick", Json::Bool(cfg.quick));
+    println!("sparse-kernel microbench — ns per primitive, {iters} samples per point");
+
+    for &nnz in &NNZ_SIZES {
+        let d = 4 * nnz;
+        let rows = (sweep_elems / nnz).max(8);
+        // strided, strictly increasing, duplicate-free — the CSR row
+        // shape the kernels are specified for
+        let indices: Vec<u32> = (0..nnz as u32).map(|k| 4 * k).collect();
+        let values: Vec<Vec<f64>> =
+            (0..rows).map(|_| (0..nnz).map(|_| rng.uniform_range(-1.0, 1.0)).collect()).collect();
+        let w0: Vec<f64> = (0..d).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        // validated once, outside the timed region (RowView::new checks
+        // the strictly-increasing invariant the unchecked kernels need)
+        let views: Vec<RowView> = values.iter().map(|v| RowView::new(&indices, v)).collect();
+        let row = |r: usize| views[r];
+
+        // ---- gather dot ----------------------------------------------
+        let dot_scalar = bench_fn(&format!("dot/scalar nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
+                acc += kernels::dot_dense_scalar(&indices, &values[r], &w0);
+            }
+            acc
+        });
+        let dot_unrolled = bench_fn(&format!("dot/unrolled nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
+                acc += row(r).dot_dense(&w0);
+            }
+            acc
+        });
+
+        // ---- scatter axpy --------------------------------------------
+        let mut w = w0.clone();
+        let axpy_scalar = bench_fn(&format!("axpy/scalar nnz={nnz}"), warmup, iters, || {
+            for r in 0..rows {
+                kernels::axpy_scalar(SCALE, &indices, &values[r], &mut w);
+            }
+            w[0]
+        });
+        let axpy_unrolled = bench_fn(&format!("axpy/unrolled nnz={nnz}"), warmup, iters, || {
+            for r in 0..rows {
+                row(r).axpy_into(SCALE, &mut w);
+            }
+            w[0]
+        });
+
+        // ---- one full CD step: split vs fused ------------------------
+        let split = bench_fn(&format!("step/split dot+axpy nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
+                let rv = row(r);
+                let dot = rv.dot_dense(&w);
+                rv.axpy_into(SCALE * dot, &mut w);
+                acc += dot;
+            }
+            acc
+        });
+        let fused = bench_fn(&format!("step/fused nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
+                let (dot, _) = row(r).step(&mut w, |dot| SCALE * dot);
+                acc += dot;
+            }
+            acc
+        });
+
+        for r in [&dot_scalar, &dot_unrolled, &axpy_scalar, &axpy_unrolled, &split, &fused] {
+            r.print();
+        }
+        let ns = |rep: &BenchReport| rep.median() / rows as f64 * 1e9;
+        let mut e = Json::obj();
+        e.set("rows_per_sweep", Json::Num(rows as f64))
+            .set("dot_scalar_ns", Json::Num(ns(&dot_scalar)))
+            .set("dot_unrolled_ns", Json::Num(ns(&dot_unrolled)))
+            .set("axpy_scalar_ns", Json::Num(ns(&axpy_scalar)))
+            .set("axpy_unrolled_ns", Json::Num(ns(&axpy_unrolled)))
+            .set("split_dot_axpy_ns", Json::Num(ns(&split)))
+            .set("fused_step_ns", Json::Num(ns(&fused)))
+            .set("dot_unrolled_speedup", Json::Num(ns(&dot_scalar) / ns(&dot_unrolled)))
+            .set("axpy_unrolled_speedup", Json::Num(ns(&axpy_scalar) / ns(&axpy_unrolled)))
+            .set("fused_over_split", Json::Num(ns(&split) / ns(&fused)));
+        out.set(&format!("nnz_{nnz}"), e);
+        println!(
+            "nnz={nnz}: dot {:.2}x, axpy {:.2}x, fused/split {:.2}x",
+            ns(&dot_scalar) / ns(&dot_unrolled),
+            ns(&axpy_scalar) / ns(&axpy_unrolled),
+            ns(&split) / ns(&fused)
+        );
+    }
+
+    write_bench_summary("kernel_microbench", &out);
+    cfg.finish(out);
+}

@@ -49,6 +49,8 @@ struct Row {
     rel_obj: f64,
     /// async rows: staleness-bound discards (τ-tuning diagnostic)
     stale_drops: Option<u64>,
+    /// async rows: merge-layer accounting (objective evals, batching)
+    merge_stats: Option<acf_cd::shard::MergeStats>,
 }
 
 fn rel_diff(a: f64, b: f64) -> f64 {
@@ -62,6 +64,7 @@ fn make_row(
     serial_obj: f64,
     result: SolveResult,
     stale_drops: Option<u64>,
+    merge_stats: Option<acf_cd::shard::MergeStats>,
 ) -> Row {
     Row {
         label: label.to_string(),
@@ -70,15 +73,17 @@ fn make_row(
         rel_obj: rel_diff(serial_obj, result.objective),
         result,
         stale_drops,
+        merge_stats,
     }
 }
 
 /// Run one problem family across both merge modes and all shard counts,
 /// plus the sync determinism and async monotonicity audits. `run` maps a
-/// spec to a sharded outcome (any per-run prep it performs — e.g. the
-/// SVM q_diag — is inside the timed region, matching the serial path);
-/// the single code path keeps the JSON schema identical for every
-/// family, which the CI bench-smoke gate depends on.
+/// spec to a sharded outcome; one-time prep (the LASSO transpose, the
+/// SVM norm cache) is warmed by the caller OUTSIDE every timed region so
+/// serial and sharded timings measure identical work. The single code
+/// path keeps the JSON schema identical for every family, which the CI
+/// bench-smoke gate depends on.
 fn run_family(
     family: &str,
     serial_secs: f64,
@@ -101,7 +106,8 @@ fn run_family(
             };
             println!("S = {label}: {}", o.result.summary());
             let drops = if asynchronous { Some(o.stale_drops) } else { None };
-            rows.push(make_row(&label, &key, seconds, serial.objective, o.result, drops));
+            let stats = if asynchronous { Some(o.merge_stats) } else { None };
+            rows.push(make_row(&label, &key, seconds, serial.objective, o.result, drops, stats));
         }
     }
     let a = run(shard_spec(4, cfg, eps, false)).expect("determinism run failed");
@@ -164,7 +170,26 @@ fn report_family(
         if let Some(drops) = r.stale_drops {
             e.set("stale_drops", Json::Num(drops as f64));
         }
+        if let Some(ms) = r.merge_stats {
+            // batching headline: evals per accepted submission < 1 means
+            // the folded candidates amortized objective evaluations
+            e.set("objective_evals", Json::Num(ms.objective_evals as f64))
+                .set("accepted_submissions", Json::Num(ms.accepted_submissions as f64))
+                .set("rejected_submissions", Json::Num(ms.rejected_submissions as f64))
+                .set("batched_merges", Json::Num(ms.batched_merges as f64))
+                .set("tau_final", Json::Num(ms.staleness_bound_final as f64))
+                .set(
+                    "objective_evals_per_accepted",
+                    Json::Num(ms.objective_evals as f64 / ms.accepted_submissions.max(1) as f64),
+                );
+        }
         fam.set(&r.json_key, e);
+    }
+    // the ISSUE's headline sync↔async delta at the ROADMAP's S = 4 point
+    let sync4 = rows.iter().find(|r| r.json_key == "shards_4");
+    let async4 = rows.iter().find(|r| r.json_key == "async_shards_4");
+    if let (Some(s4), Some(a4)) = (sync4, async4) {
+        fam.set("s4_async_over_sync_speedup", Json::Num(s4.seconds / a4.seconds.max(1e-12)));
     }
     fam.set("deterministic", Json::Bool(deterministic));
     fam.set("async_monotone", Json::Bool(async_monotone));
@@ -253,6 +278,11 @@ fn main() {
             ds.nnz()
         );
 
+        // warm the matrix-level norm cache OUTSIDE every timed region so
+        // the serial baseline and the sharded runs (which all borrow it)
+        // measure identical work — one-time prep must not bias the
+        // CI-gated speedup
+        let _ = ds.x.row_norms_sq();
         let t = acf_cd::util::timer::Timer::start();
         let mut sched =
             AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
@@ -260,10 +290,6 @@ fn main() {
             svm::solve(&ds, c, &mut sched as &mut dyn Scheduler, cfg.solver_config(eps));
         let serial_secs = t.secs();
         println!("serial: {}", serial.summary());
-
-        // ShardedSvm::new computes q_diag (row_norms_sq), which the serial
-        // svm::solve also does inside its timed region — construct inside
-        // the run closure (timed) so both paths pay the same prep cost.
         run_family(
             "svm",
             serial_secs,

@@ -76,6 +76,9 @@ pub struct JobSpec {
     /// reports to the outer ACF) lagging the published version by more
     /// than τ flips are discarded
     pub staleness_bound: u64,
+    /// `--staleness-bound auto`: tune τ online from the observed
+    /// stale-drop/reject rate, starting from `staleness_bound`
+    pub staleness_auto: bool,
 }
 
 impl JobSpec {
@@ -95,6 +98,7 @@ impl JobSpec {
             shard_workers: 0,
             async_merge: false,
             staleness_bound: shard::DEFAULT_STALENESS_BOUND,
+            staleness_auto: false,
         }
     }
 
@@ -107,7 +111,8 @@ impl JobSpec {
         spec.outer_params = self.acf_params;
         spec.workers = self.shard_workers;
         if self.async_merge {
-            spec.merge = MergeMode::Async { staleness_bound: self.staleness_bound };
+            spec.merge =
+                MergeMode::Async { staleness_bound: self.staleness_bound, adaptive: self.staleness_auto };
         }
         spec.config = self.solver_config();
         spec
@@ -162,6 +167,11 @@ pub struct JobOutcome {
     pub w_multi: Option<Vec<Vec<f64>>>,
     /// non-zero coefficient count (LASSO sparsity report)
     pub nnz_coeffs: Option<usize>,
+    /// sharded runs: merge-layer accounting, incl. where an adaptive τ
+    /// landed (`staleness_bound_final`)
+    pub merge_stats: Option<shard::MergeStats>,
+    /// sharded async runs: staleness-bound discards
+    pub stale_drops: Option<u64>,
 }
 
 impl JobOutcome {
@@ -189,7 +199,21 @@ impl JobOutcome {
                     Json::Str(if self.spec.async_merge { "async" } else { "sync" }.into()),
                 );
             if self.spec.async_merge {
-                o.set("staleness_bound", Json::Num(self.spec.staleness_bound as f64));
+                o.set("staleness_bound", Json::Num(self.spec.staleness_bound as f64))
+                    .set("staleness_auto", Json::Bool(self.spec.staleness_auto));
+            }
+            if let Some(ms) = self.merge_stats {
+                o.set("objective_evals", Json::Num(ms.objective_evals as f64))
+                    .set("accepted_submissions", Json::Num(ms.accepted_submissions as f64))
+                    .set("rejected_submissions", Json::Num(ms.rejected_submissions as f64))
+                    .set("batched_merges", Json::Num(ms.batched_merges as f64));
+                if self.spec.async_merge {
+                    // where the (possibly adaptive) τ ended up
+                    o.set("staleness_bound_final", Json::Num(ms.staleness_bound_final as f64));
+                }
+            }
+            if let Some(d) = self.stale_drops {
+                o.set("stale_drops", Json::Num(d as f64));
             }
         }
         o
@@ -207,26 +231,36 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     // `JobSpec::uses_sharded_engine`); everything else falls through to
     // the serial solvers.
     if spec.uses_sharded_engine() {
+        // run through the prepared-problem entry points so the full
+        // ShardedOutcome (merge stats, stale drops, adapted τ) reaches
+        // the job report instead of being dropped by the model wrappers
         match spec.problem {
             Problem::Svm { c } => {
-                let (model, result) = shard::svm::solve_sharded(ds, c, spec.shard_spec())?;
+                let problem = shard::svm::ShardedSvm::new(ds, c);
+                let out = shard::svm::run_prepared(&problem, spec.shard_spec())?;
                 return Ok(JobOutcome {
                     spec: spec.clone(),
-                    result,
-                    w: Some(model.w),
+                    result: out.result,
+                    w: Some(out.shared),
                     w_multi: None,
                     nnz_coeffs: None,
+                    merge_stats: Some(out.merge_stats),
+                    stale_drops: Some(out.stale_drops),
                 });
             }
             Problem::Lasso { lambda } => {
-                let (model, result) = shard::lasso::solve_sharded(ds, lambda, spec.shard_spec())?;
+                let problem = shard::lasso::ShardedLasso::new(ds, lambda);
+                let out = shard::lasso::run_prepared(&problem, spec.shard_spec())?;
+                let model = solvers::lasso::LassoModel { w: out.values, lambda };
                 let k = solvers::lasso::nnz_coefficients(&model);
                 return Ok(JobOutcome {
                     spec: spec.clone(),
-                    result,
+                    result: out.result,
                     w: Some(model.w),
                     w_multi: None,
                     nnz_coeffs: Some(k),
+                    merge_stats: Some(out.merge_stats),
+                    stale_drops: Some(out.stale_drops),
                 });
             }
             _ => unreachable!("uses_sharded_engine restricts to svm/lasso"),
@@ -258,6 +292,8 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 w: Some(model.w),
                 w_multi: None,
                 nnz_coeffs: None,
+                merge_stats: None,
+                stale_drops: None,
             }
         }
         Problem::SvmShrinking { c } => {
@@ -269,6 +305,8 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 w: Some(model.w),
                 w_multi: None,
                 nnz_coeffs: None,
+                merge_stats: None,
+                stale_drops: None,
             }
         }
         Problem::Lasso { lambda } => {
@@ -281,6 +319,8 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 w: Some(model.w),
                 w_multi: None,
                 nnz_coeffs: Some(k),
+                merge_stats: None,
+                stale_drops: None,
             }
         }
         Problem::LogReg { c } => {
@@ -292,6 +332,8 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 w: Some(model.w),
                 w_multi: None,
                 nnz_coeffs: None,
+                merge_stats: None,
+                stale_drops: None,
             }
         }
         Problem::McSvm { c } => {
@@ -303,6 +345,8 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 w: None,
                 w_multi: Some(model.w),
                 nnz_coeffs: None,
+                merge_stats: None,
+                stale_drops: None,
             }
         }
     })
@@ -392,6 +436,23 @@ mod tests {
         let j = out.to_json();
         assert_eq!(j.get("merge").unwrap().as_str(), Some("async"));
         assert_eq!(j.get("staleness_bound").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("staleness_auto").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn async_sharded_job_with_adaptive_tau_runs() {
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 4;
+        spec.async_merge = true;
+        spec.staleness_auto = true;
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let j = out.to_json();
+        assert_eq!(j.get("staleness_auto").unwrap().as_bool(), Some(true));
+        // the adapted τ is observable from the job report
+        let tau = j.get("staleness_bound_final").unwrap().as_usize().unwrap();
+        assert!(tau >= 1, "adapted τ must stay positive, got {tau}");
+        assert!(j.get("objective_evals").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

@@ -31,6 +31,12 @@
 //! coordinator's *validation* path (objective audits, accuracy); the CD
 //! iteration hot loop is pure Rust.
 //!
+//! Hot path: every CD step runs on the [`sparse::kernels`] layer —
+//! 4-way unrolled, `get_unchecked` gather/scatter with a fused
+//! dot+update+scatter `step` (safety restored by an O(1) bound check on
+//! the strictly-increasing CSR row indices); per-row norms are computed
+//! once and cached on the matrix ([`sparse::Csr::row_norms_sq`]).
+//!
 //! Scaling axis: [`shard`] partitions the coordinate set into S shards,
 //! runs an inner ACF scheduler per shard on a persistent worker pool,
 //! and adapts shard visit frequencies with an *outer* ACF instance —

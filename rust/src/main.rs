@@ -71,8 +71,10 @@ fn print_help() {
          async merge:  --async-merge drops the per-epoch barrier: workers\n\
          \u{20}             snapshot versioned shared-state buffers and a\n\
          \u{20}             merger publishes monotone flips (fast, but not\n\
-         \u{20}             bit-deterministic); --staleness-bound <t> caps how\n\
-         \u{20}             many versions a merge/Δf report may lag (default 2)\n\
+         \u{20}             bit-deterministic); --staleness-bound <t|auto> caps\n\
+         \u{20}             how many versions a merge/Δf report may lag\n\
+         \u{20}             (default 2; 'auto' tunes τ online from the observed\n\
+         \u{20}             stale-drop/reject rate)\n\
          run `cargo bench` for the paper's tables/figures and\n\
          `cargo bench --bench scaling_shards` for the shard-scaling curve."
     );
@@ -120,8 +122,19 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
     // a sharded sweep would otherwise square the thread count
     spec.shard_workers = args.usize_or("shard-workers", 0)?;
     spec.async_merge = args.bool_or("async-merge", false)?;
-    spec.staleness_bound =
-        args.u64_or("staleness-bound", acf_cd::shard::DEFAULT_STALENESS_BOUND)?;
+    // --staleness-bound <n|auto>: a number fixes τ, "auto" tunes it
+    // online from the observed stale-drop/reject rate
+    match args.get("staleness-bound") {
+        Some(v) if v.eq_ignore_ascii_case("auto") => spec.staleness_auto = true,
+        Some(v) => {
+            spec.staleness_bound =
+                v.parse().map_err(|_| anyhow!("--staleness-bound: expected an integer or 'auto'"))?;
+        }
+        None => {}
+    }
+    if !spec.async_merge && args.has("staleness-bound") {
+        eprintln!("note: --staleness-bound applies only with --async-merge; the flag is inert here");
+    }
     Ok(spec)
 }
 
@@ -140,7 +153,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             "sharded engine: {} shards, {} partition, {} merge",
             spec.shards,
             spec.partitioner.name(),
-            if spec.async_merge {
+            if spec.async_merge && spec.staleness_auto {
+                format!("async (staleness bound auto, from {})", spec.staleness_bound)
+            } else if spec.async_merge {
                 format!("async (staleness bound {})", spec.staleness_bound)
             } else {
                 "synchronized".to_string()
@@ -157,6 +172,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(k) = out.nnz_coeffs {
         println!("non-zero coefficients: {k}");
+    }
+    if let Some(ms) = &out.merge_stats {
+        let tau = if spec.async_merge {
+            format!(", final staleness bound {}", ms.staleness_bound_final)
+        } else {
+            String::new()
+        };
+        println!(
+            "merge stats: {} objective evals, {} accepted / {} rejected submissions, {} batched folds{tau}",
+            ms.objective_evals, ms.accepted_submissions, ms.rejected_submissions, ms.batched_merges
+        );
     }
     // Optional cross-stack audit through the AOT/PJRT validator.
     if args.has("validate") {

@@ -67,13 +67,29 @@
 //!    the worker rolls back to its pre-epoch values before re-reading a
 //!    fresh snapshot.
 //!
+//! **Batched merging** — before evaluating anything, the merger drains
+//! every submission already sitting in its queue and folds the fresh
+//! ones into a *single* additive candidate, paying **one**
+//! `shared_objective` evaluation for the whole batch (sound for the same
+//! linearity reason as staleness-tolerance, below). Only if the folded
+//! candidate would increase the objective does it fall back to the
+//! per-submission three-tier protocol. On many-shard runs, where the
+//! merger is the contended resource, this cuts objective evaluations
+//! per accepted submission below 1.
+//!
 //! A submission whose base version lags the published version by more
 //! than the **staleness bound τ** (the `staleness_bound` field of
 //! [`MergeMode::Async`]) is discarded outright, and — per the
 //! bounded-staleness contract for
 //! the outer ACF — its Δf report is *not* fed to the outer preference
 //! update (Algorithm 2 stays driven by sufficiently fresh progress
-//! only). State consistency survives staleness exactly: the shared state
+//! only). With `adaptive: true` (CLI `--staleness-bound auto`) τ is
+//! tuned online from the observed stale-drop/reject rates: objective
+//! rejections shrink it (tolerated staleness is letting conflicting
+//! work through), stale-drop waves and fully clean windows grow it
+//! (capped at 2·S) — the opposing pulls keep the controller from
+//! pinning τ at the floor and starving slow shards. State consistency
+//! survives staleness exactly: the shared state
 //! is linear in the coordinate values and each coordinate is owned by
 //! exactly one shard, so applying shard k's delta `L(trial_k − values_k)`
 //! to a *newer* published state still yields the shared state of the
@@ -118,7 +134,120 @@ pub enum MergeMode {
         /// staleness bound τ: submissions (and their Δf reports to the
         /// outer ACF) older than τ published versions are discarded
         staleness_bound: u64,
+        /// tune τ online (`--staleness-bound auto`): objective
+        /// rejections shrink τ (stale work conflicting), stale-drop
+        /// waves and clean windows grow it (bound choking throughput /
+        /// room to relax). The `staleness_bound` field is then the
+        /// *initial* τ.
+        adaptive: bool,
     },
+}
+
+/// Merge-layer accounting of one sharded run. The async merger fills all
+/// fields; the sync path reports its exact-objective evaluations only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// exact `shared_objective` evaluations performed by the merger —
+    /// the denominator of the batching win (per-submission merging pays
+    /// ≥ 1 per accepted submission; batched merging amortizes one
+    /// evaluation over every submission folded into the candidate)
+    pub objective_evals: u64,
+    /// submissions folded into accepted publishes (additive or damped)
+    pub accepted_submissions: u64,
+    /// submissions rejected by the exact objective check
+    pub rejected_submissions: u64,
+    /// accepted publishes that folded ≥ 2 submissions into one additive
+    /// candidate (one objective evaluation for the whole batch)
+    pub batched_merges: u64,
+    /// staleness bound τ when the run finished (moves under
+    /// `--staleness-bound auto`, equals the configured τ otherwise;
+    /// 0 in sync mode, which has no staleness)
+    pub staleness_bound_final: u64,
+}
+
+/// Submissions observed between τ adaptation decisions.
+const TAU_ADAPT_WINDOW: u64 = 16;
+
+/// Fraction threshold for τ moves (numerator/denominator of the
+/// comparison `count * TAU_FRAC_DEN > seen * TAU_FRAC_NUM`, i.e. 25 %).
+const TAU_FRAC_NUM: u64 = 1;
+const TAU_FRAC_DEN: u64 = 4;
+
+/// How one merged submission ended, as seen by the τ controller.
+#[derive(Clone, Copy, Debug)]
+enum TauSignal {
+    Accepted,
+    /// rejected by the exact objective check: tolerated staleness let
+    /// conflicting work through — τ is too loose
+    Rejected,
+    /// discarded for exceeding τ: the bound is discarding throughput —
+    /// τ is too tight
+    Stale,
+}
+
+/// Online staleness-bound tuning (ROADMAP "adaptive staleness bound"),
+/// from the observed stale-drop/reject rates over fixed-size windows.
+/// The two failure signals pull in *opposite* directions, which keeps
+/// the controller self-stabilizing: a window with > 25 % objective
+/// rejections shrinks τ (merging stale work degrades quality); otherwise
+/// a window with > 25 % stale drops grows τ (the bound is wasting worker
+/// epochs — shrinking on drops would feed back into more drops and pin
+/// τ at the floor, starving slow shards); a perfectly clean window also
+/// grows τ; anything else holds. Fixed bounds ignore observations.
+struct TauController {
+    tau: u64,
+    adaptive: bool,
+    min: u64,
+    max: u64,
+    seen: u64,
+    rejected: u64,
+    stale: u64,
+}
+
+impl TauController {
+    fn new(initial: u64, adaptive: bool, s_count: usize) -> TauController {
+        TauController {
+            tau: initial,
+            adaptive,
+            min: initial.min(1),
+            // more staleness than two full rounds of shards can never
+            // help; also never clamp an explicitly larger initial τ
+            max: (2 * s_count as u64).max(4).max(initial),
+            seen: 0,
+            rejected: 0,
+            stale: 0,
+        }
+    }
+
+    #[inline]
+    fn current(&self) -> u64 {
+        self.tau
+    }
+
+    /// Record one merge outcome.
+    fn observe(&mut self, signal: TauSignal) {
+        if !self.adaptive {
+            return;
+        }
+        self.seen += 1;
+        match signal {
+            TauSignal::Accepted => {}
+            TauSignal::Rejected => self.rejected += 1,
+            TauSignal::Stale => self.stale += 1,
+        }
+        if self.seen >= TAU_ADAPT_WINDOW {
+            let frac = |count: u64| count * TAU_FRAC_DEN > self.seen * TAU_FRAC_NUM;
+            if frac(self.rejected) {
+                self.tau = self.tau.saturating_sub(1).max(self.min);
+            } else if (frac(self.stale) || self.rejected + self.stale == 0) && self.tau < self.max
+            {
+                self.tau += 1;
+            }
+            self.seen = 0;
+            self.rejected = 0;
+            self.stale = 0;
+        }
+    }
 }
 
 /// Configuration of a sharded run.
@@ -168,9 +297,18 @@ impl ShardSpec {
         self
     }
 
-    /// Select the asynchronous merge with the given staleness bound τ.
+    /// Select the asynchronous merge with the given fixed staleness
+    /// bound τ.
     pub fn with_async(mut self, staleness_bound: u64) -> ShardSpec {
-        self.merge = MergeMode::Async { staleness_bound };
+        self.merge = MergeMode::Async { staleness_bound, adaptive: false };
+        self
+    }
+
+    /// Select the asynchronous merge with τ tuned online from the
+    /// observed stale-drop/reject rate (`--staleness-bound auto`),
+    /// starting from [`DEFAULT_STALENESS_BOUND`].
+    pub fn with_async_auto(mut self) -> ShardSpec {
+        self.merge = MergeMode::Async { staleness_bound: DEFAULT_STALENESS_BOUND, adaptive: true };
         self
     }
 }
@@ -236,8 +374,11 @@ pub struct ShardedOutcome {
     pub outer_probabilities: Vec<f64>,
     /// async mode: submissions discarded for exceeding the staleness
     /// bound τ (always 0 in sync mode). The observed drop rate is the
-    /// input for tuning τ.
+    /// input the adaptive τ controller consumes.
     pub stale_drops: u64,
+    /// merge-layer accounting (objective evaluations, batched folds,
+    /// final τ) — see [`MergeStats`]
+    pub merge_stats: MergeStats,
 }
 
 /// Per-shard mutable state. Behind a `Mutex` so pool workers can claim
@@ -330,6 +471,10 @@ struct Submission {
     sep_trial: f64,
     /// separable objective of this shard at θ = 1/S (damped values)
     sep_damped: f64,
+    /// the shard's own summed per-step Δf claims over the local epoch
+    /// (possibly stale-based); used to apportion a batched fold's
+    /// achieved decrease across its members for the outer ACF
+    claimed: f64,
     window_viol: f64,
     counter: OpCounter,
 }
@@ -452,6 +597,198 @@ fn dispatch_shard(
     ready.push(k);
 }
 
+/// One trace sample from the driving thread's authoritative metrics
+/// (shared by the sync epoch loop and both async accept paths).
+fn trace_point(trace: &mut Trace, counter: &OpCounter, timer: &Timer, objective: f64, violation: f64) {
+    trace.push(TracePoint {
+        iteration: counter.iterations(),
+        ops: counter.ops(),
+        seconds: timer.secs(),
+        objective,
+        violation,
+    });
+}
+
+/// Outcome of merging one submission.
+enum MergeOutcome {
+    /// discarded for exceeding the staleness bound: no publish, and no
+    /// Δf report to the outer ACF
+    Stale,
+    /// rejected by the exact objective check: no publish; the outer ACF
+    /// is told the shard burned its steps (Δf report 0)
+    Rejected,
+    /// accepted (additively or damped) and published; report `rate`
+    /// (achieved decrease per step) to the outer ACF
+    Accepted { apply: Apply, rate: f64 },
+}
+
+/// The async merger's authoritative state plus the merge tiers. Pulled
+/// out of `async_loop` so the per-submission path and the batched fold
+/// share one implementation of candidate evaluation, publishing and
+/// bookkeeping.
+struct Merger<'e, P: ShardProblem> {
+    problem: &'e P,
+    published: &'e PublishSlot,
+    theta: f64,
+    dim: usize,
+    /// retired-buffer pool cap (shards + slack)
+    max_retired: usize,
+    /// authoritative shared state (exactly-evaluated objective)
+    cur: Vec<f64>,
+    scratch: Vec<f64>,
+    version: u64,
+    /// published versions (reported as epochs)
+    merges: u64,
+    retired: Vec<Arc<Vec<f64>>>,
+    /// per-shard separable objective at the accepted values
+    sep: Vec<f64>,
+    sep_total: f64,
+    f_cur: f64,
+    stats: MergeStats,
+    tau: TauController,
+    stale_drops: u64,
+}
+
+impl<'e, P: ShardProblem> Merger<'e, P> {
+    #[inline]
+    fn tol(&self) -> f64 {
+        1e-12 * self.f_cur.abs().max(1.0)
+    }
+
+    /// Version flip: publish `self.cur` under the next version number.
+    fn publish_current(&mut self) {
+        self.version += 1;
+        self.merges += 1;
+        let mut buf = take_spare(&mut self.retired).unwrap_or_else(|| Vec::with_capacity(self.dim));
+        buf.clear();
+        buf.extend_from_slice(&self.cur);
+        let old = self.published.publish(self.version, Arc::new(buf));
+        self.retired.push(old);
+        if self.retired.len() > self.max_retired {
+            self.retired.remove(0);
+        }
+    }
+
+    /// Bounded-staleness gate; a positive answer counts the drop and
+    /// feeds the adaptive τ controller.
+    fn is_stale(&mut self, sub: &Submission) -> bool {
+        if self.version.saturating_sub(sub.base_version) > self.tau.current() {
+            self.stale_drops += 1;
+            self.tau.observe(TauSignal::Stale);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Per-submission three-tier merge: additive → averaged → rejected,
+    /// each candidate evaluated exactly. Re-checks staleness because
+    /// earlier accepts from the same drained batch advance the version.
+    fn merge_one(&mut self, sub: &Submission) -> MergeOutcome {
+        if self.is_stale(sub) {
+            return MergeOutcome::Stale;
+        }
+        let p = self.problem;
+        let k = sub.shard;
+        let steps = sub.counter.iterations().max(1);
+        let tol = self.tol();
+        // tier 1: additive candidate, evaluated exactly (one fused pass
+        // — the merger is the serial bottleneck)
+        crate::sparse::kernels::scaled_sum_into(&mut self.scratch, &self.cur, 1.0, &sub.delta);
+        self.stats.objective_evals += 1;
+        let f_add = p.shared_objective(&self.scratch) + (self.sep_total - self.sep[k] + sub.sep_trial);
+        if f_add <= self.f_cur + tol {
+            std::mem::swap(&mut self.cur, &mut self.scratch);
+            self.sep_total += sub.sep_trial - self.sep[k];
+            self.sep[k] = sub.sep_trial;
+            let achieved = self.f_cur - f_add;
+            self.f_cur = f_add;
+            self.stats.accepted_submissions += 1;
+            self.tau.observe(TauSignal::Accepted);
+            self.publish_current();
+            return MergeOutcome::Accepted { apply: Apply::Accept, rate: (achieved / steps as f64).max(0.0) };
+        }
+        // tier 2: averaged candidate θ = 1/S — convexity no longer binds
+        // under staleness, so this tier is checked rather than trusted
+        crate::sparse::kernels::scaled_sum_into(&mut self.scratch, &self.cur, self.theta, &sub.delta);
+        self.stats.objective_evals += 1;
+        let f_damp = p.shared_objective(&self.scratch) + (self.sep_total - self.sep[k] + sub.sep_damped);
+        if f_damp <= self.f_cur + tol {
+            std::mem::swap(&mut self.cur, &mut self.scratch);
+            self.sep_total += sub.sep_damped - self.sep[k];
+            self.sep[k] = sub.sep_damped;
+            let achieved = self.f_cur - f_damp;
+            self.f_cur = f_damp;
+            self.stats.accepted_submissions += 1;
+            self.tau.observe(TauSignal::Accepted);
+            self.publish_current();
+            return MergeOutcome::Accepted { apply: Apply::Damp, rate: (achieved / steps as f64).max(0.0) };
+        }
+        // tier 3: reject — the shard burned its steps
+        self.stats.rejected_submissions += 1;
+        self.tau.observe(TauSignal::Rejected);
+        MergeOutcome::Rejected
+    }
+
+    /// Batched additive fold (ROADMAP "batched async merging"): sum every
+    /// fresh delta into **one** candidate and evaluate `shared_objective`
+    /// **once** for the whole batch. Sound because each coordinate is
+    /// owned by exactly one shard and the shared state is linear in the
+    /// coordinate values, so summed deltas equal the sequential
+    /// application of every shard's update (up to fp rounding). On
+    /// acceptance returns one outer-ACF progress rate per batch member
+    /// (the achieved decrease apportioned by each shard's claimed Δf, so
+    /// per-shard attribution survives batching); `None` sends the caller
+    /// to per-submission fallback.
+    fn merge_batch(&mut self, batch: &[Submission]) -> Option<Vec<f64>> {
+        debug_assert!(batch.len() >= 2);
+        let p = self.problem;
+        // scratch = cur + Σ deltas: the first delta rides the fused
+        // copy pass, the rest accumulate with the unrolled axpy
+        crate::sparse::kernels::scaled_sum_into(&mut self.scratch, &self.cur, 1.0, &batch[0].delta);
+        for sub in &batch[1..] {
+            crate::sparse::ops::axpy(1.0, &sub.delta, &mut self.scratch);
+        }
+        let mut sep_delta = 0.0f64;
+        let mut claimed_total = 0.0f64;
+        for sub in batch {
+            // each shard has at most one outstanding submission, so the
+            // sep replacement below never sees the same shard twice
+            sep_delta += sub.sep_trial - self.sep[sub.shard];
+            claimed_total += sub.claimed;
+        }
+        self.stats.objective_evals += 1;
+        let f_add = p.shared_objective(&self.scratch) + self.sep_total + sep_delta;
+        if f_add > self.f_cur + self.tol() {
+            return None;
+        }
+        std::mem::swap(&mut self.cur, &mut self.scratch);
+        self.sep_total += sep_delta;
+        let achieved = self.f_cur - f_add;
+        self.f_cur = f_add;
+        let rates = batch
+            .iter()
+            .map(|sub| {
+                let steps = sub.counter.iterations().max(1);
+                let share = if claimed_total > 0.0 {
+                    sub.claimed / claimed_total
+                } else {
+                    1.0 / batch.len() as f64
+                };
+                (achieved * share / steps as f64).max(0.0)
+            })
+            .collect();
+        for sub in batch {
+            self.sep[sub.shard] = sub.sep_trial;
+            self.stats.accepted_submissions += 1;
+            self.tau.observe(TauSignal::Accepted);
+        }
+        self.stats.batched_merges += 1;
+        self.publish_current();
+        Some(rates)
+    }
+}
+
 /// Shutdown-on-drop guards so no exit path can leave pool workers parked
 /// forever (which would deadlock the enclosing `thread::scope`).
 struct PoolGuard<'a>(&'a RoundPool);
@@ -502,7 +839,9 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
     pub fn run(&self) -> Result<ShardedOutcome> {
         match self.spec.merge {
             MergeMode::Sync => self.run_sync(),
-            MergeMode::Async { staleness_bound } => self.run_async(staleness_bound),
+            MergeMode::Async { staleness_bound, adaptive } => {
+                self.run_async(staleness_bound, adaptive)
+            }
         }
     }
 
@@ -710,6 +1049,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let mut status = SolveStatus::IterLimit;
         let mut final_viol = f64::INFINITY;
         let mut last_failed_verify: Option<u64> = None;
+        let mut stats = MergeStats::default();
 
         let mut sum_diff = vec![0.0f64; dim];
         let mut trial_shared = vec![0.0f64; dim];
@@ -787,6 +1127,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 })
                 .collect::<Result<_>>()?;
             let f_full = p.shared_objective(&trial_shared) + sep_trial.iter().sum::<f64>();
+            stats.objective_evals += 1;
             let tol = 1e-12 * f_curr.abs().max(1.0);
             if f_full <= f_curr + tol {
                 // additive merge accepted
@@ -798,6 +1139,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     sep[k] = sep_trial[k];
                 }
                 f_curr = f_full;
+                stats.accepted_submissions += s_count as u64;
+                stats.batched_merges += 1;
             } else {
                 // averaged merge θ = 1/S: never increases f (convexity)
                 let theta = 1.0 / s_count as f64;
@@ -815,6 +1158,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     sep[k] = sk;
                 }
                 f_curr = p.shared_objective(shared) + sep.iter().sum::<f64>();
+                stats.objective_evals += 1;
+                stats.accepted_submissions += s_count as u64;
             }
             drop(ctx_g);
 
@@ -834,13 +1179,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 .map(|r| r.window_viol)
                 .fold(0.0f64, f64::max);
             if cfg.trace_every > 0 {
-                trace.push(TracePoint {
-                    iteration: counter.iterations(),
-                    ops: counter.ops(),
-                    seconds: timer.secs(),
-                    objective: f_curr,
-                    violation: window_viol,
-                });
+                trace_point(&mut trace, &counter, &timer, f_curr, window_viol);
             }
 
             // ---- stopping --------------------------------------------
@@ -893,6 +1232,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             result,
             outer_probabilities: outer_prefs.probabilities(),
             stale_drops: 0,
+            merge_stats: stats,
         })
     }
 
@@ -956,6 +1296,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 st.trial.copy_from_slice(&st.values);
                 let mut counter = OpCounter::new();
                 let mut viol = 0.0f64;
+                let mut claimed = 0.0f64;
                 for _ in 0..quota {
                     let kk = st.sched.next();
                     let i = st.ids[kk] as usize;
@@ -964,6 +1305,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     // (possibly stale-based) per-step Δf; the *outer*
                     // level is fed the merger's achieved decrease instead
                     st.sched.report(kk, out.delta_f.max(0.0));
+                    claimed += out.delta_f.max(0.0);
                     viol = viol.max(out.violation);
                     counter.step(out.ops);
                 }
@@ -985,6 +1327,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     delta,
                     sep_trial,
                     sep_damped,
+                    claimed,
                     window_viol: viol,
                     counter,
                 })
@@ -992,7 +1335,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         }
     }
 
-    fn run_async(&self, tau: u64) -> Result<ShardedOutcome> {
+    fn run_async(&self, tau: u64, adaptive: bool) -> Result<ShardedOutcome> {
         let p = self.problem;
         let s_count = self.partition.n_shards();
         let dim = p.shared_dim();
@@ -1029,7 +1372,9 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     }
                 });
             }
-            self.async_loop(tau, theta, cfg, &states, &published, &ready, &msgs, &directives)
+            self.async_loop(
+                tau, adaptive, theta, cfg, &states, &published, &ready, &msgs, &directives,
+            )
         })
     }
 
@@ -1040,6 +1385,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
     fn async_loop(
         &self,
         tau: u64,
+        adaptive: bool,
         theta: f64,
         cfg: &SolverConfig,
         states: &[Mutex<ShardState>],
@@ -1064,26 +1410,43 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         };
 
         // ---- merger state --------------------------------------------
-        let mut cur = p.initial_shared();
-        let mut scratch = vec![0.0f64; dim];
-        let mut version = 0u64;
-        let mut retired: Vec<Arc<Vec<f64>>> = Vec::new();
-        let mut sep = self.initial_sep(states)?;
-        let mut sep_total: f64 = sep.iter().sum();
-        let mut f_cur = p.shared_objective(&cur) + sep_total;
+        let sep = self.initial_sep(states)?;
+        let sep_total: f64 = sep.iter().sum();
+        let cur = p.initial_shared();
+        let f_cur = p.shared_objective(&cur) + sep_total;
+        let mut mg = Merger {
+            problem: p,
+            published,
+            theta,
+            dim,
+            max_retired: s_count + 4,
+            scratch: vec![0.0f64; dim],
+            cur,
+            version: 0,
+            merges: 0,
+            retired: Vec::new(),
+            sep,
+            sep_total,
+            f_cur,
+            stats: MergeStats::default(),
+            tau: TauController::new(tau, adaptive, s_count),
+            stale_drops: 0,
+        };
 
         let mut counter = OpCounter::new();
         let timer = Timer::start();
         let mut trace = Trace::new();
-        let mut merges = 0u64; // published versions (reported as epochs)
-        let mut stale_drops = 0u64;
         let mut last_viol = vec![f64::INFINITY; s_count];
         let mut last_failed_verify: Option<u64> = None;
+        let mut next_refresh = 64u64;
 
         let mut draining: Option<Drain> = None;
         let mut parked = 0usize;
         let mut verified = 0usize;
         let mut verify_viol = 0.0f64;
+        // non-epoch messages deferred while draining a merge batch from
+        // the queue; processed before the queue is polled again
+        let mut pending: std::collections::VecDeque<AsyncMsg> = std::collections::VecDeque::new();
 
         // ---- kick-off: every shard gets a first epoch ----------------
         for k in 0..s_count {
@@ -1101,20 +1464,24 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         }
 
         let (status, final_viol) = loop {
-            let msg = match msgs.pop_timeout(Duration::from_millis(50)) {
-                Pop::Item(m) => m,
-                Pop::TimedOut => {
-                    let over_time = match cfg.max_seconds {
-                        Some(cap) => timer.secs() > cap,
-                        None => false,
-                    };
-                    if over_time && draining.is_none() {
-                        draining = Some(Drain::Time);
+            let msg = if let Some(m) = pending.pop_front() {
+                m
+            } else {
+                match msgs.pop_timeout(Duration::from_millis(50)) {
+                    Pop::Item(m) => m,
+                    Pop::TimedOut => {
+                        let over_time = match cfg.max_seconds {
+                            Some(cap) => timer.secs() > cap,
+                            None => false,
+                        };
+                        if over_time && draining.is_none() {
+                            draining = Some(Drain::Time);
+                        }
+                        continue;
                     }
-                    continue;
-                }
-                Pop::Shutdown => {
-                    return Err(Error::msg("async merge queue shut down unexpectedly"))
+                    Pop::Shutdown => {
+                        return Err(Error::msg("async merge queue shut down unexpectedly"))
+                    }
                 }
             };
             match msg {
@@ -1154,7 +1521,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                             Drain::Time => break (SolveStatus::TimeLimit, verify_viol),
                             Drain::Converge => {
                                 // stale-window false positive: resume
-                                last_failed_verify = Some(merges);
+                                last_failed_verify = Some(mg.merges);
                                 for k in 0..s_count {
                                     dispatch_shard(
                                         k,
@@ -1172,80 +1539,80 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         }
                     }
                 }
-                AsyncMsg::Epoch(sub) => {
-                    counter.merge(&sub.counter);
-                    let k = sub.shard;
-                    last_viol[k] = sub.window_viol;
-                    let staleness = version.saturating_sub(sub.base_version);
-                    let steps = sub.counter.iterations().max(1);
-                    let mut apply = Apply::Reject;
-                    if staleness > tau {
-                        // bounded staleness: discard the delta AND the Δf
-                        // report — the outer ACF only consumes
-                        // sufficiently fresh progress
-                        stale_drops += 1;
-                    } else {
-                        let tol = 1e-12 * f_cur.abs().max(1.0);
-                        // tier 1: additive candidate, evaluated exactly
-                        for t in 0..dim {
-                            scratch[t] = cur[t] + sub.delta[t];
+                AsyncMsg::Epoch(first) => {
+                    // ---- batched merging: drain every already-queued
+                    // submission into one candidate (non-epoch messages
+                    // are deferred; per-shard ordering is preserved since
+                    // each shard has at most one outstanding message) ---
+                    let mut batch = vec![first];
+                    while batch.len() < s_count {
+                        match msgs.try_pop() {
+                            Some(AsyncMsg::Epoch(sub)) => batch.push(sub),
+                            Some(other) => pending.push_back(other),
+                            None => break,
                         }
-                        let f_add =
-                            p.shared_objective(&scratch) + (sep_total - sep[k] + sub.sep_trial);
-                        if f_add <= f_cur + tol {
-                            std::mem::swap(&mut cur, &mut scratch);
-                            sep_total += sub.sep_trial - sep[k];
-                            sep[k] = sub.sep_trial;
-                            let achieved = f_cur - f_add;
-                            f_cur = f_add;
-                            apply = Apply::Accept;
-                            outer_prefs.update(k, (achieved / steps as f64).max(0.0));
+                    }
+                    for sub in &batch {
+                        counter.merge(&sub.counter);
+                        last_viol[sub.shard] = sub.window_viol;
+                    }
+
+                    // bounded staleness first: discard the delta AND the
+                    // Δf report — the outer ACF only consumes
+                    // sufficiently fresh progress
+                    let mut decisions: Vec<(usize, Apply, Vec<f64>)> = Vec::with_capacity(batch.len());
+                    let mut fresh: Vec<Submission> = Vec::with_capacity(batch.len());
+                    for sub in batch {
+                        if mg.is_stale(&sub) {
+                            decisions.push((sub.shard, Apply::Reject, sub.delta));
                         } else {
-                            // tier 2: averaged candidate θ = 1/S
-                            for t in 0..dim {
-                                scratch[t] = cur[t] + theta * sub.delta[t];
-                            }
-                            let f_damp = p.shared_objective(&scratch)
-                                + (sep_total - sep[k] + sub.sep_damped);
-                            if f_damp <= f_cur + tol {
-                                std::mem::swap(&mut cur, &mut scratch);
-                                sep_total += sub.sep_damped - sep[k];
-                                sep[k] = sub.sep_damped;
-                                let achieved = f_cur - f_damp;
-                                f_cur = f_damp;
-                                apply = Apply::Damp;
-                                outer_prefs.update(k, (achieved / steps as f64).max(0.0));
-                            } else {
-                                // tier 3: reject — the shard burned its
-                                // steps, tell the outer ACF so
-                                outer_prefs.update(k, 0.0);
-                            }
+                            fresh.push(sub);
                         }
-                        if matches!(apply, Apply::Accept | Apply::Damp) {
-                            version += 1;
-                            merges += 1;
-                            let mut buf = take_spare(&mut retired)
-                                .unwrap_or_else(|| Vec::with_capacity(dim));
-                            buf.clear();
-                            buf.extend_from_slice(&cur);
-                            let old = published.publish(version, Arc::new(buf));
-                            retired.push(old);
-                            if retired.len() > s_count + 4 {
-                                retired.remove(0);
-                            }
-                            if merges % 64 == 0 {
-                                outer_prefs.refresh_sum();
-                            }
-                            if cfg.trace_every > 0 {
-                                trace.push(TracePoint {
-                                    iteration: counter.iterations(),
-                                    ops: counter.ops(),
-                                    seconds: timer.secs(),
-                                    objective: f_cur,
-                                    violation: sub.window_viol,
-                                });
-                            }
+                    }
+
+                    // one additive fold for the whole batch (one exact
+                    // objective evaluation); per-submission three-tier
+                    // fallback when the fold is rejected
+                    let batched_rate = if fresh.len() >= 2 { mg.merge_batch(&fresh) } else { None };
+                    if let Some(rates) = batched_rate {
+                        if cfg.trace_every > 0 {
+                            let viol = fresh.iter().map(|s| s.window_viol).fold(0.0f64, f64::max);
+                            trace_point(&mut trace, &counter, &timer, mg.f_cur, viol);
                         }
+                        for (sub, rate) in fresh.drain(..).zip(rates) {
+                            outer_prefs.update(sub.shard, rate);
+                            decisions.push((sub.shard, Apply::Accept, sub.delta));
+                        }
+                    } else {
+                        for sub in fresh.drain(..) {
+                            let apply = match mg.merge_one(&sub) {
+                                MergeOutcome::Accepted { apply, rate } => {
+                                    outer_prefs.update(sub.shard, rate);
+                                    if cfg.trace_every > 0 {
+                                        trace_point(
+                                            &mut trace,
+                                            &counter,
+                                            &timer,
+                                            mg.f_cur,
+                                            sub.window_viol,
+                                        );
+                                    }
+                                    apply
+                                }
+                                MergeOutcome::Rejected => {
+                                    // tell the outer ACF the shard burned
+                                    // its steps
+                                    outer_prefs.update(sub.shard, 0.0);
+                                    Apply::Reject
+                                }
+                                MergeOutcome::Stale => Apply::Reject,
+                            };
+                            decisions.push((sub.shard, apply, sub.delta));
+                        }
+                    }
+                    while mg.merges >= next_refresh {
+                        outer_prefs.refresh_sum();
+                        next_refresh += 64;
                     }
 
                     // ---- convergence / budget / time checks ----------
@@ -1258,7 +1625,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                             draining = Some(Drain::Time);
                         } else {
                             let cooled = match last_failed_verify {
-                                Some(at) => merges >= at + VERIFY_COOLDOWN * s_count as u64,
+                                Some(at) => mg.merges >= at + VERIFY_COOLDOWN * s_count as u64,
                                 None => true,
                             };
                             if cooled && last_viol.iter().all(|&v| v < cfg.eps) {
@@ -1267,18 +1634,20 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         }
                     }
 
-                    // ---- respond: merge decision + next assignment ---
-                    dispatch_shard(
-                        k,
-                        apply,
-                        Some(sub.delta),
-                        &self.partition,
-                        &outer_prefs,
-                        &mut quotas,
-                        &mut draining,
-                        directives,
-                        ready,
-                    );
+                    // ---- respond: merge decisions + next assignments --
+                    for (k, apply, delta) in decisions {
+                        dispatch_shard(
+                            k,
+                            apply,
+                            Some(delta),
+                            &self.partition,
+                            &outer_prefs,
+                            &mut quotas,
+                            &mut draining,
+                            directives,
+                            ready,
+                        );
+                    }
                 }
             }
         };
@@ -1290,17 +1659,19 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             iterations: counter.iterations(),
             ops: counter.ops(),
             seconds: timer.secs(),
-            objective: f_cur,
+            objective: mg.f_cur,
             final_violation: final_viol,
-            epochs: merges,
+            epochs: mg.merges,
             trace,
         };
+        mg.stats.staleness_bound_final = mg.tau.current();
         Ok(ShardedOutcome {
             values,
-            shared: cur,
+            shared: mg.cur,
             result,
             outer_probabilities: outer_prefs.probabilities(),
-            stale_drops,
+            stale_drops: mg.stale_drops,
+            merge_stats: mg.stats,
         })
     }
 }
@@ -1421,5 +1792,109 @@ mod tests {
         let asy = ShardedDriver::new(&p, spec(1).with_async(0)).run().unwrap();
         assert!(sync.result.status.converged() && asy.result.status.converged());
         assert_eq!(sync.values, asy.values);
+    }
+
+    #[test]
+    fn async_merge_stats_are_consistent() {
+        let p = Quad::new(64);
+        let out = ShardedDriver::new(&p, spec(8).with_async(2)).run().unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let s = out.merge_stats;
+        // every published version accepted at least one submission, and a
+        // batched fold accepts several per version
+        assert!(s.accepted_submissions >= out.result.epochs, "{s:?}");
+        assert!(s.objective_evals >= 1, "{s:?}");
+        // loose accounting bound: every decided submission costs at most
+        // 2 evaluations (tier 1 + tier 2) plus at most half a batch
+        // attempt (a batch has ≥ 2 members)
+        assert!(
+            s.objective_evals <= 3 * (s.accepted_submissions + s.rejected_submissions).max(1),
+            "{s:?}"
+        );
+        assert_eq!(s.staleness_bound_final, 2, "fixed τ must not move: {s:?}");
+    }
+
+    #[test]
+    fn sync_merge_stats_count_objective_evals() {
+        let p = Quad::new(16);
+        let out = ShardedDriver::new(&p, spec(4)).run().unwrap();
+        assert!(out.result.status.converged());
+        let s = out.merge_stats;
+        assert!(s.objective_evals >= out.result.epochs, "one exact eval per epoch: {s:?}");
+        assert_eq!(s.staleness_bound_final, 0, "sync mode has no staleness bound");
+    }
+
+    #[test]
+    fn async_adaptive_tau_converges_within_bounds() {
+        let p = Quad::new(64);
+        let out = ShardedDriver::new(&p, spec(8).with_async_auto()).run().unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let tau = out.merge_stats.staleness_bound_final;
+        assert!((1..=16).contains(&tau), "τ drifted out of bounds: {tau}");
+    }
+
+    #[test]
+    fn tau_controller_shrinks_on_rejections() {
+        let mut t = TauController::new(4, true, 8);
+        for _ in 0..TAU_ADAPT_WINDOW {
+            t.observe(TauSignal::Rejected);
+        }
+        assert_eq!(t.current(), 3, "a reject-heavy window must shrink τ");
+        // keep the pressure on: τ floors at min (1) and stays there
+        for _ in 0..10 * TAU_ADAPT_WINDOW {
+            t.observe(TauSignal::Rejected);
+        }
+        assert_eq!(t.current(), 1);
+    }
+
+    #[test]
+    fn tau_controller_grows_when_always_accepting() {
+        let mut t = TauController::new(2, true, 4);
+        for _ in 0..TAU_ADAPT_WINDOW {
+            t.observe(TauSignal::Accepted);
+        }
+        assert_eq!(t.current(), 3, "a clean window must grow τ");
+        // cap: 2 · S = 8 for S = 4
+        for _ in 0..20 * TAU_ADAPT_WINDOW {
+            t.observe(TauSignal::Accepted);
+        }
+        assert_eq!(t.current(), 8, "τ must cap at 2·S");
+    }
+
+    #[test]
+    fn tau_controller_grows_on_stale_drops() {
+        // stale drops mean the bound is discarding throughput: τ must
+        // grow, NOT shrink (shrinking would feed back into more drops
+        // and starve slow shards at the floor)
+        let mut t = TauController::new(1, true, 8);
+        for _ in 0..TAU_ADAPT_WINDOW {
+            t.observe(TauSignal::Stale);
+        }
+        assert_eq!(t.current(), 2, "a drop-heavy window must grow τ");
+    }
+
+    #[test]
+    fn tau_controller_rejections_dominate_stale_drops() {
+        // both signals above threshold: quality wins, τ shrinks
+        let mut t = TauController::new(4, true, 8);
+        for i in 0..TAU_ADAPT_WINDOW {
+            t.observe(if i % 2 == 0 { TauSignal::Rejected } else { TauSignal::Stale });
+        }
+        assert_eq!(t.current(), 3);
+    }
+
+    #[test]
+    fn tau_controller_holds_on_mixed_windows_and_fixed_mode() {
+        let mut t = TauController::new(3, true, 8);
+        // 1 reject in 16 (≤ 25 %, not clean): hold
+        for i in 0..TAU_ADAPT_WINDOW {
+            t.observe(if i == 0 { TauSignal::Rejected } else { TauSignal::Accepted });
+        }
+        assert_eq!(t.current(), 3);
+        let mut fixed = TauController::new(2, false, 8);
+        for _ in 0..10 * TAU_ADAPT_WINDOW {
+            fixed.observe(TauSignal::Rejected);
+        }
+        assert_eq!(fixed.current(), 2, "fixed τ ignores observations");
     }
 }

@@ -46,23 +46,27 @@ impl ShardProblem for ShardedLasso {
     fn step(&self, j: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
         let l = self.prob.n_instances as f64;
         let col = self.prob.xt.row(j);
-        let g = col.dot_dense(shared) / l;
         let h = self.prob.h[j];
-        let violation = subgrad_violation(*value, g, self.lambda);
+        let old = *value;
+        // fused kernel, same update as the serial solver
+        let mut g = 0.0;
+        let mut new = old;
+        let (_, d) = col.step(shared, |dot| {
+            g = dot / l;
+            if h > 0.0 {
+                new = soft_threshold(old - g / h, self.lambda / h);
+            }
+            new - old
+        });
+        let violation = subgrad_violation(old, g, self.lambda);
         let mut ops = col.nnz();
         let mut delta_f = 0.0;
-        if h > 0.0 {
-            let old = *value;
-            let new = soft_threshold(old - g / h, self.lambda / h);
-            let d = new - old;
-            if d != 0.0 {
-                *value = new;
-                col.axpy_into(d, shared);
-                ops += col.nnz();
-                // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
-                // term change
-                delta_f = -(g * d + 0.5 * h * d * d) - self.lambda * (new.abs() - old.abs());
-            }
+        if d != 0.0 {
+            *value = new;
+            ops += col.nnz();
+            // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
+            // term change
+            delta_f = -(g * d + 0.5 * h * d * d) - self.lambda * (new.abs() - old.abs());
         }
         StepOutcome { delta_f, violation, ops }
     }

@@ -27,15 +27,18 @@
 //! regime): the shared state lives in **versioned published buffers**.
 //! A worker snapshots the published buffer with an O(1) `Arc` clone, runs
 //! its shard's local epoch against the snapshot, and submits the delta;
-//! the merger evaluates each candidate objective *exactly* against its
-//! authoritative copy and publishes the successor buffer with an atomic
-//! version flip (retired buffers are recycled once their last reader
-//! drops — a generalized double buffer, since a snapshot may be held for
-//! a whole local epoch). A submission, **and its Δf report to the outer
-//! ACF**, is discarded when its base version lags the published version
-//! by more than the staleness bound τ (the `staleness_bound` field of
-//! [`MergeMode::Async`]); within the bound, acceptance is additive →
-//! averaged → rejected, each tier checked exactly.
+//! the merger drains every queued submission, folds the fresh ones into
+//! **one batched additive candidate**, evaluates it *exactly* against
+//! its authoritative copy (one `shared_objective` call for the whole
+//! batch) and publishes the successor buffer with an atomic version
+//! flip (retired buffers are recycled once their last reader drops — a
+//! generalized double buffer, since a snapshot may be held for a whole
+//! local epoch). A submission, **and its Δf report to the outer ACF**,
+//! is discarded when its base version lags the published version by
+//! more than the staleness bound τ (the `staleness_bound` field of
+//! [`MergeMode::Async`], tuned online under `--staleness-bound auto`);
+//! within the bound, a rejected batch falls back to per-submission
+//! additive → averaged → rejected tiers, each checked exactly.
 //!
 //! # Guarantees
 //!
@@ -70,7 +73,7 @@ pub mod partition;
 pub mod svm;
 
 pub use engine::{
-    MergeMode, ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome,
+    MergeMode, MergeStats, ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome,
     DEFAULT_STALENESS_BOUND,
 };
 pub use hier::{auto_shards, HierarchicalScheduler};

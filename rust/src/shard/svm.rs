@@ -14,7 +14,8 @@ use crate::util::error::Result;
 /// SVM dual adapted to the sharded engine.
 pub struct ShardedSvm<'a> {
     ds: &'a Dataset,
-    q_diag: Vec<f64>,
+    /// borrowed from the matrix-level norm cache (computed once per Csr)
+    q_diag: &'a [f64],
     c: f64,
 }
 
@@ -45,24 +46,29 @@ impl ShardProblem for ShardedSvm<'_> {
     fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
         let row = self.ds.x.row(i);
         let yi = self.ds.y[i];
-        let g = yi * row.dot_dense(shared) - 1.0;
-        let violation = pg_violation(*value, g, self.c);
         let qii = self.q_diag[i];
         let old = *value;
-        let new = if qii > 0.0 {
-            (old - g / qii).clamp(0.0, self.c)
-        } else if g < 0.0 {
-            // empty row: the linear term −α_i drives α_i to the bound
-            self.c
-        } else {
-            0.0
-        };
+        // fused kernel, same update as the serial solver
+        let mut g = 0.0;
+        let mut new = old;
+        row.step(shared, |dot| {
+            g = yi * dot - 1.0;
+            new = if qii > 0.0 {
+                (old - g / qii).clamp(0.0, self.c)
+            } else if g < 0.0 {
+                // empty row: the linear term −α_i drives α_i to the bound
+                self.c
+            } else {
+                0.0
+            };
+            (new - old) * yi
+        });
+        let violation = pg_violation(old, g, self.c);
         let d = new - old;
         let mut ops = row.nnz();
         let mut delta_f = 0.0;
         if d != 0.0 {
             *value = new;
-            row.axpy_into(d * yi, shared);
             ops += row.nnz();
             // exact decrease of the dual objective along this coordinate
             delta_f = -(g * d + 0.5 * qii * d * d);

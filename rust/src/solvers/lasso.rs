@@ -51,7 +51,9 @@ impl LassoProblem {
     pub fn new(ds: &Dataset) -> Self {
         let xt = ds.x.transpose();
         let l = ds.n_instances();
-        let h = (0..xt.rows()).map(|j| xt.row(j).norm_sq() / l as f64).collect();
+        // borrows the matrix-level norm cache (also warms it for anyone
+        // else holding this xt)
+        let h = xt.row_norms_sq().iter().map(|&n| n / l as f64).collect();
         Self { n_instances: l, n_features: xt.rows(), xt, y: ds.y.clone(), h }
     }
 
@@ -117,29 +119,33 @@ pub fn solve_prepared(
     'outer: loop {
         let j = sched.next();
         let col = prob.xt.row(j);
-        let g = col.dot_dense(&r) / l;
         let h = prob.h[j];
-        let viol = subgrad_violation(w[j], g, lambda);
+        let old = w[j];
+        // fused kernel: gradient dot + soft-threshold step + residual
+        // scatter on the same hot column slices
+        // NOTE: keep in sync with `crate::shard::lasso::ShardedLasso::step`,
+        // which carries the same update for the sharded engine
+        let mut g = 0.0;
+        let mut new = old;
+        let (_, step_d) = col.step(&mut r, |dot| {
+            g = dot / l;
+            if h > 0.0 {
+                new = soft_threshold(old - g / h, lambda / h);
+            }
+            new - old
+        });
+        let viol = subgrad_violation(old, g, lambda);
         window_max = window_max.max(viol);
         window_count += 1;
 
-        // NOTE: keep in sync with `crate::shard::lasso::ShardedLasso::step`,
-        // which carries the same update for the sharded engine
         let mut ops = col.nnz();
         let mut delta_f = 0.0;
-        if h > 0.0 {
-            let old = w[j];
-            let new = soft_threshold(old - g / h, lambda / h);
-            let step_d = new - old;
-            if step_d != 0.0 {
-                w[j] = new;
-                col.axpy_into(step_d, &mut r);
-                ops += col.nnz();
-                // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
-                // term change
-                delta_f = -(g * step_d + 0.5 * h * step_d * step_d)
-                    - lambda * (new.abs() - old.abs());
-            }
+        if step_d != 0.0 {
+            w[j] = new;
+            ops += col.nnz();
+            // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
+            // term change
+            delta_f = -(g * step_d + 0.5 * h * step_d * step_d) - lambda * (new.abs() - old.abs());
         }
         sched.report(j, delta_f.max(0.0));
 

@@ -124,27 +124,38 @@ pub fn solve(
     'outer: loop {
         let i = sched.next();
         let row = ds.x.row(i);
-        let m = ds.y[i] * row.dot_dense(&w);
+        let yi = ds.y[i];
         let a_old = alpha[i];
-        // gradient at the current point: the Qα term is y_i⟨w,x_i⟩ = m
-        let g = m + (a_old / (c - a_old)).ln();
+        // fused kernel: margin dot + guarded-Newton 1D solve + scatter
+        // on the same hot row slices
+        let mut m = 0.0;
+        let mut g = 0.0;
+        let mut a_new = a_old;
+        row.step(&mut w, |dot| {
+            m = yi * dot;
+            // gradient at the current point: the Qα term is y_i⟨w,x_i⟩ = m
+            g = m + (a_old / (c - a_old)).ln();
+            a_new = solve_1d(q_diag[i], m, a_old, c, 1e-10, 25);
+            let step_d = a_new - a_old;
+            if step_d.abs() > 1e-15 {
+                step_d * yi
+            } else {
+                0.0
+            }
+        });
         let viol = grad_violation(g);
         window_max = window_max.max(viol);
         window_count += 1;
 
         let mut ops = row.nnz();
         let mut delta_f = 0.0;
-        {
-            let a_new = solve_1d(q_diag[i], m, a_old, c, 1e-10, 25);
-            let step_d = a_new - a_old;
-            if step_d.abs() > 1e-15 {
-                alpha[i] = a_new;
-                row.axpy_into(step_d * ds.y[i], &mut w);
-                ops += row.nnz();
-                // exact decrease: quadratic part m·d + ½q·d² plus entropy
-                delta_f = -(m * step_d + 0.5 * q_diag[i] * step_d * step_d)
-                    - (ent(a_new, c) - ent(a_old, c));
-            }
+        let step_d = a_new - a_old;
+        if step_d.abs() > 1e-15 {
+            alpha[i] = a_new;
+            ops += row.nnz();
+            // exact decrease: quadratic part m·d + ½q·d² plus entropy
+            delta_f = -(m * step_d + 0.5 * q_diag[i] * step_d * step_d)
+                - (ent(a_new, c) - ent(a_old, c));
         }
         sched.report(i, delta_f.max(0.0));
 

@@ -188,6 +188,7 @@ pub fn solve(
     let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
     assert!(y.iter().all(|&v| v < k_classes));
 
+    // borrowed from the matrix-level cache (computed once per Csr)
     let norms = ds.x.row_norms_sq();
     let mut w: Vec<Vec<f64>> = vec![vec![0.0; d]; k_classes];
     let mut alpha = vec![0.0f64; n * k_classes];

@@ -100,29 +100,35 @@ pub fn solve(
     'outer: loop {
         let i = sched.next();
         let row = ds.x.row(i);
-        let g = ds.y[i] * row.dot_dense(&w) - 1.0;
-        let viol = pg_violation(alpha[i], g, c);
+        let yi = ds.y[i];
+        let qii = q_diag[i];
+        let old = alpha[i];
+        // fused kernel: gradient dot + interval-Newton update + scatter
+        // on the same hot row slices (sparse::kernels::step_unchecked)
+        // NOTE: keep in sync with `crate::shard::svm::ShardedSvm::step`,
+        // which carries the same update for the sharded engine
+        let mut g = 0.0;
+        let mut new = old;
+        let (_, _scale) = row.step(&mut w, |dot| {
+            g = yi * dot - 1.0;
+            new = if qii > 0.0 {
+                (old - g / qii).clamp(0.0, c)
+            } else if g < 0.0 {
+                c
+            } else {
+                0.0
+            };
+            (new - old) * yi
+        });
+        let viol = pg_violation(old, g, c);
         window_max = window_max.max(viol);
         window_count += 1;
 
-        // newton step (reuses the gradient we just computed)
-        // NOTE: keep in sync with `crate::shard::svm::ShardedSvm::step`,
-        // which carries the same update for the sharded engine
-        let qii = q_diag[i];
-        let old = alpha[i];
-        let new = if qii > 0.0 {
-            (old - g / qii).clamp(0.0, c)
-        } else if g < 0.0 {
-            c
-        } else {
-            0.0
-        };
         let step_d = new - old;
         let mut ops = row.nnz();
         let mut delta_f = 0.0;
         if step_d != 0.0 {
             alpha[i] = new;
-            row.axpy_into(step_d * ds.y[i], &mut w);
             ops += row.nnz();
             delta_f = -(g * step_d + 0.5 * qii * step_d * step_d);
         }
@@ -201,27 +207,46 @@ pub fn solve_liblinear_shrinking(
         while k < active.len() {
             let i = active[k] as usize;
             let row = ds.x.row(i);
-            let g = ds.y[i] * row.dot_dense(&w) - 1.0;
-            let mut ops = row.nnz();
-
-            // shrinking test (liblinear)
+            let yi = ds.y[i];
+            let qii = q_diag[i];
+            let old = alpha[i];
+            // fused gather-dot / shrink test / Newton scatter: the
+            // closure decides the scatter scale (0 = shrink or no move)
+            let mut g = 0.0;
             let mut pg = 0.0;
             let mut shrink = false;
-            if alpha[i] <= 0.0 {
-                if g > pgmax_old {
-                    shrink = true;
+            let mut new = old;
+            row.step(&mut w, |dot| {
+                g = yi * dot - 1.0;
+                // shrinking test (liblinear)
+                if old <= 0.0 {
+                    if g > pgmax_old {
+                        shrink = true;
+                    } else if g < 0.0 {
+                        pg = g;
+                    }
+                } else if old >= c {
+                    if g < pgmin_old {
+                        shrink = true;
+                    } else if g > 0.0 {
+                        pg = g;
+                    }
+                } else {
+                    pg = g;
+                }
+                if shrink || pg.abs() <= 1e-12 {
+                    return 0.0;
+                }
+                new = if qii > 0.0 {
+                    (old - g / qii).clamp(0.0, c)
                 } else if g < 0.0 {
-                    pg = g;
-                }
-            } else if alpha[i] >= c {
-                if g < pgmin_old {
-                    shrink = true;
-                } else if g > 0.0 {
-                    pg = g;
-                }
-            } else {
-                pg = g;
-            }
+                    c
+                } else {
+                    0.0
+                };
+                (new - old) * yi
+            });
+            let mut ops = row.nnz();
             if shrink {
                 active.swap_remove(k);
                 rs.counter.extra(ops);
@@ -230,22 +255,10 @@ pub fn solve_liblinear_shrinking(
             pgmax_new = pgmax_new.max(pg);
             pgmin_new = pgmin_new.min(pg);
 
-            if pg.abs() > 1e-12 {
-                let qii = q_diag[i];
-                let old = alpha[i];
-                let new = if qii > 0.0 {
-                    (old - g / qii).clamp(0.0, c)
-                } else if g < 0.0 {
-                    c
-                } else {
-                    0.0
-                };
-                let step_d = new - old;
-                if step_d != 0.0 {
-                    alpha[i] = new;
-                    row.axpy_into(step_d * ds.y[i], &mut w);
-                    ops += row.nnz();
-                }
+            let step_d = new - old;
+            if step_d != 0.0 {
+                alpha[i] = new;
+                ops += row.nnz();
             }
             let budget_ok = rs.step(ops);
             rs.maybe_trace(

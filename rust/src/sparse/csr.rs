@@ -2,55 +2,128 @@
 //! the dual solvers (SVM, logistic regression, multi-class SVM), where a
 //! CD step on dual variable `α_i` touches exactly row `i`.
 
+use super::kernels;
+use std::sync::OnceLock;
+
 /// CSR sparse matrix with f64 values and usize column indices.
 ///
 /// Invariants: `indptr.len() == rows + 1`, `indptr` non-decreasing,
 /// `indices[indptr[r]..indptr[r+1]]` strictly increasing per row, all
 /// `indices[k] < cols`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Csr {
     rows: usize,
     cols: usize,
     indptr: Vec<usize>,
     indices: Vec<u32>,
     values: Vec<f64>,
+    /// Lazily-computed per-row squared norms (`Q_ii` for the dual
+    /// solvers, column norms for the transposed LASSO view). `Csr` has
+    /// no mutating methods, so the cache can never go stale.
+    norms_sq: OnceLock<Vec<f64>>,
+}
+
+// Structural equality only — the norm cache is derived state.
+impl PartialEq for Csr {
+    fn eq(&self, other: &Csr) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.values == other.values
+    }
 }
 
 /// Borrowed view of one sparse row.
+///
+/// Invariant: `indices` is strictly increasing (inherited from the
+/// [`Csr`] row it was sliced from, or validated by [`RowView::new`]).
+/// The hot-path methods rely on it for their O(1) bounds proof — see
+/// [`crate::sparse::kernels`] — so the fields are private: every
+/// `RowView` reachable from safe code upholds the invariant.
 #[derive(Clone, Copy, Debug)]
 pub struct RowView<'a> {
-    pub indices: &'a [u32],
-    pub values: &'a [f64],
+    indices: &'a [u32],
+    values: &'a [f64],
 }
 
 impl<'a> RowView<'a> {
+    /// Build a view from raw slices, validating the strictly-increasing
+    /// invariant (release-grade — this constructor is what keeps the
+    /// unchecked kernels sound for hand-built views; `Csr::row` skips it
+    /// because construction already established the invariant).
+    pub fn new(indices: &'a [u32], values: &'a [f64]) -> RowView<'a> {
+        assert_eq!(indices.len(), values.len(), "RowView slice length mismatch");
+        assert!(
+            indices.windows(2).all(|p| p[0] < p[1]),
+            "RowView indices must be strictly increasing"
+        );
+        RowView { indices, values }
+    }
+
+    #[inline]
+    pub fn indices(&self) -> &'a [u32] {
+        self.indices
+    }
+
+    #[inline]
+    pub fn values(&self) -> &'a [f64] {
+        self.values
+    }
+
     #[inline]
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }
 
-    /// Dot product against a dense vector.
-    #[inline]
-    pub fn dot_dense(&self, w: &[f64]) -> f64 {
-        let mut acc = 0.0;
-        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
-            acc += v * w[j as usize];
+    /// O(1) soundness gate for the unchecked kernels: row indices are
+    /// strictly increasing, so the last one bounds them all.
+    #[inline(always)]
+    fn check_bounds(&self, dim: usize) {
+        debug_assert_eq!(self.indices.len(), self.values.len());
+        debug_assert!(
+            self.indices.windows(2).all(|p| p[0] < p[1]),
+            "RowView indices must be strictly increasing"
+        );
+        if let Some(&last) = self.indices.last() {
+            assert!((last as usize) < dim, "row index {last} out of bounds for dimension {dim}");
         }
-        acc
     }
 
-    /// w += scale * row (scatter-add).
+    /// Dot product against a dense vector (unrolled unchecked kernel;
+    /// the bounds of every gather are established in O(1) by
+    /// [`Self::check_bounds`]).
+    #[inline]
+    pub fn dot_dense(&self, w: &[f64]) -> f64 {
+        self.check_bounds(w.len());
+        // SAFETY: check_bounds proved indices.last() < w.len(), and the
+        // strictly-increasing row invariant bounds every other index.
+        unsafe { kernels::dot_dense_unchecked(self.indices, self.values, w) }
+    }
+
+    /// w += scale * row (unrolled unchecked scatter-add).
     #[inline]
     pub fn axpy_into(&self, scale: f64, w: &mut [f64]) {
-        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
-            w[j as usize] += scale * v;
-        }
+        self.check_bounds(w.len());
+        // SAFETY: as in dot_dense.
+        unsafe { kernels::axpy_unchecked(scale, self.indices, self.values, w) }
+    }
+
+    /// Fused CD step: gather-dot, O(1) coordinate update (the closure
+    /// maps the dot to the scatter scale, `0.0` = no update), scatter —
+    /// all on the same cache-hot row slices. Returns `(dot, scale)`.
+    #[inline]
+    pub fn step<F: FnOnce(f64) -> f64>(&self, w: &mut [f64], update: F) -> (f64, f64) {
+        self.check_bounds(w.len());
+        // SAFETY: as in dot_dense; w is only written at the same indices
+        // that were gathered.
+        unsafe { kernels::step_unchecked(self.indices, self.values, w, update) }
     }
 
     /// Squared Euclidean norm of the row.
     #[inline]
     pub fn norm_sq(&self) -> f64 {
-        self.values.iter().map(|v| v * v).sum()
+        kernels::dot(self.values, self.values)
     }
 }
 
@@ -85,10 +158,14 @@ impl Csr {
             }
             indptr.push(indices.len());
         }
-        Csr { rows, cols, indptr, indices, values }
+        Csr { rows, cols, indptr, indices, values, norms_sq: OnceLock::new() }
     }
 
-    /// Build from raw parts (trusted, checked by debug assertions).
+    /// Build from raw parts. Validated with release-grade asserts
+    /// (O(nnz), construction-time only): the hot-path kernels rely on
+    /// the strictly-increasing row invariant for their unchecked
+    /// indexing, so an invalid `Csr` must be impossible to construct
+    /// from safe code.
     pub fn from_parts(
         rows: usize,
         cols: usize,
@@ -96,10 +173,14 @@ impl Csr {
         indices: Vec<u32>,
         values: Vec<f64>,
     ) -> Csr {
-        debug_assert_eq!(indptr.len(), rows + 1);
-        debug_assert_eq!(indices.len(), values.len());
-        debug_assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
-        Csr { rows, cols, indptr, indices, values }
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "indptr endpoint");
+        let m = Csr { rows, cols, indptr, indices, values, norms_sq: OnceLock::new() };
+        if let Err(e) = m.check_invariants() {
+            panic!("Csr::from_parts: invalid structure: {e}");
+        }
+        m
     }
 
     pub fn rows(&self) -> usize {
@@ -125,9 +206,11 @@ impl Csr {
         self.indptr[r + 1] - self.indptr[r]
     }
 
-    /// Per-row squared norms (precomputed once by the SVM solvers).
-    pub fn row_norms_sq(&self) -> Vec<f64> {
-        (0..self.rows).map(|r| self.row(r).norm_sq()).collect()
+    /// Per-row squared norms, computed once and cached on the matrix.
+    /// Every solver that needs `Q_ii` (svm / logreg / mcsvm / the shard
+    /// fronts) borrows this slice instead of recomputing its own copy.
+    pub fn row_norms_sq(&self) -> &[f64] {
+        self.norms_sq.get_or_init(|| (0..self.rows).map(|r| self.row(r).norm_sq()).collect())
     }
 
     /// Dense matvec `y = A x` (reference / validation path).
@@ -169,7 +252,7 @@ impl Csr {
                 cursor[j as usize] += 1;
             }
         }
-        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values, norms_sq: OnceLock::new() }
     }
 
     /// Extract a dense row-major block [r0..r1) × [c0..c1), padded with
@@ -215,7 +298,7 @@ impl Csr {
             values.extend_from_slice(row.values);
             indptr.push(indices.len());
         }
-        Csr { rows: idx.len(), cols: self.cols, indptr, indices, values }
+        Csr { rows: idx.len(), cols: self.cols, indptr, indices, values, norms_sq: OnceLock::new() }
     }
 
     /// Validate structural invariants (used by property tests).
@@ -363,9 +446,29 @@ mod tests {
     }
 
     #[test]
-    fn norms() {
+    fn norms_cached_and_correct() {
         let m = sample();
         let n = m.row_norms_sq();
-        assert_eq!(n, vec![5.0, 0.0, 25.0]);
+        assert_eq!(n, &[5.0, 0.0, 25.0]);
+        // second call must hand back the same cached allocation
+        assert!(std::ptr::eq(n.as_ptr(), m.row_norms_sq().as_ptr()));
+        // clones answer identically (whether they copy or recompute)
+        assert_eq!(m.clone().row_norms_sq(), &[5.0, 0.0, 25.0]);
+    }
+
+    #[test]
+    fn equality_ignores_norm_cache() {
+        let a = sample();
+        let b = sample();
+        let _ = a.row_norms_sq(); // warm only one side's cache
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn dot_dense_rejects_short_vector() {
+        let m = sample();
+        let w = vec![0.0; 2]; // cols = 3: the O(1) gate must fire
+        m.row(0).dot_dense(&w);
     }
 }

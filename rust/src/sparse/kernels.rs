@@ -1,0 +1,466 @@
+//! Hot-path sparse/dense kernels: 4-way unrolled gather/scatter with
+//! independent accumulator lanes, in checked and unchecked flavors.
+//!
+//! The CD inner loop is one sparse gather-dot followed by (usually) one
+//! sparse scatter-add over the same row slices. The paper's wall-clock
+//! claim lives or dies on the cost of those two primitives, so this
+//! module rewrites them with
+//!
+//! * **4 independent accumulator lanes** — breaks the sequential
+//!   floating-point dependency chain so the CPU can keep several
+//!   multiply-adds in flight (and the autovectorizer can use them),
+//! * **`get_unchecked` indexing** on the unchecked variants — the gather
+//!   `w[indices[k]]` otherwise pays one bounds check per non-zero,
+//! * a **fused [`step_unchecked`]** entry point that runs the gradient
+//!   dot and the scatter-update back-to-back on the same row slices
+//!   while they are hot in cache.
+//!
+//! # Safety contract of the unchecked paths
+//!
+//! Every `*_unchecked` function requires, and `debug_assert!`s:
+//!
+//! 1. `indices.len() == values.len()`;
+//! 2. every `indices[k] as usize` is in bounds for `w`.
+//!
+//! Violating either in a release build is undefined behavior. The safe
+//! entry points ([`crate::sparse::RowView::dot_dense`] and friends)
+//! restore soundness with an O(1) check: CSR row indices are *strictly
+//! increasing* (a [`crate::sparse::Csr`] structural invariant verified
+//! by `check_invariants` and the construction paths), so checking
+//! `indices.last() < w.len()` bounds every index in the row.
+//!
+//! # Parity oracle
+//!
+//! Each unchecked kernel has a `*_checked` twin generated from the same
+//! monomorphized implementation (`const CHECKED: bool` toggles the
+//! indexing only), so checked and unchecked results are **bit-identical
+//! by construction** — the property tests below assert it anyway, across
+//! empty rows, `nnz % 4 != 0` tails and random sparse patterns. The
+//! pre-existing sequential implementations remain as [`dot_dense_scalar`]
+//! / [`axpy_scalar`]: the *semantic* oracle (and the perf baseline of
+//! `benches/kernel_microbench.rs`). Note that lane accumulation
+//! re-associates the dot-product sum, so the unrolled dot agrees with the
+//! scalar reference only up to floating-point rounding; the scatter-add
+//! touches each (distinct) index exactly once and is bit-identical to the
+//! scalar version.
+
+/// Sequential bounds-checked sparse dot — the original implementation,
+/// kept as the semantic oracle and microbench baseline.
+#[inline]
+pub fn dot_dense_scalar(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (&j, &v) in indices.iter().zip(values.iter()) {
+        acc += v * w[j as usize];
+    }
+    acc
+}
+
+/// Sequential bounds-checked scatter-add `w[indices[k]] += scale *
+/// values[k]` — the original implementation, kept as the semantic oracle
+/// and microbench baseline.
+#[inline]
+pub fn axpy_scalar(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+    for (&j, &v) in indices.iter().zip(values.iter()) {
+        w[j as usize] += scale * v;
+    }
+}
+
+/// Shared 4-lane gather-dot body; `CHECKED` selects the indexing and is
+/// resolved at monomorphization time, so both flavors run the identical
+/// floating-point schedule (bit-identical results).
+///
+/// Safety: with `CHECKED = false` the caller must uphold the module-level
+/// contract (index bounds); with `CHECKED = true` the function is safe.
+#[inline(always)]
+unsafe fn dot_lanes<const CHECKED: bool>(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    let n = indices.len();
+    let chunks = n / 4;
+    let mut a0 = 0.0f64;
+    let mut a1 = 0.0f64;
+    let mut a2 = 0.0f64;
+    let mut a3 = 0.0f64;
+    macro_rules! at {
+        ($k:expr) => {{
+            let j = if CHECKED {
+                indices[$k] as usize
+            } else {
+                *indices.get_unchecked($k) as usize
+            };
+            let v = if CHECKED { values[$k] } else { *values.get_unchecked($k) };
+            debug_assert!(j < w.len(), "sparse index {j} out of bounds ({})", w.len());
+            let x = if CHECKED { w[j] } else { *w.get_unchecked(j) };
+            v * x
+        }};
+    }
+    for c in 0..chunks {
+        let base = c * 4;
+        a0 += at!(base);
+        a1 += at!(base + 1);
+        a2 += at!(base + 2);
+        a3 += at!(base + 3);
+    }
+    for k in chunks * 4..n {
+        a0 += at!(k);
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Shared 4-way unrolled scatter-add body; see [`dot_lanes`] for the
+/// `CHECKED` mechanics. Correct even with repeated indices (the four
+/// per-chunk updates execute in order); CSR rows never repeat indices,
+/// which is what lets the compiler schedule them independently.
+#[inline(always)]
+unsafe fn axpy_unrolled<const CHECKED: bool>(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    let n = indices.len();
+    let chunks = n / 4;
+    macro_rules! upd {
+        ($k:expr) => {{
+            let j = if CHECKED {
+                indices[$k] as usize
+            } else {
+                *indices.get_unchecked($k) as usize
+            };
+            let v = if CHECKED { values[$k] } else { *values.get_unchecked($k) };
+            debug_assert!(j < w.len(), "sparse index {j} out of bounds ({})", w.len());
+            if CHECKED {
+                w[j] += scale * v;
+            } else {
+                *w.get_unchecked_mut(j) += scale * v;
+            }
+        }};
+    }
+    for c in 0..chunks {
+        let base = c * 4;
+        upd!(base);
+        upd!(base + 1);
+        upd!(base + 2);
+        upd!(base + 3);
+    }
+    for k in chunks * 4..n {
+        upd!(k);
+    }
+}
+
+/// 4-lane gather-dot, bounds-checked — the parity oracle for
+/// [`dot_dense_unchecked`] (bit-identical by construction).
+#[inline]
+pub fn dot_dense_checked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    // SAFETY: CHECKED = true performs ordinary indexing; no contract.
+    unsafe { dot_lanes::<true>(indices, values, w) }
+}
+
+/// 4-lane gather-dot with unchecked indexing.
+///
+/// # Safety
+/// `indices.len() == values.len()` and every `indices[k] as usize` must
+/// be `< w.len()` (see the module docs).
+#[inline]
+pub unsafe fn dot_dense_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    dot_lanes::<false>(indices, values, w)
+}
+
+/// 4-way unrolled scatter-add, bounds-checked — the parity oracle for
+/// [`axpy_unchecked`].
+#[inline]
+pub fn axpy_checked(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+    // SAFETY: CHECKED = true performs ordinary indexing; no contract.
+    unsafe { axpy_unrolled::<true>(scale, indices, values, w) }
+}
+
+/// 4-way unrolled scatter-add with unchecked indexing.
+///
+/// # Safety
+/// Same contract as [`dot_dense_unchecked`], with `w` writable.
+#[inline]
+pub unsafe fn axpy_unchecked(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+    axpy_unrolled::<false>(scale, indices, values, w)
+}
+
+/// Fused CD step on one sparse row: gather-dot against `w`, hand the
+/// result to `update` (which performs the O(1) coordinate math and
+/// returns the scatter scale; `0.0` means "no update"), then scatter-add
+/// on the *same, still-cache-hot* row slices. Returns `(dot, scale)`.
+///
+/// # Safety
+/// Same contract as [`dot_dense_unchecked`], with `w` writable.
+#[inline]
+pub unsafe fn step_unchecked<F: FnOnce(f64) -> f64>(
+    indices: &[u32],
+    values: &[f64],
+    w: &mut [f64],
+    update: F,
+) -> (f64, f64) {
+    let dot = dot_lanes::<false>(indices, values, w);
+    let scale = update(dot);
+    if scale != 0.0 {
+        axpy_unrolled::<false>(scale, indices, values, w);
+    }
+    (dot, scale)
+}
+
+/// Bounds-checked twin of [`step_unchecked`] (parity oracle).
+#[inline]
+pub fn step_checked<F: FnOnce(f64) -> f64>(indices: &[u32], values: &[f64], w: &mut [f64], update: F) -> (f64, f64) {
+    // SAFETY: CHECKED = true performs ordinary indexing; no contract.
+    let dot = unsafe { dot_lanes::<true>(indices, values, w) };
+    let scale = update(dot);
+    if scale != 0.0 {
+        unsafe { axpy_unrolled::<true>(scale, indices, values, w) };
+    }
+    (dot, scale)
+}
+
+/// Dense 4-lane dot product. Safe: `chunks_exact` gives the compiler
+/// bounds-check-free access without any unsafe code. Lengths must match
+/// (release-grade assert: a silent partial dot would let a
+/// wrong-dimension vector corrupt a solve without a diagnostic).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dense dot length mismatch");
+    let n = a.len();
+    let mut a0 = 0.0f64;
+    let mut a1 = 0.0f64;
+    let mut a2 = 0.0f64;
+    let mut a3 = 0.0f64;
+    let mut ca = a[..n].chunks_exact(4);
+    let mut cb = b[..n].chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        a0 += x[0] * y[0];
+        a1 += x[1] * y[1];
+        a2 += x[2] * y[2];
+        a3 += x[3] * y[3];
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        a0 += x * y;
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Dense fused `out = a + alpha * b` in one pass — the async merger's
+/// candidate constructor. One read of each input and one write of the
+/// output, versus the memcpy-then-axpy double traffic of
+/// `copy_from_slice` + [`axpy`]. Lengths must match (release-grade
+/// assert, as in [`dot`]).
+#[inline]
+pub fn scaled_sum_into(out: &mut [f64], a: &[f64], alpha: f64, b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "dense scaled_sum length mismatch");
+    assert_eq!(out.len(), a.len(), "dense scaled_sum output length mismatch");
+    let mut co = out.chunks_exact_mut(4);
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for ((o, x), y) in (&mut co).zip(&mut ca).zip(&mut cb) {
+        o[0] = x[0] + alpha * y[0];
+        o[1] = x[1] + alpha * y[1];
+        o[2] = x[2] + alpha * y[2];
+        o[3] = x[3] + alpha * y[3];
+    }
+    for ((o, x), y) in co.into_remainder().iter_mut().zip(ca.remainder()).zip(cb.remainder()) {
+        *o = x + alpha * y;
+    }
+}
+
+/// Dense 4-way unrolled `y += alpha * x`. Safe (`chunks_exact`);
+/// lengths must match (release-grade assert, as in [`dot`]).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "dense axpy length mismatch");
+    let n = x.len();
+    let mut cx = x[..n].chunks_exact(4);
+    let mut cy = y[..n].chunks_exact_mut(4);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        ys[0] += alpha * xs[0];
+        ys[1] += alpha * xs[1];
+        ys[2] += alpha * xs[2];
+        ys[3] += alpha * xs[3];
+    }
+    for (xv, yv) in cx.remainder().iter().zip(cy.into_remainder().iter_mut()) {
+        *yv += alpha * xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Random sorted duplicate-free sparse row over a dense vector of
+    /// dimension `d`; `nnz` is chosen to exercise empty rows and every
+    /// `nnz % 4` tail class.
+    fn random_row(g: &mut prop::Gen, d: usize) -> (Vec<u32>, Vec<f64>) {
+        let nnz = g.usize_in(0, d.min(23));
+        let pat = g.sparse_pattern(d, nnz);
+        let idx: Vec<u32> = pat.iter().map(|&c| c as u32).collect();
+        let vals = g.vec_f64(idx.len(), -3.0, 3.0);
+        (idx, vals)
+    }
+
+    #[test]
+    fn unchecked_dot_bit_identical_to_checked() {
+        prop::check(200, |g| {
+            let d = g.usize_in(1, 64);
+            let (idx, vals) = random_row(g, d);
+            let w = g.vec_f64(d, -2.0, 2.0);
+            let a = dot_dense_checked(&idx, &vals, &w);
+            // SAFETY: idx comes from sparse_pattern over [0, d), so every
+            // index is in bounds for w.
+            let b = unsafe { dot_dense_unchecked(&idx, &vals, &w) };
+            prop::assert_holds(a.to_bits() == b.to_bits(), "dot checked == unchecked (bits)")
+        });
+    }
+
+    #[test]
+    fn unchecked_axpy_bit_identical_to_checked_and_scalar() {
+        prop::check(200, |g| {
+            let d = g.usize_in(1, 64);
+            let (idx, vals) = random_row(g, d);
+            let w0 = g.vec_f64(d, -2.0, 2.0);
+            let s = g.f64_in(-2.0, 2.0);
+            let mut wa = w0.clone();
+            let mut wb = w0.clone();
+            let mut wc = w0.clone();
+            axpy_checked(s, &idx, &vals, &mut wa);
+            // SAFETY: indices in bounds by construction (sparse_pattern).
+            unsafe { axpy_unchecked(s, &idx, &vals, &mut wb) };
+            axpy_scalar(s, &idx, &vals, &mut wc);
+            for t in 0..d {
+                // scatter touches each distinct index once: all three
+                // variants perform the identical per-slot arithmetic
+                prop::assert_holds(
+                    wa[t].to_bits() == wb[t].to_bits() && wa[t].to_bits() == wc[t].to_bits(),
+                    "axpy checked == unchecked == scalar (bits)",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_step_bit_identical_to_checked_and_split() {
+        prop::check(200, |g| {
+            let d = g.usize_in(1, 64);
+            let (idx, vals) = random_row(g, d);
+            let w0 = g.vec_f64(d, -2.0, 2.0);
+            let coeff = g.f64_in(-1.0, 1.0);
+            let upd = |dot: f64| coeff * dot;
+            let mut wa = w0.clone();
+            let mut wb = w0.clone();
+            let mut wc = w0.clone();
+            let (da, sa) = step_checked(&idx, &vals, &mut wa, upd);
+            // SAFETY: indices in bounds by construction (sparse_pattern).
+            let (db, sb) = unsafe { step_unchecked(&idx, &vals, &mut wb, upd) };
+            // split reference: same kernels called separately
+            let dc = dot_dense_checked(&idx, &vals, &wc);
+            let sc = upd(dc);
+            if sc != 0.0 {
+                axpy_checked(sc, &idx, &vals, &mut wc);
+            }
+            prop::assert_holds(da.to_bits() == db.to_bits() && da.to_bits() == dc.to_bits(), "step dot parity")?;
+            prop::assert_holds(sa.to_bits() == sb.to_bits() && sa.to_bits() == sc.to_bits(), "step scale parity")?;
+            for t in 0..d {
+                prop::assert_holds(
+                    wa[t].to_bits() == wb[t].to_bits() && wa[t].to_bits() == wc[t].to_bits(),
+                    "step w parity (bits)",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_dot_close_to_scalar_reference() {
+        // lanes re-associate the sum: agreement is up to fp rounding, not
+        // bit-exact — that is the documented contract
+        prop::check(200, |g| {
+            let d = g.usize_in(1, 64);
+            let (idx, vals) = random_row(g, d);
+            let w = g.vec_f64(d, -2.0, 2.0);
+            let a = dot_dense_checked(&idx, &vals, &w);
+            let b = dot_dense_scalar(&idx, &vals, &w);
+            prop::assert_close(a, b, 1e-13, "lanes vs scalar dot")
+        });
+    }
+
+    #[test]
+    fn empty_row_is_identity() {
+        let w0 = vec![1.0, 2.0, 3.0];
+        let mut w = w0.clone();
+        assert_eq!(dot_dense_checked(&[], &[], &w), 0.0);
+        assert_eq!(unsafe { dot_dense_unchecked(&[], &[], &w) }, 0.0);
+        axpy_checked(2.0, &[], &[], &mut w);
+        unsafe { axpy_unchecked(2.0, &[], &[], &mut w) };
+        let (dot, scale) = step_checked(&[], &[], &mut w, |d| d + 1.0);
+        assert_eq!((dot, scale), (0.0, 1.0));
+        assert_eq!(w, w0);
+    }
+
+    #[test]
+    fn tail_classes_nnz_mod_4() {
+        // exercise every tail length explicitly at small fixed sizes
+        for nnz in 0..=9usize {
+            let idx: Vec<u32> = (0..nnz as u32).map(|k| 2 * k).collect();
+            let vals: Vec<f64> = (0..nnz).map(|k| k as f64 + 0.5).collect();
+            let d = 2 * nnz + 1;
+            let w: Vec<f64> = (0..d).map(|t| 0.1 * t as f64).collect();
+            let a = dot_dense_checked(&idx, &vals, &w);
+            let b = unsafe { dot_dense_unchecked(&idx, &vals, &w) };
+            assert_eq!(a.to_bits(), b.to_bits(), "nnz = {nnz}");
+            let mut wa = w.clone();
+            let mut wb = w.clone();
+            axpy_checked(0.25, &idx, &vals, &mut wa);
+            unsafe { axpy_unchecked(0.25, &idx, &vals, &mut wb) };
+            assert_eq!(wa, wb, "nnz = {nnz}");
+        }
+    }
+
+    #[test]
+    fn dense_kernels_match_scalar() {
+        prop::check(100, |g| {
+            let n = g.usize_in(0, 40);
+            let a = g.vec_f64(n, -2.0, 2.0);
+            let b = g.vec_f64(n, -2.0, 2.0);
+            let scalar: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            prop::assert_close(dot(&a, &b), scalar, 1e-13, "dense dot")?;
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(0.7, &a, &mut y1);
+            for (t, yv) in y2.iter_mut().enumerate() {
+                *yv += 0.7 * a[t];
+            }
+            for t in 0..n {
+                prop::assert_holds(y1[t].to_bits() == y2[t].to_bits(), "dense axpy bits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scaled_sum_matches_copy_then_axpy() {
+        prop::check(100, |g| {
+            let n = g.usize_in(0, 40);
+            let a = g.vec_f64(n, -2.0, 2.0);
+            let b = g.vec_f64(n, -2.0, 2.0);
+            let alpha = g.f64_in(-2.0, 2.0);
+            let mut fused = vec![0.0; n];
+            scaled_sum_into(&mut fused, &a, alpha, &b);
+            let mut split = a.clone();
+            axpy(alpha, &b, &mut split);
+            for t in 0..n {
+                prop::assert_holds(fused[t].to_bits() == split[t].to_bits(), "scaled_sum bits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn step_skips_scatter_on_zero_scale() {
+        let idx = [0u32, 2];
+        let vals = [1.0, 4.0];
+        let mut w = vec![1.0, 1.0, 1.0];
+        let (dot, scale) = step_checked(&idx, &vals, &mut w, |_| 0.0);
+        assert_eq!(dot, 5.0);
+        assert_eq!(scale, 0.0);
+        assert_eq!(w, vec![1.0, 1.0, 1.0]);
+    }
+}

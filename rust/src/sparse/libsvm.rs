@@ -158,7 +158,7 @@ pub fn write_libsvm<W: Write>(ds: &Dataset, mut out: W) -> std::io::Result<()> {
             write!(out, "{}", label)?;
         }
         let row = ds.x.row(i);
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+        for (&j, &v) in row.indices().iter().zip(row.values().iter()) {
             write!(out, " {}:{}", j + 1, v)?;
         }
         writeln!(out)?;
@@ -190,8 +190,8 @@ mod tests {
         assert_eq!(ds.n_instances(), 3);
         assert_eq!(ds.n_features(), 4);
         assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
-        assert_eq!(ds.x.row(0).indices, &[0, 2]);
-        assert_eq!(ds.x.row(1).values, &[2.0, -0.5]);
+        assert_eq!(ds.x.row(0).indices(), &[0, 2]);
+        assert_eq!(ds.x.row(1).values(), &[2.0, -0.5]);
     }
 
     #[test]
@@ -257,7 +257,7 @@ mod tests {
         let ds = parse_libsvm(SAMPLE, "t", 0).unwrap();
         let s = ds.select(&[2, 0]);
         assert_eq!(s.y, vec![1.0, 1.0]);
-        assert_eq!(s.x.row(0).indices, &[0]);
+        assert_eq!(s.x.row(0).indices(), &[0]);
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Sparse linear-algebra substrate: CSR matrices, the libsvm data format,
-//! and dense-vector helpers used by the CD solvers.
+//! Sparse linear-algebra substrate: CSR matrices, the libsvm data
+//! format, dense-vector helpers, and the hot-path [`kernels`] layer
+//! (4-way unrolled unchecked gather/scatter + the fused CD `step`; see
+//! that module's safety contract) the CD solvers run on.
 
 pub mod csr;
+pub mod kernels;
 pub mod libsvm;
 pub mod ops;
 

@@ -8,24 +8,16 @@ pub fn clip(x: f64, lo: f64, hi: f64) -> f64 {
     x.max(lo).min(hi)
 }
 
-/// Dense dot product.
+/// Dense dot product (4-lane unrolled, [`crate::sparse::kernels`]).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc
+    super::kernels::dot(a, b)
 }
 
-/// y += alpha * x
+/// y += alpha * x (4-way unrolled, [`crate::sparse::kernels`]).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
+    super::kernels::axpy(alpha, x, y)
 }
 
 /// Squared Euclidean norm.
@@ -34,10 +26,23 @@ pub fn norm_sq(a: &[f64]) -> f64 {
     dot(a, a)
 }
 
-/// Infinity norm.
+/// Infinity norm, NaN-propagating: any NaN element yields NaN (the
+/// previous `f64::max` fold silently *discarded* NaNs, so a caller
+/// auditing a residual could see a finite norm for poisoned data).
+/// Empty slices give 0. Substrate utility — no solver hot path calls
+/// it today; it exists for residual/diagnostic audits.
 #[inline]
 pub fn norm_inf(a: &[f64]) -> f64 {
-    a.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    let mut m = 0.0f64;
+    for &x in a {
+        let ax = x.abs();
+        // `ax > m` is false for NaN on either side, so once a NaN is
+        // captured it sticks; the explicit is_nan check captures it.
+        if ax > m || ax.is_nan() {
+            m = ax;
+        }
+    }
+    m
 }
 
 /// Soft-threshold operator `S(x, t) = sign(x)·max(|x|−t, 0)` — the LASSO
@@ -74,6 +79,28 @@ mod tests {
         assert_eq!(y, [6.0, 9.0, 12.0]);
         assert_eq!(norm_sq(&a), 14.0);
         assert_eq!(norm_inf(&[-5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn norm_inf_empty_is_zero() {
+        assert_eq!(norm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn norm_inf_negative_only() {
+        assert_eq!(norm_inf(&[-2.0, -7.5, -0.25]), 7.5);
+    }
+
+    #[test]
+    fn norm_inf_propagates_nan() {
+        // documented behavior: any NaN poisons the result, wherever it
+        // sits relative to the running maximum
+        assert!(norm_inf(&[1.0, f64::NAN, 3.0]).is_nan());
+        assert!(norm_inf(&[f64::NAN]).is_nan());
+        assert!(norm_inf(&[9.0, f64::NAN]).is_nan());
+        assert!(norm_inf(&[f64::NAN, 9.0]).is_nan());
+        // infinities are not NaN and behave as ordinary magnitudes
+        assert_eq!(norm_inf(&[f64::NEG_INFINITY, 1.0]), f64::INFINITY);
     }
 
     #[test]

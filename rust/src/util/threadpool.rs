@@ -346,6 +346,19 @@ impl<T> WorkQueue<T> {
         }
     }
 
+    /// Non-blocking pop: `None` when the queue is empty *or* shut down
+    /// (callers that must distinguish should use
+    /// [`pop_timeout`](WorkQueue::pop_timeout)). Used by the async
+    /// merger to drain every already-queued submission into one batched
+    /// merge without waiting for more.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return None;
+        }
+        st.items.pop_front()
+    }
+
     /// Wake all blocked consumers; subsequent pops return `None`.
     pub fn shutdown(&self) {
         let mut st = self.state.lock().unwrap();
@@ -362,6 +375,20 @@ mod tests {
     fn map_preserves_order() {
         let out = parallel_map(100, 8, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_pop_is_nonblocking_fifo() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        assert_eq!(q.try_pop(), None);
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        q.push(3);
+        q.shutdown();
+        assert_eq!(q.try_pop(), None, "shutdown drops queued items");
     }
 
     #[test]
