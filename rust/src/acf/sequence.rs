@@ -35,12 +35,26 @@ impl SequenceGenerator {
     /// current preferences. Reuses `out` to avoid per-block allocation in
     /// the hot loop.
     pub fn next_block(&mut self, prefs: &Preferences, rng: &mut Rng, out: &mut Vec<u32>) {
-        let n = self.accumulators.len();
-        debug_assert_eq!(n, prefs.len());
+        debug_assert_eq!(self.accumulators.len(), prefs.len());
+        let scale = self.accumulators.len() as f64 / prefs.p_sum();
+        self.next_block_weighted(|i| prefs.preference(i) * scale, rng, out);
+    }
+
+    /// The Algorithm 3 core over an arbitrary weight function:
+    /// `weight(i)` must equal `n·π_i` for the block to average `n`
+    /// indices (and never exceed `2n`). Shared with
+    /// [`crate::select::BlockSampler`], which drives it from a plain
+    /// normalized probability slice — one copy of the
+    /// waiting-time-bound-critical accumulator logic.
+    pub fn next_block_weighted(
+        &mut self,
+        weight: impl Fn(usize) -> f64,
+        rng: &mut Rng,
+        out: &mut Vec<u32>,
+    ) {
         out.clear();
-        let scale = n as f64 / prefs.p_sum();
-        for i in 0..n {
-            let a = self.accumulators[i] + prefs.preference(i) * scale;
+        for i in 0..self.accumulators.len() {
+            let a = self.accumulators[i] + weight(i);
             let k = a as usize; // ⌊a⌋ (a ≥ 0 always)
             for _ in 0..k {
                 out.push(i as u32);
@@ -232,6 +246,29 @@ mod tests {
                 let a = gen.accumulator(i);
                 assert!((0.0..1.0).contains(&a), "a[{i}] = {a}");
             }
+        }
+    }
+
+    #[test]
+    fn weighted_core_matches_preference_path_bit_for_bit() {
+        // next_block delegates to next_block_weighted; the refactor must
+        // be invisible — same blocks, same accumulator trajectories.
+        let prefs = prefs_with(vec![0.05, 1.0, 3.0, 20.0, 0.5]);
+        let n = 5;
+        let mut g1 = SequenceGenerator::new(n);
+        let mut g2 = SequenceGenerator::new(n);
+        let mut r1 = Rng::new(13);
+        let mut r2 = Rng::new(13);
+        let scale = n as f64 / prefs.p_sum();
+        let mut b1 = Vec::new();
+        let mut b2 = Vec::new();
+        for _ in 0..50 {
+            g1.next_block(&prefs, &mut r1, &mut b1);
+            g2.next_block_weighted(|i| prefs.preference(i) * scale, &mut r2, &mut b2);
+            assert_eq!(b1, b2);
+        }
+        for i in 0..n {
+            assert_eq!(g1.accumulator(i).to_bits(), g2.accumulator(i).to_bits());
         }
     }
 

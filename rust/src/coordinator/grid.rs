@@ -45,12 +45,18 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
             let mut j = spec.base.clone();
             j.problem = with_parameter(spec.base.problem, v);
             j.policy = policy;
+            // A sweep compares the named policies, so a selector
+            // override must not leak into the rows (the CLI rejects
+            // `sweep --selector` outright; this guards programmatic
+            // callers that hand-build a SweepSpec from a train spec).
+            j.selector = None;
             jobs.push(j);
         }
         if spec.include_shrinking {
             let mut j = spec.base.clone();
             j.problem = Problem::SvmShrinking { c: v };
             j.policy = Policy::Permutation;
+            j.selector = None;
             jobs.push(j);
         }
     }

@@ -5,6 +5,7 @@ use crate::acf::AcfParams;
 use crate::anyhow;
 use crate::data::{registry, Scale};
 use crate::sched::Policy;
+use crate::select::{Selector, SelectorKind};
 use crate::shard::{self, MergeMode, Partitioner, ShardSpec};
 use crate::solvers::{self, SolveResult, SolverConfig};
 use crate::sparse::Dataset;
@@ -55,6 +56,11 @@ pub struct JobSpec {
     pub problem: Problem,
     pub dataset: String,
     pub policy: Policy,
+    /// explicit coordinate selector (`--selector`): overrides `policy`
+    /// for serial solver runs and picks the sharded engine's inner-loop
+    /// policy; `None` keeps the policy-driven behavior (ACF jobs then
+    /// run the ACF selector, bit-identical to the pre-subsystem path)
+    pub selector: Option<SelectorKind>,
     pub eps: f64,
     pub seed: u64,
     pub scale: Scale,
@@ -87,6 +93,7 @@ impl JobSpec {
             problem,
             dataset: dataset.to_string(),
             policy,
+            selector: None,
             eps: 0.01,
             seed: 20140103,
             scale: Scale::default(),
@@ -102,10 +109,21 @@ impl JobSpec {
         }
     }
 
+    /// The coordinate selector driving a serial solver run: the
+    /// explicit `--selector` choice when present, the named policy
+    /// otherwise.
+    fn build_selector(&self, n: usize, rng: Rng) -> Box<dyn Selector> {
+        match self.selector {
+            Some(kind) => kind.build(n, self.acf_params, rng),
+            None => self.policy.build(n, self.acf_params, rng),
+        }
+    }
+
     /// Sharded-engine configuration derived from this job.
     fn shard_spec(&self) -> ShardSpec {
         let mut spec = ShardSpec::new(self.shards);
         spec.partitioner = self.partitioner;
+        spec.inner_selector = self.selector.unwrap_or(SelectorKind::Acf);
         spec.seed = self.seed ^ 0x5EED;
         spec.inner_params = self.acf_params;
         spec.outer_params = self.acf_params;
@@ -182,6 +200,13 @@ impl JobOutcome {
             .set("dataset", Json::Str(self.spec.dataset.clone()))
             .set("policy", Json::Str(self.spec.policy.name().into()))
             .set("eps", Json::Num(self.spec.eps))
+            .set(
+                "selector",
+                match self.spec.selector {
+                    Some(k) => Json::Str(k.name().into()),
+                    None => Json::Null,
+                },
+            )
             .set("converged", Json::Bool(self.result.status.converged()))
             .set("iterations", Json::Num(self.result.iterations as f64))
             .set("ops", Json::Num(self.result.ops as f64))
@@ -284,7 +309,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     }
     Ok(match spec.problem {
         Problem::Svm { c } => {
-            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng);
             let (model, result) = solvers::svm::solve(ds, c, sched.as_mut(), cfg);
             JobOutcome {
                 spec: spec.clone(),
@@ -297,10 +322,21 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::SvmShrinking { c } => {
+            // the shrinking baseline never consults a selector; normalize
+            // the reported spec so the JSON cannot claim one was used
+            // (the CLI rejects the combination outright — this guards
+            // programmatic callers)
+            let mut spec_out = spec.clone();
+            if spec_out.selector.take().is_some() {
+                eprintln!(
+                    "note: selector ignored for svm-shrinking (the shrinking heuristic \
+                     owns its permutation order)"
+                );
+            }
             let mut rng = rng;
             let (model, result) = solvers::svm::solve_liblinear_shrinking(ds, c, &mut rng, cfg);
             JobOutcome {
-                spec: spec.clone(),
+                spec: spec_out,
                 result,
                 w: Some(model.w),
                 w_multi: None,
@@ -310,7 +346,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::Lasso { lambda } => {
-            let mut sched = spec.policy.build(ds.n_features(), spec.acf_params, rng);
+            let mut sched = spec.build_selector(ds.n_features(), rng);
             let (model, result) = solvers::lasso::solve(ds, lambda, sched.as_mut(), cfg);
             let k = solvers::lasso::nnz_coefficients(&model);
             JobOutcome {
@@ -324,7 +360,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::LogReg { c } => {
-            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng);
             let (model, result) = solvers::logreg::solve(ds, c, sched.as_mut(), cfg);
             JobOutcome {
                 spec: spec.clone(),
@@ -337,7 +373,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::McSvm { c } => {
-            let mut sched = spec.policy.build(ds.n_instances(), spec.acf_params, rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng);
             let (model, result) = solvers::mcsvm::solve(ds, c, sched.as_mut(), cfg);
             JobOutcome {
                 spec: spec.clone(),
@@ -453,6 +489,70 @@ mod tests {
         let tau = j.get("staleness_bound_final").unwrap().as_usize().unwrap();
         assert!(tau >= 1, "adapted τ must stay positive, got {tau}");
         assert!(j.get("objective_evals").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn explicit_acf_selector_is_bit_identical_to_policy_path() {
+        // The adapter contract at the job level: `--selector acf` must
+        // reproduce the policy-driven (pre-subsystem) run bit-for-bit.
+        let base = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        let mut explicit = base.clone();
+        explicit.selector = Some(SelectorKind::Acf);
+        let a = run_job(&base).unwrap();
+        let b = run_job(&explicit).unwrap();
+        assert_eq!(a.result.iterations, b.result.iterations);
+        assert_eq!(a.result.ops, b.result.ops);
+        assert_eq!(a.result.objective, b.result.objective);
+        assert_eq!(a.w, b.w);
+        let j = b.to_json();
+        assert_eq!(j.get("selector").unwrap().as_str(), Some("acf"));
+    }
+
+    #[test]
+    fn every_selector_kind_runs_each_serial_family() {
+        for kind in SelectorKind::all() {
+            for (problem, ds) in [
+                (Problem::Svm { c: 1.0 }, "rcv1-like"),
+                (Problem::Lasso { lambda: 0.01 }, "rcv1-like"),
+                (Problem::LogReg { c: 1.0 }, "rcv1-like"),
+                (Problem::McSvm { c: 1.0 }, "iris-like"),
+            ] {
+                let mut spec = quick_spec(problem, ds, Policy::Acf);
+                spec.selector = Some(kind);
+                let out = run_job(&spec).unwrap();
+                assert!(
+                    out.result.status.converged(),
+                    "{} with selector {}: {}",
+                    problem.family(),
+                    kind.name(),
+                    out.result.summary()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shrinking_job_normalizes_an_inapplicable_selector() {
+        // the shrinking baseline cannot honor a selector; the reported
+        // spec must not claim one was used
+        let mut spec =
+            quick_spec(Problem::SvmShrinking { c: 1.0 }, "rcv1-like", Policy::Permutation);
+        spec.selector = Some(SelectorKind::Bandit);
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+        assert!(out.spec.selector.is_none());
+        assert!(out.to_json().get("selector").unwrap().as_str().is_none());
+    }
+
+    #[test]
+    fn selector_threads_into_sharded_inner_loops() {
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 4;
+        spec.selector = Some(SelectorKind::Cyclic);
+        assert!(spec.uses_sharded_engine());
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        assert_eq!(out.to_json().get("selector").unwrap().as_str(), Some("cyclic"));
     }
 
     #[test]

@@ -5,9 +5,13 @@
 //!
 //! The crate is a coordinate-descent optimization framework in which the
 //! paper's contribution — the **Adaptive Coordinate Frequencies (ACF)**
-//! scheduler — is a pluggable coordinate-selection policy evaluated
-//! against uniform / cyclic / random-permutation / shrinking baselines on
-//! the paper's four problem families:
+//! scheduler — is one policy inside the pluggable coordinate-selection
+//! subsystem [`select`] (the [`select::Selector`] trait), evaluated
+//! against uniform / permuted-cyclic / shrinking baselines *and* the
+//! competing online schemes from the surrounding literature (EXP3
+//! bandit sampling, adaptive importance sampling; `--selector
+//! acf|uniform|cyclic|bandit|importance`, `cargo bench --bench
+//! policy_faceoff`) on the paper's four problem families:
 //!
 //! * LASSO regression (§3.1, Table 3),
 //! * linear SVM dual (§3.2, Tables 5–6, Figure 2),
@@ -57,6 +61,7 @@ pub mod markov;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;
+pub mod select;
 pub mod shard;
 pub mod solvers;
 pub mod sparse;

@@ -19,6 +19,7 @@ use acf_cd::data::{registry, Scale};
 use acf_cd::markov;
 use acf_cd::runtime::Runtime;
 use acf_cd::sched::Policy;
+use acf_cd::select::SelectorKind;
 use acf_cd::shard::Partitioner;
 use acf_cd::util::cli::Args;
 use acf_cd::util::rng::Rng;
@@ -60,6 +61,15 @@ fn print_help() {
          common flags: --problem svm|lasso|logreg|mcsvm  --dataset <name>\n\
          \u{20}             --policy acf|perm|cyclic|uniform|hier  --c/--lambda <v>\n\
          \u{20}             --eps <v>  --scale <f>  --seed <n>  --workers <n>\n\
+         selection:    --selector acf|uniform|cyclic|bandit|importance picks\n\
+         \u{20}             the coordinate-selection rule explicitly (the\n\
+         \u{20}             select/ subsystem: ACF, i.i.d. uniform, permuted\n\
+         \u{20}             cyclic, EXP3 bandit, adaptive importance sampling);\n\
+         \u{20}             overrides --policy for serial train runs and picks\n\
+         \u{20}             the sharded engine's inner-loop rule; compare them\n\
+         \u{20}             with `cargo bench --bench policy_faceoff`. NB:\n\
+         \u{20}             --selector cyclic re-permutes each sweep, while\n\
+         \u{20}             --policy cyclic is fixed index order\n\
          sharding:     --shards <S>  runs svm/lasso on the parallel sharded\n\
          \u{20}             engine (per-shard ACF + outer ACF over shards;\n\
          \u{20}             engages with --policy acf, the default — other\n\
@@ -109,6 +119,18 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
         .with_shards(shards)
         .with_partitioner(partitioner);
     let mut spec = JobSpec::new(problem, &dataset, policy);
+    // --selector: explicit coordinate-selection rule (select/ subsystem)
+    if let Some(s) = args.get("selector") {
+        spec.selector = Some(SelectorKind::parse(s).map_err(|e| anyhow!("{e}"))?);
+        // the shrinking baseline owns its permutation order — a selector
+        // cannot be honored there, so reject instead of silently ignoring
+        if matches!(spec.problem, Problem::SvmShrinking { .. }) {
+            return Err(anyhow!(
+                "--selector does not apply to --problem svm-shrinking (the shrinking \
+                 heuristic is an active-set transformation with its own permutation order)"
+            ));
+        }
+    }
     spec.eps = args.f64_or("eps", 0.01)?;
     spec.seed = args.u64_or("seed", 20140103)?;
     spec.scale = Scale(args.f64_or("scale", 1.0)?);
@@ -207,6 +229,15 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let base = parse_spec(args)?;
+    // Fail fast rather than silently ignore: a sweep compares the rules
+    // named in --policies, so a --selector override cannot be honored.
+    if base.selector.is_some() {
+        return Err(anyhow!(
+            "--selector conflicts with `sweep` (which compares --policies); \
+             use `train --selector ...` or `cargo bench --bench policy_faceoff` \
+             for selector comparisons"
+        ));
+    }
     let grid = args.f64_list("grid")?.unwrap_or_else(|| vec![0.01, 0.1, 1.0, 10.0]);
     let policies: Vec<Policy> = args
         .str_list("policies")

@@ -1,5 +1,13 @@
 //! Coordinate-selection policies behind one interface.
 //!
+//! The trait itself now lives in the [`crate::select`] subsystem as
+//! [`crate::select::Selector`]; this module re-exports it under its
+//! original name `Scheduler` (the two names are the same trait) and
+//! keeps the epoch-sweep baseline policies plus the [`Policy`] name
+//! registry. The `select/` subsystem adds the adaptive alternatives
+//! (EXP3 bandit, adaptive importance sampling) and the `--selector`
+//! face-off machinery.
+//!
 //! The CD solvers are generic over [`Scheduler`]; the paper's comparison
 //! is exactly a comparison of these policies:
 //!
@@ -22,28 +30,11 @@
 use crate::acf::{AcfParams, AcfScheduler};
 use crate::util::rng::Rng;
 
-/// A coordinate-selection policy. `n` is fixed at construction; `next`
-/// yields the coordinate for iteration t; `report` feeds back the
-/// observed single-step progress Δf (ignored by non-adaptive policies).
-pub trait Scheduler: Send {
-    /// Select the next active coordinate.
-    fn next(&mut self) -> usize;
-
-    /// Report observed progress of the last step on coordinate `i`.
-    fn report(&mut self, _i: usize, _delta_f: f64) {}
-
-    /// Number of coordinates.
-    fn n(&self) -> usize;
-
-    /// Human-readable policy name for reports.
-    fn name(&self) -> &'static str;
-
-    /// Current selection probabilities (diagnostics; uniform for
-    /// non-adaptive policies).
-    fn probabilities(&self) -> Vec<f64> {
-        vec![1.0 / self.n() as f64; self.n()]
-    }
-}
+/// The coordinate-selection trait, re-exported from [`crate::select`]
+/// under its historical name (`Scheduler` and
+/// [`crate::select::Selector`] are the same trait — every implementor
+/// of one satisfies the other).
+pub use crate::select::Selector as Scheduler;
 
 /// Deterministic cyclic sweeps: 0, 1, …, n−1, 0, 1, …
 #[derive(Clone, Debug)]
@@ -179,8 +170,8 @@ impl Scheduler for AcfSchedulerPolicy {
         "acf"
     }
 
-    fn probabilities(&self) -> Vec<f64> {
-        self.inner.preferences().probabilities()
+    fn probabilities_into(&self, out: &mut Vec<f64>) {
+        self.inner.preferences().probabilities_into(out);
     }
 }
 

@@ -1,0 +1,184 @@
+//! Adaptive importance sampling, after Perekrestenko et al., *Faster
+//! Coordinate Descent via Adaptive Importance Sampling*
+//! (arXiv:1703.02518).
+//!
+//! The reference scheme samples coordinates proportionally to
+//! per-coordinate gradient (duality-gap) bounds that are cheap to keep
+//! current. Our solvers expose exactly one cheap per-step signal — the
+//! realized progress Δf — so the selector maintains a fading average
+//! progress estimate `s_i` per coordinate and samples
+//!
+//! ```text
+//! p_i = (1 − ε)·ŝ_i / Σ ŝ  +  ε/n
+//! ```
+//!
+//! where `ŝ_i` is `s_i` for visited coordinates and the running mean of
+//! the visited estimates for unvisited ones (optimistic initialization:
+//! a coordinate is never starved merely because it has not been tried).
+//! The ε/n floor preserves the essentially-cyclic waiting-time bound,
+//! exactly as the clip range `p_min` does for ACF.
+//!
+//! Compared to [`super::Exp3BanditSelector`] this is the greedier
+//! scheme: probabilities follow the raw estimates instead of an
+//! exponential-weights posterior, which reacts faster but can
+//! over-commit when progress estimates go stale together (the fading
+//! average and the floor are the two stabilizers).
+
+use super::{BlockSampler, Selector};
+use crate::util::rng::Rng;
+
+/// Uniform mixing floor ε.
+const EPSILON: f64 = 0.2;
+
+/// Fading rate β of the per-coordinate progress average.
+const BETA: f64 = 0.3;
+
+/// Adaptive importance sampling from running progress estimates.
+#[derive(Clone, Debug)]
+pub struct ImportanceSelector {
+    /// fading average progress per coordinate (valid where `seen`)
+    est: Vec<f64>,
+    seen: Vec<bool>,
+    /// Σ est over seen coordinates (kept incrementally)
+    seen_sum: f64,
+    seen_count: usize,
+    sampler: BlockSampler,
+    rng: Rng,
+}
+
+impl ImportanceSelector {
+    pub fn new(n: usize, rng: Rng) -> ImportanceSelector {
+        assert!(n > 0);
+        ImportanceSelector {
+            est: vec![0.0; n],
+            seen: vec![false; n],
+            seen_sum: 0.0,
+            seen_count: 0,
+            sampler: BlockSampler::new(n),
+            rng,
+        }
+    }
+}
+
+/// Importance probabilities from the estimates (floored mixture),
+/// written into `out` without allocating.
+fn fill_probs(est: &[f64], seen: &[bool], seen_sum: f64, seen_count: usize, out: &mut Vec<f64>) {
+    let n = est.len();
+    out.clear();
+    if seen_count == 0 || seen_sum <= 0.0 {
+        // no signal yet (or a fully converged stretch): stay uniform
+        out.resize(n, 1.0 / n as f64);
+        return;
+    }
+    let mean = seen_sum / seen_count as f64;
+    out.extend(est.iter().zip(seen.iter()).map(|(&s, &v)| if v { s } else { mean }));
+    let total: f64 = out.iter().sum();
+    if total <= 0.0 {
+        out.clear();
+        out.resize(n, 1.0 / n as f64);
+        return;
+    }
+    for p in out.iter_mut() {
+        *p = (1.0 - EPSILON) * *p / total + EPSILON / n as f64;
+    }
+}
+
+impl Selector for ImportanceSelector {
+    #[inline]
+    fn next(&mut self) -> usize {
+        let (est, seen) = (&self.est, &self.seen);
+        let (sum, count) = (self.seen_sum, self.seen_count);
+        self.sampler.next(&mut self.rng, |out| fill_probs(est, seen, sum, count, out))
+    }
+
+    fn report(&mut self, i: usize, delta_f: f64) {
+        let delta_f = delta_f.max(0.0);
+        if self.seen[i] {
+            let new = (1.0 - BETA) * self.est[i] + BETA * delta_f;
+            self.seen_sum += new - self.est[i];
+            self.est[i] = new;
+        } else {
+            // first sample initializes the fading average directly
+            self.seen[i] = true;
+            self.seen_count += 1;
+            self.est[i] = delta_f;
+            self.seen_sum += delta_f;
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.est.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "importance"
+    }
+
+    fn probabilities_into(&self, out: &mut Vec<f64>) {
+        fill_probs(&self.est, &self.seen, self.seen_sum, self.seen_count, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_uniform_then_concentrates() {
+        let n = 8;
+        let mut s = ImportanceSelector::new(n, Rng::new(1));
+        assert_eq!(s.probabilities(), vec![1.0 / n as f64; n]);
+        let mut counts = vec![0usize; n];
+        for _ in 0..16_000 {
+            let i = s.next();
+            counts[i] += 1;
+            s.report(i, if i == 5 { 4.0 } else { 0.05 });
+        }
+        let others_max = counts
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != 5)
+            .map(|(_, &c)| c)
+            .max()
+            .unwrap();
+        assert!(counts[5] > 2 * others_max, "{counts:?}");
+    }
+
+    #[test]
+    fn floor_keeps_every_coordinate_alive() {
+        let n = 6;
+        let mut s = ImportanceSelector::new(n, Rng::new(2));
+        for _ in 0..12_000 {
+            let i = s.next();
+            s.report(i, if i == 0 { 10.0 } else { 0.0 });
+        }
+        let p = s.probabilities();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{p:?}");
+        for &pi in &p {
+            assert!(pi >= EPSILON / n as f64 - 1e-12, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn all_zero_progress_recovers_uniform() {
+        // a converged stretch must not divide by a zero estimate sum
+        let n = 4;
+        let mut s = ImportanceSelector::new(n, Rng::new(3));
+        for _ in 0..4_000 {
+            let i = s.next();
+            s.report(i, 0.0);
+        }
+        let p = s.probabilities();
+        assert!(p.iter().all(|x| (x - 0.25).abs() < 1e-9), "{p:?}");
+    }
+
+    #[test]
+    fn unseen_coordinates_inherit_the_running_mean() {
+        let mut s = ImportanceSelector::new(4, Rng::new(4));
+        // only coordinate 0 reported so far
+        s.report(0, 2.0);
+        let p = s.probabilities();
+        // all raw estimates equal (2.0 seen, mean 2.0 unseen) ⇒ uniform
+        assert!(p.iter().all(|x| (x - 0.25).abs() < 1e-9), "{p:?}");
+    }
+}

@@ -1,0 +1,65 @@
+//! I.i.d. uniform selection — the baseline most randomized-CD analysis
+//! assumes (each step picks any coordinate with probability 1/n,
+//! independently). Non-adaptive: `report` is a no-op.
+
+use super::Selector;
+use crate::util::rng::Rng;
+
+/// Uniform i.i.d. coordinate selection.
+#[derive(Clone, Debug)]
+pub struct UniformSelector {
+    n: usize,
+    rng: Rng,
+}
+
+impl UniformSelector {
+    pub fn new(n: usize, rng: Rng) -> UniformSelector {
+        assert!(n > 0);
+        UniformSelector { n, rng }
+    }
+}
+
+impl Selector for UniformSelector {
+    #[inline]
+    fn next(&mut self) -> usize {
+        self.rng.below(self.n)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_everything_eventually() {
+        let n = 20;
+        let mut s = UniformSelector::new(n, Rng::new(5));
+        let mut seen = vec![false; n];
+        for _ in 0..2_000 {
+            seen[s.next()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn roughly_uniform_counts() {
+        let n = 8;
+        let mut s = UniformSelector::new(n, Rng::new(6));
+        let mut counts = vec![0usize; n];
+        for _ in 0..40_000 {
+            counts[s.next()] += 1;
+        }
+        let expect = 40_000.0 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 6.0 * expect.sqrt(), "{counts:?}");
+        }
+    }
+}

@@ -1,10 +1,14 @@
 //! The sharded coordinate-descent engine.
 //!
 //! [`ShardedDriver`] partitions the coordinate set into S shards, runs an
-//! independent inner [`AcfScheduler`] inside each shard, and layers an
-//! *outer* ACF instance (paper Algorithms 2+3, applied one level up) over
-//! the shards themselves. Two merge protocols are available, selected by
-//! [`ShardSpec::merge`]:
+//! independent inner [`crate::select::Selector`] inside each shard
+//! (ACF by default — [`ShardSpec::inner_selector`] swaps in any policy
+//! from the `select/` subsystem without touching the merge machinery),
+//! and layers an *outer* ACF instance (paper Algorithms 2+3, applied one
+//! level up) over the shards themselves. The outer level stays ACF
+//! regardless of the inner selector: shard visit frequencies are the
+//! engine's own control loop, not a benchmarked policy. Two merge
+//! protocols are available, selected by [`ShardSpec::merge`]:
 //!
 //! # Synchronized mode ([`MergeMode::Sync`], the default)
 //!
@@ -106,8 +110,9 @@
 //! and the engine returns [`crate::util::error::ErrorKind::ShardWorker`]
 //! naming the failing shard.
 
-use crate::acf::{AcfParams, AcfScheduler, Preferences, SequenceGenerator};
+use crate::acf::{AcfParams, Preferences, SequenceGenerator};
 use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::select::{Selector, SelectorKind};
 use crate::shard::partition::{Partition, Partitioner};
 use crate::solvers::{SolveResult, SolveStatus, SolverConfig};
 use crate::util::error::{Error, Result};
@@ -259,10 +264,15 @@ pub struct ShardSpec {
     pub partitioner: Partitioner,
     /// master seed; all shard/outer streams derive from it
     pub seed: u64,
-    /// ACF parameters of the per-shard inner schedulers
+    /// ACF parameters of the per-shard inner schedulers (only consulted
+    /// when `inner_selector` is [`SelectorKind::Acf`])
     pub inner_params: AcfParams,
     /// ACF parameters of the outer (shard-level) adaptation
     pub outer_params: AcfParams,
+    /// coordinate-selection policy of the per-shard inner loops
+    /// (default ACF — bit-identical to the pre-subsystem engine; the
+    /// outer shard-level ACF is unaffected by this choice)
+    pub inner_selector: SelectorKind,
     /// worker threads (0 = one per shard, bounded by hardware
     /// parallelism)
     pub workers: usize,
@@ -281,6 +291,7 @@ impl ShardSpec {
             seed: 20140103,
             inner_params: AcfParams::default(),
             outer_params: AcfParams::default(),
+            inner_selector: SelectorKind::Acf,
             workers: 0,
             merge: MergeMode::Sync,
             config: SolverConfig::default(),
@@ -309,6 +320,12 @@ impl ShardSpec {
     /// starting from [`DEFAULT_STALENESS_BOUND`].
     pub fn with_async_auto(mut self) -> ShardSpec {
         self.merge = MergeMode::Async { staleness_bound: DEFAULT_STALENESS_BOUND, adaptive: true };
+        self
+    }
+
+    /// Pin the per-shard inner coordinate-selection policy.
+    pub fn with_inner_selector(mut self, kind: SelectorKind) -> ShardSpec {
+        self.inner_selector = kind;
         self
     }
 }
@@ -393,7 +410,9 @@ struct ShardState {
     trial: Vec<f64>,
     /// scratch: private copy of the shared state
     local_shared: Vec<f64>,
-    sched: AcfScheduler,
+    /// inner coordinate selector over this shard's local indices
+    /// ([`ShardSpec::inner_selector`]; ACF by default)
+    sched: Box<dyn Selector>,
 }
 
 /// What a shard reports back from one synchronized local epoch.
@@ -860,7 +879,10 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             .map(|k| {
                 let ids = self.partition.shard(k).to_vec();
                 let values: Vec<f64> = ids.iter().map(|&i| p.initial_value(i as usize)).collect();
-                let sched = AcfScheduler::new(
+                // the RNG derivation is unchanged from the hard-wired
+                // AcfScheduler era, so the default (ACF) inner selector
+                // keeps sync runs bit-identical across the refactor
+                let sched = self.spec.inner_selector.build(
                     ids.len(),
                     self.spec.inner_params,
                     Rng::new(self.spec.seed ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
@@ -1757,6 +1779,42 @@ mod tests {
         assert!(out.result.status.converged(), "{}", out.result.summary());
         assert!(out.values.iter().all(|&v| (v - 1.0).abs() < 1e-12));
         assert_eq!(out.stale_drops, 0, "sync mode never discards for staleness");
+    }
+
+    #[test]
+    fn quad_sync_converges_with_every_inner_selector() {
+        // The merge machinery must be selector-agnostic: any policy
+        // from the select/ subsystem drives the inner loops to the same
+        // fixed point (the outer shard-level ACF is untouched).
+        let p = Quad::new(16);
+        for kind in SelectorKind::all() {
+            let out = ShardedDriver::new(&p, spec(4).with_inner_selector(kind)).run().unwrap();
+            assert!(
+                out.result.status.converged(),
+                "inner selector {}: {}",
+                kind.name(),
+                out.result.summary()
+            );
+            assert!(
+                out.values.iter().all(|&v| (v - 1.0).abs() < 1e-12),
+                "inner selector {}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn default_inner_selector_is_acf_and_matches_explicit_acf() {
+        // Bit-identical contract of the adapter inside the engine: the
+        // default spec and an explicit ACF selection are the same run.
+        let p = Quad::new(24);
+        let a = ShardedDriver::new(&p, spec(3)).run().unwrap();
+        let b = ShardedDriver::new(&p, spec(3).with_inner_selector(SelectorKind::Acf))
+            .run()
+            .unwrap();
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.result.iterations, b.result.iterations);
+        assert_eq!(a.result.objective, b.result.objective);
     }
 
     #[test]

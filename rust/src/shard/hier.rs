@@ -91,16 +91,18 @@ impl Scheduler for HierarchicalScheduler {
         "hierarchical-acf"
     }
 
-    fn probabilities(&self) -> Vec<f64> {
-        let outer = self.outer.preferences().probabilities();
-        let mut out = vec![0.0; self.partition.n()];
+    fn probabilities_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.partition.n(), 0.0);
+        let mut outer = Vec::with_capacity(self.inners.len());
+        self.outer.preferences().probabilities_into(&mut outer);
+        let mut pi = Vec::new();
         for (s, inner) in self.inners.iter().enumerate() {
-            let pi = inner.preferences().probabilities();
+            inner.preferences().probabilities_into(&mut pi);
             for (kk, &i) in self.partition.shard(s).iter().enumerate() {
                 out[i as usize] = outer[s] * pi[kk];
             }
         }
-        out
     }
 }
 

@@ -2,6 +2,12 @@
 //! is the shared state. The per-step math is identical to
 //! [`crate::solvers::lasso`]; this module only adapts it to the
 //! [`ShardProblem`] contract.
+//!
+//! The per-shard inner loops run any
+//! [`crate::select::Selector`] policy — set
+//! [`ShardSpec::inner_selector`] (CLI `--selector`) to face off ACF
+//! against bandit / importance sampling inside the parallel engine; the
+//! outer shard-level ACF is unaffected.
 
 use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome};
 use crate::solvers::lasso::{subgrad_violation, LassoModel, LassoProblem};

@@ -6,11 +6,13 @@
 //!
 //! * [`partition`] — splits the coordinate set into S shards
 //!   (contiguous ranges or a deterministic hash);
-//! * [`engine`] — runs an independent inner ACF scheduler inside every
-//!   shard on a persistent worker pool, merging the shared solver state
-//!   either at an epoch barrier or asynchronously (below), while an
-//!   **outer** ACF instance adapts how often each shard is visited from
-//!   its aggregate progress Δf;
+//! * [`engine`] — runs an independent inner coordinate selector inside
+//!   every shard on a persistent worker pool (ACF by default;
+//!   [`ShardSpec::inner_selector`] plugs in any
+//!   [`crate::select::Selector`] policy), merging the shared solver
+//!   state either at an epoch barrier or asynchronously (below), while
+//!   an **outer** ACF instance adapts how often each shard is visited
+//!   from its aggregate progress Δf;
 //! * [`lasso`] / [`svm`] — shard-aware solver front-ends (features are
 //!   sharded for LASSO, instances for the SVM dual);
 //! * [`hier`] — the single-threaded two-level scheduler exposed as

@@ -4,6 +4,12 @@
 //! the [`ShardProblem`] contract. The averaged-merge fallback keeps α
 //! inside the box `[0, C]` automatically (a convex combination of
 //! feasible points).
+//!
+//! The per-shard inner loops run any
+//! [`crate::select::Selector`] policy — set
+//! [`ShardSpec::inner_selector`] (CLI `--selector`) to face off ACF
+//! against bandit / importance sampling inside the parallel engine; the
+//! outer shard-level ACF is unaffected.
 
 use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome};
 use crate::solvers::svm::{pg_violation, SvmModel};

@@ -21,7 +21,7 @@
 //! order"); ACF replaces the cyclic rule.
 
 use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
-use crate::sched::Scheduler;
+use crate::select::Selector;
 use crate::sparse::ops::soft_threshold;
 use crate::sparse::{Csr, Dataset};
 
@@ -79,11 +79,11 @@ pub(crate) fn subgrad_violation(w_j: f64, g: f64, lambda: f64) -> f64 {
     }
 }
 
-/// Solve the LASSO with a generic coordinate scheduler.
+/// Solve the LASSO with a generic coordinate selector.
 pub fn solve(
     ds: &Dataset,
     lambda: f64,
-    sched: &mut dyn Scheduler,
+    sched: &mut dyn Selector,
     config: SolverConfig,
 ) -> (LassoModel, SolveResult) {
     let prob = LassoProblem::new(ds);
@@ -95,12 +95,12 @@ pub fn solve(
 pub fn solve_prepared(
     prob: &LassoProblem,
     lambda: f64,
-    sched: &mut dyn Scheduler,
+    sched: &mut dyn Selector,
     config: SolverConfig,
 ) -> (LassoModel, SolveResult) {
     let d = prob.n_features;
     let l = prob.n_instances as f64;
-    assert_eq!(sched.n(), d, "scheduler size must match feature count");
+    assert_eq!(sched.n(), d, "selector size must match feature count");
     let mut w = vec![0.0f64; d];
     // residual r = Xw − y = −y at w = 0
     let mut r: Vec<f64> = prob.y.iter().map(|&v| -v).collect();

@@ -26,7 +26,7 @@
 //! entropy terms before/after.
 
 use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
-use crate::sched::Scheduler;
+use crate::select::Selector;
 use crate::sparse::Dataset;
 
 /// Trained dual logistic-regression model.
@@ -90,11 +90,11 @@ fn grad_violation(g: f64) -> f64 {
     g.abs()
 }
 
-/// Scheduler-driven dual CD for logistic regression.
+/// Selector-driven dual CD for logistic regression.
 pub fn solve(
     ds: &Dataset,
     c: f64,
-    sched: &mut dyn Scheduler,
+    sched: &mut dyn Selector,
     config: SolverConfig,
 ) -> (LogRegModel, SolveResult) {
     let n = ds.n_instances();

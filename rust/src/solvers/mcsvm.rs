@@ -28,7 +28,7 @@
 //! to `k ≠ y_i`: diagonal `2‖x_i‖²`, off-diagonal `‖x_i‖²`.
 
 use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
-use crate::sched::Scheduler;
+use crate::select::Selector;
 use crate::sparse::Dataset;
 
 /// Trained multi-class model.
@@ -169,13 +169,13 @@ fn solve_subspace(
     }
 }
 
-/// Scheduler-driven subspace descent. The scheduler selects *examples*
+/// Selector-driven subspace descent. The selector picks *examples*
 /// (subspaces); iteration counts follow the paper's convention of
 /// counting inner CD steps.
 pub fn solve(
     ds: &Dataset,
     c: f64,
-    sched: &mut dyn Scheduler,
+    sched: &mut dyn Selector,
     config: SolverConfig,
 ) -> (McSvmModel, SolveResult) {
     let n = ds.n_instances();

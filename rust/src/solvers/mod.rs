@@ -1,6 +1,8 @@
 //! CD solvers for the paper's four problem families (§3), all generic
-//! over [`crate::sched::Scheduler`] and instrumented with the paper's
-//! iteration / operation / wall-clock metrics.
+//! over [`crate::select::Selector`] (the coordinate-selection
+//! subsystem; `--selector acf|uniform|cyclic|bandit|importance`) and
+//! instrumented with the paper's iteration / operation / wall-clock
+//! metrics.
 //!
 //! | module | problem | paper | experiments |
 //! |--------|---------|-------|-------------|

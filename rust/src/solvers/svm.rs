@@ -20,15 +20,16 @@
 //! ACF consumes.
 //!
 //! Two solver entry points:
-//! * [`solve`] — generic over a [`Scheduler`] (uniform / cyclic /
-//!   permutation / ACF), stopping on max-KKT-violation < ε verified by a
+//! * [`solve`] — generic over a [`Selector`] (any policy from the
+//!   [`crate::select`] subsystem: uniform / cyclic / ACF / bandit /
+//!   importance), stopping on max-KKT-violation < ε verified by a
 //!   full pass;
 //! * [`solve_liblinear_shrinking`] — the liblinear baseline: random
 //!   permutation epochs plus the shrinking heuristic with warm-restart on
 //!   shrink failure (the paper's strongest competitor).
 
 use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
-use crate::sched::Scheduler;
+use crate::select::Selector;
 use crate::sparse::Dataset;
 
 /// Trained binary SVM model (dual and primal views).
@@ -81,11 +82,11 @@ fn verify_pass(ds: &Dataset, alpha: &[f64], w: &[f64], c: f64) -> (f64, usize) {
 pub fn solve(
     ds: &Dataset,
     c: f64,
-    sched: &mut dyn Scheduler,
+    sched: &mut dyn Selector,
     config: SolverConfig,
 ) -> (SvmModel, SolveResult) {
     let n = ds.n_instances();
-    assert_eq!(sched.n(), n, "scheduler size must match instance count");
+    assert_eq!(sched.n(), n, "selector size must match instance count");
     let d = ds.n_features();
     let q_diag = ds.x.row_norms_sq();
     let mut alpha = vec![0.0f64; n];

@@ -84,6 +84,46 @@ fn acf_beats_cyclic_on_lasso_small_lambda() {
 }
 
 #[test]
+fn selector_faceoff_reaches_common_objective_on_svm() {
+    // The select/ subsystem contract end-to-end: every selector drives
+    // the same solver to the same ε-KKT point, so final objectives
+    // agree within tolerance (the policy_faceoff bench's acceptance
+    // criterion, at integration-test scale).
+    use acf_cd::select::SelectorKind;
+    let mut base = quick(Problem::Svm { c: 10.0 }, "rcv1-like", Policy::Acf);
+    base.eps = 1e-3;
+    let ds = base.load_dataset().unwrap();
+    let mut objectives = Vec::new();
+    for kind in SelectorKind::all() {
+        let mut spec = base.clone();
+        spec.selector = Some(kind);
+        let out = acf_cd::coordinator::run_job_on(&spec, &ds).unwrap();
+        assert!(out.result.status.converged(), "{}: {}", kind.name(), out.result.summary());
+        objectives.push(out.result.objective);
+    }
+    let best = objectives.iter().cloned().fold(f64::INFINITY, f64::min);
+    for (kind, &f) in SelectorKind::all().iter().zip(&objectives) {
+        let rel = (f - best) / best.abs().max(1.0);
+        assert!(rel < 1e-2, "{}: objective {f} vs best {best}", kind.name());
+    }
+}
+
+#[test]
+fn sharded_engine_with_swapped_inner_selector_matches_serial_objective() {
+    use acf_cd::select::SelectorKind;
+    let serial = quick(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+    let ds = serial.load_dataset().unwrap();
+    let a = acf_cd::coordinator::run_job_on(&serial, &ds).unwrap();
+    let mut sharded = serial.clone();
+    sharded.shards = 4;
+    sharded.selector = Some(SelectorKind::Importance);
+    let b = acf_cd::coordinator::run_job_on(&sharded, &ds).unwrap();
+    assert!(a.result.status.converged() && b.result.status.converged());
+    let rel = (a.result.objective - b.result.objective).abs() / a.result.objective.abs().max(1.0);
+    assert!(rel < 1e-2, "{} vs {}", a.result.objective, b.result.objective);
+}
+
+#[test]
 fn sweep_and_report_pipeline() {
     let base = quick(Problem::Svm { c: 1.0 }, "news20-like", Policy::Acf);
     let outcomes = run_sweep(&SweepSpec {
