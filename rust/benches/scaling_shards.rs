@@ -1,9 +1,12 @@
 //! Shard-scaling benchmark — wall-clock speedup and solution-quality
 //! parity of the sharded parallel CD engine (`acf_cd::shard`) vs. the
 //! serial ACF path, across S ∈ {1, 2, 4, 8} on large synthetic datasets
-//! (LASSO: features sharded; SVM dual: instances sharded), for **both**
-//! merge protocols: the epoch-synchronized barrier (`shards_S` entries)
-//! and the asynchronous bounded-staleness merge (`async_shards_S`).
+//! for all four paper families (LASSO: features sharded; SVM dual /
+//! dual logreg / WW multi-class SVM: instances sharded — mcsvm with its
+//! K per-class weight buffers merged as one versioned unit), for
+//! **both** merge protocols: the epoch-synchronized barrier (`shards_S`
+//! entries) and the asynchronous bounded-staleness merge
+//! (`async_shards_S`).
 //!
 //! Reported per (S, merge mode):
 //!   * time-to-convergence wall clock + speedup over the serial solver,
@@ -23,9 +26,10 @@ use acf_cd::bench_util::{summary_entry, write_bench_summary, BenchConfig, Table}
 use acf_cd::data::synth;
 use acf_cd::sched::{AcfSchedulerPolicy, Scheduler};
 use acf_cd::shard::{
-    lasso as shard_lasso, svm as shard_svm, ShardSpec, ShardedOutcome, DEFAULT_STALENESS_BOUND,
+    lasso as shard_lasso, logreg as shard_logreg, mcsvm as shard_mcsvm, svm as shard_svm,
+    ShardSpec, ShardedOutcome, DEFAULT_STALENESS_BOUND,
 };
-use acf_cd::solvers::{lasso, svm, SolveResult};
+use acf_cd::solvers::{lasso, logreg, mcsvm, svm, SolveResult};
 use acf_cd::util::json::Json;
 use acf_cd::util::rng::Rng;
 use acf_cd::util::timer::{fmt_secs, Timer};
@@ -300,6 +304,96 @@ fn main() {
                 let sharded_prob = shard_svm::ShardedSvm::new(&ds, c);
                 shard_svm::run_prepared(&sharded_prob, spec)
             },
+            &mut out,
+        );
+    }
+
+    // ---------------- dual logreg (instances sharded) -------------------
+    {
+        let (n, d, nnz) = if cfg.quick { (2_000, 6_000, 30) } else { (12_000, 40_000, 80) };
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "scale-logreg",
+                n,
+                d,
+                nnz_per_row: nnz,
+                zipf_s: 1.0,
+                concept_k: 200,
+                noise: 0.03,
+            },
+            &mut Rng::new(cfg.seed ^ 2),
+        );
+        let c = 1.0;
+        let eps = 1e-3;
+        println!(
+            "\nlogreg dataset: {} instances × {} features, {} nnz",
+            ds.n_instances(),
+            ds.n_features(),
+            ds.nnz()
+        );
+
+        // warm the norm cache outside every timed region (both paths
+        // borrow it), as for the SVM family
+        let _ = ds.x.row_norms_sq();
+        let t = acf_cd::util::timer::Timer::start();
+        let mut sched =
+            AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) =
+            logreg::solve(&ds, c, &mut sched as &mut dyn Scheduler, cfg.solver_config(eps));
+        let serial_secs = t.secs();
+        println!("serial: {}", serial.summary());
+        run_family(
+            "logreg",
+            serial_secs,
+            &serial,
+            &cfg,
+            eps,
+            |spec| {
+                let sharded_prob = shard_logreg::ShardedLogReg::new(&ds, c);
+                shard_logreg::run_prepared(&sharded_prob, spec)
+            },
+            &mut out,
+        );
+    }
+
+    // ---------------- WW multi-class SVM (instances sharded, K-wide
+    // per-class shared state merged as one versioned unit). NB: the
+    // serial "steps" count inner SMO steps (paper convention), sharded
+    // rows count subspace solves — compare the ops/seconds columns, not
+    // steps (see shard::mcsvm module docs). --------------------------
+    {
+        let (n, d, k, nnz) =
+            if cfg.quick { (1_500, 4_000, 6, 20) } else { (8_000, 20_000, 10, 50) };
+        let ds = synth::multiclass_text("scale-mcsvm", n, d, k, nnz, 0.02, &mut Rng::new(cfg.seed ^ 3));
+        let c = 1.0;
+        let eps = 1e-2;
+        println!(
+            "\nmcsvm dataset: {} instances × {} features, {} classes, {} nnz",
+            ds.n_instances(),
+            ds.n_features(),
+            k,
+            ds.nnz()
+        );
+
+        let _ = ds.x.row_norms_sq();
+        let t = acf_cd::util::timer::Timer::start();
+        let mut sched =
+            AcfSchedulerPolicy::new(ds.n_instances(), Default::default(), Rng::new(cfg.seed));
+        let (_, serial) =
+            mcsvm::solve(&ds, c, &mut sched as &mut dyn Scheduler, cfg.solver_config(eps))
+                .expect("synthetic labels are 0..K-1");
+        let serial_secs = t.secs();
+        println!("serial: {}", serial.summary());
+        // label validation + norm cache amortized across every run
+        let sharded_prob =
+            shard_mcsvm::ShardedMcSvm::new(&ds, c, eps).expect("synthetic labels are 0..K-1");
+        run_family(
+            "mcsvm",
+            serial_secs,
+            &serial,
+            &cfg,
+            eps,
+            |spec| shard_mcsvm::run_prepared(&sharded_prob, spec),
             &mut out,
         );
     }

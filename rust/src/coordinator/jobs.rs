@@ -67,8 +67,9 @@ pub struct JobSpec {
     pub max_iterations: u64,
     pub max_seconds: Option<f64>,
     pub acf_params: AcfParams,
-    /// > 1 routes ACF-policy SVM/LASSO jobs through the sharded parallel
-    /// engine ([`crate::shard`]); 0/1 keeps the serial path.
+    /// > 1 routes ACF-policy jobs of any of the four paper families
+    /// through the sharded parallel engine ([`crate::shard`]); 0/1
+    /// keeps the serial path.
     pub shards: usize,
     /// coordinate→shard assignment strategy for sharded runs
     pub partitioner: Partitioner,
@@ -142,11 +143,13 @@ impl JobSpec {
     /// hierarchical ACF); every other policy keeps its serial semantics
     /// so policy-comparison sweeps stay meaningful with `--shards` set,
     /// and `Policy::Hierarchical` keeps the serial two-level scheduler
-    /// it names. Only SVM and LASSO have shard-aware train loops.
+    /// it names. All four paper families have shard-aware train loops
+    /// (SVM/LASSO/logreg/mcsvm); the shrinking baseline stays serial —
+    /// its active-set heuristic owns the iteration order.
     pub fn uses_sharded_engine(&self) -> bool {
         self.shards > 1
             && self.policy == Policy::Acf
-            && matches!(self.problem, Problem::Svm { .. } | Problem::Lasso { .. })
+            && !matches!(self.problem, Problem::SvmShrinking { .. })
     }
 
     pub fn solver_config(&self) -> SolverConfig {
@@ -173,6 +176,38 @@ impl JobSpec {
     }
 }
 
+/// Bounded summary of a selector's final adaptive state, reduced from
+/// [`Selector::snapshot`] at capture time so job outcomes never retain
+/// the O(n) probability vector (sweeps hold every outcome until the
+/// report is written).
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorStateSummary {
+    pub name: &'static str,
+    pub n: usize,
+    /// smallest / largest selection probability (floor vs concentration)
+    pub p_min: f64,
+    pub p_max: f64,
+    /// Shannon entropy of the distribution (nats; ln n = uniform)
+    pub entropy: f64,
+    /// coordinate holding `p_max`
+    pub top_coordinate: usize,
+}
+
+impl SelectorStateSummary {
+    fn from_selector(sel: &dyn Selector) -> SelectorStateSummary {
+        let snap = sel.snapshot();
+        let p = &snap.probabilities;
+        let p_min = p.iter().cloned().fold(f64::INFINITY, f64::min);
+        let (top_coordinate, p_max) = p
+            .iter()
+            .cloned()
+            .enumerate()
+            .fold((0usize, 0.0f64), |acc, (i, x)| if x > acc.1 { (i, x) } else { acc });
+        let entropy: f64 = -p.iter().filter(|&&x| x > 0.0).map(|&x| x * x.ln()).sum::<f64>();
+        SelectorStateSummary { name: snap.name, n: snap.n, p_min, p_max, entropy, top_coordinate }
+    }
+}
+
 /// Outcome of a job, with the trained model's primal weights when the
 /// problem has a single weight vector (binary problems / LASSO).
 #[derive(Clone, Debug)]
@@ -190,6 +225,9 @@ pub struct JobOutcome {
     pub merge_stats: Option<shard::MergeStats>,
     /// sharded async runs: staleness-bound discards
     pub stale_drops: Option<u64>,
+    /// serial runs: the coordinate selector's final state, summarized
+    /// (sharded runs report the outer shard distribution instead)
+    pub selector_state: Option<SelectorStateSummary>,
 }
 
 impl JobOutcome {
@@ -215,6 +253,17 @@ impl JobOutcome {
             .set("violation", Json::Num(self.result.final_violation));
         if let Some(k) = self.nnz_coeffs {
             o.set("nnz_coeffs", Json::Num(k as f64));
+        }
+        if let Some(ss) = &self.selector_state {
+            // already reduced at capture time — reports stay bounded
+            let mut sel = Json::obj();
+            sel.set("name", Json::Str(ss.name.into()))
+                .set("n", Json::Num(ss.n as f64))
+                .set("p_min", Json::Num(ss.p_min))
+                .set("p_max", Json::Num(ss.p_max))
+                .set("entropy", Json::Num(ss.entropy))
+                .set("top_coordinate", Json::Num(ss.top_coordinate as f64));
+            o.set("selector_state", sel);
         }
         if self.spec.uses_sharded_engine() {
             o.set("shards", Json::Num(self.spec.shards as f64))
@@ -252,9 +301,9 @@ impl JobOutcome {
 pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     let cfg = spec.solver_config();
     let rng = Rng::new(spec.seed ^ 0x5EED);
-    // Sharded engine path (ACF policy on SVM/LASSO only — see
-    // `JobSpec::uses_sharded_engine`); everything else falls through to
-    // the serial solvers.
+    // Sharded engine path (ACF policy on any of the four paper families
+    // — see `JobSpec::uses_sharded_engine`); everything else falls
+    // through to the serial solvers.
     if spec.uses_sharded_engine() {
         // run through the prepared-problem entry points so the full
         // ShardedOutcome (merge stats, stale drops, adapted τ) reaches
@@ -271,6 +320,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                     nnz_coeffs: None,
                     merge_stats: Some(out.merge_stats),
                     stale_drops: Some(out.stale_drops),
+                    selector_state: None,
                 });
             }
             Problem::Lasso { lambda } => {
@@ -286,14 +336,46 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                     nnz_coeffs: Some(k),
                     merge_stats: Some(out.merge_stats),
                     stale_drops: Some(out.stale_drops),
+                    selector_state: None,
                 });
             }
-            _ => unreachable!("uses_sharded_engine restricts to svm/lasso"),
+            Problem::LogReg { c } => {
+                let problem = shard::logreg::ShardedLogReg::new(ds, c);
+                let out = shard::logreg::run_prepared(&problem, spec.shard_spec())?;
+                return Ok(JobOutcome {
+                    spec: spec.clone(),
+                    result: out.result,
+                    w: Some(out.shared),
+                    w_multi: None,
+                    nnz_coeffs: None,
+                    merge_stats: Some(out.merge_stats),
+                    stale_drops: Some(out.stale_drops),
+                    selector_state: None,
+                });
+            }
+            Problem::McSvm { c } => {
+                let problem = shard::mcsvm::ShardedMcSvm::new(ds, c, spec.eps)?;
+                let out = shard::mcsvm::run_prepared(&problem, spec.shard_spec())?;
+                let w_multi = problem.unflatten_weights(&out.shared);
+                return Ok(JobOutcome {
+                    spec: spec.clone(),
+                    result: out.result,
+                    w: None,
+                    w_multi: Some(w_multi),
+                    nnz_coeffs: None,
+                    merge_stats: Some(out.merge_stats),
+                    stale_drops: Some(out.stale_drops),
+                    selector_state: None,
+                });
+            }
+            Problem::SvmShrinking { .. } => {
+                unreachable!("uses_sharded_engine excludes the shrinking baseline")
+            }
         }
     } else if spec.shards > 1 && !matches!(spec.policy, Policy::Hierarchical { .. }) {
         // (Policy::Hierarchical consumes --shards itself, serially.)
         eprintln!(
-            "note: --shards engages the parallel engine only for --policy acf on svm/lasso; \
+            "note: --shards engages the parallel engine only with --policy acf; \
              running {} with the serial {} policy",
             spec.problem.family(),
             spec.policy.name()
@@ -304,7 +386,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     if spec.async_merge {
         eprintln!(
             "note: --async-merge applies only to the sharded engine (--shards > 1 with \
-             --policy acf on svm/lasso); this run is serial, the flag has no effect"
+             --policy acf); this run is serial, the flag has no effect"
         );
     }
     Ok(match spec.problem {
@@ -319,6 +401,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 nnz_coeffs: None,
                 merge_stats: None,
                 stale_drops: None,
+                selector_state: Some(SelectorStateSummary::from_selector(sched.as_ref())),
             }
         }
         Problem::SvmShrinking { c } => {
@@ -343,6 +426,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 nnz_coeffs: None,
                 merge_stats: None,
                 stale_drops: None,
+                selector_state: None,
             }
         }
         Problem::Lasso { lambda } => {
@@ -357,6 +441,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 nnz_coeffs: Some(k),
                 merge_stats: None,
                 stale_drops: None,
+                selector_state: Some(SelectorStateSummary::from_selector(sched.as_ref())),
             }
         }
         Problem::LogReg { c } => {
@@ -370,11 +455,12 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 nnz_coeffs: None,
                 merge_stats: None,
                 stale_drops: None,
+                selector_state: Some(SelectorStateSummary::from_selector(sched.as_ref())),
             }
         }
         Problem::McSvm { c } => {
             let mut sched = spec.build_selector(ds.n_instances(), rng);
-            let (model, result) = solvers::mcsvm::solve(ds, c, sched.as_mut(), cfg);
+            let (model, result) = solvers::mcsvm::solve(ds, c, sched.as_mut(), cfg)?;
             JobOutcome {
                 spec: spec.clone(),
                 result,
@@ -383,6 +469,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
                 nnz_coeffs: None,
                 merge_stats: None,
                 stale_drops: None,
+                selector_state: Some(SelectorStateSummary::from_selector(sched.as_ref())),
             }
         }
     })
@@ -542,6 +629,57 @@ mod tests {
         assert!(out.result.status.converged());
         assert!(out.spec.selector.is_none());
         assert!(out.to_json().get("selector").unwrap().as_str().is_none());
+    }
+
+    #[test]
+    fn sharded_logreg_job_matches_serial() {
+        let serial = quick_spec(Problem::LogReg { c: 1.0 }, "rcv1-like", Policy::Acf);
+        let mut sharded = serial.clone();
+        sharded.shards = 4;
+        assert!(sharded.uses_sharded_engine());
+        let a = run_job(&serial).unwrap();
+        let b = run_job(&sharded).unwrap();
+        assert!(a.result.status.converged() && b.result.status.converged());
+        let rel = (a.result.objective - b.result.objective).abs() / a.result.objective.abs().max(1.0);
+        assert!(rel < 1e-2, "{} vs {}", a.result.objective, b.result.objective);
+        let j = b.to_json();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("merge").unwrap().as_str(), Some("sync"));
+    }
+
+    #[test]
+    fn sharded_mcsvm_job_matches_serial() {
+        let serial = quick_spec(Problem::McSvm { c: 1.0 }, "iris-like", Policy::Acf);
+        let mut sharded = serial.clone();
+        sharded.shards = 2;
+        assert!(sharded.uses_sharded_engine());
+        let a = run_job(&serial).unwrap();
+        let b = run_job(&sharded).unwrap();
+        assert!(a.result.status.converged() && b.result.status.converged());
+        let rel = (a.result.objective - b.result.objective).abs() / a.result.objective.abs().max(1.0);
+        assert!(rel < 1e-2, "{} vs {}", a.result.objective, b.result.objective);
+        // per-class weights reach the report for accuracy evaluation
+        assert!(b.w_multi.is_some());
+        assert_eq!(b.to_json().get("merge").unwrap().as_str(), Some("sync"));
+    }
+
+    #[test]
+    fn serial_jobs_report_selector_state() {
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.selector = Some(SelectorKind::Importance);
+        let out = run_job(&spec).unwrap();
+        let ss = out.selector_state.as_ref().expect("serial runs snapshot their selector");
+        assert_eq!(ss.name, "importance");
+        // a valid distribution: floor ≤ peak, entropy within [0, ln n]
+        assert!(ss.p_min > 0.0 && ss.p_min <= ss.p_max && ss.p_max <= 1.0, "{ss:?}");
+        assert!(ss.entropy >= 0.0 && ss.entropy <= (ss.n as f64).ln() + 1e-9, "{ss:?}");
+        assert!(ss.top_coordinate < ss.n);
+        let j = out.to_json();
+        let sel = j.get("selector_state").expect("selector_state in JSON");
+        assert_eq!(sel.get("name").unwrap().as_str(), Some("importance"));
+        assert_eq!(sel.get("n").unwrap().as_usize(), Some(ss.n));
+        assert!(sel.get("entropy").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(sel.get("p_max").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

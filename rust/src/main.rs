@@ -70,11 +70,14 @@ fn print_help() {
          \u{20}             with `cargo bench --bench policy_faceoff`. NB:\n\
          \u{20}             --selector cyclic re-permutes each sweep, while\n\
          \u{20}             --policy cyclic is fixed index order\n\
-         sharding:     --shards <S>  runs svm/lasso on the parallel sharded\n\
+         sharding:     --shards <S>  runs any of the four families\n\
+         \u{20}             (svm/lasso/logreg/mcsvm) on the parallel sharded\n\
          \u{20}             engine (per-shard ACF + outer ACF over shards;\n\
          \u{20}             engages with --policy acf, the default — other\n\
          \u{20}             policies keep their serial semantics for fair\n\
-         \u{20}             comparisons); --partitioner contiguous|hash picks\n\
+         \u{20}             comparisons; mcsvm merges its K per-class weight\n\
+         \u{20}             buffers atomically as one versioned unit);\n\
+         \u{20}             --partitioner contiguous|hash picks\n\
          \u{20}             the coordinate split; --shard-workers <n> caps the\n\
          \u{20}             engine's threads; `--policy hier` is the serial\n\
          \u{20}             two-level ACF (shard count from --shards, 0 = √n)\n\
@@ -191,6 +194,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             let acc = acf_cd::data::binary_accuracy(&ds, w);
             println!("train accuracy: {:.2}%", 100.0 * acc);
         }
+    }
+    if let Some(wm) = &out.w_multi {
+        let acc = acf_cd::data::multiclass_accuracy(&ds, wm);
+        println!("train accuracy: {:.2}%", 100.0 * acc);
     }
     if let Some(k) = out.nnz_coeffs {
         println!("non-zero coefficients: {k}");

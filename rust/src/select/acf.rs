@@ -41,6 +41,12 @@ impl Selector for AcfSelector {
 
     #[inline]
     fn report(&mut self, i: usize, delta_f: f64) {
+        if !delta_f.is_finite() {
+            // protect the preference vector from NaN/inf progress; a
+            // finite trace is forwarded untouched, preserving the
+            // bit-identity contract
+            return;
+        }
         self.inner.report(i, delta_f);
     }
 
@@ -71,6 +77,24 @@ mod tests {
         let p = s.probabilities();
         assert!(p[4] > 2.0 / 6.0, "{p:?}");
         assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_reports_are_ignored() {
+        let mut s = AcfSelector::new(5, AcfParams::default(), Rng::new(3));
+        let mut clean = AcfSelector::new(5, AcfParams::default(), Rng::new(3));
+        for t in 0..2_000 {
+            let i = s.next();
+            let j = clean.next();
+            assert_eq!(i, j, "streams diverged at step {t}");
+            let df = if i == 2 { 3.0 } else { 0.1 };
+            s.report(i, df);
+            s.report(i, f64::NAN);
+            s.report(i, f64::INFINITY);
+            clean.report(j, df);
+        }
+        assert_eq!(s.probabilities(), clean.probabilities());
+        assert!(s.probabilities().iter().all(|p| p.is_finite()));
     }
 
     #[test]

@@ -81,6 +81,11 @@ impl Selector for Exp3BanditSelector {
     }
 
     fn report(&mut self, i: usize, delta_f: f64) {
+        if !delta_f.is_finite() {
+            // an inf reward would pin `scale` at inf (NaN ratios from
+            // then on) and a NaN would corrupt the log-weights — drop it
+            return;
+        }
         let delta_f = delta_f.max(0.0);
         self.scale = (self.scale * self.scale_decay).max(delta_f);
         if delta_f <= 0.0 || self.scale <= 0.0 {
@@ -152,6 +157,26 @@ mod tests {
             assert!(pi >= GAMMA / n as f64 - 1e-12, "{p:?}");
             assert!(pi <= 1.0 - GAMMA + GAMMA / n as f64 + 1e-12, "{p:?}");
         }
+    }
+
+    #[test]
+    fn non_finite_reports_are_ignored() {
+        let n = 6;
+        let mut s = Exp3BanditSelector::new(n, Rng::new(4));
+        let mut clean = Exp3BanditSelector::new(n, Rng::new(4));
+        for t in 0..3_000 {
+            let i = s.next();
+            let j = clean.next();
+            assert_eq!(i, j, "streams diverged at step {t}");
+            let df = if i == 1 { 2.0 } else { 0.05 };
+            s.report(i, df);
+            s.report(i, f64::INFINITY);
+            s.report(i, f64::NAN);
+            clean.report(j, df);
+        }
+        assert_eq!(s.probabilities(), clean.probabilities());
+        assert!(s.log_w.iter().all(|lw| lw.is_finite()), "{:?}", s.log_w);
+        assert!(s.scale.is_finite());
     }
 
     #[test]

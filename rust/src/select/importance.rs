@@ -92,6 +92,11 @@ impl Selector for ImportanceSelector {
     }
 
     fn report(&mut self, i: usize, delta_f: f64) {
+        if !delta_f.is_finite() {
+            // a single NaN/inf would flow into est/seen_sum and corrupt
+            // every subsequent probability vector — drop it
+            return;
+        }
         let delta_f = delta_f.max(0.0);
         if self.seen[i] {
             let new = (1.0 - BETA) * self.est[i] + BETA * delta_f;
@@ -170,6 +175,29 @@ mod tests {
         }
         let p = s.probabilities();
         assert!(p.iter().all(|x| (x - 0.25).abs() < 1e-9), "{p:?}");
+    }
+
+    #[test]
+    fn non_finite_reports_are_ignored() {
+        // a solver pushing a NaN/inf Δf (e.g. a diverged step) must not
+        // poison the estimates permanently
+        let n = 5;
+        let mut s = ImportanceSelector::new(n, Rng::new(6));
+        let mut clean = ImportanceSelector::new(n, Rng::new(6));
+        for t in 0..2_000 {
+            let i = s.next();
+            let j = clean.next();
+            assert_eq!(i, j, "streams diverged at step {t}");
+            let df = 0.1 + i as f64;
+            s.report(i, df);
+            s.report(i, f64::NAN);
+            s.report(i, f64::INFINITY);
+            s.report(i, f64::NEG_INFINITY);
+            clean.report(j, df);
+        }
+        assert_eq!(s.probabilities(), clean.probabilities());
+        assert!(s.est.iter().all(|e| e.is_finite()));
+        assert!(s.seen_sum.is_finite());
     }
 
     #[test]

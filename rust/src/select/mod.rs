@@ -71,7 +71,10 @@ pub trait Selector: Send {
 
     /// Report observed progress of the last step on coordinate `i`.
     /// Solvers may pass tiny negative fp noise; adaptive selectors must
-    /// clamp it themselves.
+    /// clamp it themselves. Non-finite Δf (NaN/±inf from a diverged
+    /// step) must be **ignored** — a single poisoned report must never
+    /// corrupt future selection probabilities (regression-tested per
+    /// policy).
     fn report(&mut self, _i: usize, _delta_f: f64) {}
 
     /// Number of coordinates.
@@ -300,6 +303,39 @@ mod tests {
                 s.report(i, if i == 0 { 5.0 } else { 0.01 * (t % 3) as f64 });
             }
             assert!(seen.iter().all(|&b| b), "{}: {seen:?}", kind.name());
+        }
+    }
+
+    #[test]
+    fn every_selector_ignores_non_finite_progress() {
+        // The trait contract: NaN/inf Δf reports must not alter any
+        // policy's state, so a poisoned run replays the clean run's
+        // index stream and distribution exactly.
+        for kind in SelectorKind::all() {
+            let mut poisoned = kind.build(10, AcfParams::default(), Rng::new(13));
+            let mut clean = kind.build(10, AcfParams::default(), Rng::new(13));
+            for t in 0..1_500 {
+                let a = poisoned.next();
+                let b = clean.next();
+                assert_eq!(a, b, "{}: streams diverged at step {t}", kind.name());
+                let df = if a == 0 { 4.0 } else { 0.2 };
+                poisoned.report(a, df);
+                poisoned.report(a, f64::NAN);
+                poisoned.report(a, f64::INFINITY);
+                poisoned.report(a, f64::NEG_INFINITY);
+                clean.report(b, df);
+            }
+            assert_eq!(
+                poisoned.probabilities(),
+                clean.probabilities(),
+                "{}: distribution corrupted by non-finite reports",
+                kind.name()
+            );
+            assert!(
+                poisoned.probabilities().iter().all(|p| p.is_finite() && *p > 0.0),
+                "{}",
+                kind.name()
+            );
         }
     }
 

@@ -343,46 +343,63 @@ pub struct StepOutcome {
 
 /// A problem family pluggable into the sharded engine.
 ///
-/// The contract mirrors the serial solvers: one *coordinate value* per
-/// coordinate (w_j for LASSO, α_i for the SVM dual) plus one dense
-/// *shared state* vector that is linear in the values (residual r = Xw−y,
-/// primal w = Σ α_i y_i x_i). `step` must perform the exact
-/// one-dimensional CD update and keep `shared` consistent; the engine
-/// owns snapshotting, merging and scheduling.
+/// The contract mirrors the serial solvers: one *coordinate block* of
+/// [`coord_width`](ShardProblem::coord_width) values per coordinate
+/// (width 1 — a plain scalar — for w_j in LASSO and α_i in the binary
+/// duals; width K for the per-class dual block α_{i,·} of the
+/// multi-class SVM) plus one dense *shared state* vector that is linear
+/// in the values (residual r = Xw−y, primal w = Σ α_i y_i x_i, or the K
+/// per-class primal vectors flattened into one K·d buffer that the
+/// engine snapshots/publishes as a single versioned unit). `step` must
+/// perform the exact block-CD update and keep `shared` consistent; the
+/// engine owns snapshotting, merging and scheduling.
 pub trait ShardProblem: Sync {
     /// Number of coordinates n.
     fn n_coords(&self) -> usize;
 
-    /// Dimension of the shared state vector.
+    /// Values per coordinate (1 for scalar problems; K for the
+    /// multi-class per-class dual block). Must be ≥ 1 and constant for
+    /// the lifetime of the problem.
+    fn coord_width(&self) -> usize {
+        1
+    }
+
+    /// Dimension of the shared state vector. Multi-buffer shared state
+    /// (e.g. K per-class weight vectors) is flattened here so all
+    /// buffers merge and publish atomically as one versioned unit.
     fn shared_dim(&self) -> usize;
 
     /// Shared state at the all-values-initial point.
     fn initial_shared(&self) -> Vec<f64>;
 
-    /// Initial value of coordinate `i` (0 for both LASSO and SVM dual).
-    fn initial_value(&self, _i: usize) -> f64 {
-        0.0
+    /// Initial values of coordinate `i` (`values.len() == coord_width`;
+    /// all-zero by default — LASSO / SVM dual; dual logreg starts
+    /// interior).
+    fn init_coord(&self, _i: usize, values: &mut [f64]) {
+        values.fill(0.0);
     }
 
-    /// Exact CD step on coordinate `i`: update `value` and `shared` in
-    /// place, report progress / violation / cost.
-    fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome;
+    /// Exact CD step on coordinate `i`: update its value block and
+    /// `shared` in place, report progress / violation / cost.
+    fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome;
 
     /// KKT violation of coordinate `i` at the given state, with its
     /// operation cost (used by the synchronized verification pass).
-    fn violation(&self, i: usize, value: f64, shared: &[f64]) -> (f64, usize);
+    fn violation(&self, i: usize, values: &[f64], shared: &[f64]) -> (f64, usize);
 
     /// Non-separable objective part, a function of the shared state only
-    /// (½‖r‖²/ℓ for LASSO, ½‖w‖² for the SVM dual).
+    /// (½‖r‖²/ℓ for LASSO, ½‖w‖² / ½Σ_k‖w_k‖² for the duals).
     fn shared_objective(&self, shared: &[f64]) -> f64;
 
-    /// Separable objective contribution of one coordinate (λ|w_j|, −α_i).
-    fn coord_objective(&self, i: usize, value: f64) -> f64;
+    /// Separable objective contribution of one coordinate block
+    /// (λ|w_j|, −α_i, entropy terms, −Σ_k α_{ik}).
+    fn coord_objective(&self, i: usize, values: &[f64]) -> f64;
 }
 
-/// Result of a sharded run: final coordinate values (global indexing),
-/// final shared state, solver metrics, and the outer ACF's final
-/// shard-selection probabilities (diagnostics).
+/// Result of a sharded run: final coordinate values (global indexing;
+/// flattened `n_coords × coord_width` for block problems), final shared
+/// state, solver metrics, and the outer ACF's final shard-selection
+/// probabilities (diagnostics).
 #[derive(Clone, Debug)]
 pub struct ShardedOutcome {
     pub values: Vec<f64>,
@@ -404,7 +421,8 @@ pub struct ShardedOutcome {
 /// sync mode, per ready-queue pop in async mode).
 struct ShardState {
     ids: Vec<u32>,
-    /// accepted coordinate values (aligned with `ids`)
+    /// accepted coordinate values, flattened `ids.len() × coord_width`
+    /// (coordinate `ids[kk]` owns `values[kk·w..(kk+1)·w]`)
     values: Vec<f64>,
     /// scratch: values after the local epoch, before merge acceptance
     trial: Vec<f64>,
@@ -873,12 +891,22 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         }
     }
 
+    /// Values per coordinate block (1 for scalar problems).
+    #[inline]
+    fn width(&self) -> usize {
+        self.problem.coord_width().max(1)
+    }
+
     fn init_states(&self, dim: usize) -> Vec<Mutex<ShardState>> {
         let p = self.problem;
+        let w = self.width();
         (0..self.partition.n_shards())
             .map(|k| {
                 let ids = self.partition.shard(k).to_vec();
-                let values: Vec<f64> = ids.iter().map(|&i| p.initial_value(i as usize)).collect();
+                let mut values = vec![0.0f64; ids.len() * w];
+                for (kk, &i) in ids.iter().enumerate() {
+                    p.init_coord(i as usize, &mut values[kk * w..(kk + 1) * w]);
+                }
                 // the RNG derivation is unchanged from the hard-wired
                 // AcfScheduler era, so the default (ACF) inner selector
                 // keeps sync runs bit-identical across the refactor
@@ -901,26 +929,30 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
     /// Separable objective of every shard at its current accepted values.
     fn initial_sep(&self, states: &[Mutex<ShardState>]) -> Result<Vec<f64>> {
         let p = self.problem;
+        let w = self.width();
         (0..states.len())
             .map(|k| {
                 let st = lock_state(states, k)?;
                 Ok(st
                     .ids
                     .iter()
-                    .zip(&st.values)
-                    .map(|(&i, &v)| p.coord_objective(i as usize, v))
+                    .zip(st.values.chunks_exact(w))
+                    .map(|(&i, vs)| p.coord_objective(i as usize, vs))
                     .sum())
             })
             .collect()
     }
 
-    /// Gather per-coordinate values into global indexing.
+    /// Gather per-coordinate value blocks into global indexing
+    /// (flattened `n_coords × coord_width`).
     fn collect_values(&self, states: &[Mutex<ShardState>]) -> Result<Vec<f64>> {
-        let mut values = vec![0.0f64; self.problem.n_coords()];
+        let w = self.width();
+        let mut values = vec![0.0f64; self.problem.n_coords() * w];
         for k in 0..states.len() {
             let st = lock_state(states, k)?;
             for (kk, &i) in st.ids.iter().enumerate() {
-                values[i as usize] = st.values[kk];
+                let i = i as usize;
+                values[i * w..(i + 1) * w].copy_from_slice(&st.values[kk * w..(kk + 1) * w]);
             }
         }
         Ok(values)
@@ -934,6 +966,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let p = self.problem;
         let s_count = self.partition.n_shards();
         let dim = p.shared_dim();
+        let w = self.width();
         let workers = self.worker_count(s_count);
 
         let states = self.init_states(dim);
@@ -966,7 +999,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     for _ in 0..ctx.quotas[k] {
                         let kk = st.sched.next();
                         let i = st.ids[kk] as usize;
-                        let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
+                        let out =
+                            p.step(i, &mut st.trial[kk * w..(kk + 1) * w], &mut st.local_shared);
                         st.sched.report(kk, out.delta_f.max(0.0));
                         df_sum += out.delta_f;
                         viol_max = viol_max.max(out.violation);
@@ -983,7 +1017,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     let mut vmax = 0.0f64;
                     let mut ops = 0usize;
                     for (kk, &i) in st.ids.iter().enumerate() {
-                        let (v, o) = p.violation(i as usize, st.values[kk], &ctx.shared);
+                        let (v, o) =
+                            p.violation(i as usize, &st.values[kk * w..(kk + 1) * w], &ctx.shared);
                         vmax = vmax.max(v);
                         ops += o;
                     }
@@ -1049,6 +1084,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let p = self.problem;
         let s_count = self.partition.n_shards();
         let dim = p.shared_dim();
+        let w = self.width();
         let cfg = &self.spec.config;
 
         // ---- outer (shard-level) ACF ---------------------------------
@@ -1143,8 +1179,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     Ok(st
                         .ids
                         .iter()
-                        .zip(&st.trial)
-                        .map(|(&i, &v)| p.coord_objective(i as usize, v))
+                        .zip(st.trial.chunks_exact(w))
+                        .map(|(&i, vs)| p.coord_objective(i as usize, vs))
                         .sum())
                 })
                 .collect::<Result<_>>()?;
@@ -1172,12 +1208,15 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 for k in 0..s_count {
                     let mut st = lock_state(states, k)?;
                     let st = &mut *st;
-                    let mut sk = 0.0;
-                    for (kk, &i) in st.ids.iter().enumerate() {
-                        st.values[kk] += theta * (st.trial[kk] - st.values[kk]);
-                        sk += p.coord_objective(i as usize, st.values[kk]);
+                    for (v, &t) in st.values.iter_mut().zip(st.trial.iter()) {
+                        *v += theta * (t - *v);
                     }
-                    sep[k] = sk;
+                    sep[k] = st
+                        .ids
+                        .iter()
+                        .zip(st.values.chunks_exact(w))
+                        .map(|(&i, vs)| p.coord_objective(i as usize, vs))
+                        .sum();
                 }
                 f_curr = p.shared_objective(shared) + sep.iter().sum::<f64>();
                 stats.objective_evals += 1;
@@ -1273,6 +1312,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         theta: f64,
     ) -> AsyncMsg {
         let p = self.problem;
+        let w = self.width();
         let Ok(mut guard) = states[k].lock() else {
             return AsyncMsg::Failed {
                 shard: k,
@@ -1306,7 +1346,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 let mut vmax = 0.0f64;
                 let mut ops = 0usize;
                 for (kk, &i) in st.ids.iter().enumerate() {
-                    let (v, o) = p.violation(i as usize, st.values[kk], &snap);
+                    let (v, o) =
+                        p.violation(i as usize, &st.values[kk * w..(kk + 1) * w], &snap);
                     vmax = vmax.max(v);
                     ops += o;
                 }
@@ -1322,7 +1363,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 for _ in 0..quota {
                     let kk = st.sched.next();
                     let i = st.ids[kk] as usize;
-                    let out = p.step(i, &mut st.trial[kk], &mut st.local_shared);
+                    let out =
+                        p.step(i, &mut st.trial[kk * w..(kk + 1) * w], &mut st.local_shared);
                     // inner scheduler still adapts on the worker's own
                     // (possibly stale-based) per-step Δf; the *outer*
                     // level is fed the merger's achieved decrease instead
@@ -1335,13 +1377,18 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 delta.extend(st.local_shared.iter().zip(snap.iter()).map(|(l, s)| l - s));
                 let mut sep_trial = 0.0f64;
                 let mut sep_damped = 0.0f64;
+                let mut damped = vec![0.0f64; w];
                 for (kk, &i) in st.ids.iter().enumerate() {
-                    sep_trial += p.coord_objective(i as usize, st.trial[kk]);
+                    let vs = &st.values[kk * w..(kk + 1) * w];
+                    let ts = &st.trial[kk * w..(kk + 1) * w];
+                    sep_trial += p.coord_objective(i as usize, ts);
                     // must match Apply::Damp bit-for-bit (same formula on
                     // the same values), so the merger's f bookkeeping is
                     // exact
-                    let damped = st.values[kk] + theta * (st.trial[kk] - st.values[kk]);
-                    sep_damped += p.coord_objective(i as usize, damped);
+                    for ((d, &v), &t) in damped.iter_mut().zip(vs).zip(ts) {
+                        *d = v + theta * (t - v);
+                    }
+                    sep_damped += p.coord_objective(i as usize, &damped);
                 }
                 AsyncMsg::Epoch(Submission {
                     shard: k,
@@ -1744,18 +1791,18 @@ mod tests {
             vec![0.0; self.n]
         }
 
-        fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+        fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
             if i == self.boom {
                 panic!("boom on coordinate {i}");
             }
-            let old = *value;
+            let old = values[0];
             let delta_f = 0.5 * (old - 1.0) * (old - 1.0);
-            *value = 1.0;
+            values[0] = 1.0;
             shared[i] += 1.0 - old;
             StepOutcome { delta_f, violation: (old - 1.0).abs(), ops: 1 }
         }
 
-        fn violation(&self, i: usize, _value: f64, shared: &[f64]) -> (f64, usize) {
+        fn violation(&self, i: usize, _values: &[f64], shared: &[f64]) -> (f64, usize) {
             ((shared[i] - 1.0).abs(), 1)
         }
 
@@ -1763,7 +1810,68 @@ mod tests {
             shared.iter().map(|&s| 0.5 * (s - 1.0) * (s - 1.0)).sum()
         }
 
-        fn coord_objective(&self, _i: usize, _value: f64) -> f64 {
+        fn coord_objective(&self, _i: usize, _values: &[f64]) -> f64 {
+            0.0
+        }
+    }
+
+    /// Width-2 block problem: coordinate `i` owns a 2-value block with
+    /// targets (1, −2); the shared state is the flattened identity of
+    /// the blocks (dim 2n). Exercises the `coord_width` plumbing — the
+    /// per-class generalization the multi-class SVM needs — end to end.
+    struct BlockQuad {
+        n: usize,
+    }
+
+    const BLOCK_TARGET: [f64; 2] = [1.0, -2.0];
+
+    impl ShardProblem for BlockQuad {
+        fn n_coords(&self) -> usize {
+            self.n
+        }
+
+        fn coord_width(&self) -> usize {
+            2
+        }
+
+        fn shared_dim(&self) -> usize {
+            2 * self.n
+        }
+
+        fn initial_shared(&self) -> Vec<f64> {
+            vec![0.0; 2 * self.n]
+        }
+
+        fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
+            let mut delta_f = 0.0;
+            let mut viol = 0.0f64;
+            for (k, v) in values.iter_mut().enumerate() {
+                let r = BLOCK_TARGET[k] - *v;
+                delta_f += 0.5 * r * r;
+                viol = viol.max(r.abs());
+                shared[2 * i + k] += r;
+                *v = BLOCK_TARGET[k];
+            }
+            StepOutcome { delta_f, violation: viol, ops: 2 }
+        }
+
+        fn violation(&self, i: usize, _values: &[f64], shared: &[f64]) -> (f64, usize) {
+            let v = (0..2)
+                .map(|k| (shared[2 * i + k] - BLOCK_TARGET[k]).abs())
+                .fold(0.0f64, f64::max);
+            (v, 2)
+        }
+
+        fn shared_objective(&self, shared: &[f64]) -> f64 {
+            shared
+                .chunks_exact(2)
+                .map(|c| {
+                    0.5 * ((c[0] - BLOCK_TARGET[0]).powi(2) + (c[1] - BLOCK_TARGET[1]).powi(2))
+                })
+                .sum()
+        }
+
+        fn coord_objective(&self, _i: usize, _values: &[f64]) -> f64 {
             0.0
         }
     }
@@ -1815,6 +1923,36 @@ mod tests {
         assert_eq!(a.values, b.values);
         assert_eq!(a.result.iterations, b.result.iterations);
         assert_eq!(a.result.objective, b.result.objective);
+    }
+
+    #[test]
+    fn block_problem_converges_in_both_merge_modes() {
+        // values are laid out flattened n × coord_width in global
+        // indexing, and every block reaches its target under both the
+        // barrier and the versioned-buffer merge
+        let p = BlockQuad { n: 12 };
+        let sync = ShardedDriver::new(&p, spec(3)).run().unwrap();
+        assert!(sync.result.status.converged(), "{}", sync.result.summary());
+        assert_eq!(sync.values.len(), 24);
+        for c in sync.values.chunks_exact(2) {
+            assert!((c[0] - 1.0).abs() < 1e-12 && (c[1] + 2.0).abs() < 1e-12, "{c:?}");
+        }
+        let asy = ShardedDriver::new(&p, spec(3).with_async(2)).run().unwrap();
+        assert!(asy.result.status.converged(), "{}", asy.result.summary());
+        assert_eq!(asy.values, sync.values);
+    }
+
+    #[test]
+    fn block_problem_sync_is_worker_count_independent() {
+        let p = BlockQuad { n: 16 };
+        let run = |workers: usize| {
+            let mut sp = spec(4);
+            sp.workers = workers;
+            let out = ShardedDriver::new(&p, sp).run().unwrap();
+            (out.values, out.result.iterations, out.result.objective.to_bits())
+        };
+        assert_eq!(run(1), run(2));
+        assert_eq!(run(2), run(4));
     }
 
     #[test]

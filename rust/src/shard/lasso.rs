@@ -49,11 +49,11 @@ impl ShardProblem for ShardedLasso {
     }
 
     #[inline]
-    fn step(&self, j: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+    fn step(&self, j: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
         let l = self.prob.n_instances as f64;
         let col = self.prob.xt.row(j);
         let h = self.prob.h[j];
-        let old = *value;
+        let old = values[0];
         // fused kernel, same update as the serial solver
         let mut g = 0.0;
         let mut new = old;
@@ -68,7 +68,7 @@ impl ShardProblem for ShardedLasso {
         let mut ops = col.nnz();
         let mut delta_f = 0.0;
         if d != 0.0 {
-            *value = new;
+            values[0] = new;
             ops += col.nnz();
             // exact decrease: smooth part g·d + ½h·d², plus the ℓ1
             // term change
@@ -77,11 +77,11 @@ impl ShardProblem for ShardedLasso {
         StepOutcome { delta_f, violation, ops }
     }
 
-    fn violation(&self, j: usize, value: f64, shared: &[f64]) -> (f64, usize) {
+    fn violation(&self, j: usize, values: &[f64], shared: &[f64]) -> (f64, usize) {
         let l = self.prob.n_instances as f64;
         let col = self.prob.xt.row(j);
         let g = col.dot_dense(shared) / l;
-        (subgrad_violation(value, g, self.lambda), col.nnz())
+        (subgrad_violation(values[0], g, self.lambda), col.nnz())
     }
 
     fn shared_objective(&self, shared: &[f64]) -> f64 {
@@ -89,8 +89,8 @@ impl ShardProblem for ShardedLasso {
     }
 
     #[inline]
-    fn coord_objective(&self, _j: usize, value: f64) -> f64 {
-        self.lambda * value.abs()
+    fn coord_objective(&self, _j: usize, values: &[f64]) -> f64 {
+        self.lambda * values[0].abs()
     }
 }
 

@@ -1,0 +1,131 @@
+//! Sharded dual logistic regression: instances are the coordinates, the
+//! primal vector `w = Σ α_i y_i x_i` is the shared state (linear in the
+//! duals, exactly as the engine's merge protocol requires). The per-step
+//! math is identical to [`crate::solvers::logreg`] — the same
+//! bisection-safeguarded Newton 1-D solve and exact Δf — so serial and
+//! sharded runs price every point identically; this module only adapts
+//! it to the [`ShardProblem`] contract.
+//!
+//! The dual solution is strictly interior (the entropy terms push α off
+//! the bounds), so the averaged-merge fallback θ = 1/S keeps every α_i
+//! inside (0, C) automatically: a convex combination of interior points
+//! is interior, and the separable entropy objective is convex, which is
+//! what makes the damped tier objective-safe.
+//!
+//! The per-shard inner loops run any [`crate::select::Selector`] policy —
+//! set [`ShardSpec::inner_selector`] (CLI `--selector`); the outer
+//! shard-level ACF is unaffected.
+
+use crate::shard::engine::{ShardProblem, ShardSpec, ShardedDriver, ShardedOutcome, StepOutcome};
+use crate::solvers::logreg::{ent, grad_violation, initial_alpha, solve_1d, LogRegModel};
+use crate::solvers::SolveResult;
+use crate::sparse::Dataset;
+use crate::util::error::Result;
+
+/// Dual logistic regression adapted to the sharded engine.
+pub struct ShardedLogReg<'a> {
+    ds: &'a Dataset,
+    /// borrowed from the matrix-level norm cache (computed once per Csr)
+    q_diag: &'a [f64],
+    c: f64,
+    /// interior starting point (same constant as the serial solver)
+    a_init: f64,
+}
+
+impl<'a> ShardedLogReg<'a> {
+    pub fn new(ds: &'a Dataset, c: f64) -> ShardedLogReg<'a> {
+        ShardedLogReg { ds, q_diag: ds.x.row_norms_sq(), c, a_init: initial_alpha(c) }
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl ShardProblem for ShardedLogReg<'_> {
+    fn n_coords(&self) -> usize {
+        self.ds.n_instances()
+    }
+
+    fn shared_dim(&self) -> usize {
+        self.ds.n_features()
+    }
+
+    fn initial_shared(&self) -> Vec<f64> {
+        // w = Σ α_init y_i x_i — the same accumulation order as the
+        // serial solver, so initial objectives agree to the last bit
+        let mut w = vec![0.0f64; self.ds.n_features()];
+        for i in 0..self.ds.n_instances() {
+            self.ds.x.row(i).axpy_into(self.a_init * self.ds.y[i], &mut w);
+        }
+        w
+    }
+
+    fn init_coord(&self, _i: usize, values: &mut [f64]) {
+        values[0] = self.a_init;
+    }
+
+    #[inline]
+    fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
+        let row = self.ds.x.row(i);
+        let yi = self.ds.y[i];
+        let a_old = values[0];
+        // fused kernel, same guarded-Newton update as the serial solver
+        let mut m = 0.0;
+        let mut g = 0.0;
+        let mut a_new = a_old;
+        row.step(shared, |dot| {
+            m = yi * dot;
+            g = m + (a_old / (self.c - a_old)).ln();
+            a_new = solve_1d(self.q_diag[i], m, a_old, self.c, 1e-10, 25);
+            let d = a_new - a_old;
+            if d.abs() > 1e-15 {
+                d * yi
+            } else {
+                0.0
+            }
+        });
+        let violation = grad_violation(g);
+        let mut ops = row.nnz();
+        let mut delta_f = 0.0;
+        let d = a_new - a_old;
+        if d.abs() > 1e-15 {
+            values[0] = a_new;
+            ops += row.nnz();
+            // exact decrease: quadratic part m·d + ½q·d² plus entropy
+            delta_f = -(m * d + 0.5 * self.q_diag[i] * d * d) - (ent(a_new, self.c) - ent(a_old, self.c));
+        }
+        StepOutcome { delta_f, violation, ops }
+    }
+
+    fn violation(&self, i: usize, values: &[f64], shared: &[f64]) -> (f64, usize) {
+        let row = self.ds.x.row(i);
+        let m = self.ds.y[i] * row.dot_dense(shared);
+        let g = m + (values[0] / (self.c - values[0])).ln();
+        (grad_violation(g), row.nnz())
+    }
+
+    fn shared_objective(&self, shared: &[f64]) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(shared)
+    }
+
+    #[inline]
+    fn coord_objective(&self, _i: usize, values: &[f64]) -> f64 {
+        ent(values[0], self.c)
+    }
+}
+
+/// Solve dual logistic regression on the sharded engine; drop-in analog
+/// of [`crate::solvers::logreg::solve`]. Errs with
+/// [`crate::util::error::ErrorKind::ShardWorker`] if a shard worker dies.
+pub fn solve_sharded(ds: &Dataset, c: f64, spec: ShardSpec) -> Result<(LogRegModel, SolveResult)> {
+    let problem = ShardedLogReg::new(ds, c);
+    let out = run_prepared(&problem, spec)?;
+    Ok((LogRegModel { alpha: out.values, w: out.shared, c }, out.result))
+}
+
+/// Run on an already-prepared problem (amortizes the norm cache across
+/// shard counts / C values).
+pub fn run_prepared(problem: &ShardedLogReg<'_>, spec: ShardSpec) -> Result<ShardedOutcome> {
+    ShardedDriver::new(problem, spec).run()
+}

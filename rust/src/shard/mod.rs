@@ -13,10 +13,39 @@
 //!   state either at an epoch barrier or asynchronously (below), while
 //!   an **outer** ACF instance adapts how often each shard is visited
 //!   from its aggregate progress Δf;
-//! * [`lasso`] / [`svm`] — shard-aware solver front-ends (features are
-//!   sharded for LASSO, instances for the SVM dual);
+//! * [`lasso`] / [`svm`] / [`logreg`] / [`mcsvm`] — shard-aware solver
+//!   front-ends covering all four of the paper's testbeds;
 //! * [`hier`] — the single-threaded two-level scheduler exposed as
 //!   [`crate::sched::Policy::Hierarchical`] for any serial solver.
+//!
+//! # What is sharded, per workload
+//!
+//! | workload | coordinates (sharded over) | block width | shared state |
+//! |----------|---------------------------|-------------|--------------|
+//! | [`lasso`] | **features** w_j | 1 | residual `r = Xw − y` (dim ℓ) |
+//! | [`svm`] | **instances** α_i | 1 | primal `w = Σ α_i y_i x_i` (dim d) |
+//! | [`logreg`] | **instances** α_i | 1 | primal `w = Σ α_i y_i x_i` (dim d) |
+//! | [`mcsvm`] | **instances** α_{i,·} | K | K per-class primals, flattened K·d |
+//!
+//! # Per-class shared state (the multi-class merge protocol)
+//!
+//! The engine's contract generalizes from one value per coordinate to a
+//! *block* of [`ShardProblem::coord_width`] values, and from one shared
+//! vector to any fixed-size family of them **flattened into a single
+//! buffer**: the multi-class SVM owns a K-value dual block α_{i,·} per
+//! instance and flattens its K per-class primal vectors w_1..w_K into
+//! one K·d buffer. Because that buffer is what the engine snapshots,
+//! merges and version-publishes, the K classes move **atomically as one
+//! versioned unit** — no reader can see class 0 at version v and class 1
+//! at version v+1, and every merge candidate is priced by one exact
+//! objective evaluation over all classes at once. Each w_k is linear in
+//! the block values, so the flattened buffer satisfies the same
+//! linearity contract the scalar problems do, and both merge protocols
+//! keep their guarantees unchanged: the asynchronous bounded-staleness
+//! delta application stays state-consistent, and the synchronous
+//! θ = 1/S fallback stays objective-safe by convexity (a convex
+//! combination of feasible per-class blocks is feasible, so the box
+//! `[0, C]` survives damped merges).
 //!
 //! # Merge protocols
 //!
@@ -71,6 +100,8 @@
 pub mod engine;
 pub mod hier;
 pub mod lasso;
+pub mod logreg;
+pub mod mcsvm;
 pub mod partition;
 pub mod svm;
 
@@ -242,6 +273,173 @@ mod tests {
         let (_, res) = svm::solve_sharded(&ds, 1000.0, sp).unwrap();
         assert!(res.iterations <= 700, "{} steps", res.iterations);
         assert_eq!(res.status, crate::solvers::SolveStatus::IterLimit);
+    }
+
+    fn logreg_ds(seed: u64) -> Dataset {
+        synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "lr",
+                n: 250,
+                d: 400,
+                nnz_per_row: 12,
+                zipf_s: 1.0,
+                concept_k: 25,
+                noise: 0.05,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn mcsvm_ds(seed: u64) -> Dataset {
+        synth::multiclass_text("mc", 180, 300, 4, 10, 0.02, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn sharded_logreg_matches_serial_objective() {
+        let ds = logreg_ds(21);
+        let c = 1.0;
+        let mut perm = crate::sched::PermutationScheduler::new(ds.n_instances(), Rng::new(21));
+        let (_, serial) =
+            crate::solvers::logreg::solve(&ds, c, &mut perm, SolverConfig::with_eps(1e-5));
+        assert!(serial.status.converged());
+        for shards in [1, 3, 4] {
+            let (model, res) = logreg::solve_sharded(&ds, c, spec(shards, 1e-5)).unwrap();
+            assert!(res.status.converged(), "S={shards}: {}", res.summary());
+            let rel = (serial.objective - res.objective).abs() / serial.objective.abs().max(1.0);
+            assert!(rel < 1e-4, "S={shards}: {} vs {}", serial.objective, res.objective);
+            // the dual solution stays strictly interior through merges
+            assert!(model.alpha.iter().all(|&a| a > 0.0 && a < c));
+            assert_eq!(model.w.len(), ds.n_features());
+        }
+    }
+
+    #[test]
+    fn sharded_mcsvm_matches_serial_objective() {
+        let ds = mcsvm_ds(22);
+        let c = 1.0;
+        let eps = 1e-5;
+        let mut perm = crate::sched::PermutationScheduler::new(ds.n_instances(), Rng::new(22));
+        let (_, serial) =
+            crate::solvers::mcsvm::solve(&ds, c, &mut perm, SolverConfig::with_eps(eps)).unwrap();
+        assert!(serial.status.converged());
+        for shards in [2, 4] {
+            let (model, res) = mcsvm::solve_sharded(&ds, c, spec(shards, eps)).unwrap();
+            assert!(res.status.converged(), "S={shards}: {}", res.summary());
+            let rel = (serial.objective - res.objective).abs() / serial.objective.abs().max(1.0);
+            assert!(rel < 1e-4, "S={shards}: {} vs {}", serial.objective, res.objective);
+            // per-class box feasibility survives damped merges
+            assert!(model.alpha.iter().all(|&a| (0.0..=c).contains(&a)));
+            assert_eq!(model.w.len(), model.k_classes);
+        }
+    }
+
+    #[test]
+    fn sync_logreg_bit_identical_across_worker_counts() {
+        let ds = logreg_ds(23);
+        let run = |workers: usize| {
+            let mut sp = spec(4, 1e-5).with_seed(17);
+            sp.workers = workers;
+            let (model, res) = logreg::solve_sharded(&ds, 1.0, sp).unwrap();
+            (model.alpha, res.objective.to_bits(), res.iterations, res.ops)
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(4);
+        assert_eq!(a, b, "1 vs 2 workers must be bit-identical");
+        assert_eq!(b, c, "2 vs 4 workers must be bit-identical");
+    }
+
+    #[test]
+    fn sync_mcsvm_bit_identical_across_worker_counts() {
+        let ds = mcsvm_ds(24);
+        let run = |workers: usize| {
+            let mut sp = spec(4, 1e-3).with_seed(18);
+            sp.workers = workers;
+            let (model, res) = mcsvm::solve_sharded(&ds, 1.0, sp).unwrap();
+            (model.alpha, res.objective.to_bits(), res.iterations, res.ops)
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(4);
+        assert_eq!(a, b, "1 vs 2 workers must be bit-identical");
+        assert_eq!(b, c, "2 vs 4 workers must be bit-identical");
+    }
+
+    #[test]
+    fn async_logreg_objective_monotone_and_matches_sync() {
+        let ds = logreg_ds(25);
+        let problem = logreg::ShardedLogReg::new(&ds, 1.0);
+        let mut sp = spec(4, 1e-5).with_async(2);
+        sp.config.trace_every = 1; // one point per published version
+        let out = logreg::run_prepared(&problem, sp).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        out.result
+            .trace
+            .check_monotone(1e-9)
+            .expect("async merge must never publish an objective increase");
+        let sync = logreg::run_prepared(&problem, spec(4, 1e-5)).unwrap();
+        let rel = (sync.result.objective - out.result.objective).abs()
+            / sync.result.objective.abs().max(1.0);
+        assert!(rel < 1e-3, "async {} vs sync {}", out.result.objective, sync.result.objective);
+    }
+
+    #[test]
+    fn async_mcsvm_monotone_feasible_and_matches_sync() {
+        let ds = mcsvm_ds(26);
+        let c = 1.0;
+        let eps = 1e-3;
+        let problem = mcsvm::ShardedMcSvm::new(&ds, c, eps).unwrap();
+        let mut sp = spec(4, eps).with_async(2);
+        sp.config.trace_every = 1;
+        let out = mcsvm::run_prepared(&problem, sp).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        out.result
+            .trace
+            .check_monotone(1e-9)
+            .expect("per-class merges must publish one monotone versioned unit");
+        // per-class box feasibility after damped merges
+        assert!(out.values.iter().all(|&a| (0.0..=c).contains(&a)));
+        let sync = mcsvm::run_prepared(&problem, spec(4, eps)).unwrap();
+        let rel = (sync.result.objective - out.result.objective).abs()
+            / sync.result.objective.abs().max(1.0);
+        assert!(rel < 1e-3, "async {} vs sync {}", out.result.objective, sync.result.objective);
+    }
+
+    #[test]
+    fn new_shard_problems_accept_swapped_inner_selectors() {
+        // ShardSpec::inner_selector pluggability extends to the new
+        // front-ends: a non-ACF inner policy still reaches the serial
+        // fixed point (the outer shard-level ACF is untouched)
+        use crate::select::SelectorKind;
+        let ds = logreg_ds(27);
+        let (_, acf) = logreg::solve_sharded(&ds, 1.0, spec(3, 1e-5)).unwrap();
+        let (_, cyc) = logreg::solve_sharded(
+            &ds,
+            1.0,
+            spec(3, 1e-5).with_inner_selector(SelectorKind::Cyclic),
+        )
+        .unwrap();
+        assert!(acf.status.converged() && cyc.status.converged());
+        let rel = (acf.objective - cyc.objective).abs() / acf.objective.abs().max(1.0);
+        assert!(rel < 1e-4, "{} vs {}", acf.objective, cyc.objective);
+
+        let ds = mcsvm_ds(28);
+        let (_, ban) = mcsvm::solve_sharded(
+            &ds,
+            1.0,
+            spec(2, 1e-3).with_inner_selector(SelectorKind::Bandit),
+        )
+        .unwrap();
+        assert!(ban.status.converged(), "{}", ban.summary());
+    }
+
+    #[test]
+    fn sharded_mcsvm_rejects_pm1_labels() {
+        // the shard front-end validates at construction — the same
+        // first-party error as the serial path, before any thread spawns
+        let ds = svm_ds(2); // ±1-labeled binary fixture
+        let err = mcsvm::solve_sharded(&ds, 1.0, spec(2, 1e-3)).unwrap_err();
+        assert!(format!("{err:#}").contains("-1"), "{err:#}");
     }
 
     #[test]

@@ -49,11 +49,11 @@ impl ShardProblem for ShardedSvm<'_> {
     }
 
     #[inline]
-    fn step(&self, i: usize, value: &mut f64, shared: &mut [f64]) -> StepOutcome {
+    fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
         let row = self.ds.x.row(i);
         let yi = self.ds.y[i];
         let qii = self.q_diag[i];
-        let old = *value;
+        let old = values[0];
         // fused kernel, same update as the serial solver
         let mut g = 0.0;
         let mut new = old;
@@ -74,7 +74,7 @@ impl ShardProblem for ShardedSvm<'_> {
         let mut ops = row.nnz();
         let mut delta_f = 0.0;
         if d != 0.0 {
-            *value = new;
+            values[0] = new;
             ops += row.nnz();
             // exact decrease of the dual objective along this coordinate
             delta_f = -(g * d + 0.5 * qii * d * d);
@@ -82,10 +82,10 @@ impl ShardProblem for ShardedSvm<'_> {
         StepOutcome { delta_f, violation, ops }
     }
 
-    fn violation(&self, i: usize, value: f64, shared: &[f64]) -> (f64, usize) {
+    fn violation(&self, i: usize, values: &[f64], shared: &[f64]) -> (f64, usize) {
         let row = self.ds.x.row(i);
         let g = self.ds.y[i] * row.dot_dense(shared) - 1.0;
-        (pg_violation(value, g, self.c), row.nnz())
+        (pg_violation(values[0], g, self.c), row.nnz())
     }
 
     fn shared_objective(&self, shared: &[f64]) -> f64 {
@@ -93,8 +93,8 @@ impl ShardProblem for ShardedSvm<'_> {
     }
 
     #[inline]
-    fn coord_objective(&self, _i: usize, value: f64) -> f64 {
-        -value
+    fn coord_objective(&self, _i: usize, values: &[f64]) -> f64 {
+        -values[0]
     }
 }
 

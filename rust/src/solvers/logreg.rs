@@ -38,9 +38,11 @@ pub struct LogRegModel {
 }
 
 /// Entropy-like term `a log a + (C−a) log(C−a)` with the 0·log0 = 0
-/// convention.
+/// convention. Shared with the sharded front-end
+/// ([`crate::shard::logreg`]) so both paths price the separable
+/// objective identically.
 #[inline]
-fn ent(a: f64, c: f64) -> f64 {
+pub(crate) fn ent(a: f64, c: f64) -> f64 {
     let mut s = 0.0;
     if a > 0.0 {
         s += a * a.ln();
@@ -56,7 +58,7 @@ fn ent(a: f64, c: f64) -> f64 {
 /// Returns the new α_i. Newton with bisection safeguards; ~O(10) scalar
 /// iterations, independent of data size.
 #[inline]
-fn solve_1d(q: f64, m: f64, a0: f64, c: f64, tol: f64, max_newton: usize) -> f64 {
+pub(crate) fn solve_1d(q: f64, m: f64, a0: f64, c: f64, tol: f64, max_newton: usize) -> f64 {
     // derivative: g(z) = q(z − a0) + m + ln(z/(C−z))
     let g = |z: f64| q * (z - a0) + m + (z / (c - z)).ln();
     // bracket: derivative is −∞ at 0⁺, +∞ at C⁻
@@ -86,8 +88,16 @@ fn solve_1d(q: f64, m: f64, a0: f64, c: f64, tol: f64, max_newton: usize) -> f64
 /// Violation measure: |∂f/∂α_i| (solution is interior, so the stopping
 /// criterion is a plain gradient-infinity norm, paper §7).
 #[inline]
-fn grad_violation(g: f64) -> f64 {
+pub(crate) fn grad_violation(g: f64) -> f64 {
     g.abs()
+}
+
+/// Interior starting point α_i (liblinear-style: a small fraction of C).
+/// One definition serves the serial and sharded paths so their initial
+/// objectives agree exactly.
+#[inline]
+pub(crate) fn initial_alpha(c: f64) -> f64 {
+    (0.001 * c).min(1e-3).max(1e-10)
 }
 
 /// Selector-driven dual CD for logistic regression.
@@ -103,7 +113,7 @@ pub fn solve(
     let q_diag = ds.x.row_norms_sq();
     // Interior initialization (liblinear-style): α_i a small fraction of
     // C, with w built consistently.
-    let a_init = (0.001 * c).min(1e-3).max(1e-10);
+    let a_init = initial_alpha(c);
     let mut alpha = vec![a_init; n];
     let mut w = vec![0.0f64; d];
     for i in 0..n {

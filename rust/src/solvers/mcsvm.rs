@@ -30,6 +30,7 @@
 use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
 use crate::select::Selector;
 use crate::sparse::Dataset;
+use crate::util::error::Result;
 
 /// Trained multi-class model.
 #[derive(Clone, Debug)]
@@ -51,12 +52,38 @@ impl McSvmModel {
     }
 }
 
+/// Validate and map labels to classes `0..K−1` (the one validator both
+/// the serial and sharded front-ends share; also rejects K < 2).
+///
+/// `v as usize` saturates negative floats to 0, so a binary ±1-labeled
+/// dataset would silently pass a `v < k_classes` assert and train on
+/// garbage classes; reject anything that is not a non-negative integer
+/// below K with a first-party error naming the offending value.
+pub fn class_labels(ds: &Dataset, k_classes: usize) -> Result<Vec<usize>> {
+    if k_classes < 2 {
+        return Err(crate::anyhow!("mcsvm needs >= 2 distinct labels, got {k_classes}"));
+    }
+    ds.y.iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 && (v as usize) < k_classes {
+                Ok(v as usize)
+            } else {
+                Err(crate::anyhow!(
+                    "mcsvm labels must be integers in 0..{k_classes}, got {v} at instance {i} \
+                     (relabel ±1 binary data to {{0, 1}} before training)"
+                ))
+            }
+        })
+        .collect()
+}
+
 /// Result of one subspace solve.
-struct SubspaceOutcome {
-    delta_f: f64,
-    max_viol_entry: f64,
-    inner_steps: u64,
-    ops: usize,
+pub(crate) struct SubspaceOutcome {
+    pub(crate) delta_f: f64,
+    pub(crate) max_viol_entry: f64,
+    pub(crate) inner_steps: u64,
+    pub(crate) ops: usize,
 }
 
 /// Solve the K−1 dimensional sub-problem for example `i` in place.
@@ -64,9 +91,11 @@ struct SubspaceOutcome {
 /// `margins[k] = ⟨w_k, x_i⟩` are computed by the caller; `alpha_i` is the
 /// slice of the K dual variables of example i. Updates `alpha_i`,
 /// returns the deltas to apply to the weight vectors via
-/// `delta_beta[k]`.
+/// `delta_beta[k]`. Shared with the sharded front-end
+/// ([`crate::shard::mcsvm`]), which runs the same exact block update
+/// against per-class snapshots of the weight vectors.
 #[allow(clippy::too_many_arguments)]
-fn solve_subspace(
+pub(crate) fn solve_subspace(
     yi: usize,
     k_classes: usize,
     xi_norm_sq: f64,
@@ -88,6 +117,11 @@ fn solve_subspace(
     let mut delta_f = 0.0f64;
     let mut inner_steps = 0u64;
     let mut max_viol_first = 0.0f64;
+    // Every inner SMO step costs O(K): the projected-gradient scan over
+    // the K classes (the margin/delta updates are O(1) on top). Counted
+    // in BOTH branches so `BENCH_*`/sweep op columns stay comparable
+    // across solvers — the empty-row branch is one K-wide pass.
+    let mut ops = 0usize;
     if q <= 0.0 {
         // empty row: gradient is −1 for every k ⇒ all α go to C
         let mut moved = 0.0;
@@ -114,6 +148,7 @@ fn solve_subspace(
 
     for step in 0..max_inner {
         // pick the inner coordinate with the largest projected gradient
+        ops += k_classes;
         let myi = margins[yi];
         let mut best_k = usize::MAX;
         let mut best_v = 0.0f64;
@@ -165,28 +200,25 @@ fn solve_subspace(
         delta_f,
         max_viol_entry: max_viol_first,
         inner_steps: inner_steps.max(1),
-        ops: 0,
+        ops,
     }
 }
 
 /// Selector-driven subspace descent. The selector picks *examples*
 /// (subspaces); iteration counts follow the paper's convention of
-/// counting inner CD steps.
+/// counting inner CD steps. Errs (before touching any state) when the
+/// labels are not integers in `0..K−1` — see [`class_labels`].
 pub fn solve(
     ds: &Dataset,
     c: f64,
     sched: &mut dyn Selector,
     config: SolverConfig,
-) -> (McSvmModel, SolveResult) {
+) -> Result<(McSvmModel, SolveResult)> {
     let n = ds.n_instances();
     assert_eq!(sched.n(), n);
     let d = ds.n_features();
-    let classes = ds.classes();
-    let k_classes = classes.len();
-    assert!(k_classes >= 2);
-    // labels must be 0..K−1
-    let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
-    assert!(y.iter().all(|&v| v < k_classes));
+    let k_classes = ds.classes().len();
+    let y = class_labels(ds, k_classes)?;
 
     // borrowed from the matrix-level cache (computed once per Csr)
     let norms = ds.x.row_norms_sq();
@@ -281,7 +313,7 @@ pub fn solve(
 
     let model = McSvmModel { w, alpha, c, k_classes };
     let obj = model.objective();
-    (model, rs.finish(status, obj, final_viol, epochs))
+    Ok((model, rs.finish(status, obj, final_viol, epochs)))
 }
 
 /// Full KKT verification over all (i, k≠y_i) pairs.
@@ -318,9 +350,11 @@ fn verify(
     (max_viol, ops)
 }
 
-/// Primal objective for duality-gap audits.
-pub fn primal_objective(ds: &Dataset, w: &[Vec<f64>], c: f64) -> f64 {
-    let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
+/// Primal objective for duality-gap audits. Errs on invalid labels with
+/// the same first-party error as [`solve`] (callers need not have gone
+/// through training first).
+pub fn primal_objective(ds: &Dataset, w: &[Vec<f64>], c: f64) -> Result<f64> {
+    let y = class_labels(ds, w.len())?;
     let mut loss = 0.0;
     for i in 0..ds.n_instances() {
         let row = ds.x.row(i);
@@ -333,7 +367,7 @@ pub fn primal_objective(ds: &Dataset, w: &[Vec<f64>], c: f64) -> f64 {
         }
     }
     let quad: f64 = w.iter().map(|wk| crate::sparse::ops::norm_sq(wk)).sum();
-    0.5 * quad + c * loss
+    Ok(0.5 * quad + c * loss)
 }
 
 #[cfg(test)]
@@ -352,7 +386,7 @@ mod tests {
     fn converges_and_classifies_blobs() {
         let ds = blobs(1);
         let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(1));
-        let (model, res) = solve(&ds, 1.0, &mut sched, SolverConfig::with_eps(1e-4));
+        let (model, res) = solve(&ds, 1.0, &mut sched, SolverConfig::with_eps(1e-4)).unwrap();
         assert!(res.status.converged(), "{}", res.summary());
         let acc = crate::data::split::multiclass_accuracy(&ds, &model.w);
         assert!(acc > 0.95, "train accuracy {acc}");
@@ -363,7 +397,7 @@ mod tests {
         let ds = blobs(2);
         let c = 0.5;
         let mut sched = UniformScheduler::new(ds.n_instances(), Rng::new(2));
-        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-5));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-5)).unwrap();
         assert!(res.status.converged());
         let y: Vec<usize> = ds.y.iter().map(|&v| v as usize).collect();
         let (v, _) = verify(&ds, &y, &model.alpha, &model.w, c, model.k_classes);
@@ -377,10 +411,10 @@ mod tests {
         let ds = blobs(3);
         let c = 1.0;
         let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(3));
-        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-6));
+        let (model, res) = solve(&ds, c, &mut sched, SolverConfig::with_eps(1e-6)).unwrap();
         assert!(res.status.converged());
         let dual = -res.objective;
-        let primal = primal_objective(&ds, &model.w, c);
+        let primal = primal_objective(&ds, &model.w, c).unwrap();
         let gap = (primal - dual) / primal.abs().max(1.0);
         assert!(gap >= -1e-9, "weak duality violated: {gap}");
         assert!(gap < 1e-3, "gap {gap}");
@@ -392,10 +426,10 @@ mod tests {
         let c = 1.0;
         let cfg = SolverConfig::with_eps(1e-3);
         let mut perm = PermutationScheduler::new(ds.n_instances(), Rng::new(4));
-        let (_, r1) = solve(&ds, c, &mut perm, cfg.clone());
+        let (_, r1) = solve(&ds, c, &mut perm, cfg.clone()).unwrap();
         let mut acf =
             AcfSchedulerPolicy::new(ds.n_instances(), AcfParams::default(), Rng::new(5));
-        let (_, r2) = solve(&ds, c, &mut acf, cfg);
+        let (_, r2) = solve(&ds, c, &mut acf, cfg).unwrap();
         assert!(r1.status.converged() && r2.status.converged());
         let rel = (r1.objective - r2.objective).abs() / r1.objective.abs().max(1.0);
         assert!(rel < 5e-3, "{} vs {}", r1.objective, r2.objective);
@@ -425,7 +459,7 @@ mod tests {
             y: bin.y.iter().map(|&l| if l > 0.0 { 1.0 } else { 0.0 }).collect(),
         };
         let mut s1 = PermutationScheduler::new(mc.n_instances(), Rng::new(7));
-        let (m_mc, r_mc) = solve(&mc, 1.0, &mut s1, SolverConfig::with_eps(1e-5));
+        let (m_mc, r_mc) = solve(&mc, 1.0, &mut s1, SolverConfig::with_eps(1e-5)).unwrap();
         assert!(r_mc.status.converged());
         // WW with K = 2 and parameter C is equivalent to the binary SVM
         // with parameter 2C (the WW regularizer splits ½‖v‖² in half
@@ -452,7 +486,62 @@ mod tests {
         let ds = blobs(9);
         let cfg = SolverConfig { eps: 1e-12, max_iterations: 100, ..Default::default() };
         let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(9));
-        let (_, res) = solve(&ds, 100.0, &mut sched, cfg);
+        let (_, res) = solve(&ds, 100.0, &mut sched, cfg).unwrap();
         assert_eq!(res.status, SolveStatus::IterLimit);
+    }
+
+    #[test]
+    fn pm1_labels_are_rejected_with_a_named_error() {
+        // ±1 labels used to saturate (−1.0 as usize == 0), pass the
+        // range check and train on garbage classes; now they fail fast
+        // with an error naming the offending value
+        let mut rng = Rng::new(10);
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "pm1",
+                n: 40,
+                d: 60,
+                nnz_per_row: 8,
+                zipf_s: 1.0,
+                concept_k: 6,
+                noise: 0.0,
+            },
+            &mut rng,
+        );
+        assert!(ds.y.contains(&-1.0), "fixture must carry a −1 label");
+        let mut sched = PermutationScheduler::new(ds.n_instances(), Rng::new(10));
+        let err = solve(&ds, 1.0, &mut sched, SolverConfig::with_eps(1e-3)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("-1"), "error must name the offending label: {msg}");
+        // fractional labels are rejected too
+        let mut frac = ds.clone();
+        frac.y = frac.y.iter().map(|&v| if v < 0.0 { 0.5 } else { 1.0 }).collect();
+        let mut sched = PermutationScheduler::new(frac.n_instances(), Rng::new(10));
+        let err = solve(&frac, 1.0, &mut sched, SolverConfig::with_eps(1e-3)).unwrap_err();
+        assert!(format!("{err:#}").contains("0.5"), "{err:#}");
+    }
+
+    #[test]
+    fn subspace_ops_are_counted_on_both_branches() {
+        let k = 4;
+        let c = 1.0;
+        let mut margins = vec![0.0f64; k];
+        let mut alpha = vec![0.0f64; k];
+        let mut beta = vec![0.0f64; k];
+        // main path: a unit-norm row with fresh alphas makes progress,
+        // so the K-wide scans must be billed (was `ops: 0`)
+        let out = solve_subspace(0, k, 1.0, c, &mut margins, &mut alpha, &mut beta, 10 * k, 1e-6);
+        assert!(out.inner_steps >= 1);
+        assert!(
+            out.ops >= k * out.inner_steps as usize,
+            "main path must count >= K ops per inner step, got {} for {} steps",
+            out.ops,
+            out.inner_steps
+        );
+        // empty-row branch: one K-wide pass
+        let mut margins = vec![0.0f64; k];
+        let mut alpha = vec![0.0f64; k];
+        let out = solve_subspace(0, k, 0.0, c, &mut margins, &mut alpha, &mut beta, 10 * k, 1e-6);
+        assert_eq!(out.ops, k);
     }
 }
