@@ -43,6 +43,7 @@ fn main() {
                 base,
                 grid: grid.clone(),
                 policies: vec![Policy::Acf],
+                selectors: vec![],
                 include_shrinking: true,
                 workers: cfg.workers,
             })

@@ -24,6 +24,7 @@
 
 use acf_cd::bench_util::{summary_entry, write_bench_summary, BenchConfig, Table};
 use acf_cd::data::synth;
+use acf_cd::obs::{self, Obs, StageBreakdown, TraceLevel};
 use acf_cd::sched::{AcfSchedulerPolicy, Scheduler};
 use acf_cd::shard::{
     lasso as shard_lasso, logreg as shard_logreg, mcsvm as shard_mcsvm, svm as shard_svm,
@@ -123,7 +124,40 @@ fn run_family(
     mono_spec.config.trace_every = 1;
     let mono = run(mono_spec).expect("monotone audit run failed");
     let async_monotone = mono.result.trace.check_monotone(1e-9).is_ok();
-    report_family(family, serial_secs, serial, &rows, deterministic, async_monotone, out);
+
+    // Observability audit at the CI-gated S = 4 point: rerun with a
+    // spans-level collector attached (4 shard rings + the driver ring),
+    // fold the event stream into the stage-time split, and compare the
+    // traced wall clock against the untraced shards_4 row — the
+    // acceptance target for span recording is ≤ 5% overhead. The gate
+    // rows above stay untraced so the speedup numbers are unaffected.
+    let collector = std::sync::Arc::new(Obs::new(TraceLevel::Spans, 4 + 1, obs::DEFAULT_RING_CAP));
+    let t = Timer::start();
+    let traced =
+        run(shard_spec(4, cfg, eps, false).with_obs(collector.clone())).expect("traced run failed");
+    let traced_secs = t.secs();
+    let untraced_secs =
+        rows.iter().find(|r| r.json_key == "shards_4").map(|r| r.seconds).unwrap_or(traced_secs);
+    let data = collector.drain();
+    let breakdown = StageBreakdown::from_events(&data.events);
+    let overhead = traced_secs / untraced_secs.max(1e-12);
+    println!(
+        "spans-level trace (sync S = 4): {} vs {} untraced ({:+.1}% overhead), {} events recorded, {} dropped",
+        fmt_secs(traced_secs),
+        fmt_secs(untraced_secs),
+        (overhead - 1.0) * 100.0,
+        data.total,
+        data.dropped
+    );
+    let mut trace_audit = Json::obj();
+    trace_audit
+        .set("seconds", Json::Num(traced_secs))
+        .set("spans_overhead_vs_untraced", Json::Num(overhead))
+        .set("events_recorded", Json::Num(data.total as f64))
+        .set("dropped_events", Json::Num(data.dropped as f64))
+        .set("objective_matches_untraced", Json::Bool(traced.result.objective == a.result.objective))
+        .set("stage_breakdown", breakdown.to_json());
+    report_family(family, serial_secs, serial, &rows, deterministic, async_monotone, trace_audit, out);
 }
 
 fn report_family(
@@ -133,6 +167,7 @@ fn report_family(
     rows: &[Row],
     deterministic: bool,
     async_monotone: bool,
+    trace_audit: Json,
     out: &mut Json,
 ) {
     let mut table = Table::new(
@@ -197,6 +232,8 @@ fn report_family(
     }
     fam.set("deterministic", Json::Bool(deterministic));
     fam.set("async_monotone", Json::Bool(async_monotone));
+    // spans-level rerun at S = 4: stage-time split + overhead ratio
+    fam.set("s4_trace", trace_audit);
     out.set(family, fam);
 }
 

@@ -41,6 +41,7 @@ fn main() {
             base,
             grid: grid.clone(),
             policies: vec![Policy::Cyclic, Policy::Acf],
+            selectors: vec![],
             include_shrinking: false,
             workers: cfg.workers,
         };

@@ -50,6 +50,7 @@ fn main() {
                 base,
                 grid: grid.clone(),
                 policies: vec![Policy::Acf],
+            selectors: vec![],
                 include_shrinking: true, // the liblinear baseline
                 workers: cfg.workers,
             };

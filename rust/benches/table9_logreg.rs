@@ -42,6 +42,7 @@ fn main() {
             base: base.clone(),
             grid: grid.clone(),
             policies: vec![Policy::Permutation, Policy::Acf],
+            selectors: vec![],
             include_shrinking: false,
             workers: cfg.workers,
         };

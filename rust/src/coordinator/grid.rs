@@ -4,7 +4,9 @@
 
 use super::jobs::{run_job_on, JobOutcome, JobSpec, Problem};
 use crate::data::{self, Scale};
+use crate::obs::TraceLevel;
 use crate::sched::Policy;
+use crate::select::SelectorKind;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
 use crate::util::error::Result;
@@ -18,6 +20,11 @@ pub struct SweepSpec {
     pub grid: Vec<f64>,
     /// policies to compare at each grid point
     pub policies: Vec<Policy>,
+    /// non-empty switches the sweep's comparison axis from policies to
+    /// coordinate-selection rules (`sweep --selector a,b,...`): every
+    /// job runs the ACF policy with the row's explicit selector, and
+    /// `policies`/`include_shrinking` are ignored
+    pub selectors: Vec<SelectorKind>,
     /// include the liblinear shrinking baseline (SVM only)
     pub include_shrinking: bool,
     /// worker threads
@@ -35,29 +42,48 @@ fn with_parameter(p: Problem, v: f64) -> Problem {
     }
 }
 
-/// Run the sweep; outcomes are ordered (grid-major, policy-minor, with
-/// the shrinking baseline appended per grid point when requested).
+/// Run the sweep; outcomes are ordered grid-major. On the policy axis
+/// the minor order is `policies` (with the shrinking baseline appended
+/// per grid point when requested); with `selectors` non-empty it is the
+/// selector list, every job on the ACF policy.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
-    let ds = spec.base.load_dataset()?;
+    // A sweep runs its jobs concurrently; a shared `trace_out` file
+    // would be clobbered per job, so tracing is a `train`-only feature
+    // (the CLI notes and drops the flags; this guards programmatic
+    // callers that hand-build a SweepSpec from a traced train spec).
+    let mut base = spec.base.clone();
+    base.trace_level = TraceLevel::Off;
+    base.trace_out = None;
+    let ds = base.load_dataset()?;
     let mut jobs: Vec<JobSpec> = Vec::new();
     for &v in &spec.grid {
-        for &policy in &spec.policies {
-            let mut j = spec.base.clone();
-            j.problem = with_parameter(spec.base.problem, v);
-            j.policy = policy;
-            // A sweep compares the named policies, so a selector
-            // override must not leak into the rows (the CLI rejects
-            // `sweep --selector` outright; this guards programmatic
-            // callers that hand-build a SweepSpec from a train spec).
-            j.selector = None;
-            jobs.push(j);
-        }
-        if spec.include_shrinking {
-            let mut j = spec.base.clone();
-            j.problem = Problem::SvmShrinking { c: v };
-            j.policy = Policy::Permutation;
-            j.selector = None;
-            jobs.push(j);
+        if spec.selectors.is_empty() {
+            for &policy in &spec.policies {
+                let mut j = base.clone();
+                j.problem = with_parameter(base.problem, v);
+                j.policy = policy;
+                // A policy sweep compares the named policies, so a
+                // selector override must not leak into the rows.
+                j.selector = None;
+                jobs.push(j);
+            }
+            if spec.include_shrinking {
+                let mut j = base.clone();
+                j.problem = Problem::SvmShrinking { c: v };
+                j.policy = Policy::Permutation;
+                j.selector = None;
+                jobs.push(j);
+            }
+        } else {
+            // selector axis: identical solver/policy configuration per
+            // row, only the coordinate-selection rule varies
+            for &kind in &spec.selectors {
+                let mut j = base.clone();
+                j.problem = with_parameter(base.problem, v);
+                j.policy = Policy::Acf;
+                j.selector = Some(kind);
+                jobs.push(j);
+            }
         }
     }
     parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds))
@@ -114,6 +140,7 @@ mod tests {
             base,
             grid: vec![0.1, 1.0],
             policies: vec![Policy::Acf, Policy::Permutation],
+            selectors: vec![],
             include_shrinking: true,
             workers: 4,
         };
@@ -123,6 +150,53 @@ mod tests {
         assert_eq!(out[0].spec.problem.parameter(), 0.1);
         assert_eq!(out[2].spec.problem.family(), "svm-shrinking");
         assert!(out.iter().all(|o| o.result.status.converged()));
+    }
+
+    #[test]
+    fn sweep_selector_axis_produces_grid_times_selectors() {
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        let spec = SweepSpec {
+            base,
+            grid: vec![0.1, 1.0],
+            // policies are ignored on the selector axis
+            policies: vec![Policy::Permutation],
+            selectors: vec![SelectorKind::Acf, SelectorKind::Uniform, SelectorKind::Cyclic],
+            include_shrinking: false,
+            workers: 4,
+        };
+        let out = run_sweep(&spec).unwrap();
+        assert_eq!(out.len(), 2 * 3);
+        // grid-major, selector-minor ordering; every row is ACF policy
+        assert_eq!(out[0].spec.problem.parameter(), 0.1);
+        assert_eq!(out[3].spec.problem.parameter(), 1.0);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.spec.policy, Policy::Acf, "row {i}");
+            assert!(o.result.status.converged(), "row {i}: {}", o.result.summary());
+        }
+        assert_eq!(out[1].spec.selector, Some(SelectorKind::Uniform));
+        assert_eq!(out[5].spec.selector, Some(SelectorKind::Cyclic));
+    }
+
+    #[test]
+    fn sweep_drops_trace_fields_from_its_jobs() {
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        base.trace_level = TraceLevel::Events;
+        base.trace_out = Some("/nonexistent/dir/trace.jsonl".into());
+        let spec = SweepSpec {
+            base,
+            grid: vec![1.0],
+            policies: vec![Policy::Acf],
+            selectors: vec![],
+            include_shrinking: false,
+            workers: 2,
+        };
+        // would fail with an unwritable trace path if the fields leaked
+        let out = run_sweep(&spec).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].spec.trace_level, TraceLevel::Off);
+        assert!(out[0].spec.trace_out.is_none());
     }
 
     #[test]

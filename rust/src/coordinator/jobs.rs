@@ -4,6 +4,7 @@
 use crate::acf::AcfParams;
 use crate::anyhow;
 use crate::data::{registry, Scale};
+use crate::obs::{self, Obs, TraceLevel};
 use crate::sched::Policy;
 use crate::select::{Selector, SelectorKind};
 use crate::shard::{self, MergeMode, Partitioner, ShardSpec};
@@ -12,6 +13,7 @@ use crate::sparse::Dataset;
 use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Which of the paper's four problem families to solve.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -86,6 +88,13 @@ pub struct JobSpec {
     /// `--staleness-bound auto`: tune τ online from the observed
     /// stale-drop/reject rate, starting from `staleness_bound`
     pub staleness_auto: bool,
+    /// observability verbosity (`--trace-level`); [`TraceLevel::Off`]
+    /// (the default) keeps the run bit-identical to an uninstrumented
+    /// build — no collector is even constructed
+    pub trace_level: TraceLevel,
+    /// JSONL trace destination (`--trace-out`); consumed by the `trace`
+    /// subcommand. `None` discards the recorded stream after the run
+    pub trace_out: Option<String>,
 }
 
 impl JobSpec {
@@ -107,21 +116,34 @@ impl JobSpec {
             async_merge: false,
             staleness_bound: shard::DEFAULT_STALENESS_BOUND,
             staleness_auto: false,
+            trace_level: TraceLevel::Off,
+            trace_out: None,
         }
     }
 
     /// The coordinate selector driving a serial solver run: the
     /// explicit `--selector` choice when present, the named policy
-    /// otherwise.
-    fn build_selector(&self, n: usize, rng: Rng) -> Box<dyn Selector> {
-        match self.selector {
+    /// otherwise. With an events-level collector the policy is wrapped
+    /// in [`obs::ObservedSelector`], which forwards every call
+    /// unchanged while recording periodic distribution probes.
+    fn build_selector(&self, n: usize, rng: Rng, obs: Option<&Arc<Obs>>) -> Box<dyn Selector> {
+        let inner = match self.selector {
             Some(kind) => kind.build(n, self.acf_params, rng),
             None => self.policy.build(n, self.acf_params, rng),
+        };
+        match obs {
+            Some(o) if o.level() >= TraceLevel::Events => Box::new(obs::ObservedSelector::new(
+                inner,
+                Arc::clone(o),
+                0,
+                obs::NO_SHARD,
+            )),
+            _ => inner,
         }
     }
 
     /// Sharded-engine configuration derived from this job.
-    fn shard_spec(&self) -> ShardSpec {
+    fn shard_spec(&self, obs: Option<&Arc<Obs>>) -> ShardSpec {
         let mut spec = ShardSpec::new(self.shards);
         spec.partitioner = self.partitioner;
         spec.inner_selector = self.selector.unwrap_or(SelectorKind::Acf);
@@ -134,7 +156,23 @@ impl JobSpec {
                 MergeMode::Async { staleness_bound: self.staleness_bound, adaptive: self.staleness_auto };
         }
         spec.config = self.solver_config();
+        if let Some(o) = obs {
+            spec = spec.with_obs(Arc::clone(o));
+        }
         spec
+    }
+
+    /// The observability collector for this job, sized to the execution
+    /// path: `shards + 1` rings for the parallel engine (ring *k* per
+    /// shard plus the driver ring), a single ring for serial runs.
+    /// `None` at `--trace-level off` — the solvers then run with the
+    /// zero-cost disabled emitters.
+    fn build_obs(&self) -> Option<Arc<Obs>> {
+        if self.trace_level == TraceLevel::Off {
+            return None;
+        }
+        let rings = if self.uses_sharded_engine() { self.shards + 1 } else { 1 };
+        Some(Arc::new(Obs::new(self.trace_level, rings, obs::DEFAULT_RING_CAP)))
     }
 
     /// Whether this job routes through the sharded parallel engine.
@@ -285,9 +323,39 @@ impl JobOutcome {
                     // where the (possibly adaptive) τ ended up
                     o.set("staleness_bound_final", Json::Num(ms.staleness_bound_final as f64));
                 }
+                // nested mirror of the flat keys above (those stay for
+                // downstream compat) plus derived rates
+                let decided = ms.accepted_submissions + ms.rejected_submissions;
+                let acceptance_rate =
+                    if decided == 0 { 1.0 } else { ms.accepted_submissions as f64 / decided as f64 };
+                let evals_per_accepted = if ms.accepted_submissions == 0 {
+                    0.0
+                } else {
+                    ms.objective_evals as f64 / ms.accepted_submissions as f64
+                };
+                let mut m = Json::obj();
+                m.set("objective_evals", Json::Num(ms.objective_evals as f64))
+                    .set("accepted_submissions", Json::Num(ms.accepted_submissions as f64))
+                    .set("rejected_submissions", Json::Num(ms.rejected_submissions as f64))
+                    .set("batched_merges", Json::Num(ms.batched_merges as f64))
+                    .set("acceptance_rate", Json::Num(acceptance_rate))
+                    .set("objective_evals_per_accepted", Json::Num(evals_per_accepted));
+                if self.spec.async_merge {
+                    m.set("staleness_bound_final", Json::Num(ms.staleness_bound_final as f64));
+                    if let Some(d) = self.stale_drops {
+                        m.set("stale_drops", Json::Num(d as f64));
+                    }
+                }
+                o.set("merge_stats", m);
             }
             if let Some(d) = self.stale_drops {
                 o.set("stale_drops", Json::Num(d as f64));
+            }
+        }
+        if self.spec.trace_level != TraceLevel::Off {
+            o.set("trace_level", Json::Str(self.spec.trace_level.name().into()));
+            if let Some(p) = &self.spec.trace_out {
+                o.set("trace_out", Json::Str(p.clone()));
             }
         }
         o
@@ -298,7 +366,22 @@ impl JobOutcome {
 /// dataset across grid points). Fallible since the sharded engine
 /// surfaces worker failures as
 /// [`crate::util::error::ErrorKind::ShardWorker`] errors.
+///
+/// When the spec asks for tracing (`trace_level` above `off`) a
+/// collector is attached to the run — sharded engine rings or the
+/// serial [`obs::ObservedSelector`] wrapper — and drained into the
+/// `trace_out` JSONL file afterwards. Recording never perturbs
+/// results (see [`crate::obs`]); `off` skips the collector entirely.
 pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
+    let obs = spec.build_obs();
+    let outcome = run_job_inner(spec, ds, obs.as_ref())?;
+    if let Some(o) = &obs {
+        write_job_trace(spec, &outcome, o)?;
+    }
+    Ok(outcome)
+}
+
+fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result<JobOutcome> {
     let cfg = spec.solver_config();
     let rng = Rng::new(spec.seed ^ 0x5EED);
     // Sharded engine path (ACF policy on any of the four paper families
@@ -311,7 +394,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
         match spec.problem {
             Problem::Svm { c } => {
                 let problem = shard::svm::ShardedSvm::new(ds, c);
-                let out = shard::svm::run_prepared(&problem, spec.shard_spec())?;
+                let out = shard::svm::run_prepared(&problem, spec.shard_spec(obs))?;
                 return Ok(JobOutcome {
                     spec: spec.clone(),
                     result: out.result,
@@ -325,7 +408,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
             Problem::Lasso { lambda } => {
                 let problem = shard::lasso::ShardedLasso::new(ds, lambda);
-                let out = shard::lasso::run_prepared(&problem, spec.shard_spec())?;
+                let out = shard::lasso::run_prepared(&problem, spec.shard_spec(obs))?;
                 let model = solvers::lasso::LassoModel { w: out.values, lambda };
                 let k = solvers::lasso::nnz_coefficients(&model);
                 return Ok(JobOutcome {
@@ -341,7 +424,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
             Problem::LogReg { c } => {
                 let problem = shard::logreg::ShardedLogReg::new(ds, c);
-                let out = shard::logreg::run_prepared(&problem, spec.shard_spec())?;
+                let out = shard::logreg::run_prepared(&problem, spec.shard_spec(obs))?;
                 return Ok(JobOutcome {
                     spec: spec.clone(),
                     result: out.result,
@@ -355,7 +438,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
             Problem::McSvm { c } => {
                 let problem = shard::mcsvm::ShardedMcSvm::new(ds, c, spec.eps)?;
-                let out = shard::mcsvm::run_prepared(&problem, spec.shard_spec())?;
+                let out = shard::mcsvm::run_prepared(&problem, spec.shard_spec(obs))?;
                 let w_multi = problem.unflatten_weights(&out.shared);
                 return Ok(JobOutcome {
                     spec: spec.clone(),
@@ -391,7 +474,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
     }
     Ok(match spec.problem {
         Problem::Svm { c } => {
-            let mut sched = spec.build_selector(ds.n_instances(), rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng, obs);
             let (model, result) = solvers::svm::solve(ds, c, sched.as_mut(), cfg);
             JobOutcome {
                 spec: spec.clone(),
@@ -430,7 +513,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::Lasso { lambda } => {
-            let mut sched = spec.build_selector(ds.n_features(), rng);
+            let mut sched = spec.build_selector(ds.n_features(), rng, obs);
             let (model, result) = solvers::lasso::solve(ds, lambda, sched.as_mut(), cfg);
             let k = solvers::lasso::nnz_coefficients(&model);
             JobOutcome {
@@ -445,7 +528,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::LogReg { c } => {
-            let mut sched = spec.build_selector(ds.n_instances(), rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng, obs);
             let (model, result) = solvers::logreg::solve(ds, c, sched.as_mut(), cfg);
             JobOutcome {
                 spec: spec.clone(),
@@ -459,7 +542,7 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
         Problem::McSvm { c } => {
-            let mut sched = spec.build_selector(ds.n_instances(), rng);
+            let mut sched = spec.build_selector(ds.n_instances(), rng, obs);
             let (model, result) = solvers::mcsvm::solve(ds, c, sched.as_mut(), cfg)?;
             JobOutcome {
                 spec: spec.clone(),
@@ -473,6 +556,40 @@ pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
             }
         }
     })
+}
+
+/// Drain the job's collector into the `--trace-out` JSONL file: a meta
+/// line (run identity + stream accounting), the raw event lines at
+/// `spans`/`events` level, 1-second [`obs::MetricsSnapshot`] windows,
+/// and a summary line mirroring the headline result fields. Without
+/// `trace_out` the recorded stream is simply discarded.
+fn write_job_trace(spec: &JobSpec, outcome: &JobOutcome, obs: &Obs) -> Result<()> {
+    let Some(path) = &spec.trace_out else { return Ok(()) };
+    let data = obs.drain();
+    let n_shards = if spec.uses_sharded_engine() { spec.shards } else { 0 };
+    let snapshots = obs::window_snapshots(&data.events, n_shards, 1.0);
+    let mut meta = Json::obj();
+    meta.set("problem", Json::Str(spec.problem.family().into()))
+        .set("parameter", Json::Num(spec.problem.parameter()))
+        .set("dataset", Json::Str(spec.dataset.clone()))
+        .set("policy", Json::Str(spec.policy.name().into()))
+        .set("shards", Json::Num(n_shards as f64))
+        .set("merge", Json::Str(if spec.async_merge { "async" } else { "sync" }.into()));
+    let mut summary = Json::obj();
+    summary
+        .set("converged", Json::Bool(outcome.result.status.converged()))
+        .set("iterations", Json::Num(outcome.result.iterations as f64))
+        .set("ops", Json::Num(outcome.result.ops as f64))
+        .set("seconds", Json::Num(outcome.result.seconds))
+        .set("objective", Json::Num(outcome.result.objective));
+    if let Some(ms) = outcome.merge_stats {
+        summary
+            .set("accepted_submissions", Json::Num(ms.accepted_submissions as f64))
+            .set("rejected_submissions", Json::Num(ms.rejected_submissions as f64))
+            .set("objective_evals", Json::Num(ms.objective_evals as f64));
+    }
+    let text = obs::sink::render_trace(spec.trace_level, &meta, &data, &snapshots, &summary);
+    obs::sink::write_trace(path, &text)
 }
 
 /// Load the dataset and execute.
@@ -699,5 +816,118 @@ mod tests {
         let spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", policy);
         let out = run_job(&spec).unwrap();
         assert!(out.result.status.converged(), "{}", out.result.summary());
+    }
+
+    #[test]
+    fn sharded_job_json_nests_merge_stats_with_derived_rates() {
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 4;
+        spec.async_merge = true;
+        spec.staleness_bound = 3;
+        let out = run_job(&spec).unwrap();
+        let j = out.to_json();
+        let m = j.get("merge_stats").expect("nested merge_stats object");
+        // nested keys mirror the flat ones bit-for-bit
+        for key in ["objective_evals", "accepted_submissions", "rejected_submissions", "batched_merges"] {
+            assert_eq!(
+                m.get(key).unwrap().as_f64(),
+                j.get(key).unwrap().as_f64(),
+                "flat/nested mismatch for {key}"
+            );
+        }
+        let accepted = m.get("accepted_submissions").unwrap().as_f64().unwrap();
+        let rejected = m.get("rejected_submissions").unwrap().as_f64().unwrap();
+        let rate = m.get("acceptance_rate").unwrap().as_f64().unwrap();
+        if accepted + rejected > 0.0 {
+            assert!((rate - accepted / (accepted + rejected)).abs() < 1e-12, "rate {rate}");
+        } else {
+            assert_eq!(rate, 1.0);
+        }
+        let epa = m.get("objective_evals_per_accepted").unwrap().as_f64().unwrap();
+        assert!(epa >= 0.0 && epa.is_finite());
+        // async runs fold the staleness accounting into the object too
+        assert!(m.get("staleness_bound_final").is_some());
+        assert!(m.get("stale_drops").is_some());
+        // untraced specs must not claim a trace in the report
+        assert!(j.get("trace_level").is_none());
+    }
+
+    #[test]
+    fn traced_job_is_bit_identical_to_untraced() {
+        let plain = {
+            let mut s = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+            s.shards = 4;
+            s
+        };
+        let mut traced = plain.clone();
+        traced.trace_level = TraceLevel::Events;
+        let a = run_job(&plain).unwrap();
+        let b = run_job(&traced).unwrap();
+        assert_eq!(a.result.iterations, b.result.iterations);
+        assert_eq!(a.result.ops, b.result.ops);
+        assert_eq!(a.result.objective.to_bits(), b.result.objective.to_bits());
+        assert_eq!(a.w, b.w);
+        let j = b.to_json();
+        assert_eq!(j.get("trace_level").unwrap().as_str(), Some("events"));
+    }
+
+    #[test]
+    fn traced_sharded_job_writes_a_readable_jsonl_trace() {
+        use crate::util::json;
+        let path = std::env::temp_dir()
+            .join(format!("acf_job_trace_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 4;
+        spec.trace_level = TraceLevel::Events;
+        spec.trace_out = Some(path.clone());
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let text = std::fs::read_to_string(&path).expect("trace file written");
+        let _ = std::fs::remove_file(&path);
+        let mut kinds = std::collections::BTreeSet::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let j = json::parse(line).unwrap_or_else(|e| panic!("line {} not JSON: {e}", lineno + 1));
+            kinds.insert(j.get("kind").and_then(Json::as_str).expect("kind field").to_string());
+        }
+        // meta header first, event lines in between, summary tail
+        let first = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("meta"));
+        assert_eq!(first.get("dropped_events").unwrap().as_f64(), Some(0.0));
+        assert_eq!(first.get("shards").unwrap().as_usize(), Some(4));
+        for expected in ["meta", "epoch", "merge", "publish", "summary"] {
+            assert!(kinds.contains(expected), "missing '{expected}' lines; got {kinds:?}");
+        }
+        // and the offline reporter accepts the file end-to-end
+        let report = crate::obs::report::summarize(&text).expect("summarize");
+        for section in ["stage time", "per shard", "merge outcomes"] {
+            assert!(report.contains(section), "report missing '{section}':\n{report}");
+        }
+    }
+
+    #[test]
+    fn traced_serial_job_records_selector_probes() {
+        use crate::util::json;
+        let path = std::env::temp_dir()
+            .join(format!("acf_serial_trace_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        // tight eps so the run comfortably exceeds the ~1024-call probe
+        // period of the selector decorator on this tiny dataset
+        spec.eps = 0.001;
+        spec.trace_level = TraceLevel::Events;
+        spec.trace_out = Some(path.clone());
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged());
+        let text = std::fs::read_to_string(&path).expect("trace file written");
+        let _ = std::fs::remove_file(&path);
+        let probes = text
+            .lines()
+            .filter_map(|l| json::parse(l).ok())
+            .filter(|j| j.get("kind").and_then(Json::as_str) == Some("selector"))
+            .count();
+        assert!(probes > 0, "serial events-level run should emit selector probes");
     }
 }

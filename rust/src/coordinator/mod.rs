@@ -9,4 +9,4 @@ pub mod report;
 
 pub use grid::{cross_validate, run_sweep, SweepSpec};
 pub use jobs::{run_job, run_job_on, JobOutcome, JobSpec, Problem};
-pub use report::{comparison_table, geomean_speedups, outcomes_json};
+pub use report::{comparison_table, geomean_speedups, outcomes_json, selector_table};

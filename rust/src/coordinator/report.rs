@@ -80,6 +80,43 @@ pub fn comparison_table(
     t
 }
 
+/// Rows of a selector-axis sweep (`sweep --selector a,b,...`): one row
+/// per outcome, grid-major like [`crate::coordinator::run_sweep`]'s
+/// ordering, with each row's time relative to the `acf` selector at the
+/// same grid point (1.00 = parity, above = slower than ACF).
+pub fn selector_table(title: &str, outcomes: &[JobOutcome], param_label: &str) -> Table {
+    let mut t = Table::new(
+        title,
+        &[param_label, "selector", "iters", "ops", "sec", "objective", "time vs acf"],
+    );
+    for o in outcomes {
+        let name = o.spec.selector.map(|k| k.name()).unwrap_or_else(|| o.spec.policy.name());
+        let acf = outcomes.iter().find(|b| {
+            b.spec.problem.parameter() == o.spec.problem.parameter()
+                && b.spec.selector.map(|k| k.name()) == Some("acf")
+        });
+        let dnf = !o.result.status.converged();
+        let rel = match acf {
+            Some(a)
+                if !dnf && a.result.status.converged() && a.result.seconds > 0.0 =>
+            {
+                format!("{:.2}", o.result.seconds / a.result.seconds)
+            }
+            _ => "—".to_string(),
+        };
+        t.row(vec![
+            format!("{}", o.spec.problem.parameter()),
+            name.to_string(),
+            if dnf { "—".into() } else { fmt_count(o.result.iterations as f64) },
+            if dnf { "—".into() } else { fmt_count(o.result.ops as f64) },
+            if dnf { "—".into() } else { format!("{:.3}", o.result.seconds) },
+            format!("{:.6}", o.result.objective),
+            rel,
+        ]);
+    }
+    t
+}
+
 /// JSON array of all outcomes (for EXPERIMENTS.md evidence files).
 pub fn outcomes_json(outcomes: &[JobOutcome]) -> Json {
     Json::Arr(outcomes.iter().map(|o| o.to_json()).collect())
@@ -137,6 +174,7 @@ mod tests {
             base,
             grid: vec![0.1, 1.0],
             policies: vec![Policy::Acf, Policy::Permutation],
+            selectors: vec![],
             include_shrinking: false,
             workers: 4,
         })
@@ -165,5 +203,27 @@ mod tests {
         assert!(s.is_some());
         let (it, ops, _) = s.unwrap();
         assert!(it > 0.0 && ops > 0.0);
+    }
+
+    #[test]
+    fn selector_table_has_one_row_per_outcome() {
+        use crate::select::SelectorKind;
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        let out = crate::coordinator::run_sweep(&SweepSpec {
+            base,
+            grid: vec![0.1, 1.0],
+            policies: vec![],
+            selectors: vec![SelectorKind::Acf, SelectorKind::Uniform],
+            include_shrinking: false,
+            workers: 4,
+        })
+        .unwrap();
+        let t = selector_table("selectors", &out, "C");
+        assert_eq!(t.rows.len(), 4);
+        // the acf row is its own reference point: ratio exactly 1.00
+        assert_eq!(t.rows[0][1], "acf");
+        assert_eq!(t.rows[0][6], "1.00");
+        t.print();
     }
 }

@@ -52,6 +52,13 @@
 //! the same idea through [`sched::Policy::Hierarchical`]; the CLI
 //! exposes it as `--policy hier --shards S --partitioner
 //! contiguous|hash`.
+//!
+//! Observability: [`obs`] is the first-party tracing/metrics plane —
+//! lock-free per-worker event rings capture engine spans (epochs,
+//! merges, publishes, τ moves, parks) and adaptation probes, folded
+//! into JSONL traces (`--trace-out`, `--trace-level`) that the `trace`
+//! subcommand renders as a stage-time breakdown and adaptation
+//! timeline.
 
 pub mod acf;
 pub mod bench_util;
@@ -59,6 +66,7 @@ pub mod coordinator;
 pub mod data;
 pub mod markov;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod select;

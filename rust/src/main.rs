@@ -5,6 +5,7 @@
 //!   sweep     parameter-grid comparison (ACF vs baselines), paper-style table
 //!   cv        k-fold cross-validation accuracy at one parameter point
 //!   markov    §6 Markov-chain experiment (balance π, Figure-1 curves)
+//!   trace     summarize a --trace-out JSONL file (stage times, adaptation)
 //!   datasets  list the paper-analog dataset registry
 //!   info      artifacts/runtime status (PJRT platform, manifest)
 //!
@@ -12,11 +13,15 @@
 //!   acf-cd train --problem svm --dataset rcv1-like --policy acf --c 1.0
 //!   acf-cd sweep --problem svm --dataset news20-like --grid 0.01,0.1,1,10 \
 //!                --policies acf,perm --shrinking --eps 0.01
+//!   acf-cd sweep --problem svm --grid 0.1,1 --selector acf,uniform,bandit
+//!   acf-cd train --shards 4 --trace-out run.jsonl --trace-level events
+//!   acf-cd trace run.jsonl
 //!   acf-cd markov --n 5 --seed 7 --curves
 
 use acf_cd::coordinator::{self, JobSpec, Problem, SweepSpec};
 use acf_cd::data::{registry, Scale};
 use acf_cd::markov;
+use acf_cd::obs::TraceLevel;
 use acf_cd::runtime::Runtime;
 use acf_cd::sched::Policy;
 use acf_cd::select::SelectorKind;
@@ -43,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("cv") => cmd_cv(args),
         Some("markov") => cmd_markov(args),
+        Some("trace") => cmd_trace(args),
         Some("datasets") => cmd_datasets(),
         Some("info") => cmd_info(),
         Some(other) => Err(anyhow!("unknown subcommand '{other}' (run without args for help)")),
@@ -57,7 +63,7 @@ fn print_help() {
     println!(
         "acf-cd — Adaptive Coordinate Frequencies CD framework\n\
          \n\
-         subcommands: train | sweep | cv | markov | datasets | info\n\
+         subcommands: train | sweep | cv | markov | trace | datasets | info\n\
          common flags: --problem svm|lasso|logreg|mcsvm  --dataset <name>\n\
          \u{20}             --policy acf|perm|cyclic|uniform|hier  --c/--lambda <v>\n\
          \u{20}             --eps <v>  --scale <f>  --seed <n>  --workers <n>\n\
@@ -88,6 +94,21 @@ fn print_help() {
          \u{20}             how many versions a merge/Δf report may lag\n\
          \u{20}             (default 2; 'auto' tunes τ online from the observed\n\
          \u{20}             stale-drop/reject rate)\n\
+         observability: --trace-out <path> records the run as first-party\n\
+         \u{20}             JSONL (meta line, span/event lines, 1 s metrics\n\
+         \u{20}             windows, summary); --trace-level off|summary|spans|\n\
+         \u{20}             events picks the verbosity (spans = epoch/merge/\n\
+         \u{20}             publish timings; events adds snapshot/submit/\n\
+         \u{20}             selector probes; a --trace-out without a level\n\
+         \u{20}             implies spans). `acf-cd trace <file>` prints the\n\
+         \u{20}             stage-time breakdown, per-shard throughput, merge\n\
+         \u{20}             outcomes and the τ/objective adaptation timeline.\n\
+         \u{20}             Recording never changes results: off is the\n\
+         \u{20}             pre-instrumentation hot path, and every level\n\
+         \u{20}             only reads solver state\n\
+         selector sweeps: `sweep --selector a,b,...` compares coordinate-\n\
+         \u{20}             selection rules (grid × selectors, all on the ACF\n\
+         \u{20}             policy) instead of --policies\n\
          run `cargo bench` for the paper's tables/figures and\n\
          `cargo bench --bench scaling_shards` for the shard-scaling curve."
     );
@@ -108,6 +129,13 @@ fn parse_problem(args: &Args) -> Result<Problem> {
 }
 
 fn parse_spec(args: &Args) -> Result<JobSpec> {
+    parse_spec_inner(args, true)
+}
+
+/// `parse_selector = false` leaves `--selector` untouched for callers
+/// that give the flag a different meaning (`sweep` reads it as a
+/// comma-separated comparison axis rather than a single override).
+fn parse_spec_inner(args: &Args, parse_selector: bool) -> Result<JobSpec> {
     let problem = parse_problem(args)?;
     let default_ds = match problem {
         Problem::McSvm { .. } => "iris-like",
@@ -123,7 +151,7 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
         .with_partitioner(partitioner);
     let mut spec = JobSpec::new(problem, &dataset, policy);
     // --selector: explicit coordinate-selection rule (select/ subsystem)
-    if let Some(s) = args.get("selector") {
+    if let Some(s) = args.get("selector").filter(|_| parse_selector) {
         spec.selector = Some(SelectorKind::parse(s).map_err(|e| anyhow!("{e}"))?);
         // the shrinking baseline owns its permutation order — a selector
         // cannot be honored there, so reject instead of silently ignoring
@@ -160,6 +188,25 @@ fn parse_spec(args: &Args) -> Result<JobSpec> {
     if !spec.async_merge && args.has("staleness-bound") {
         eprintln!("note: --staleness-bound applies only with --async-merge; the flag is inert here");
     }
+    // --trace-level / --trace-out: the first-party observability plane
+    // (crate obs/). A destination without a level implies `spans`.
+    if let Some(v) = args.get("trace-level") {
+        spec.trace_level = TraceLevel::parse(v).ok_or_else(|| {
+            anyhow!("--trace-level: expected one of {}", TraceLevel::NAMES.join("|"))
+        })?;
+    }
+    if let Some(p) = args.get("trace-out") {
+        spec.trace_out = Some(p.to_string());
+        if spec.trace_level == TraceLevel::Off {
+            spec.trace_level = TraceLevel::Spans;
+        }
+    } else if spec.trace_level != TraceLevel::Off {
+        eprintln!(
+            "note: --trace-level {} without --trace-out records in memory and then \
+             discards the stream; add --trace-out <path> to keep it",
+            spec.trace_level.name()
+        );
+    }
     Ok(spec)
 }
 
@@ -188,6 +235,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     let out = coordinator::run_job_on(&spec, &ds)?;
+    if let Some(p) = &spec.trace_out {
+        eprintln!("trace written to {p} (summarize with `acf-cd trace {p}`)");
+    }
     println!("{}", out.result.summary());
     if let Some(w) = &out.w {
         if !matches!(spec.problem, Problem::Lasso { .. }) {
@@ -235,15 +285,35 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let base = parse_spec(args)?;
-    // Fail fast rather than silently ignore: a sweep compares the rules
-    // named in --policies, so a --selector override cannot be honored.
-    if base.selector.is_some() {
+    // `sweep --selector a,b,...` switches the comparison axis from
+    // policies to coordinate-selection rules, so the single-override
+    // parsing in parse_spec is skipped here.
+    let mut base = parse_spec_inner(args, false)?;
+    let selectors: Vec<SelectorKind> = args
+        .str_list("selector")
+        .unwrap_or_default()
+        .iter()
+        .map(|s| SelectorKind::parse(s).map_err(|e| anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    if !selectors.is_empty() && (args.has("policies") || args.has("shrinking")) {
         return Err(anyhow!(
-            "--selector conflicts with `sweep` (which compares --policies); \
-             use `train --selector ...` or `cargo bench --bench policy_faceoff` \
-             for selector comparisons"
+            "--selector picks the sweep's comparison axis (selection rules on the ACF \
+             policy) and cannot be combined with --policies/--shrinking"
         ));
+    }
+    if !selectors.is_empty() && matches!(base.problem, Problem::SvmShrinking { .. }) {
+        return Err(anyhow!(
+            "--selector does not apply to --problem svm-shrinking (the shrinking \
+             heuristic owns its permutation order)"
+        ));
+    }
+    if base.trace_level != TraceLevel::Off || base.trace_out.is_some() {
+        eprintln!(
+            "note: tracing applies to single `train` runs; a sweep's parallel jobs would \
+             clobber one trace file — --trace-out/--trace-level ignored"
+        );
+        base.trace_level = TraceLevel::Off;
+        base.trace_out = None;
     }
     let grid = args.f64_list("grid")?.unwrap_or_else(|| vec![0.01, 0.1, 1.0, 10.0]);
     let policies: Vec<Policy> = args
@@ -256,30 +326,44 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         base,
         grid,
         policies,
+        selectors,
         include_shrinking: args.has("shrinking"),
         workers: args.usize_or("workers", acf_cd::util::threadpool::default_workers())?,
     };
     let outcomes = coordinator::run_sweep(&spec)?;
-    let baseline = if spec.include_shrinking { "svm-shrinking" } else { "random-permutation" };
-    let table = coordinator::comparison_table(
-        &format!(
-            "{} on {} (ε = {})",
-            spec.base.problem.family(),
-            spec.base.dataset,
-            spec.base.eps
-        ),
-        &outcomes,
-        baseline,
-        "param",
+    let title = format!(
+        "{} on {} (ε = {})",
+        spec.base.problem.family(),
+        spec.base.dataset,
+        spec.base.eps
     );
-    table.print();
-    if let Some((it, ops, secs)) = coordinator::geomean_speedups(&outcomes, baseline) {
-        println!("\ngeomean speedups — iters {it:.2}×, ops {ops:.2}×, time {secs:.2}×");
+    if !spec.selectors.is_empty() {
+        coordinator::selector_table(&title, &outcomes, "param").print();
+    } else {
+        let baseline = if spec.include_shrinking { "svm-shrinking" } else { "random-permutation" };
+        coordinator::comparison_table(&title, &outcomes, baseline, "param").print();
+        if let Some((it, ops, secs)) = coordinator::geomean_speedups(&outcomes, baseline) {
+            println!("\ngeomean speedups — iters {it:.2}×, ops {ops:.2}×, time {secs:.2}×");
+        }
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, coordinator::outcomes_json(&outcomes).to_string_pretty())?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+/// `acf-cd trace <file.jsonl>` — offline summary of a recorded trace:
+/// stage-time breakdown, per-shard throughput, epoch-time histogram,
+/// merge outcomes, and the τ/objective adaptation timeline.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = match args.get("file").or_else(|| args.positional.first().map(|s| s.as_str())) {
+        Some(p) => p,
+        None => return Err(anyhow!("usage: acf-cd trace <file.jsonl>  (or --file <path>)")),
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read trace file '{path}': {e}"))?;
+    println!("{}", acf_cd::obs::report::summarize(&text)?.trim_end());
     Ok(())
 }
 

@@ -1,0 +1,1033 @@
+//! First-party runtime tracing and metrics for the solver runtime.
+//!
+//! Everything else in this crate reports *end-of-run aggregates*
+//! ([`MergeStats`], [`crate::coordinator::JobOutcome`]); this module is
+//! the window into the *running* system — how coordinate frequencies,
+//! shard frequencies, the staleness bound τ and the merge acceptance
+//! behave **over time**, and where wall-clock goes inside the sharded
+//! engine. It is zero-dependency by construction: rings are plain
+//! atomics ([`ring`]), records are fixed-width word tuples, and the
+//! sink is the crate's own [`crate::util::json`] written as JSONL.
+//!
+//! # Event taxonomy
+//!
+//! | kind (JSONL)    | level  | emitted by        | payload |
+//! |-----------------|--------|-------------------|---------|
+//! | `snapshot_take` | events | async worker      | shard, published version snapshotted |
+//! | `epoch`         | spans  | worker            | shard, steps, ops, compute nanos |
+//! | `submit`        | events | async worker      | shard, base version, queue depth after push |
+//! | `merge`         | spans  | merger / driver   | shard (−1 = whole-model sync merge), tier, staleness, batch size |
+//! | `publish`       | spans  | merger / driver   | new version, exact objective |
+//! | `tau`           | spans  | merger            | new τ, previous τ (adaptive window boundary) |
+//! | `park`          | spans  | merger / driver   | shard sent to the parked state |
+//! | `merge_wait`    | spans  | merger            | nanos the merger spent idle waiting for submissions |
+//! | `selector`      | events | worker / serial   | shard (−1 = serial run), entropy, p_min, p_max of the selector distribution |
+//!
+//! # Levels
+//!
+//! * `off` — recording is a single branch on a plain field; no ring is
+//!   touched, no clock is read. Results are bit-identical to a build
+//!   without tracing (instrumentation never reads or perturbs solver
+//!   state, RNG streams or iteration counts at *any* level — higher
+//!   levels only spend extra wall-clock).
+//! * `summary` — no per-event recording; the sink still writes the
+//!   end-of-run summary line (merge stats, totals). Use for dashboards
+//!   that only need final aggregates.
+//! * `spans` — coarse phase records: epochs, merges, publishes, τ
+//!   moves, parks, merger idle. O(1) per *epoch*, not per step; the
+//!   overhead budget is ≤ 5% on the `scaling_shards` S=4 rows. The
+//!   default choice for "where does the time go?".
+//! * `events` — adds per-submission records (queue depth, base
+//!   versions, snapshot takes) and periodic selector-distribution
+//!   probes. Highest fidelity; use on short runs or accept drop-oldest
+//!   truncation on long ones.
+//!
+//! # Overhead model
+//!
+//! A recorded event is one `Instant` read plus [`ring::EVENT_WORDS`]
+//! relaxed atomic stores into a preallocated ring — roughly the cost of
+//! a few cache-line writes, no allocation, no lock, no syscall. Spans
+//! fire O(1) per epoch/merge; events add O(1) per submission. Rings are
+//! fixed-capacity and **drop-oldest**: a long run at `events` level
+//! keeps the newest window and reports exactly how many records were
+//! overwritten ([`TraceData::dropped`]). Aggregation and file I/O
+//! happen strictly after the run (or between synchronized rounds),
+//! never on the solver hot path.
+//!
+//! One measurement substrate: the pre-existing counters are re-exported
+//! here — [`OpCounter`], [`Trace`]/[`TracePoint`] (objective-vs-ops
+//! curves) and [`MergeStats`] — and the JSONL summary line folds them
+//! together with the event-derived [`MetricsSnapshot`]s.
+
+pub mod report;
+pub mod ring;
+pub mod sink;
+
+pub use crate::metrics::{OpCounter, Trace, TracePoint};
+pub use crate::shard::MergeStats;
+pub use ring::{EventRing, DEFAULT_RING_CAP, EVENT_WORDS};
+
+use crate::select::{Selector, SelectorSnapshot};
+use crate::util::json::{self, Json};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How much the runtime records. Levels are ordered: each one includes
+/// everything below it (see module docs for the per-level taxonomy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Record nothing; one branch of overhead.
+    #[default]
+    Off,
+    /// End-of-run summary line only.
+    Summary,
+    /// Coarse phase spans (epochs, merges, publishes, τ, parks).
+    Spans,
+    /// Spans plus per-submission and selector-distribution events.
+    Events,
+}
+
+impl TraceLevel {
+    /// Accepted `--trace-level` spellings.
+    pub const NAMES: [&'static str; 4] = ["off", "summary", "spans", "events"];
+
+    /// Parse a CLI spelling.
+    pub fn parse(text: &str) -> Option<TraceLevel> {
+        match text {
+            "off" => Some(TraceLevel::Off),
+            "summary" => Some(TraceLevel::Summary),
+            "spans" => Some(TraceLevel::Spans),
+            "events" => Some(TraceLevel::Events),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Summary => "summary",
+            TraceLevel::Spans => "spans",
+            TraceLevel::Events => "events",
+        }
+    }
+}
+
+/// Outcome tier of one merge attempt (mirrors the engine's
+/// additive → damped → rejected ladder plus the staleness gate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeTier {
+    /// Exact additive candidate accepted.
+    Additive,
+    /// θ-damped fallback accepted.
+    Damped,
+    /// Both candidates would increase the objective; delta returned.
+    Rejected,
+    /// Base version older than the staleness bound; work discarded.
+    Stale,
+}
+
+impl MergeTier {
+    pub(crate) fn code(self) -> u64 {
+        match self {
+            MergeTier::Additive => 0,
+            MergeTier::Damped => 1,
+            MergeTier::Rejected => 2,
+            MergeTier::Stale => 3,
+        }
+    }
+
+    pub(crate) fn from_code(code: u64) -> Option<MergeTier> {
+        match code {
+            0 => Some(MergeTier::Additive),
+            1 => Some(MergeTier::Damped),
+            2 => Some(MergeTier::Rejected),
+            3 => Some(MergeTier::Stale),
+            _ => None,
+        }
+    }
+
+    /// JSONL spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeTier::Additive => "additive",
+            MergeTier::Damped => "damped",
+            MergeTier::Rejected => "rejected",
+            MergeTier::Stale => "stale",
+        }
+    }
+
+    /// Parse the JSONL spelling.
+    pub fn parse(text: &str) -> Option<MergeTier> {
+        match text {
+            "additive" => Some(MergeTier::Additive),
+            "damped" => Some(MergeTier::Damped),
+            "rejected" => Some(MergeTier::Rejected),
+            "stale" => Some(MergeTier::Stale),
+            _ => None,
+        }
+    }
+}
+
+/// Ring-index / JSONL marker for "not a specific shard" (the sync
+/// whole-model merge, or a serial run). Serialized as `-1`.
+pub const NO_SHARD: u32 = u32::MAX;
+
+/// One typed trace record. `t` is nanoseconds since the collector was
+/// created; `shard` is [`NO_SHARD`] where no single shard applies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// An async worker cloned the published buffer at `version`.
+    SnapshotTake { t: u64, shard: u32, version: u64 },
+    /// One local epoch: `steps` coordinate steps costing `ops`
+    /// arithmetic operations over `nanos` of compute.
+    Epoch { t: u64, shard: u32, steps: u64, ops: u64, nanos: u64 },
+    /// An async worker queued a delta; `queue_depth` is the submission
+    /// queue length right after the push.
+    Submit { t: u64, shard: u32, base_version: u64, queue_depth: u64 },
+    /// One merge attempt resolved at `tier`; `staleness` is published
+    /// minus base version, `batch` the submissions folded together.
+    Merge { t: u64, shard: u32, tier: MergeTier, staleness: u64, batch: u64 },
+    /// A new shared buffer became visible with an exact objective.
+    Publish { t: u64, version: u64, objective: f64 },
+    /// The adaptive controller moved the staleness bound.
+    Tau { t: u64, tau: u64, prev: u64 },
+    /// A shard was sent to the parked state (no useful work left).
+    Park { t: u64, shard: u32 },
+    /// The merger sat idle for `nanos` waiting for submissions.
+    MergeWait { t: u64, nanos: u64 },
+    /// Periodic probe of a selector distribution (natural-log entropy).
+    SelectorState { t: u64, shard: u32, entropy: f64, p_min: f64, p_max: f64 },
+}
+
+const TAG_SNAPSHOT_TAKE: u64 = 1;
+const TAG_EPOCH: u64 = 2;
+const TAG_SUBMIT: u64 = 3;
+const TAG_MERGE: u64 = 4;
+const TAG_PUBLISH: u64 = 5;
+const TAG_TAU: u64 = 6;
+const TAG_PARK: u64 = 7;
+const TAG_MERGE_WAIT: u64 = 8;
+const TAG_SELECTOR: u64 = 9;
+
+impl Event {
+    /// Nanoseconds since the collector started.
+    pub fn t(&self) -> u64 {
+        match *self {
+            Event::SnapshotTake { t, .. }
+            | Event::Epoch { t, .. }
+            | Event::Submit { t, .. }
+            | Event::Merge { t, .. }
+            | Event::Publish { t, .. }
+            | Event::Tau { t, .. }
+            | Event::Park { t, .. }
+            | Event::MergeWait { t, .. }
+            | Event::SelectorState { t, .. } => t,
+        }
+    }
+
+    /// JSONL `kind` spelling.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::SnapshotTake { .. } => "snapshot_take",
+            Event::Epoch { .. } => "epoch",
+            Event::Submit { .. } => "submit",
+            Event::Merge { .. } => "merge",
+            Event::Publish { .. } => "publish",
+            Event::Tau { .. } => "tau",
+            Event::Park { .. } => "park",
+            Event::MergeWait { .. } => "merge_wait",
+            Event::SelectorState { .. } => "selector",
+        }
+    }
+
+    /// Lowest [`TraceLevel`] at which this record is captured.
+    pub fn min_level(&self) -> TraceLevel {
+        match self {
+            Event::SnapshotTake { .. } | Event::Submit { .. } | Event::SelectorState { .. } => TraceLevel::Events,
+            _ => TraceLevel::Spans,
+        }
+    }
+
+    /// Pack into the fixed ring-record width: word 0 holds the kind tag
+    /// (low half) and shard id (high half), word 1 the timestamp, words
+    /// 2–4 the payload (f64 fields via `to_bits`), word 5 is reserved.
+    pub(crate) fn encode(&self) -> [u64; EVENT_WORDS] {
+        let (tag, shard, a, b, c) = match *self {
+            Event::SnapshotTake { shard, version, .. } => (TAG_SNAPSHOT_TAKE, shard, version, 0, 0),
+            Event::Epoch { shard, steps, ops, nanos, .. } => (TAG_EPOCH, shard, steps, ops, nanos),
+            Event::Submit { shard, base_version, queue_depth, .. } => (TAG_SUBMIT, shard, base_version, queue_depth, 0),
+            Event::Merge { shard, tier, staleness, batch, .. } => (TAG_MERGE, shard, tier.code(), staleness, batch),
+            Event::Publish { version, objective, .. } => (TAG_PUBLISH, NO_SHARD, version, objective.to_bits(), 0),
+            Event::Tau { tau, prev, .. } => (TAG_TAU, NO_SHARD, tau, prev, 0),
+            Event::Park { shard, .. } => (TAG_PARK, shard, 0, 0, 0),
+            Event::MergeWait { nanos, .. } => (TAG_MERGE_WAIT, NO_SHARD, nanos, 0, 0),
+            Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
+                (TAG_SELECTOR, shard, entropy.to_bits(), p_min.to_bits(), p_max.to_bits())
+            }
+        };
+        [tag | (u64::from(shard) << 32), self.t(), a, b, c, 0]
+    }
+
+    /// Decode a ring record; `None` for an unwritten or unknown slot.
+    pub(crate) fn decode(raw: [u64; EVENT_WORDS]) -> Option<Event> {
+        let tag = raw[0] & 0xffff_ffff;
+        let shard = (raw[0] >> 32) as u32;
+        let t = raw[1];
+        let (a, b, c) = (raw[2], raw[3], raw[4]);
+        match tag {
+            TAG_SNAPSHOT_TAKE => Some(Event::SnapshotTake { t, shard, version: a }),
+            TAG_EPOCH => Some(Event::Epoch { t, shard, steps: a, ops: b, nanos: c }),
+            TAG_SUBMIT => Some(Event::Submit { t, shard, base_version: a, queue_depth: b }),
+            TAG_MERGE => Some(Event::Merge {
+                t,
+                shard,
+                tier: MergeTier::from_code(a)?,
+                staleness: b,
+                batch: c,
+            }),
+            TAG_PUBLISH => Some(Event::Publish { t, version: a, objective: f64::from_bits(b) }),
+            TAG_TAU => Some(Event::Tau { t, tau: a, prev: b }),
+            TAG_PARK => Some(Event::Park { t, shard }),
+            TAG_MERGE_WAIT => Some(Event::MergeWait { t, nanos: a }),
+            TAG_SELECTOR => Some(Event::SelectorState {
+                t,
+                shard,
+                entropy: f64::from_bits(a),
+                p_min: f64::from_bits(b),
+                p_max: f64::from_bits(c),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// The per-run collector: one [`EventRing`] per producer thread plus
+/// the shared clock and level. Engine threads receive it behind an
+/// `Arc` via `ShardSpec::obs`; serial runs hold a single ring.
+#[derive(Debug)]
+pub struct Obs {
+    level: TraceLevel,
+    rings: Vec<EventRing>,
+    start: Instant,
+}
+
+impl Obs {
+    /// A collector with `rings` producer slots of `cap` records each.
+    /// The sharded engine expects `shards + 1` rings (ring *k* for
+    /// shard *k*, the last ring for the merge driver).
+    pub fn new(level: TraceLevel, rings: usize, cap: usize) -> Obs {
+        assert!(rings > 0, "need at least one ring");
+        Obs {
+            level,
+            rings: (0..rings).map(|_| EventRing::new(cap)).collect(),
+            start: Instant::now(),
+        }
+    }
+
+    /// Recording level for this run.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Number of producer rings.
+    pub fn n_rings(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Nanoseconds since the collector was created.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// Record an event on ring `ring`. Callers gate on the level first
+    /// (see [`Emitter`]); this does not re-check it.
+    #[inline]
+    pub fn emit(&self, ring: usize, event: Event) {
+        self.rings[ring].push(event.encode());
+    }
+
+    /// A cheap per-thread handle bound to one ring.
+    pub fn emitter(&self, ring: usize) -> Emitter<'_> {
+        assert!(ring < self.rings.len(), "ring {ring} out of range");
+        Emitter { obs: Some(self), ring }
+    }
+
+    /// Fold every ring into one time-sorted event stream with exact
+    /// drop accounting. Call at a quiescent point only.
+    pub fn drain(&self) -> TraceData {
+        let mut events: Vec<Event> = Vec::new();
+        let mut dropped = 0u64;
+        let mut total = 0u64;
+        for ring in &self.rings {
+            dropped += ring.dropped();
+            total += ring.total();
+            events.extend(ring.drain().into_iter().filter_map(Event::decode));
+        }
+        events.sort_by_key(Event::t);
+        TraceData { events, dropped, total }
+    }
+}
+
+/// Drained, decoded, time-sorted contents of a collector.
+#[derive(Clone, Debug)]
+pub struct TraceData {
+    /// Retained events, oldest first.
+    pub events: Vec<Event>,
+    /// Exact count of records lost to drop-oldest overwrites.
+    pub dropped: u64,
+    /// Total records ever emitted (retained + dropped).
+    pub total: u64,
+}
+
+/// A copyable emission handle: an optional collector reference bound to
+/// one ring index. `Emitter::off()` is the zero-cost disabled handle —
+/// every check is one branch on an immutable field.
+#[derive(Clone, Copy, Debug)]
+pub struct Emitter<'a> {
+    obs: Option<&'a Obs>,
+    ring: usize,
+}
+
+impl Emitter<'_> {
+    /// The disabled handle (`--trace-level off` and untraced callers).
+    pub fn off() -> Emitter<'static> {
+        Emitter { obs: None, ring: 0 }
+    }
+
+    /// True when records at `level` are being captured.
+    #[inline]
+    pub fn enabled(&self, level: TraceLevel) -> bool {
+        match self.obs {
+            Some(o) => o.level >= level,
+            None => false,
+        }
+    }
+
+    /// True at `spans` and above.
+    #[inline]
+    pub fn spans(&self) -> bool {
+        self.enabled(TraceLevel::Spans)
+    }
+
+    /// True at `events` level.
+    #[inline]
+    pub fn events(&self) -> bool {
+        self.enabled(TraceLevel::Events)
+    }
+
+    /// Collector clock, or 0 when disabled.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        match self.obs {
+            Some(o) => o.now(),
+            None => 0,
+        }
+    }
+
+    /// Record an event (no-op when disabled). Gate field computation on
+    /// [`Emitter::spans`]/[`Emitter::events`] to keep the disabled path
+    /// at one branch.
+    #[inline]
+    pub fn emit(&self, event: Event) {
+        if let Some(o) = self.obs {
+            o.emit(self.ring, event);
+        }
+    }
+}
+
+/// Build an `Emitter` for ring `ring` from an optional collector.
+pub fn emitter(obs: Option<&Obs>, ring: usize) -> Emitter<'_> {
+    match obs {
+        Some(o) => o.emitter(ring),
+        None => Emitter::off(),
+    }
+}
+
+/// Decorator around any [`Selector`] that emits periodic
+/// [`Event::SelectorState`] probes while forwarding every call
+/// unchanged — how *serial* solver runs join the tracing plane without
+/// touching a solver signature (the sharded engine probes its inner
+/// selectors directly at epoch boundaries). Selection behavior is
+/// bit-identical to the wrapped policy: the probe only reads state.
+pub struct ObservedSelector {
+    inner: Box<dyn Selector>,
+    obs: Arc<Obs>,
+    ring: usize,
+    shard: u32,
+    /// probe cadence in `next()` calls (≈ one coordinate sweep)
+    every: u64,
+    calls: u64,
+    probs: Vec<f64>,
+}
+
+impl ObservedSelector {
+    /// Wrap `inner`, probing onto `ring` roughly once per coordinate
+    /// sweep (at least every 1024 selections, so tiny problems do not
+    /// flood the ring); `shard` tags the probes ([`NO_SHARD`] for
+    /// serial runs).
+    pub fn new(
+        inner: Box<dyn Selector>,
+        obs: Arc<Obs>,
+        ring: usize,
+        shard: u32,
+    ) -> ObservedSelector {
+        let every = (inner.n() as u64).max(1024);
+        ObservedSelector { inner, obs, ring, shard, every, calls: 0, probs: Vec::new() }
+    }
+}
+
+impl Selector for ObservedSelector {
+    fn next(&mut self) -> usize {
+        self.calls += 1;
+        if self.calls % self.every == 0 && self.obs.level() >= TraceLevel::Events {
+            self.inner.probabilities_into(&mut self.probs);
+            let (entropy, p_min, p_max) = entropy_stats(&self.probs);
+            self.obs.emit(
+                self.ring,
+                Event::SelectorState {
+                    t: self.obs.now(),
+                    shard: self.shard,
+                    entropy,
+                    p_min,
+                    p_max,
+                },
+            );
+        }
+        self.inner.next()
+    }
+
+    fn report(&mut self, i: usize, delta_f: f64) {
+        self.inner.report(i, delta_f);
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn probabilities_into(&self, out: &mut Vec<f64>) {
+        self.inner.probabilities_into(out);
+    }
+
+    fn snapshot(&self) -> SelectorSnapshot {
+        self.inner.snapshot()
+    }
+}
+
+/// Natural-log entropy plus min/max of a probability vector — the
+/// selector-distribution probe recorded by [`Event::SelectorState`].
+pub fn entropy_stats(p: &[f64]) -> (f64, f64, f64) {
+    if p.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut h = 0.0;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in p {
+        if x > 0.0 {
+            h -= x * x.ln();
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (h, lo, hi)
+}
+
+/// Buckets in the log-scale duration histograms: bucket *i* counts
+/// durations in `[2^(i−1), 2^i)` nanoseconds (bucket 0 is `< 1 ns`,
+/// the last bucket absorbs everything ≥ `2^(HIST_BUCKETS−2)`).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Staleness histogram width: exact counts for staleness 0–15, one
+/// overflow bucket for ≥ 16.
+pub const STALENESS_BUCKETS: usize = 17;
+
+fn log2_bucket(nanos: u64) -> usize {
+    ((64 - nanos.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Per-shard activity inside one aggregation window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardWindow {
+    /// Local epochs completed.
+    pub epochs: u64,
+    /// Coordinate steps taken.
+    pub steps: u64,
+    /// Arithmetic operations spent.
+    pub ops: u64,
+    /// Nanoseconds of epoch compute.
+    pub compute_nanos: u64,
+}
+
+impl ShardWindow {
+    /// Throughput over the shard's own compute time.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.compute_nanos == 0 {
+            0.0
+        } else {
+            self.ops as f64 / (self.compute_nanos as f64 * 1e-9)
+        }
+    }
+}
+
+/// One selector-distribution probe.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorPoint {
+    /// Collector time, seconds.
+    pub t: f64,
+    /// Shard, or [`NO_SHARD`] for a serial run.
+    pub shard: u32,
+    /// Natural-log entropy of the distribution.
+    pub entropy: f64,
+    /// Smallest probability.
+    pub p_min: f64,
+    /// Largest probability.
+    pub p_max: f64,
+}
+
+/// Merge-attempt counts (in submissions) inside one window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MergeWindow {
+    /// Submissions accepted via the exact additive candidate.
+    pub additive: u64,
+    /// Submissions accepted via the damped fallback.
+    pub damped: u64,
+    /// Submissions rejected after both exact checks.
+    pub rejected: u64,
+    /// Submissions dropped by the staleness gate.
+    pub stale: u64,
+}
+
+impl MergeWindow {
+    /// Accepted share of all attempted submissions (1.0 when none).
+    pub fn acceptance_rate(&self) -> f64 {
+        let total = self.additive + self.damped + self.rejected + self.stale;
+        if total == 0 {
+            1.0
+        } else {
+            (self.additive + self.damped) as f64 / total as f64
+        }
+    }
+}
+
+/// Aggregated view of one time window of the event stream — the unit
+/// the JSONL sink writes as `"kind": "metrics_snapshot"` lines.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Window start, seconds since collector start.
+    pub t0: f64,
+    /// Window end, seconds.
+    pub t1: f64,
+    /// Per-shard activity, indexed by shard id.
+    pub per_shard: Vec<ShardWindow>,
+    /// Log-scale histogram of epoch compute times (see [`HIST_BUCKETS`]).
+    pub epoch_nanos_hist: [u64; HIST_BUCKETS],
+    /// Merge outcomes in submissions.
+    pub merge: MergeWindow,
+    /// Histogram of merge-attempt staleness (see [`STALENESS_BUCKETS`]).
+    pub staleness_hist: [u64; STALENESS_BUCKETS],
+    /// τ trajectory: (seconds, new τ) at each adaptive move.
+    pub tau: Vec<(f64, u64)>,
+    /// Selector-distribution probes.
+    pub selector: Vec<SelectorPoint>,
+    /// Nanoseconds the merger spent idle.
+    pub merge_wait_nanos: u64,
+    /// Park transitions.
+    pub parks: u64,
+    /// Objective at the last publish in the window, if any.
+    pub last_objective: Option<f64>,
+}
+
+impl MetricsSnapshot {
+    /// Fold the events with `t0 ≤ t < t1` (seconds) into one snapshot.
+    /// `n_shards` fixes the length of [`MetricsSnapshot::per_shard`].
+    pub fn from_events(events: &[Event], n_shards: usize, t0: f64, t1: f64) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot {
+            t0,
+            t1,
+            per_shard: vec![ShardWindow::default(); n_shards],
+            epoch_nanos_hist: [0; HIST_BUCKETS],
+            merge: MergeWindow::default(),
+            staleness_hist: [0; STALENESS_BUCKETS],
+            tau: Vec::new(),
+            selector: Vec::new(),
+            merge_wait_nanos: 0,
+            parks: 0,
+            last_objective: None,
+        };
+        for ev in events {
+            let secs = ev.t() as f64 * 1e-9;
+            if secs < t0 || secs >= t1 {
+                continue;
+            }
+            match *ev {
+                Event::Epoch { shard, steps, ops, nanos, .. } => {
+                    if let Some(w) = snap.per_shard.get_mut(shard as usize) {
+                        w.epochs += 1;
+                        w.steps += steps;
+                        w.ops += ops;
+                        w.compute_nanos += nanos;
+                    }
+                    snap.epoch_nanos_hist[log2_bucket(nanos)] += 1;
+                }
+                Event::Merge { tier, staleness, batch, .. } => {
+                    let subs = batch.max(1);
+                    match tier {
+                        MergeTier::Additive => snap.merge.additive += subs,
+                        MergeTier::Damped => snap.merge.damped += subs,
+                        MergeTier::Rejected => snap.merge.rejected += subs,
+                        MergeTier::Stale => snap.merge.stale += subs,
+                    }
+                    snap.staleness_hist[(staleness as usize).min(STALENESS_BUCKETS - 1)] += 1;
+                }
+                Event::Publish { objective, .. } => snap.last_objective = Some(objective),
+                Event::Tau { tau, .. } => snap.tau.push((secs, tau)),
+                Event::Park { .. } => snap.parks += 1,
+                Event::MergeWait { nanos, .. } => snap.merge_wait_nanos += nanos,
+                Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
+                    snap.selector.push(SelectorPoint { t: secs, shard, entropy, p_min, p_max });
+                }
+                Event::SnapshotTake { .. } | Event::Submit { .. } => {}
+            }
+        }
+        snap
+    }
+
+    /// Serialize for the JSONL sink.
+    pub fn to_json(&self) -> Json {
+        let mut shards = Vec::new();
+        for (k, w) in self.per_shard.iter().enumerate() {
+            let mut o = Json::obj();
+            o.set("shard", json::num(k as f64))
+                .set("epochs", json::num(w.epochs as f64))
+                .set("steps", json::num(w.steps as f64))
+                .set("ops", json::num(w.ops as f64))
+                .set("compute_s", json::num(w.compute_nanos as f64 * 1e-9))
+                .set("ops_per_sec", json::num(w.ops_per_sec()));
+            shards.push(o);
+        }
+        let mut merge = Json::obj();
+        merge
+            .set("additive", json::num(self.merge.additive as f64))
+            .set("damped", json::num(self.merge.damped as f64))
+            .set("rejected", json::num(self.merge.rejected as f64))
+            .set("stale", json::num(self.merge.stale as f64))
+            .set("acceptance_rate", json::num(self.merge.acceptance_rate()));
+        let mut j = Json::obj();
+        j.set("kind", json::s("metrics_snapshot"))
+            .set("t0", json::num(self.t0))
+            .set("t1", json::num(self.t1))
+            .set("per_shard", Json::Arr(shards))
+            .set(
+                "epoch_nanos_log2_hist",
+                Json::Arr(self.epoch_nanos_hist.iter().map(|&c| json::num(c as f64)).collect()),
+            )
+            .set("merge", merge)
+            .set(
+                "staleness_hist",
+                Json::Arr(self.staleness_hist.iter().map(|&c| json::num(c as f64)).collect()),
+            )
+            .set(
+                "tau",
+                Json::Arr(
+                    self.tau
+                        .iter()
+                        .map(|&(t, tau)| Json::Arr(vec![json::num(t), json::num(tau as f64)]))
+                        .collect(),
+                ),
+            )
+            .set(
+                "selector",
+                Json::Arr(
+                    self.selector
+                        .iter()
+                        .map(|p| {
+                            Json::Arr(vec![
+                                json::num(p.t),
+                                json::num(if p.shard == NO_SHARD { -1.0 } else { p.shard as f64 }),
+                                json::num(p.entropy),
+                                json::num(p.p_min),
+                                json::num(p.p_max),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+            .set("merge_wait_s", json::num(self.merge_wait_nanos as f64 * 1e-9))
+            .set("parks", json::num(self.parks as f64));
+        if let Some(f) = self.last_objective {
+            j.set("last_objective", json::num(f));
+        }
+        j
+    }
+}
+
+/// Split a time-sorted event stream into fixed-width windows and fold
+/// each into a [`MetricsSnapshot`]. `window_secs ≤ 0` yields a single
+/// whole-run snapshot.
+pub fn window_snapshots(
+    events: &[Event],
+    n_shards: usize,
+    window_secs: f64,
+) -> Vec<MetricsSnapshot> {
+    if events.is_empty() {
+        return Vec::new();
+    }
+    let t_last = events.last().map(|e| e.t() as f64 * 1e-9).unwrap_or(0.0);
+    if window_secs <= 0.0 {
+        return vec![MetricsSnapshot::from_events(events, n_shards, 0.0, t_last + 1e-9)];
+    }
+    let mut out = Vec::new();
+    let mut t0 = 0.0;
+    while t0 <= t_last {
+        let t1 = t0 + window_secs;
+        out.push(MetricsSnapshot::from_events(events, n_shards, t0, t1));
+        t0 = t1;
+    }
+    out
+}
+
+/// Where the wall-clock went: the stage-time split recorded into
+/// `BENCH_scaling_shards.json` and printed by the `trace` subcommand.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageBreakdown {
+    /// Total epoch compute across shards, nanoseconds.
+    pub compute_nanos: u64,
+    /// Merger idle time, nanoseconds.
+    pub merge_wait_nanos: u64,
+    /// Park transitions observed.
+    pub parks: u64,
+    /// Epochs observed.
+    pub epochs: u64,
+    /// Merge attempts observed.
+    pub merges: u64,
+    /// Span of the event stream (first to last timestamp), nanoseconds.
+    pub span_nanos: u64,
+    /// Distinct shards that ran epochs.
+    pub n_shards: usize,
+}
+
+impl StageBreakdown {
+    /// Fold an event stream (any order) into the stage split.
+    pub fn from_events(events: &[Event]) -> StageBreakdown {
+        let mut b = StageBreakdown::default();
+        let mut t_min = u64::MAX;
+        let mut t_max = 0u64;
+        let mut shards: Vec<u32> = Vec::new();
+        for ev in events {
+            t_min = t_min.min(ev.t());
+            t_max = t_max.max(ev.t());
+            match *ev {
+                Event::Epoch { shard, nanos, .. } => {
+                    b.compute_nanos += nanos;
+                    b.epochs += 1;
+                    if !shards.contains(&shard) {
+                        shards.push(shard);
+                    }
+                }
+                Event::MergeWait { nanos, .. } => b.merge_wait_nanos += nanos,
+                Event::Park { .. } => b.parks += 1,
+                Event::Merge { .. } => b.merges += 1,
+                _ => {}
+            }
+        }
+        if t_max >= t_min {
+            b.span_nanos = t_max - t_min;
+        }
+        b.n_shards = shards.len();
+        b
+    }
+
+    /// Upper-bound estimate of time shard slots spent *not* computing
+    /// (parked or waiting on directives): `n_shards · span − compute`.
+    pub fn idle_nanos_estimate(&self) -> u64 {
+        (self.n_shards as u64 * self.span_nanos).saturating_sub(self.compute_nanos)
+    }
+
+    /// Serialize for bench summaries and the JSONL sink.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("compute_s", json::num(self.compute_nanos as f64 * 1e-9))
+            .set("merge_wait_s", json::num(self.merge_wait_nanos as f64 * 1e-9))
+            .set("idle_s_estimate", json::num(self.idle_nanos_estimate() as f64 * 1e-9))
+            .set("parks", json::num(self.parks as f64))
+            .set("epochs", json::num(self.epochs as f64))
+            .set("merges", json::num(self.merges as f64))
+            .set("span_s", json::num(self.span_nanos as f64 * 1e-9))
+            .set("n_shards", json::num(self.n_shards as f64));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observed_selector_forwards_and_probes_periodically() {
+        use crate::acf::AcfParams;
+        use crate::select::SelectorKind;
+        use crate::util::rng::Rng;
+        let obs = Arc::new(Obs::new(TraceLevel::Events, 1, 256));
+        let inner = SelectorKind::Uniform.build(4, AcfParams::default(), Rng::new(7));
+        let mut plain = SelectorKind::Uniform.build(4, AcfParams::default(), Rng::new(7));
+        let mut sel = ObservedSelector::new(inner, Arc::clone(&obs), 0, NO_SHARD);
+        assert_eq!(sel.n(), 4);
+        assert_eq!(sel.name(), "uniform");
+        // forwarding is bit-identical to the unwrapped policy
+        for _ in 0..2048 {
+            assert_eq!(sel.next(), plain.next());
+        }
+        let data = obs.drain();
+        assert_eq!(data.events.len(), 2, "one probe per 1024 selections");
+        for ev in &data.events {
+            match *ev {
+                Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
+                    assert_eq!(shard, NO_SHARD);
+                    assert!((entropy - 4.0f64.ln()).abs() < 1e-12);
+                    assert!((p_min - 0.25).abs() < 1e-12 && (p_max - 0.25).abs() < 1e-12);
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        // below events level the wrapper records nothing
+        let quiet = Arc::new(Obs::new(TraceLevel::Spans, 1, 256));
+        let inner = SelectorKind::Uniform.build(4, AcfParams::default(), Rng::new(7));
+        let mut sel = ObservedSelector::new(inner, Arc::clone(&quiet), 0, NO_SHARD);
+        for _ in 0..2048 {
+            sel.next();
+        }
+        assert_eq!(quiet.drain().total, 0);
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::SnapshotTake { t: 10, shard: 0, version: 3 },
+            Event::Epoch { t: 1_000, shard: 0, steps: 50, ops: 700, nanos: 900 },
+            Event::Submit { t: 1_100, shard: 0, base_version: 3, queue_depth: 2 },
+            Event::Merge { t: 1_200, shard: 0, tier: MergeTier::Additive, staleness: 1, batch: 2 },
+            Event::Merge { t: 1_250, shard: 1, tier: MergeTier::Stale, staleness: 20, batch: 1 },
+            Event::Publish { t: 1_300, version: 4, objective: -1.5 },
+            Event::Tau { t: 1_400, tau: 3, prev: 2 },
+            Event::Park { t: 1_500, shard: 1 },
+            Event::MergeWait { t: 1_600, nanos: 400 },
+            Event::SelectorState { t: 1_700, shard: 0, entropy: 0.69, p_min: 0.4, p_max: 0.6 },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_round_trips_every_kind() {
+        for ev in sample_events() {
+            assert_eq!(Event::decode(ev.encode()), Some(ev), "{}", ev.kind());
+        }
+        // Unwritten slots decode to None, not garbage events.
+        assert_eq!(Event::decode([0; EVENT_WORDS]), None);
+    }
+
+    #[test]
+    fn levels_are_ordered_and_parse() {
+        assert!(TraceLevel::Off < TraceLevel::Summary);
+        assert!(TraceLevel::Summary < TraceLevel::Spans);
+        assert!(TraceLevel::Spans < TraceLevel::Events);
+        for name in TraceLevel::NAMES {
+            assert_eq!(TraceLevel::parse(name).unwrap().name(), name);
+        }
+        assert!(TraceLevel::parse("verbose").is_none());
+    }
+
+    #[test]
+    fn emitter_gates_by_level() {
+        let obs = Obs::new(TraceLevel::Spans, 2, 16);
+        let em = obs.emitter(1);
+        assert!(em.spans());
+        assert!(!em.events());
+        em.emit(Event::Park { t: em.now(), shard: 0 });
+        let data = obs.drain();
+        assert_eq!(data.events.len(), 1);
+        assert_eq!(data.dropped, 0);
+        assert_eq!(data.total, 1);
+        // The disabled handle records nothing and reads no clock.
+        let off = Emitter::off();
+        assert!(!off.spans() && !off.events());
+        assert_eq!(off.now(), 0);
+        off.emit(Event::Park { t: 0, shard: 0 });
+    }
+
+    #[test]
+    fn drain_merges_rings_sorted_by_time() {
+        let obs = Obs::new(TraceLevel::Events, 3, 8);
+        obs.emit(2, Event::Park { t: 30, shard: 2 });
+        obs.emit(0, Event::Park { t: 10, shard: 0 });
+        obs.emit(1, Event::Park { t: 20, shard: 1 });
+        let data = obs.drain();
+        let ts: Vec<u64> = data.events.iter().map(Event::t).collect();
+        assert_eq!(ts, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn snapshot_folds_counts_and_histograms() {
+        let snap = MetricsSnapshot::from_events(&sample_events(), 2, 0.0, 1.0);
+        assert_eq!(snap.per_shard[0].epochs, 1);
+        assert_eq!(snap.per_shard[0].steps, 50);
+        assert_eq!(snap.per_shard[0].ops, 700);
+        assert_eq!(snap.per_shard[1].epochs, 0);
+        assert_eq!(snap.merge.additive, 2);
+        assert_eq!(snap.merge.stale, 1);
+        assert!((snap.merge.acceptance_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(snap.staleness_hist[1], 1);
+        assert_eq!(snap.staleness_hist[STALENESS_BUCKETS - 1], 1);
+        assert_eq!(snap.tau.len(), 1);
+        assert!((snap.tau[0].0 - 1.4e-6).abs() < 1e-12);
+        assert_eq!(snap.tau[0].1, 3);
+        assert_eq!(snap.parks, 1);
+        assert_eq!(snap.merge_wait_nanos, 400);
+        assert_eq!(snap.last_objective, Some(-1.5));
+        // 900 ns lands in the [512, 1024) bucket.
+        assert_eq!(snap.epoch_nanos_hist[log2_bucket(900)], 1);
+        assert_eq!(log2_bucket(900), 10);
+        let j = snap.to_json();
+        assert_eq!(j.get("kind").and_then(|k| k.as_str()), Some("metrics_snapshot"));
+    }
+
+    #[test]
+    fn stage_breakdown_sums_stages() {
+        let b = StageBreakdown::from_events(&sample_events());
+        assert_eq!(b.compute_nanos, 900);
+        assert_eq!(b.merge_wait_nanos, 400);
+        assert_eq!(b.parks, 1);
+        assert_eq!(b.epochs, 1);
+        assert_eq!(b.merges, 2);
+        assert_eq!(b.n_shards, 1);
+        assert_eq!(b.span_nanos, 1_700 - 10);
+        assert!(b.idle_nanos_estimate() > 0);
+    }
+
+    #[test]
+    fn entropy_probe_matches_closed_form() {
+        let (h, lo, hi) = entropy_stats(&[0.5, 0.5]);
+        assert!((h - std::f64::consts::LN_2).abs() < 1e-12);
+        assert_eq!((lo, hi), (0.5, 0.5));
+        let (h, lo, hi) = entropy_stats(&[1.0, 0.0]);
+        assert_eq!((h, lo, hi), (0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn window_snapshots_cover_the_stream() {
+        let evs = vec![
+            Event::Park { t: 0, shard: 0 },
+            Event::Park { t: 1_500_000_000, shard: 0 },
+            Event::Park { t: 2_500_000_000, shard: 0 },
+        ];
+        let wins = window_snapshots(&evs, 1, 1.0);
+        assert_eq!(wins.len(), 3);
+        assert_eq!(wins.iter().map(|w| w.parks).sum::<u64>(), 3);
+        let whole = window_snapshots(&evs, 1, 0.0);
+        assert_eq!(whole.len(), 1);
+        assert_eq!(whole[0].parks, 3);
+    }
+}

@@ -1,0 +1,313 @@
+//! Human-readable rendering of a JSONL trace file — the engine behind
+//! the `acf-cd trace <file>` subcommand.
+//!
+//! The report answers the two questions the raw event stream encodes:
+//! *where did the wall-clock go* (stage-time breakdown: per-shard
+//! compute, merger idle, parks, plus the epoch-time histogram) and
+//! *how did adaptation behave over time* (τ moves, published objective
+//! trajectory, merge-tier outcomes and staleness distribution,
+//! selector-entropy probes).
+
+use super::sink::event_from_json;
+use super::{Event, MetricsSnapshot, StageBreakdown, TraceData, NO_SHARD, STALENESS_BUCKETS};
+use crate::util::json::{self, Json};
+use crate::util::timer::{fmt_count, fmt_secs};
+use crate::{Error, Result};
+
+/// Parse a whole JSONL trace file and render the stage-time breakdown
+/// and adaptation timeline as display-ready text. Malformed lines are
+/// an error naming the line number.
+pub fn summarize(text: &str) -> Result<String> {
+    let mut events: Vec<Event> = Vec::new();
+    let mut meta: Option<Json> = None;
+    let mut summary: Option<Json> = None;
+    let mut snapshot_lines = 0usize;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = json::parse(line)
+            .map_err(|e| Error::msg(format!("trace line {}: {e}", idx + 1)))?;
+        match j.get("kind").and_then(Json::as_str) {
+            Some("meta") => meta = Some(j),
+            Some("summary") => summary = Some(j),
+            Some("metrics_snapshot") => snapshot_lines += 1,
+            _ => match event_from_json(&j) {
+                Ok(Some(ev)) => events.push(ev),
+                Ok(None) => {}
+                Err(e) => return Err(e.context(format!("trace line {}", idx + 1))),
+            },
+        }
+    }
+    events.sort_by_key(Event::t);
+
+    let mut out = String::new();
+    if let Some(m) = &meta {
+        out.push_str(&format!("meta     {}\n", scalar_fields(m)));
+    }
+    out.push_str(&format!(
+        "stream   {} events retained, {} metrics snapshot(s)\n",
+        events.len(),
+        snapshot_lines
+    ));
+    if events.is_empty() {
+        out.push_str("         (no event lines — summary-level trace)\n");
+    } else {
+        render_stage_time(&mut out, &events);
+        render_adaptation(&mut out, &events);
+    }
+    if let Some(s) = &summary {
+        out.push_str(&format!("\nsummary  {}\n", scalar_fields(s)));
+    }
+    Ok(out)
+}
+
+/// `key=value` rendering of an object's scalar fields (skips `kind`).
+fn scalar_fields(j: &Json) -> String {
+    let mut parts = Vec::new();
+    if let Json::Obj(map) = j {
+        for (k, v) in map {
+            if k == "kind" {
+                continue;
+            }
+            match v {
+                Json::Num(_) | Json::Str(_) | Json::Bool(_) => {
+                    parts.push(format!("{k}={}", v.to_string_compact().trim_matches('"')))
+                }
+                _ => {}
+            }
+        }
+    }
+    parts.join(" ")
+}
+
+fn render_stage_time(out: &mut String, events: &[Event]) {
+    let n_shards = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Epoch { shard, .. } if *shard != NO_SHARD => Some(*shard as usize + 1),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(0);
+    let b = StageBreakdown::from_events(events);
+    out.push_str("\n-- stage time --\n");
+    out.push_str(&format!("span        {}\n", fmt_secs(b.span_nanos as f64 * 1e-9)));
+    out.push_str(&format!(
+        "compute     {}  ({} epochs across {} shard(s))\n",
+        fmt_secs(b.compute_nanos as f64 * 1e-9),
+        b.epochs,
+        b.n_shards
+    ));
+    out.push_str(&format!(
+        "merge-wait  {}  (merger idle), {} merge attempt(s)\n",
+        fmt_secs(b.merge_wait_nanos as f64 * 1e-9),
+        b.merges
+    ));
+    out.push_str(&format!(
+        "idle (est.) {}  ({} park transition(s))\n",
+        fmt_secs(b.idle_nanos_estimate() as f64 * 1e-9),
+        b.parks
+    ));
+
+    let snap = MetricsSnapshot::from_events(events, n_shards, 0.0, f64::INFINITY);
+    if n_shards > 0 {
+        out.push_str("\n-- per shard --\n");
+        out.push_str("shard   epochs      steps        ops    compute      ops/s\n");
+        for (k, w) in snap.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                "{k:<5} {:>8} {:>10} {:>10} {:>10} {:>10}\n",
+                w.epochs,
+                fmt_count(w.steps as f64),
+                fmt_count(w.ops as f64),
+                fmt_secs(w.compute_nanos as f64 * 1e-9),
+                fmt_count(w.ops_per_sec())
+            ));
+        }
+    }
+    render_epoch_hist(out, &snap);
+}
+
+fn render_epoch_hist(out: &mut String, snap: &MetricsSnapshot) {
+    let max = snap.epoch_nanos_hist.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return;
+    }
+    out.push_str("\n-- epoch time histogram (log2 ns buckets) --\n");
+    for (i, &count) in snap.epoch_nanos_hist.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let lo = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+        let bar_len = (count as f64 / max as f64 * 40.0).ceil() as usize;
+        out.push_str(&format!(
+            "≥ {:>8}  {:<40} {}\n",
+            fmt_secs(lo as f64 * 1e-9),
+            "#".repeat(bar_len),
+            count
+        ));
+    }
+}
+
+fn render_adaptation(out: &mut String, events: &[Event]) {
+    let snap = MetricsSnapshot::from_events(events, 0, 0.0, f64::INFINITY);
+    out.push_str("\n-- merge outcomes (submissions) --\n");
+    let m = &snap.merge;
+    out.push_str(&format!(
+        "additive {}  damped {}  rejected {}  stale-dropped {}  (acceptance {:.1}%)\n",
+        m.additive,
+        m.damped,
+        m.rejected,
+        m.stale,
+        m.acceptance_rate() * 100.0
+    ));
+    let staleness: Vec<String> = snap
+        .staleness_hist
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > 0)
+        .map(|(s, &c)| {
+            if s == STALENESS_BUCKETS - 1 {
+                format!("{}+:{c}", STALENESS_BUCKETS - 1)
+            } else {
+                format!("{s}:{c}")
+            }
+        })
+        .collect();
+    if !staleness.is_empty() {
+        out.push_str(&format!("staleness   {}\n", staleness.join("  ")));
+    }
+
+    out.push_str("\n-- adaptation timeline --\n");
+    let taus: Vec<&Event> = events.iter().filter(|e| matches!(e, Event::Tau { .. })).collect();
+    if taus.is_empty() {
+        out.push_str("tau         (no adaptive moves recorded)\n");
+    } else {
+        let mut line = String::from("tau        ");
+        for ev in taus.iter().rev().take(8).rev() {
+            if let Event::Tau { t, tau, prev } = ev {
+                line.push_str(&format!("  {}: {prev}→{tau}", fmt_secs(*t as f64 * 1e-9)));
+            }
+        }
+        if taus.len() > 8 {
+            line.push_str(&format!("  (+{} earlier)", taus.len() - 8));
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    let publishes: Vec<(u64, u64, f64)> = events
+        .iter()
+        .filter_map(|e| match *e {
+            Event::Publish { t, version, objective } => Some((t, version, objective)),
+            _ => None,
+        })
+        .collect();
+    if let (Some(first), Some(last)) = (publishes.first(), publishes.last()) {
+        out.push_str(&format!(
+            "objective   v{} f={:.6e}  →  v{} f={:.6e}  over {} publish(es)\n",
+            first.1,
+            first.2,
+            last.1,
+            last.2,
+            publishes.len()
+        ));
+    }
+    render_selector_probes(out, events);
+}
+
+fn render_selector_probes(out: &mut String, events: &[Event]) {
+    let mut shards: Vec<u32> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::SelectorState { shard, .. } => Some(*shard),
+            _ => None,
+        })
+        .collect();
+    shards.sort_unstable();
+    shards.dedup();
+    for shard in shards {
+        let probes: Vec<(f64, f64, f64)> = events
+            .iter()
+            .filter_map(|e| match *e {
+                Event::SelectorState { shard: s, entropy, p_min, p_max, .. } if s == shard => {
+                    Some((entropy, p_min, p_max))
+                }
+                _ => None,
+            })
+            .collect();
+        let (first, last) = (probes[0], probes[probes.len() - 1]);
+        let label = if shard == NO_SHARD { "serial".to_string() } else { format!("shard {shard}") };
+        out.push_str(&format!(
+            "selector    {label}: entropy {:.3}→{:.3}, p∈[{:.4}, {:.4}] at last probe ({} probe(s))\n",
+            first.0,
+            last.0,
+            last.1,
+            last.2,
+            probes.len()
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::render_trace;
+    use crate::obs::{window_snapshots, MergeTier, TraceLevel};
+
+    fn sample_trace() -> String {
+        let events = vec![
+            Event::Epoch { t: 1_000, shard: 0, steps: 40, ops: 500, nanos: 800 },
+            Event::Epoch { t: 2_000, shard: 1, steps: 40, ops: 480, nanos: 700 },
+            Event::Submit { t: 2_100, shard: 1, base_version: 1, queue_depth: 1 },
+            Event::Merge { t: 2_200, shard: 1, tier: MergeTier::Additive, staleness: 1, batch: 2 },
+            Event::Publish { t: 2_300, version: 2, objective: -0.75 },
+            Event::Tau { t: 2_400, tau: 3, prev: 2 },
+            Event::Park { t: 2_500, shard: 0 },
+            Event::MergeWait { t: 2_600, nanos: 300 },
+            Event::SelectorState { t: 2_700, shard: 0, entropy: 1.2, p_min: 0.1, p_max: 0.5 },
+            Event::SelectorState { t: 2_800, shard: 0, entropy: 1.1, p_min: 0.1, p_max: 0.6 },
+        ];
+        let data = TraceData { total: events.len() as u64, dropped: 0, events };
+        let snaps = window_snapshots(&data.events, 2, 0.0);
+        let mut meta = Json::obj();
+        meta.set("problem", json::s("lasso")).set("shards", json::num(2.0));
+        let mut summary = Json::obj();
+        summary.set("objective", json::num(-0.75)).set("iterations", json::num(80.0));
+        render_trace(TraceLevel::Events, &meta, &data, &snaps, &summary)
+    }
+
+    #[test]
+    fn summarize_round_trips_a_rendered_trace() {
+        let report = summarize(&sample_trace()).unwrap();
+        assert!(report.contains("problem=lasso"), "{report}");
+        assert!(report.contains("-- stage time --"), "{report}");
+        assert!(report.contains("-- per shard --"), "{report}");
+        assert!(report.contains("-- merge outcomes"), "{report}");
+        assert!(report.contains("-- adaptation timeline --"), "{report}");
+        assert!(report.contains("2→3"), "{report}");
+        assert!(report.contains("shard 0: entropy 1.200→1.100"), "{report}");
+        assert!(report.contains("iterations=80"), "{report}");
+    }
+
+    #[test]
+    fn summary_only_trace_is_reported_without_events() {
+        let data = TraceData { total: 0, dropped: 0, events: Vec::new() };
+        let text = render_trace(TraceLevel::Summary, &Json::obj(), &data, &[], &Json::obj());
+        let report = summarize(&text).unwrap();
+        assert!(report.contains("summary-level trace"), "{report}");
+    }
+
+    #[test]
+    fn malformed_line_names_the_line_number() {
+        let text = "{\"kind\":\"meta\"}\nnot json\n";
+        let err = summarize(text).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_event_kind_is_an_error() {
+        let text = "{\"kind\":\"wobble\",\"t_ns\":1}\n";
+        assert!(summarize(text).is_err());
+    }
+}

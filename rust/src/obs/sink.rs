@@ -1,0 +1,288 @@
+//! JSONL serialization of the trace stream (and the parser the `trace`
+//! subcommand reads it back with).
+//!
+//! A trace file is line-delimited JSON built entirely on
+//! [`crate::util::json`]. Line layout:
+//!
+//! 1. one `"kind": "meta"` header (level, event totals, exact dropped
+//!    count, plus caller-supplied run metadata),
+//! 2. one line per retained event at `spans`/`events` level — every
+//!    event line carries `kind` and `t_ns` (nanoseconds since collector
+//!    start) plus the kind-specific payload listed in the
+//!    [module taxonomy](crate::obs),
+//! 3. one `"kind": "metrics_snapshot"` line per aggregation window
+//!    ([`MetricsSnapshot::to_json`]),
+//! 4. one closing `"kind": "summary"` line (end-of-run aggregates,
+//!    repeated drop accounting).
+//!
+//! Numbers round-trip exactly: integers print without a decimal point
+//! and floats use the shortest representation that re-parses to the
+//! same bits.
+
+use super::{Event, MergeTier, MetricsSnapshot, TraceData, TraceLevel, NO_SHARD};
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+
+/// Serialize one event as a JSONL object.
+pub fn event_to_json(ev: &Event) -> Json {
+    let mut j = Json::obj();
+    j.set("kind", json::s(ev.kind())).set("t_ns", json::num(ev.t() as f64));
+    match *ev {
+        Event::SnapshotTake { shard, version, .. } => {
+            j.set("shard", shard_num(shard)).set("version", json::num(version as f64));
+        }
+        Event::Epoch { shard, steps, ops, nanos, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("steps", json::num(steps as f64))
+                .set("ops", json::num(ops as f64))
+                .set("nanos", json::num(nanos as f64));
+        }
+        Event::Submit { shard, base_version, queue_depth, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("base_version", json::num(base_version as f64))
+                .set("queue_depth", json::num(queue_depth as f64));
+        }
+        Event::Merge { shard, tier, staleness, batch, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("tier", json::s(tier.name()))
+                .set("staleness", json::num(staleness as f64))
+                .set("batch", json::num(batch as f64));
+        }
+        Event::Publish { version, objective, .. } => {
+            j.set("version", json::num(version as f64)).set("objective", json::num(objective));
+        }
+        Event::Tau { tau, prev, .. } => {
+            j.set("tau", json::num(tau as f64)).set("prev", json::num(prev as f64));
+        }
+        Event::Park { shard, .. } => {
+            j.set("shard", shard_num(shard));
+        }
+        Event::MergeWait { nanos, .. } => {
+            j.set("nanos", json::num(nanos as f64));
+        }
+        Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("entropy", json::num(entropy))
+                .set("p_min", json::num(p_min))
+                .set("p_max", json::num(p_max));
+        }
+    }
+    j
+}
+
+fn shard_num(shard: u32) -> Json {
+    json::num(if shard == NO_SHARD { -1.0 } else { shard as f64 })
+}
+
+fn field_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::msg(format!("trace line missing numeric field '{key}'")))
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(field_f64(j, key)? as u64)
+}
+
+fn field_shard(j: &Json) -> Result<u32> {
+    let x = field_f64(j, "shard")?;
+    Ok(if x < 0.0 { NO_SHARD } else { x as u32 })
+}
+
+/// Parse one event line back (inverse of [`event_to_json`]). Returns
+/// `Ok(None)` for valid non-event lines (`meta`, `metrics_snapshot`,
+/// `summary`) and `Err` for anything malformed.
+pub fn event_from_json(j: &Json) -> Result<Option<Event>> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::msg("trace line has no 'kind' field"))?;
+    if matches!(kind, "meta" | "metrics_snapshot" | "summary") {
+        return Ok(None);
+    }
+    let t = field_u64(j, "t_ns")?;
+    let ev = match kind {
+        "snapshot_take" => Event::SnapshotTake { t, shard: field_shard(j)?, version: field_u64(j, "version")? },
+        "epoch" => Event::Epoch {
+            t,
+            shard: field_shard(j)?,
+            steps: field_u64(j, "steps")?,
+            ops: field_u64(j, "ops")?,
+            nanos: field_u64(j, "nanos")?,
+        },
+        "submit" => Event::Submit {
+            t,
+            shard: field_shard(j)?,
+            base_version: field_u64(j, "base_version")?,
+            queue_depth: field_u64(j, "queue_depth")?,
+        },
+        "merge" => {
+            let tier_name = j
+                .get("tier")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg("merge line has no 'tier' field"))?;
+            Event::Merge {
+                t,
+                shard: field_shard(j)?,
+                tier: MergeTier::parse(tier_name)
+                    .ok_or_else(|| Error::msg(format!("unknown merge tier '{tier_name}'")))?,
+                staleness: field_u64(j, "staleness")?,
+                batch: field_u64(j, "batch")?,
+            }
+        }
+        "publish" => Event::Publish {
+            t,
+            version: field_u64(j, "version")?,
+            objective: field_f64(j, "objective")?,
+        },
+        "tau" => Event::Tau { t, tau: field_u64(j, "tau")?, prev: field_u64(j, "prev")? },
+        "park" => Event::Park { t, shard: field_shard(j)? },
+        "merge_wait" => Event::MergeWait { t, nanos: field_u64(j, "nanos")? },
+        "selector" => Event::SelectorState {
+            t,
+            shard: field_shard(j)?,
+            entropy: field_f64(j, "entropy")?,
+            p_min: field_f64(j, "p_min")?,
+            p_max: field_f64(j, "p_max")?,
+        },
+        other => return Err(Error::msg(format!("unknown trace event kind '{other}'"))),
+    };
+    Ok(Some(ev))
+}
+
+/// Render a complete trace file (see module docs for the line layout).
+/// `meta` and `summary` are caller-supplied objects (run identity and
+/// end-of-run aggregates); non-object values are replaced by `{}`.
+pub fn render_trace(
+    level: TraceLevel,
+    meta: &Json,
+    data: &TraceData,
+    snapshots: &[MetricsSnapshot],
+    summary: &Json,
+) -> String {
+    let mut out = String::new();
+    let mut head = as_object(meta);
+    head.set("kind", json::s("meta"))
+        .set("level", json::s(level.name()))
+        .set("events_total", json::num(data.total as f64))
+        .set("events_retained", json::num(data.events.len() as f64))
+        .set("dropped_events", json::num(data.dropped as f64));
+    out.push_str(&head.to_string_compact());
+    out.push('\n');
+    if level >= TraceLevel::Spans {
+        for ev in &data.events {
+            out.push_str(&event_to_json(ev).to_string_compact());
+            out.push('\n');
+        }
+    }
+    if level >= TraceLevel::Summary {
+        for snap in snapshots {
+            out.push_str(&snap.to_json().to_string_compact());
+            out.push('\n');
+        }
+        let mut tail = as_object(summary);
+        tail.set("kind", json::s("summary")).set("dropped_events", json::num(data.dropped as f64));
+        out.push_str(&tail.to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+fn as_object(j: &Json) -> Json {
+    match j {
+        Json::Obj(_) => j.clone(),
+        _ => Json::obj(),
+    }
+}
+
+/// Write a rendered trace to `path`.
+pub fn write_trace(path: &str, content: &str) -> Result<()> {
+    std::fs::write(path, content)
+        .map_err(|e| Error::msg(format!("cannot write trace file '{path}': {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{window_snapshots, MergeTier};
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::SnapshotTake { t: 10, shard: 2, version: 7 },
+            Event::Epoch { t: 900, shard: 0, steps: 41, ops: 1234, nanos: 777 },
+            Event::Submit { t: 1_000, shard: 1, base_version: 7, queue_depth: 3 },
+            Event::Merge { t: 1_050, shard: 1, tier: MergeTier::Damped, staleness: 2, batch: 4 },
+            Event::Merge { t: 1_060, shard: NO_SHARD, tier: MergeTier::Additive, staleness: 0, batch: 4 },
+            Event::Publish { t: 1_100, version: 8, objective: 0.125 + 1e-13 },
+            Event::Tau { t: 1_200, tau: 4, prev: 2 },
+            Event::Park { t: 1_300, shard: 3 },
+            Event::MergeWait { t: 1_400, nanos: 50_123 },
+            Event::SelectorState { t: 1_500, shard: 0, entropy: 1.386_294, p_min: 0.05, p_max: 0.4 },
+            Event::SelectorState { t: 1_600, shard: NO_SHARD, entropy: 0.5, p_min: 0.1, p_max: 0.9 },
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips_through_jsonl() {
+        for ev in sample_events() {
+            let line = event_to_json(&ev).to_string_compact();
+            let parsed = json::parse(&line).expect(&line);
+            let back = event_from_json(&parsed).unwrap().expect("event line");
+            assert_eq!(back, ev, "{line}");
+        }
+    }
+
+    #[test]
+    fn full_trace_renders_and_parses_line_by_line() {
+        let events = sample_events();
+        let data = TraceData { total: events.len() as u64 + 5, dropped: 5, events };
+        let snaps = window_snapshots(&data.events, 4, 0.0);
+        let mut meta = Json::obj();
+        meta.set("problem", json::s("svm")).set("shards", json::num(4.0));
+        let mut summary = Json::obj();
+        summary.set("objective", json::num(-3.5));
+        let text = render_trace(TraceLevel::Events, &meta, &data, &snaps, &summary);
+        let lines: Vec<&str> = text.lines().collect();
+        // meta + events + 1 snapshot + summary
+        assert_eq!(lines.len(), 1 + data.events.len() + snaps.len() + 1);
+        let mut events_seen = 0;
+        for line in &lines {
+            let j = json::parse(line).expect(line);
+            if event_from_json(&j).expect(line).is_some() {
+                events_seen += 1;
+            }
+        }
+        assert_eq!(events_seen, data.events.len());
+        let head = json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("kind").and_then(Json::as_str), Some("meta"));
+        assert_eq!(head.get("dropped_events").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(head.get("problem").and_then(Json::as_str), Some("svm"));
+        let tail = json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(tail.get("kind").and_then(Json::as_str), Some("summary"));
+        assert_eq!(tail.get("objective").and_then(Json::as_f64), Some(-3.5));
+    }
+
+    #[test]
+    fn summary_level_omits_event_lines() {
+        let events = sample_events();
+        let data = TraceData { total: events.len() as u64, dropped: 0, events };
+        let text = render_trace(TraceLevel::Summary, &Json::obj(), &data, &[], &Json::obj());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2); // meta + summary only
+        for line in lines {
+            let j = json::parse(line).unwrap();
+            assert!(event_from_json(&j).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_context() {
+        let j = json::parse(r#"{"kind":"merge","t_ns":1,"shard":0,"tier":"sideways","staleness":0,"batch":1}"#).unwrap();
+        let err = event_from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("sideways"));
+        let j = json::parse(r#"{"kind":"epoch","t_ns":1,"shard":0}"#).unwrap();
+        assert!(event_from_json(&j).is_err());
+        let j = json::parse(r#"{"t_ns":1}"#).unwrap();
+        assert!(event_from_json(&j).is_err());
+    }
+}

@@ -112,6 +112,7 @@
 
 use crate::acf::{AcfParams, Preferences, SequenceGenerator};
 use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::obs::{self, Emitter, Event, MergeTier, Obs};
 use crate::select::{Selector, SelectorKind};
 use crate::shard::partition::{Partition, Partitioner};
 use crate::solvers::{SolveResult, SolveStatus, SolverConfig};
@@ -229,10 +230,12 @@ impl TauController {
         self.tau
     }
 
-    /// Record one merge outcome.
-    fn observe(&mut self, signal: TauSignal) {
+    /// Record one merge outcome. Returns `Some((previous, new))` when a
+    /// window boundary moved τ — the merger turns that into an
+    /// observability event ([`Event::Tau`]).
+    fn observe(&mut self, signal: TauSignal) -> Option<(u64, u64)> {
         if !self.adaptive {
-            return;
+            return None;
         }
         self.seen += 1;
         match signal {
@@ -240,7 +243,9 @@ impl TauController {
             TauSignal::Rejected => self.rejected += 1,
             TauSignal::Stale => self.stale += 1,
         }
+        let mut moved = None;
         if self.seen >= TAU_ADAPT_WINDOW {
+            let prev = self.tau;
             let frac = |count: u64| count * TAU_FRAC_DEN > self.seen * TAU_FRAC_NUM;
             if frac(self.rejected) {
                 self.tau = self.tau.saturating_sub(1).max(self.min);
@@ -248,10 +253,14 @@ impl TauController {
             {
                 self.tau += 1;
             }
+            if self.tau != prev {
+                moved = Some((prev, self.tau));
+            }
             self.seen = 0;
             self.rejected = 0;
             self.stale = 0;
         }
+        moved
     }
 }
 
@@ -281,6 +290,13 @@ pub struct ShardSpec {
     /// stopping criteria; `trace_every > 0` records one trace point per
     /// epoch (sync) or per published version (async)
     pub config: SolverConfig,
+    /// observability collector ([`crate::obs`]); `None` (the default)
+    /// keeps the engine bit-identical to an uninstrumented build. When
+    /// set, the collector must have at least `shards + 1` rings (ring
+    /// *k* for shard *k*, the last ring for the merge driver).
+    /// Recording never mutates solver state, so results are identical
+    /// at every trace level — only wall-clock differs.
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl ShardSpec {
@@ -295,6 +311,7 @@ impl ShardSpec {
             workers: 0,
             merge: MergeMode::Sync,
             config: SolverConfig::default(),
+            obs: None,
         }
     }
 
@@ -326,6 +343,12 @@ impl ShardSpec {
     /// Pin the per-shard inner coordinate-selection policy.
     pub fn with_inner_selector(mut self, kind: SelectorKind) -> ShardSpec {
         self.inner_selector = kind;
+        self
+    }
+
+    /// Attach an observability collector (see [`ShardSpec::obs`]).
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> ShardSpec {
+        self.obs = Some(obs);
         self
     }
 }
@@ -613,10 +636,14 @@ fn dispatch_shard(
     draining: &mut Option<Drain>,
     directives: &[Mutex<Directive>],
     ready: &WorkQueue<usize>,
+    em: &Emitter<'_>,
 ) {
     let quota = if draining.is_some() { 0 } else { quotas.next(outer_prefs, partition, k) };
     let work = if quota == 0 {
         draining.get_or_insert(Drain::Budget);
+        if em.spans() {
+            em.emit(Event::Park { t: em.now(), shard: k as u32 });
+        }
         Work::Park
     } else {
         Work::Epoch { quota }
@@ -644,6 +671,17 @@ fn trace_point(trace: &mut Trace, counter: &OpCounter, timer: &Timer, objective:
         objective,
         violation,
     });
+}
+
+/// One selector-entropy probe on the caller's ring: the inner policy's
+/// current selection distribution reduced to (entropy, p_min, p_max).
+/// Callers gate on [`Emitter::events`] before paying for the
+/// probability read-out.
+fn emit_selector_probe(em: &Emitter<'_>, shard: u32, sched: &dyn Selector) {
+    let mut probs = Vec::new();
+    sched.probabilities_into(&mut probs);
+    let (entropy, p_min, p_max) = obs::entropy_stats(&probs);
+    em.emit(Event::SelectorState { t: em.now(), shard, entropy, p_min, p_max });
 }
 
 /// Outcome of merging one submission.
@@ -684,12 +722,31 @@ struct Merger<'e, P: ShardProblem> {
     stats: MergeStats,
     tau: TauController,
     stale_drops: u64,
+    /// merger-thread emitter on the collector's driver ring
+    em: Emitter<'e>,
 }
 
 impl<'e, P: ShardProblem> Merger<'e, P> {
     #[inline]
     fn tol(&self) -> f64 {
         1e-12 * self.f_cur.abs().max(1.0)
+    }
+
+    /// Feed the τ controller and surface any resulting bound move as a
+    /// `tau` span on the driver ring.
+    fn tau_observe(&mut self, signal: TauSignal) {
+        if let Some((prev, tau)) = self.tau.observe(signal) {
+            if self.em.spans() {
+                self.em.emit(Event::Tau { t: self.em.now(), tau, prev });
+            }
+        }
+    }
+
+    /// One `merge` span for a (batch of) submission(s) that shared a fate.
+    fn emit_merge(&self, shard: u32, tier: MergeTier, staleness: u64, batch: u64) {
+        if self.em.spans() {
+            self.em.emit(Event::Merge { t: self.em.now(), shard, tier, staleness, batch });
+        }
     }
 
     /// Version flip: publish `self.cur` under the next version number.
@@ -704,14 +761,23 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
         if self.retired.len() > self.max_retired {
             self.retired.remove(0);
         }
+        if self.em.spans() {
+            self.em.emit(Event::Publish {
+                t: self.em.now(),
+                version: self.version,
+                objective: self.f_cur,
+            });
+        }
     }
 
     /// Bounded-staleness gate; a positive answer counts the drop and
     /// feeds the adaptive τ controller.
     fn is_stale(&mut self, sub: &Submission) -> bool {
-        if self.version.saturating_sub(sub.base_version) > self.tau.current() {
+        let staleness = self.version.saturating_sub(sub.base_version);
+        if staleness > self.tau.current() {
             self.stale_drops += 1;
-            self.tau.observe(TauSignal::Stale);
+            self.tau_observe(TauSignal::Stale);
+            self.emit_merge(sub.shard as u32, MergeTier::Stale, staleness, 1);
             true
         } else {
             false
@@ -728,6 +794,7 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
         let p = self.problem;
         let k = sub.shard;
         let steps = sub.counter.iterations().max(1);
+        let staleness = self.version.saturating_sub(sub.base_version);
         let tol = self.tol();
         // tier 1: additive candidate, evaluated exactly (one fused pass
         // — the merger is the serial bottleneck)
@@ -741,7 +808,8 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
             let achieved = self.f_cur - f_add;
             self.f_cur = f_add;
             self.stats.accepted_submissions += 1;
-            self.tau.observe(TauSignal::Accepted);
+            self.tau_observe(TauSignal::Accepted);
+            self.emit_merge(k as u32, MergeTier::Additive, staleness, 1);
             self.publish_current();
             return MergeOutcome::Accepted { apply: Apply::Accept, rate: (achieved / steps as f64).max(0.0) };
         }
@@ -757,13 +825,15 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
             let achieved = self.f_cur - f_damp;
             self.f_cur = f_damp;
             self.stats.accepted_submissions += 1;
-            self.tau.observe(TauSignal::Accepted);
+            self.tau_observe(TauSignal::Accepted);
+            self.emit_merge(k as u32, MergeTier::Damped, staleness, 1);
             self.publish_current();
             return MergeOutcome::Accepted { apply: Apply::Damp, rate: (achieved / steps as f64).max(0.0) };
         }
         // tier 3: reject — the shard burned its steps
         self.stats.rejected_submissions += 1;
-        self.tau.observe(TauSignal::Rejected);
+        self.tau_observe(TauSignal::Rejected);
+        self.emit_merge(k as u32, MergeTier::Rejected, staleness, 1);
         MergeOutcome::Rejected
     }
 
@@ -815,12 +885,15 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
                 (achieved * share / steps as f64).max(0.0)
             })
             .collect();
+        let mut max_staleness = 0u64;
         for sub in batch {
             self.sep[sub.shard] = sub.sep_trial;
             self.stats.accepted_submissions += 1;
-            self.tau.observe(TauSignal::Accepted);
+            self.tau_observe(TauSignal::Accepted);
+            max_staleness = max_staleness.max(self.version.saturating_sub(sub.base_version));
         }
         self.stats.batched_merges += 1;
+        self.emit_merge(obs::NO_SHARD, MergeTier::Additive, max_staleness, batch.len() as u64);
         self.publish_current();
         Some(rates)
     }
@@ -981,6 +1054,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
 
         // The one fixed task closure served to the persistent workers;
         // `ctx.task` selects between epoch and verification rounds.
+        let obs_ref = self.spec.obs.as_deref();
         let task = |k: usize| {
             // A read-guard panic does not poison an RwLock, so a crashed
             // sibling worker cannot wedge this lock.
@@ -989,6 +1063,9 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 return; // already-poisoned shard: its panic is the root error
             };
             let st = &mut *guard;
+            // Holding the shard mutex makes this worker the ring's sole
+            // producer for the round (the EventRing contract).
+            let em = obs::emitter(obs_ref, k);
             let report = match ctx.task {
                 SyncTask::Epoch => {
                     st.local_shared.copy_from_slice(&ctx.shared);
@@ -996,6 +1073,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     let mut local = OpCounter::new();
                     let mut df_sum = 0.0f64;
                     let mut viol_max = 0.0f64;
+                    let t_start = if em.spans() { em.now() } else { 0 };
                     for _ in 0..ctx.quotas[k] {
                         let kk = st.sched.next();
                         let i = st.ids[kk] as usize;
@@ -1005,6 +1083,19 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         df_sum += out.delta_f;
                         viol_max = viol_max.max(out.violation);
                         local.step(out.ops);
+                    }
+                    if em.spans() {
+                        let t_end = em.now();
+                        em.emit(Event::Epoch {
+                            t: t_end,
+                            shard: k as u32,
+                            steps: ctx.quotas[k],
+                            ops: local.ops(),
+                            nanos: t_end.saturating_sub(t_start),
+                        });
+                    }
+                    if em.events() {
+                        emit_selector_probe(&em, k as u32, st.sched.as_ref());
                     }
                     SyncReport::Epoch(EpochReport {
                         delta_f: df_sum,
@@ -1108,6 +1199,8 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let mut final_viol = f64::INFINITY;
         let mut last_failed_verify: Option<u64> = None;
         let mut stats = MergeStats::default();
+        // Driver ring: the last ring of the collector (index S).
+        let em = obs::emitter(self.spec.obs.as_deref(), s_count);
 
         let mut sum_diff = vec![0.0f64; dim];
         let mut trial_shared = vec![0.0f64; dim];
@@ -1199,6 +1292,15 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 f_curr = f_full;
                 stats.accepted_submissions += s_count as u64;
                 stats.batched_merges += 1;
+                if em.spans() {
+                    em.emit(Event::Merge {
+                        t: em.now(),
+                        shard: obs::NO_SHARD,
+                        tier: MergeTier::Additive,
+                        staleness: 0,
+                        batch: s_count as u64,
+                    });
+                }
             } else {
                 // averaged merge θ = 1/S: never increases f (convexity)
                 let theta = 1.0 / s_count as f64;
@@ -1221,6 +1323,18 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 f_curr = p.shared_objective(shared) + sep.iter().sum::<f64>();
                 stats.objective_evals += 1;
                 stats.accepted_submissions += s_count as u64;
+                if em.spans() {
+                    em.emit(Event::Merge {
+                        t: em.now(),
+                        shard: obs::NO_SHARD,
+                        tier: MergeTier::Damped,
+                        staleness: 0,
+                        batch: s_count as u64,
+                    });
+                }
+            }
+            if em.spans() {
+                em.emit(Event::Publish { t: em.now(), version: epochs, objective: f_curr });
             }
             drop(ctx_g);
 
@@ -1320,6 +1434,10 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             };
         };
         let st = &mut *guard;
+        // Holding the shard mutex makes this worker ring `k`'s sole
+        // producer until the merger re-dispatches the shard — which it
+        // cannot do before this task's message is pushed.
+        let em = obs::emitter(self.spec.obs.as_deref(), k);
         let (apply, work, mut delta) = {
             let mut d = directives[k].lock().unwrap();
             // only an epoch consumes the recycled delta buffer; leave it
@@ -1355,11 +1473,19 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             }
             Work::Epoch { quota } => {
                 let (base_version, snap) = published.snapshot();
+                if em.events() {
+                    em.emit(Event::SnapshotTake {
+                        t: em.now(),
+                        shard: k as u32,
+                        version: base_version,
+                    });
+                }
                 st.local_shared.copy_from_slice(&snap);
                 st.trial.copy_from_slice(&st.values);
                 let mut counter = OpCounter::new();
                 let mut viol = 0.0f64;
                 let mut claimed = 0.0f64;
+                let t_start = if em.spans() { em.now() } else { 0 };
                 for _ in 0..quota {
                     let kk = st.sched.next();
                     let i = st.ids[kk] as usize;
@@ -1372,6 +1498,19 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     claimed += out.delta_f.max(0.0);
                     viol = viol.max(out.violation);
                     counter.step(out.ops);
+                }
+                if em.spans() {
+                    let t_end = em.now();
+                    em.emit(Event::Epoch {
+                        t: t_end,
+                        shard: k as u32,
+                        steps: quota,
+                        ops: counter.ops(),
+                        nanos: t_end.saturating_sub(t_start),
+                    });
+                }
+                if em.events() {
+                    emit_selector_probe(&em, k as u32, st.sched.as_ref());
                 }
                 delta.clear();
                 delta.extend(st.local_shared.iter().zip(snap.iter()).map(|(l, s)| l - s));
@@ -1425,6 +1564,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         std::thread::scope(|scope| {
             let _rg = QueueGuard(&ready);
             let _mg = QueueGuard(&msgs);
+            let obs_ref = self.spec.obs.as_deref();
             for _ in 0..workers {
                 scope.spawn(|| {
                     while let Some(k) = ready.pop() {
@@ -1437,6 +1577,20 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                                 message: format!("panicked: {}", panic_message(payload.as_ref())),
                             },
                         };
+                        // Submit is recorded *before* the push: until the
+                        // merger sees the message it cannot re-dispatch
+                        // shard k, so ring k still has a single producer.
+                        if let AsyncMsg::Epoch(ref sub) = msg {
+                            let em = obs::emitter(obs_ref, k);
+                            if em.events() {
+                                em.emit(Event::Submit {
+                                    t: em.now(),
+                                    shard: sub.shard as u32,
+                                    base_version: sub.base_version,
+                                    queue_depth: msgs.depth() as u64 + 1,
+                                });
+                            }
+                        }
                         msgs.push(msg);
                     }
                 });
@@ -1483,6 +1637,9 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let sep_total: f64 = sep.iter().sum();
         let cur = p.initial_shared();
         let f_cur = p.shared_objective(&cur) + sep_total;
+        // Driver ring: the last ring of the collector (index S); this
+        // thread (the merger) is its sole producer.
+        let em = obs::emitter(self.spec.obs.as_deref(), s_count);
         let mut mg = Merger {
             problem: p,
             published,
@@ -1500,6 +1657,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             stats: MergeStats::default(),
             tau: TauController::new(tau, adaptive, s_count),
             stale_drops: 0,
+            em,
         };
 
         let mut counter = OpCounter::new();
@@ -1529,6 +1687,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 &mut draining,
                 directives,
                 ready,
+                &em,
             );
         }
 
@@ -1536,7 +1695,13 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             let msg = if let Some(m) = pending.pop_front() {
                 m
             } else {
-                match msgs.pop_timeout(Duration::from_millis(50)) {
+                let wait_t0 = if em.spans() { em.now() } else { 0 };
+                let popped = msgs.pop_timeout(Duration::from_millis(50));
+                if em.spans() {
+                    let t = em.now();
+                    em.emit(Event::MergeWait { t, nanos: t.saturating_sub(wait_t0) });
+                }
+                match popped {
                     Pop::Item(m) => m,
                     Pop::TimedOut => {
                         let over_time = match cfg.max_seconds {
@@ -1602,6 +1767,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                                         &mut draining,
                                         directives,
                                         ready,
+                                        &em,
                                     );
                                 }
                             }
@@ -1715,6 +1881,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                             &mut draining,
                             directives,
                             ready,
+                            &em,
                         );
                     }
                 }
@@ -2018,6 +2185,107 @@ mod tests {
         let s = out.merge_stats;
         assert!(s.objective_evals >= out.result.epochs, "one exact eval per epoch: {s:?}");
         assert_eq!(s.staleness_bound_final, 0, "sync mode has no staleness bound");
+    }
+
+    fn observed(shards: usize, level: crate::obs::TraceLevel) -> Arc<Obs> {
+        Arc::new(Obs::new(level, shards + 1, crate::obs::DEFAULT_RING_CAP))
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_sync_results() {
+        use crate::obs::TraceLevel;
+        let p = Quad::new(32);
+        let plain = ShardedDriver::new(&p, spec(4)).run().unwrap();
+        for level in [TraceLevel::Summary, TraceLevel::Spans, TraceLevel::Events] {
+            let collector = observed(4, level);
+            let out = ShardedDriver::new(&p, spec(4).with_obs(Arc::clone(&collector)))
+                .run()
+                .unwrap();
+            // bit-identical contract: recording reads state, never
+            // mutates it
+            assert_eq!(out.values, plain.values, "{level:?}");
+            assert_eq!(out.result.iterations, plain.result.iterations, "{level:?}");
+            assert_eq!(
+                out.result.objective.to_bits(),
+                plain.result.objective.to_bits(),
+                "{level:?}"
+            );
+            let data = collector.drain();
+            if level >= TraceLevel::Spans {
+                assert!(!data.events.is_empty(), "{level:?} must retain events");
+                assert_eq!(data.dropped, 0, "{level:?}");
+            } else {
+                assert!(data.events.is_empty(), "summary level records nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn off_level_collector_records_nothing() {
+        let p = Quad::new(16);
+        let collector = observed(4, crate::obs::TraceLevel::Off);
+        let out =
+            ShardedDriver::new(&p, spec(4).with_obs(Arc::clone(&collector))).run().unwrap();
+        assert!(out.result.status.converged());
+        let data = collector.drain();
+        assert_eq!(data.total, 0);
+        assert!(data.events.is_empty());
+    }
+
+    #[test]
+    fn sync_trace_covers_epochs_merges_and_publishes() {
+        let p = Quad::new(32);
+        let collector = observed(4, crate::obs::TraceLevel::Events);
+        let out =
+            ShardedDriver::new(&p, spec(4).with_obs(Arc::clone(&collector))).run().unwrap();
+        assert!(out.result.status.converged());
+        let data = collector.drain();
+        let epochs = data.events.iter().filter(|e| matches!(e, Event::Epoch { .. })).count();
+        let merges = data.events.iter().filter(|e| matches!(e, Event::Merge { .. })).count();
+        let publishes =
+            data.events.iter().filter(|e| matches!(e, Event::Publish { .. })).count();
+        let probes =
+            data.events.iter().filter(|e| matches!(e, Event::SelectorState { .. })).count();
+        // 4 shards × ≥1 epoch each, one merge + publish per barrier, one
+        // selector probe per shard epoch (events level)
+        assert!(epochs >= 4, "{epochs}");
+        assert!(merges as u64 >= out.result.epochs, "{merges} vs {}", out.result.epochs);
+        assert!(publishes as u64 >= out.result.epochs, "{publishes}");
+        assert_eq!(probes, epochs, "one probe per epoch at events level");
+        assert!(data.events.windows(2).all(|w| w[0].t() <= w[1].t()), "drain must sort");
+    }
+
+    #[test]
+    fn async_trace_covers_snapshots_submits_and_merge_tiers() {
+        let p = Quad::new(64);
+        let collector = observed(8, crate::obs::TraceLevel::Events);
+        let out = ShardedDriver::new(&p, spec(8).with_async(2).with_obs(Arc::clone(&collector)))
+            .run()
+            .unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let data = collector.drain();
+        let kinds: std::collections::BTreeSet<&str> =
+            data.events.iter().map(Event::kind).collect();
+        for k in ["snapshot_take", "epoch", "submit", "merge", "publish", "merge_wait"] {
+            assert!(kinds.contains(k), "missing '{k}' in {kinds:?}");
+        }
+        // merged submissions in the trace account for every accepted or
+        // rejected submission the engine counted (rings did not overflow)
+        assert_eq!(data.dropped, 0);
+        let merged: u64 = data
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Merge { batch, .. } => Some((*batch).max(1)),
+                _ => None,
+            })
+            .sum();
+        let s = out.merge_stats;
+        assert_eq!(
+            merged,
+            s.accepted_submissions + s.rejected_submissions + out.stale_drops,
+            "{s:?}"
+        );
     }
 
     #[test]

@@ -111,37 +111,49 @@ impl ShardProblem for ShardedMcSvm<'_> {
     }
 
     fn step(&self, i: usize, values: &mut [f64], shared: &mut [f64]) -> StepOutcome {
+        // margins + per-class scatter deltas live in a thread-local
+        // arena: `step` runs millions of times on the engine hot path,
+        // and a per-step `vec![0.0; 2K]` allocation showed up as real
+        // allocator traffic once the sparse kernels got fast. Each
+        // worker thread reuses its own buffer, so shard parallelism
+        // needs no locking.
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<f64>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
         let row = self.ds.x.row(i);
         let yi = self.y[i];
         let k = self.k_classes;
-        // margins + per-class scatter deltas; one scratch allocation per
-        // subspace solve (K is small — the O(K·nnz) dots dominate)
-        let mut scratch = vec![0.0f64; 2 * k];
-        let (margins, delta_beta) = scratch.split_at_mut(k);
-        for (kk, m) in margins.iter_mut().enumerate() {
-            *m = row.dot_dense(&shared[kk * self.d..(kk + 1) * self.d]);
-        }
-        let mut ops = k * row.nnz();
-        let out = solve_subspace(
-            yi,
-            k,
-            self.norms[i],
-            self.c,
-            margins,
-            values,
-            delta_beta,
-            self.max_inner,
-            self.eps_inner,
-        );
-        // apply weight updates: O(nnz) per class actually moved
-        for (kk, &b) in delta_beta.iter().enumerate() {
-            if b != 0.0 {
-                row.axpy_into(b, &mut shared[kk * self.d..(kk + 1) * self.d]);
-                ops += row.nnz();
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.clear();
+            scratch.resize(2 * k, 0.0);
+            let (margins, delta_beta) = scratch.split_at_mut(k);
+            for (kk, m) in margins.iter_mut().enumerate() {
+                *m = row.dot_dense(&shared[kk * self.d..(kk + 1) * self.d]);
             }
-        }
-        ops += out.ops;
-        StepOutcome { delta_f: out.delta_f, violation: out.max_viol_entry, ops }
+            let mut ops = k * row.nnz();
+            let out = solve_subspace(
+                yi,
+                k,
+                self.norms[i],
+                self.c,
+                margins,
+                values,
+                delta_beta,
+                self.max_inner,
+                self.eps_inner,
+            );
+            // apply weight updates: O(nnz) per class actually moved
+            for (kk, &b) in delta_beta.iter().enumerate() {
+                if b != 0.0 {
+                    row.axpy_into(b, &mut shared[kk * self.d..(kk + 1) * self.d]);
+                    ops += row.nnz();
+                }
+            }
+            ops += out.ops;
+            StepOutcome { delta_f: out.delta_f, violation: out.max_viol_entry, ops }
+        })
     }
 
     fn violation(&self, i: usize, values: &[f64], shared: &[f64]) -> (f64, usize) {

@@ -19,7 +19,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Number of workers to use by default: physical parallelism, capped.
 pub fn default_workers() -> usize {
@@ -125,6 +125,21 @@ struct RoundState {
     /// panics captured during the current round
     panics: Vec<TaskPanic>,
     shutdown: bool,
+    /// cumulative dispatch statistics (see [`RoundStats`])
+    stats: RoundStats,
+}
+
+/// Cumulative dispatch statistics of a [`RoundPool`], read via
+/// [`round_stats`](RoundPool::round_stats). The sharded engine folds
+/// these into its observability plane (`crate::obs`) — the pool itself
+/// stays free of any tracing dependency.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    /// Rounds dispatched to completion.
+    pub rounds: u64,
+    /// Total wall-clock nanoseconds from round dispatch to the last
+    /// task completing (the barrier span the dispatcher waits out).
+    pub busy_nanos: u64,
 }
 
 /// Persistent fork-join pool: spawn `worker_loop` on long-lived threads
@@ -168,6 +183,7 @@ impl RoundPool {
                 remaining: 0,
                 panics: Vec::new(),
                 shutdown: false,
+                stats: RoundStats::default(),
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -237,6 +253,7 @@ impl RoundPool {
         if n == 0 {
             return Ok(());
         }
+        let dispatched = Instant::now();
         {
             let mut st = self.state.lock().unwrap();
             st.round += 1;
@@ -250,10 +267,17 @@ impl RoundPool {
         while st.remaining > 0 {
             st = self.done_cv.wait(st).unwrap();
         }
+        st.stats.rounds += 1;
+        st.stats.busy_nanos += dispatched.elapsed().as_nanos() as u64;
         match st.panics.first() {
             Some(p) => Err(p.clone()),
             None => Ok(()),
         }
+    }
+
+    /// Cumulative dispatch statistics since construction.
+    pub fn round_stats(&self) -> RoundStats {
+        self.state.lock().unwrap().stats
     }
 
     /// Wake every parked worker and make `worker_loop` return. Must be
@@ -275,6 +299,18 @@ pub enum Pop<T> {
 struct QueueState<T> {
     items: VecDeque<T>,
     shutdown: bool,
+    stats: QueueStats,
+}
+
+/// Cumulative producer-side statistics of a [`WorkQueue`], read via
+/// [`stats`](WorkQueue::stats). Maintained under the queue's own lock,
+/// so tracking costs nothing beyond the push itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Items ever pushed.
+    pub pushes: u64,
+    /// Largest queue depth observed right after a push.
+    pub max_depth: usize,
 }
 
 /// Blocking multi-producer/multi-consumer queue with explicit shutdown.
@@ -295,15 +331,41 @@ impl<T> Default for WorkQueue<T> {
 impl<T> WorkQueue<T> {
     pub fn new() -> WorkQueue<T> {
         WorkQueue {
-            state: Mutex::new(QueueState { items: VecDeque::new(), shutdown: false }),
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                shutdown: false,
+                stats: QueueStats::default(),
+            }),
             cv: Condvar::new(),
         }
     }
 
     pub fn push(&self, item: T) {
+        self.push_counted(item);
+    }
+
+    /// [`push`](WorkQueue::push) that also reports the queue depth right
+    /// after insertion — the async engine records it as the
+    /// queue-depth-at-submit observability event.
+    pub fn push_counted(&self, item: T) -> usize {
         let mut st = self.state.lock().unwrap();
         st.items.push_back(item);
+        let depth = st.items.len();
+        st.stats.pushes += 1;
+        st.stats.max_depth = st.stats.max_depth.max(depth);
         self.cv.notify_one();
+        depth
+    }
+
+    /// Cumulative producer-side statistics since construction.
+    pub fn stats(&self) -> QueueStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Current queue depth (items waiting). A racy snapshot — meant for
+    /// observability probes, never for synchronization.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().items.len()
     }
 
     /// Block until an item is available; `None` once the queue is shut
@@ -473,6 +535,33 @@ mod tests {
             pool.shutdown();
         });
         assert_eq!(ok_runs.load(Ordering::Relaxed), 7 + 8);
+    }
+
+    #[test]
+    fn round_pool_counts_rounds() {
+        let pool = RoundPool::new();
+        std::thread::scope(|scope| {
+            scope.spawn(|| pool.worker_loop(|_| std::thread::sleep(Duration::from_micros(100))));
+            for _ in 0..3 {
+                pool.run_round(2).unwrap();
+            }
+            pool.shutdown();
+        });
+        let stats = pool.round_stats();
+        assert_eq!(stats.rounds, 3);
+        assert!(stats.busy_nanos > 0);
+    }
+
+    #[test]
+    fn push_counted_reports_depth_and_stats() {
+        let q: WorkQueue<u32> = WorkQueue::new();
+        assert_eq!(q.push_counted(1), 1);
+        assert_eq!(q.push_counted(2), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.push_counted(3), 2);
+        let stats = q.stats();
+        assert_eq!(stats.pushes, 3);
+        assert_eq!(stats.max_depth, 2);
     }
 
     #[test]

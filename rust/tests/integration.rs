@@ -130,6 +130,7 @@ fn sweep_and_report_pipeline() {
         base,
         grid: vec![0.1, 1.0],
         policies: vec![Policy::Acf, Policy::Permutation],
+        selectors: vec![],
         include_shrinking: true,
         workers: 4,
     })
