@@ -17,6 +17,13 @@
 //!     exactly; async S = 4 is instead audited for a monotone published
 //!     objective (async runs are not bit-reproducible by design).
 //!
+//! Every family trains on the **mapped** data backend (the synthetic
+//! matrix is round-tripped through an `.acfbin` file and served from a
+//! read-only mapping, `"data_backend": "mmap"` in the JSON), so the
+//! CI speedup gates also cover the out-of-core data plane; an
+//! `ingest_throughput` entry times the streaming libsvm → `.acfbin`
+//! converter and checks its output against the in-memory parser.
+//!
 //! Run: `cargo bench --bench scaling_shards [-- --quick] [-- --max-iters N]`
 //! (env mirrors for CI: `ACF_BENCH_QUICK=1`, `ACF_BENCH_MAX_ITERS=N`).
 //! Writes `BENCH_scaling_shards.json` next to the report; the CI
@@ -31,6 +38,7 @@ use acf_cd::shard::{
     ShardSpec, ShardedOutcome, DEFAULT_STALENESS_BOUND,
 };
 use acf_cd::solvers::{lasso, logreg, mcsvm, svm, SolveResult};
+use acf_cd::sparse::{ingest, storage, to_libsvm_string};
 use acf_cd::util::json::Json;
 use acf_cd::util::rng::Rng;
 use acf_cd::util::timer::{fmt_secs, Timer};
@@ -251,12 +259,16 @@ fn main() {
         out.set("max_iterations_cap", Json::Num(m as f64));
     }
     out.set("staleness_bound", Json::Num(DEFAULT_STALENESS_BOUND as f64));
+    // every family below trains on the mapped (.acfbin) backend
+    out.set("data_backend", Json::Str("mmap".into()));
 
     // ---------------- LASSO (features sharded) ------------------------
     {
         let (n, d, nnz) = if cfg.quick { (1_500, 4_000, 30) } else { (8_000, 30_000, 80) };
         let (ds, _) =
             synth::regression_sparse("scale-reg", n, d, nnz, 60, 0.05, &mut Rng::new(cfg.seed));
+        // mapped data backend: identical rows served from the page cache
+        let ds = storage::remap_dataset(&ds).expect("remap to the mapped backend");
         let lambda = 0.002;
         let eps = 1e-5;
         println!(
@@ -310,6 +322,7 @@ fn main() {
             },
             &mut Rng::new(cfg.seed ^ 1),
         );
+        let ds = storage::remap_dataset(&ds).expect("remap to the mapped backend");
         let c = 1.0;
         let eps = 1e-3;
         println!(
@@ -360,6 +373,7 @@ fn main() {
             },
             &mut Rng::new(cfg.seed ^ 2),
         );
+        let ds = storage::remap_dataset(&ds).expect("remap to the mapped backend");
         let c = 1.0;
         let eps = 1e-3;
         println!(
@@ -402,6 +416,7 @@ fn main() {
         let (n, d, k, nnz) =
             if cfg.quick { (1_500, 4_000, 6, 20) } else { (8_000, 20_000, 10, 50) };
         let ds = synth::multiclass_text("scale-mcsvm", n, d, k, nnz, 0.02, &mut Rng::new(cfg.seed ^ 3));
+        let ds = storage::remap_dataset(&ds).expect("remap to the mapped backend");
         let c = 1.0;
         let eps = 1e-2;
         println!(
@@ -433,6 +448,53 @@ fn main() {
             |spec| shard_mcsvm::run_prepared(&sharded_prob, spec),
             &mut out,
         );
+    }
+
+    // ---------------- ingest throughput (libsvm → .acfbin) --------------
+    {
+        let (n, d, nnz) = if cfg.quick { (1_500, 5_000, 30) } else { (8_000, 25_000, 60) };
+        let ds = synth::sparse_text(
+            &synth::SparseTextSpec {
+                name: "scale-ingest",
+                n,
+                d,
+                nnz_per_row: nnz,
+                zipf_s: 1.0,
+                concept_k: 150,
+                noise: 0.03,
+            },
+            &mut Rng::new(cfg.seed ^ 4),
+        );
+        let text = to_libsvm_string(&ds);
+        let dir = std::env::temp_dir();
+        let src = dir.join(format!("acf_bench_ingest_{}.libsvm", std::process::id()));
+        let dst = dir.join(format!("acf_bench_ingest_{}.acfbin", std::process::id()));
+        std::fs::write(&src, &text).expect("write libsvm text");
+        let rep = ingest::ingest_libsvm(&src, &dst, ds.n_features(), 0).expect("streaming ingest");
+        // the streamed chunked path must agree with the in-memory parser
+        let mapped = storage::open_dataset(&dst).expect("open ingested file");
+        assert_eq!(mapped.x, ds.x, "ingested matrix differs from the in-memory parse");
+        assert_eq!(mapped.y, ds.y, "ingested labels differ from the in-memory parse");
+        let _ = std::fs::remove_file(&src);
+        let _ = std::fs::remove_file(&dst);
+        println!(
+            "\ningest throughput: {} rows ({} nnz), {:.1} MB in {} → {:.1} MB/s",
+            rep.rows,
+            rep.nnz,
+            rep.input_bytes as f64 / 1e6,
+            fmt_secs(rep.seconds),
+            rep.mb_per_s
+        );
+        let mut ing = Json::obj();
+        ing.set("rows", Json::Num(rep.rows as f64))
+            .set("cols", Json::Num(rep.cols as f64))
+            .set("nnz", Json::Num(rep.nnz as f64))
+            .set("input_mb", Json::Num(rep.input_bytes as f64 / 1e6))
+            .set("output_bytes", Json::Num(rep.output_bytes as f64))
+            .set("seconds", Json::Num(rep.seconds))
+            .set("mb_per_s", Json::Num(rep.mb_per_s))
+            .set("round_trip_bit_identical", Json::Bool(true));
+        out.set("ingest_throughput", ing);
     }
 
     write_bench_summary("scaling_shards", &out);

@@ -4,7 +4,6 @@
 
 use super::jobs::{run_job_on, JobOutcome, JobSpec, Problem};
 use crate::data::{self, Scale};
-use crate::obs::TraceLevel;
 use crate::sched::Policy;
 use crate::select::SelectorKind;
 use crate::util::rng::Rng;
@@ -47,13 +46,7 @@ fn with_parameter(p: Problem, v: f64) -> Problem {
 /// per grid point when requested); with `selectors` non-empty it is the
 /// selector list, every job on the ACF policy.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
-    // A sweep runs its jobs concurrently; a shared `trace_out` file
-    // would be clobbered per job, so tracing is a `train`-only feature
-    // (the CLI notes and drops the flags; this guards programmatic
-    // callers that hand-build a SweepSpec from a traced train spec).
-    let mut base = spec.base.clone();
-    base.trace_level = TraceLevel::Off;
-    base.trace_out = None;
+    let base = spec.base.clone();
     let ds = base.load_dataset()?;
     let mut jobs: Vec<JobSpec> = Vec::new();
     for &v in &spec.grid {
@@ -86,9 +79,25 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
             }
         }
     }
+    // A sweep runs its jobs concurrently, so a shared `--trace-out`
+    // path would be clobbered; each grid cell writes its own file
+    // instead: `<stem>.<row>.jsonl`, row = grid-major outcome index.
+    if let Some(base_path) = &base.trace_out {
+        for (row, j) in jobs.iter_mut().enumerate() {
+            j.trace_out = Some(per_row_trace_path(base_path, row));
+        }
+    }
     parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds))
         .into_iter()
         .collect()
+}
+
+/// Per-row trace destination: `<stem>.<row>.jsonl`, where `<stem>` is
+/// the sweep's `--trace-out` value with one trailing `.jsonl` stripped
+/// (`sweep.jsonl` → `sweep.0.jsonl`, `sweep.1.jsonl`, …).
+fn per_row_trace_path(base: &str, row: usize) -> String {
+    let stem = base.strip_suffix(".jsonl").unwrap_or(base);
+    format!("{stem}.{row}.jsonl")
 }
 
 /// k-fold cross-validation accuracy of a problem family at one parameter
@@ -179,24 +188,45 @@ mod tests {
     }
 
     #[test]
-    fn sweep_drops_trace_fields_from_its_jobs() {
+    fn per_row_trace_paths_strip_one_jsonl_suffix() {
+        assert_eq!(per_row_trace_path("sweep.jsonl", 0), "sweep.0.jsonl");
+        assert_eq!(per_row_trace_path("sweep.jsonl", 12), "sweep.12.jsonl");
+        assert_eq!(per_row_trace_path("runs/sweep", 3), "runs/sweep.3.jsonl");
+    }
+
+    #[test]
+    fn sweep_writes_one_trace_file_per_grid_row() {
+        use crate::obs::TraceLevel;
+        use crate::util::json::{self, Json};
+        let stem = std::env::temp_dir()
+            .join(format!("acf_sweep_trace_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
         let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
         base.scale = Scale(0.04);
-        base.trace_level = TraceLevel::Events;
-        base.trace_out = Some("/nonexistent/dir/trace.jsonl".into());
+        base.trace_level = TraceLevel::Spans;
+        base.trace_out = Some(format!("{stem}.jsonl"));
         let spec = SweepSpec {
             base,
-            grid: vec![1.0],
-            policies: vec![Policy::Acf],
+            grid: vec![0.1, 1.0],
+            policies: vec![Policy::Acf, Policy::Permutation],
             selectors: vec![],
             include_shrinking: false,
             workers: 2,
         };
-        // would fail with an unwritable trace path if the fields leaked
         let out = run_sweep(&spec).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].spec.trace_level, TraceLevel::Off);
-        assert!(out[0].spec.trace_out.is_none());
+        assert_eq!(out.len(), 4);
+        for (row, o) in out.iter().enumerate() {
+            // grid-major outcome index = trace-file index
+            let path = format!("{stem}.{row}.jsonl");
+            assert_eq!(o.spec.trace_out.as_deref(), Some(path.as_str()), "row {row}");
+            let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+            let _ = std::fs::remove_file(&path);
+            let head = json::parse(text.lines().next().expect("non-empty trace")).unwrap();
+            assert_eq!(head.get("kind").and_then(Json::as_str), Some("meta"), "row {row}");
+        }
+        // the bare base path is never written — only the per-row files
+        assert!(!std::path::Path::new(&format!("{stem}.jsonl")).exists());
     }
 
     #[test]

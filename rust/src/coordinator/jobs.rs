@@ -3,13 +3,13 @@
 
 use crate::acf::AcfParams;
 use crate::anyhow;
-use crate::data::{registry, Scale};
+use crate::data::{registry, DataBackend, Scale};
 use crate::obs::{self, Obs, TraceLevel};
 use crate::sched::Policy;
 use crate::select::{Selector, SelectorKind};
 use crate::shard::{self, MergeMode, Partitioner, ShardSpec};
 use crate::solvers::{self, SolveResult, SolverConfig};
-use crate::sparse::Dataset;
+use crate::sparse::{storage, Dataset};
 use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -66,6 +66,10 @@ pub struct JobSpec {
     pub eps: f64,
     pub seed: u64,
     pub scale: Scale,
+    /// storage backend the training matrix is resolved into
+    /// (`--data-backend`): heap-resident CSR (the default) or a
+    /// read-only `.acfbin` mapping with bit-identical rows
+    pub data_backend: DataBackend,
     pub max_iterations: u64,
     pub max_seconds: Option<f64>,
     pub acf_params: AcfParams,
@@ -107,6 +111,7 @@ impl JobSpec {
             eps: 0.01,
             seed: 20140103,
             scale: Scale::default(),
+            data_backend: DataBackend::default(),
             max_iterations: 200_000_000,
             max_seconds: None,
             acf_params: AcfParams::default(),
@@ -199,8 +204,18 @@ impl JobSpec {
         }
     }
 
-    /// Resolve the dataset for this job from the registry.
+    /// Resolve the dataset for this job. A name ending in `.acfbin` is
+    /// opened as a file produced by `acf-cd ingest` (already mapped —
+    /// the backend flag is moot); anything else hits the synthetic
+    /// registry. With [`DataBackend::Mmap`] a registry dataset is
+    /// round-tripped through a temporary `.acfbin` file and served
+    /// from a read-only mapping ([`storage::remap_dataset`]): the rows
+    /// are bit-identical, but the matrix lives in the page cache
+    /// instead of the heap.
     pub fn load_dataset(&self) -> Result<Dataset> {
+        if self.dataset.ends_with(".acfbin") {
+            return storage::open_dataset(std::path::Path::new(&self.dataset));
+        }
         let ds = match self.problem {
             Problem::Lasso { .. } => {
                 registry::regression(&self.dataset, self.scale, self.seed).map(|(ds, _)| ds)
@@ -208,9 +223,13 @@ impl JobSpec {
             Problem::McSvm { .. } => registry::multiclass(&self.dataset, self.scale, self.seed),
             _ => registry::binary(&self.dataset, self.scale, self.seed),
         };
-        ds.ok_or_else(|| {
+        let ds = ds.ok_or_else(|| {
             anyhow!("unknown dataset '{}' for problem family {}", self.dataset, self.problem.family())
-        })
+        })?;
+        match self.data_backend {
+            DataBackend::Owned => Ok(ds),
+            DataBackend::Mmap => storage::remap_dataset(&ds),
+        }
     }
 }
 
@@ -283,6 +302,7 @@ impl JobOutcome {
                     None => Json::Null,
                 },
             )
+            .set("data_backend", Json::Str(self.spec.data_backend.name().into()))
             .set("converged", Json::Bool(self.result.status.converged()))
             .set("iterations", Json::Num(self.result.iterations as f64))
             .set("ops", Json::Num(self.result.ops as f64))
@@ -641,6 +661,40 @@ mod tests {
         let out = run_job(&spec).unwrap();
         assert!(out.result.status.converged());
         assert!(out.w_multi.is_some());
+    }
+
+    #[test]
+    fn mmap_backend_is_bit_identical_to_owned() {
+        // serial and sharded-sync: the mapped matrix must reproduce the
+        // owned run bit-for-bit (same rows ⇒ same arithmetic ⇒ same
+        // trajectory)
+        for shards in [0usize, 4] {
+            let mut owned = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+            owned.shards = shards;
+            let mut mapped = owned.clone();
+            mapped.data_backend = DataBackend::Mmap;
+            let a = run_job(&owned).unwrap();
+            let b = run_job(&mapped).unwrap();
+            assert_eq!(a.result.iterations, b.result.iterations, "shards={shards}");
+            assert_eq!(a.result.objective.to_bits(), b.result.objective.to_bits(), "shards={shards}");
+            assert_eq!(a.w, b.w, "shards={shards}");
+            assert_eq!(b.to_json().get("data_backend").unwrap().as_str(), Some("mmap"));
+            assert_eq!(a.to_json().get("data_backend").unwrap().as_str(), Some("owned"));
+        }
+    }
+
+    #[test]
+    fn acfbin_path_dataset_trains() {
+        // the output of `acf-cd ingest` is directly trainable: a dataset
+        // name ending in .acfbin bypasses the registry
+        let ds = crate::data::binary("rcv1-like", Scale(0.05), 20140103).unwrap();
+        let path = std::env::temp_dir().join(format!("acf_job_ds_{}.acfbin", std::process::id()));
+        storage::write_dataset(&ds, &path).unwrap();
+        let spec = quick_spec(Problem::Svm { c: 1.0 }, path.to_str().unwrap(), Policy::Acf);
+        let out = run_job(&spec);
+        let _ = std::fs::remove_file(&path);
+        let out = out.unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod registry;
 pub mod split;
 pub mod synth;
 
-pub use registry::{binary, multiclass, regression, Scale};
+pub use registry::{binary, multiclass, regression, DataBackend, Scale};
 pub use split::{apply, binary_accuracy, k_fold, multiclass_accuracy, train_test_split, Split};

@@ -10,6 +10,42 @@ use super::synth;
 use crate::sparse::Dataset;
 use crate::util::rng::Rng;
 
+/// Which storage backend a job resolves its training matrix into
+/// (CLI `--data-backend`). `Owned` is the in-memory default; `Mmap`
+/// round-trips the dataset through an `.acfbin` file and maps it
+/// read-only ([`crate::sparse::storage::remap_dataset`]), exercising
+/// the out-of-core path with bit-identical rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DataBackend {
+    /// Heap-resident CSR vectors (the classic path).
+    #[default]
+    Owned,
+    /// Read-only file mapping of the `.acfbin` serialization.
+    Mmap,
+}
+
+impl DataBackend {
+    /// Accepted `--data-backend` spellings.
+    pub const NAMES: [&'static str; 2] = ["owned", "mmap"];
+
+    /// Parse a CLI spelling (case-insensitive).
+    pub fn parse(text: &str) -> Option<DataBackend> {
+        match text.to_ascii_lowercase().as_str() {
+            "owned" => Some(DataBackend::Owned),
+            "mmap" => Some(DataBackend::Mmap),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            DataBackend::Owned => "owned",
+            DataBackend::Mmap => "mmap",
+        }
+    }
+}
+
 /// Scale multiplier applied to instance counts (1.0 = the default laptop
 /// scale, which is already reduced vs the paper).
 #[derive(Clone, Copy, Debug)]
@@ -220,6 +256,16 @@ mod tests {
         assert!(binary("nope", Scale(1.0), 1).is_none());
         assert!(regression("nope", Scale(1.0), 1).is_none());
         assert!(multiclass("nope", Scale(1.0), 1).is_none());
+    }
+
+    #[test]
+    fn data_backend_spellings_round_trip() {
+        for name in DataBackend::NAMES {
+            assert_eq!(DataBackend::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(DataBackend::parse("MMAP"), Some(DataBackend::Mmap));
+        assert_eq!(DataBackend::default(), DataBackend::Owned);
+        assert!(DataBackend::parse("disk").is_none());
     }
 
     #[test]

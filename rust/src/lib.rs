@@ -59,6 +59,27 @@
 //! into JSONL traces (`--trace-out`, `--trace-level`) that the `trace`
 //! subcommand renders as a stage-time breakdown and adaptation
 //! timeline.
+//!
+//! Data plane: [`sparse`] serves the training matrix from three
+//! interchangeable storage backends ([`sparse::CsrStorage`]) — owned
+//! heap vectors, a read-only mapping of an `.acfbin` file
+//! ([`sparse::storage`]; `--data-backend mmap`, datasets ≫ RAM), or
+//! bounded chunks streamed by the libsvm ingest ([`sparse::ingest`],
+//! `acf-cd ingest`) — all bit-identical behind the same
+//! [`sparse::Csr`]/[`sparse::RowView`] API.
+//!
+//! The module map, the end-to-end data-flow walkthrough, and the
+//! `.acfbin` format specification live in [`architecture`]
+//! (`docs/ARCHITECTURE.md` in the repository).
+
+/// Rendered copy of `docs/ARCHITECTURE.md`: module map, end-to-end
+/// data-flow walkthrough, and the `.acfbin` on-disk format spec.
+/// (Doc-only module — it exists so the architecture document ships with
+/// `cargo doc` and its description stays next to the code it maps.)
+#[cfg(doc)]
+pub mod architecture {
+    #![doc = include_str!("../../docs/ARCHITECTURE.md")]
+}
 
 pub mod acf;
 pub mod bench_util;

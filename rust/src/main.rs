@@ -4,6 +4,7 @@
 //!   train     one solver run (problem × dataset × policy × parameter)
 //!   sweep     parameter-grid comparison (ACF vs baselines), paper-style table
 //!   cv        k-fold cross-validation accuracy at one parameter point
+//!   ingest    stream a libsvm text file into the mappable .acfbin format
 //!   markov    §6 Markov-chain experiment (balance π, Figure-1 curves)
 //!   trace     summarize a --trace-out JSONL file (stage times, adaptation)
 //!   datasets  list the paper-analog dataset registry
@@ -15,20 +16,24 @@
 //!                --policies acf,perm --shrinking --eps 0.01
 //!   acf-cd sweep --problem svm --grid 0.1,1 --selector acf,uniform,bandit
 //!   acf-cd train --shards 4 --trace-out run.jsonl --trace-level events
+//!   acf-cd ingest data.libsvm data.acfbin
+//!   acf-cd train --dataset data.acfbin --shards 4 --data-backend mmap
 //!   acf-cd trace run.jsonl
 //!   acf-cd markov --n 5 --seed 7 --curves
 
 use acf_cd::coordinator::{self, JobSpec, Problem, SweepSpec};
-use acf_cd::data::{registry, Scale};
+use acf_cd::data::{registry, DataBackend, Scale};
 use acf_cd::markov;
 use acf_cd::obs::TraceLevel;
 use acf_cd::runtime::Runtime;
 use acf_cd::sched::Policy;
 use acf_cd::select::SelectorKind;
 use acf_cd::shard::Partitioner;
+use acf_cd::sparse::{ingest, storage};
 use acf_cd::util::cli::Args;
 use acf_cd::util::rng::Rng;
 use acf_cd::{anyhow, Result};
+use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
@@ -47,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("sweep") => cmd_sweep(args),
         Some("cv") => cmd_cv(args),
+        Some("ingest") => cmd_ingest(args),
         Some("markov") => cmd_markov(args),
         Some("trace") => cmd_trace(args),
         Some("datasets") => cmd_datasets(),
@@ -63,7 +69,7 @@ fn print_help() {
     println!(
         "acf-cd — Adaptive Coordinate Frequencies CD framework\n\
          \n\
-         subcommands: train | sweep | cv | markov | trace | datasets | info\n\
+         subcommands: train | sweep | cv | ingest | markov | trace | datasets | info\n\
          common flags: --problem svm|lasso|logreg|mcsvm  --dataset <name>\n\
          \u{20}             --policy acf|perm|cyclic|uniform|hier  --c/--lambda <v>\n\
          \u{20}             --eps <v>  --scale <f>  --seed <n>  --workers <n>\n\
@@ -94,6 +100,16 @@ fn print_help() {
          \u{20}             how many versions a merge/Δf report may lag\n\
          \u{20}             (default 2; 'auto' tunes τ online from the observed\n\
          \u{20}             stale-drop/reject rate)\n\
+         data plane:   --data-backend owned|mmap picks the training-matrix\n\
+         \u{20}             storage: owned = heap CSR (default); mmap round-\n\
+         \u{20}             trips through a read-only .acfbin mapping with\n\
+         \u{20}             bit-identical rows (page cache instead of heap).\n\
+         \u{20}             `acf-cd ingest <in.libsvm> <out.acfbin>` streams a\n\
+         \u{20}             libsvm file into that format in bounded row chunks\n\
+         \u{20}             (--chunk-rows <n>, --min-features <d>); with\n\
+         \u{20}             --dataset <name> it serializes a registry dataset\n\
+         \u{20}             instead. A --dataset ending in .acfbin trains\n\
+         \u{20}             straight from the file\n\
          observability: --trace-out <path> records the run as first-party\n\
          \u{20}             JSONL (meta line, span/event lines, 1 s metrics\n\
          \u{20}             windows, summary); --trace-level off|summary|spans|\n\
@@ -108,7 +124,10 @@ fn print_help() {
          \u{20}             only reads solver state\n\
          selector sweeps: `sweep --selector a,b,...` compares coordinate-\n\
          \u{20}             selection rules (grid × selectors, all on the ACF\n\
-         \u{20}             policy) instead of --policies\n\
+         \u{20}             policy) instead of --policies; `sweep --trace-out\n\
+         \u{20}             <p>` writes one file per grid cell, <stem>.<row>\n\
+         \u{20}             .jsonl (row = grid-major index, stem = <p> minus a\n\
+         \u{20}             trailing .jsonl)\n\
          run `cargo bench` for the paper's tables/figures and\n\
          `cargo bench --bench scaling_shards` for the shard-scaling curve."
     );
@@ -165,6 +184,13 @@ fn parse_spec_inner(args: &Args, parse_selector: bool) -> Result<JobSpec> {
     spec.eps = args.f64_or("eps", 0.01)?;
     spec.seed = args.u64_or("seed", 20140103)?;
     spec.scale = Scale(args.f64_or("scale", 1.0)?);
+    // --data-backend: how the training matrix is stored (sparse/ data
+    // plane) — heap CSR, or a read-only .acfbin mapping
+    if let Some(v) = args.get("data-backend") {
+        spec.data_backend = DataBackend::parse(v).ok_or_else(|| {
+            anyhow!("--data-backend: expected one of {}", DataBackend::NAMES.join("|"))
+        })?;
+    }
     spec.max_iterations = args.u64_or("max-iterations", 200_000_000)?;
     if let Some(s) = args.get("max-seconds") {
         spec.max_seconds = Some(s.parse()?);
@@ -214,11 +240,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let spec = parse_spec(args)?;
     let ds = spec.load_dataset()?;
     eprintln!(
-        "dataset {}: {} instances × {} features, {} nnz",
+        "dataset {}: {} instances × {} features, {} nnz ({} storage)",
         ds.name,
         ds.n_instances(),
         ds.n_features(),
-        ds.nnz()
+        ds.nnz(),
+        ds.x.storage_kind()
     );
     if spec.uses_sharded_engine() {
         eprintln!(
@@ -288,7 +315,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // `sweep --selector a,b,...` switches the comparison axis from
     // policies to coordinate-selection rules, so the single-override
     // parsing in parse_spec is skipped here.
-    let mut base = parse_spec_inner(args, false)?;
+    let base = parse_spec_inner(args, false)?;
     let selectors: Vec<SelectorKind> = args
         .str_list("selector")
         .unwrap_or_default()
@@ -307,13 +334,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
              heuristic owns its permutation order)"
         ));
     }
-    if base.trace_level != TraceLevel::Off || base.trace_out.is_some() {
+    if let Some(p) = &base.trace_out {
+        let stem = p.strip_suffix(".jsonl").unwrap_or(p);
         eprintln!(
-            "note: tracing applies to single `train` runs; a sweep's parallel jobs would \
-             clobber one trace file — --trace-out/--trace-level ignored"
+            "note: a sweep runs its jobs concurrently, so each grid cell writes its own \
+             trace file: {stem}.<row>.jsonl (row = grid-major outcome index)"
         );
-        base.trace_level = TraceLevel::Off;
-        base.trace_out = None;
     }
     let grid = args.f64_list("grid")?.unwrap_or_else(|| vec![0.01, 0.1, 1.0, 10.0]);
     let policies: Vec<Policy> = args
@@ -381,6 +407,44 @@ fn cmd_cv(args: &Args) -> Result<()> {
         args.usize_or("workers", acf_cd::util::threadpool::default_workers())?,
     )?;
     println!("{k}-fold CV accuracy: {:.2}%", 100.0 * acc);
+    Ok(())
+}
+
+/// `acf-cd ingest <input.libsvm> <output.acfbin>` — stream a libsvm
+/// text file into the mappable on-disk format in bounded row chunks
+/// (the matrix is never fully materialized in memory). With
+/// `--dataset <name>` a synthetic registry dataset is serialized
+/// instead, resolved like `train` (--problem/--scale/--seed).
+fn cmd_ingest(args: &Args) -> Result<()> {
+    if args.has("dataset") {
+        let out = match args.positional.first() {
+            Some(p) => p,
+            None => return Err(anyhow!("usage: acf-cd ingest --dataset <name> <out.acfbin>")),
+        };
+        let spec = parse_spec(args)?;
+        let ds = spec.load_dataset()?;
+        let sum = storage::write_dataset(&ds, Path::new(out))?;
+        println!(
+            "wrote {out}: {} rows × {} cols, {} nnz, {} bytes",
+            sum.rows, sum.cols, sum.nnz, sum.bytes
+        );
+        return Ok(());
+    }
+    let (src, dst) = match (args.positional.first(), args.positional.get(1)) {
+        (Some(s), Some(d)) => (s, d),
+        _ => return Err(anyhow!("usage: acf-cd ingest <input.libsvm> <output.acfbin>")),
+    };
+    let min_features = args.usize_or("min-features", 0)?;
+    let chunk_rows = args.usize_or("chunk-rows", 0)?;
+    let rep = ingest::ingest_libsvm(Path::new(src), Path::new(dst), min_features, chunk_rows)?;
+    println!("ingested {src}: {} rows × {} cols, {} nnz", rep.rows, rep.cols, rep.nnz);
+    println!(
+        "{:.1} MB read in {:.2} s ({:.1} MB/s); wrote {} bytes to {dst}",
+        rep.input_bytes as f64 / 1e6,
+        rep.seconds,
+        rep.mb_per_s,
+        rep.output_bytes
+    );
     Ok(())
 }
 

@@ -22,6 +22,7 @@
 //! | `park`          | spans  | merger / driver   | shard sent to the parked state |
 //! | `merge_wait`    | spans  | merger            | nanos the merger spent idle waiting for submissions |
 //! | `selector`      | events | worker / serial   | shard (−1 = serial run), entropy, p_min, p_max of the selector distribution |
+//! | `data_extent`   | spans  | driver            | shard, bytes of matrix data its rows span, distinct 4 KiB pages they touch |
 //!
 //! # Levels
 //!
@@ -198,6 +199,11 @@ pub enum Event {
     MergeWait { t: u64, nanos: u64 },
     /// Periodic probe of a selector distribution (natural-log entropy).
     SelectorState { t: u64, shard: u32, entropy: f64, p_min: f64, p_max: f64 },
+    /// Data-locality probe emitted once per run by the sharded driver:
+    /// the matrix bytes a shard's coordinate rows span and the distinct
+    /// 4 KiB pages they touch (working-set size under `--data-backend
+    /// mmap`, where pages fault in on first touch).
+    DataExtent { t: u64, shard: u32, bytes: u64, pages: u64 },
 }
 
 const TAG_SNAPSHOT_TAKE: u64 = 1;
@@ -209,6 +215,7 @@ const TAG_TAU: u64 = 6;
 const TAG_PARK: u64 = 7;
 const TAG_MERGE_WAIT: u64 = 8;
 const TAG_SELECTOR: u64 = 9;
+const TAG_DATA_EXTENT: u64 = 10;
 
 impl Event {
     /// Nanoseconds since the collector started.
@@ -222,7 +229,8 @@ impl Event {
             | Event::Tau { t, .. }
             | Event::Park { t, .. }
             | Event::MergeWait { t, .. }
-            | Event::SelectorState { t, .. } => t,
+            | Event::SelectorState { t, .. }
+            | Event::DataExtent { t, .. } => t,
         }
     }
 
@@ -238,6 +246,7 @@ impl Event {
             Event::Park { .. } => "park",
             Event::MergeWait { .. } => "merge_wait",
             Event::SelectorState { .. } => "selector",
+            Event::DataExtent { .. } => "data_extent",
         }
     }
 
@@ -265,6 +274,7 @@ impl Event {
             Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
                 (TAG_SELECTOR, shard, entropy.to_bits(), p_min.to_bits(), p_max.to_bits())
             }
+            Event::DataExtent { shard, bytes, pages, .. } => (TAG_DATA_EXTENT, shard, bytes, pages, 0),
         };
         [tag | (u64::from(shard) << 32), self.t(), a, b, c, 0]
     }
@@ -297,6 +307,7 @@ impl Event {
                 p_min: f64::from_bits(b),
                 p_max: f64::from_bits(c),
             }),
+            TAG_DATA_EXTENT => Some(Event::DataExtent { t, shard, bytes: a, pages: b }),
             _ => None,
         }
     }
@@ -692,7 +703,7 @@ impl MetricsSnapshot {
                 Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
                     snap.selector.push(SelectorPoint { t: secs, shard, entropy, p_min, p_max });
                 }
-                Event::SnapshotTake { .. } | Event::Submit { .. } => {}
+                Event::SnapshotTake { .. } | Event::Submit { .. } | Event::DataExtent { .. } => {}
             }
         }
         snap
@@ -917,6 +928,7 @@ mod tests {
             Event::Park { t: 1_500, shard: 1 },
             Event::MergeWait { t: 1_600, nanos: 400 },
             Event::SelectorState { t: 1_700, shard: 0, entropy: 0.69, p_min: 0.4, p_max: 0.6 },
+            Event::DataExtent { t: 1_800, shard: 1, bytes: 12_288, pages: 4 },
         ]
     }
 

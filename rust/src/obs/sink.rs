@@ -66,6 +66,11 @@ pub fn event_to_json(ev: &Event) -> Json {
                 .set("p_min", json::num(p_min))
                 .set("p_max", json::num(p_max));
         }
+        Event::DataExtent { shard, bytes, pages, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("bytes", json::num(bytes as f64))
+                .set("pages", json::num(pages as f64));
+        }
     }
     j
 }
@@ -145,6 +150,12 @@ pub fn event_from_json(j: &Json) -> Result<Option<Event>> {
             p_min: field_f64(j, "p_min")?,
             p_max: field_f64(j, "p_max")?,
         },
+        "data_extent" => Event::DataExtent {
+            t,
+            shard: field_shard(j)?,
+            bytes: field_u64(j, "bytes")?,
+            pages: field_u64(j, "pages")?,
+        },
         other => return Err(Error::msg(format!("unknown trace event kind '{other}'"))),
     };
     Ok(Some(ev))
@@ -219,6 +230,7 @@ mod tests {
             Event::MergeWait { t: 1_400, nanos: 50_123 },
             Event::SelectorState { t: 1_500, shard: 0, entropy: 1.386_294, p_min: 0.05, p_max: 0.4 },
             Event::SelectorState { t: 1_600, shard: NO_SHARD, entropy: 0.5, p_min: 0.1, p_max: 0.9 },
+            Event::DataExtent { t: 1_700, shard: 2, bytes: 36_864, pages: 10 },
         ]
     }
 

@@ -417,6 +417,14 @@ pub trait ShardProblem: Sync {
     /// Separable objective contribution of one coordinate block
     /// (λ|w_j|, −α_i, entropy terms, −Σ_k α_{ik}).
     fn coord_objective(&self, i: usize, values: &[f64]) -> f64;
+
+    /// Byte / page footprint of the matrix rows this shard's coordinate
+    /// ids touch — the `data_extent` locality probe emitted once per run
+    /// at `spans` level. `None` (the default) for problems without a
+    /// natural coordinate-to-row mapping.
+    fn shard_extent(&self, _ids: &[u32]) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Result of a sharded run: final coordinate values (global indexing;
@@ -947,10 +955,27 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
     /// [`crate::util::error::ErrorKind::ShardWorker`] if a shard's
     /// worker panics.
     pub fn run(&self) -> Result<ShardedOutcome> {
+        self.emit_data_extents();
         match self.spec.merge {
             MergeMode::Sync => self.run_sync(),
             MergeMode::Async { staleness_bound, adaptive } => {
                 self.run_async(staleness_bound, adaptive)
+            }
+        }
+    }
+
+    /// One `data_extent` record per shard (driver ring, `spans` level):
+    /// the matrix bytes and distinct pages the shard's rows span. A
+    /// locality profile of the partition, and under the mapped backend
+    /// an upper bound on the pages each shard faults in.
+    fn emit_data_extents(&self) {
+        let em = obs::emitter(self.spec.obs.as_deref(), self.partition.n_shards());
+        if !em.spans() {
+            return;
+        }
+        for k in 0..self.partition.n_shards() {
+            if let Some((bytes, pages)) = self.problem.shard_extent(self.partition.shard(k)) {
+                em.emit(Event::DataExtent { t: em.now(), shard: k as u32, bytes, pages });
             }
         }
     }

@@ -92,6 +92,12 @@ impl ShardProblem for ShardedLasso {
     fn coord_objective(&self, _j: usize, values: &[f64]) -> f64 {
         self.lambda * values[0].abs()
     }
+
+    fn shard_extent(&self, ids: &[u32]) -> Option<(u64, u64)> {
+        // feature-sharded: a shard touches the columns of X it owns,
+        // i.e. rows of the transposed view
+        Some(self.prob.xt.rows_extent(ids))
+    }
 }
 
 /// Solve the LASSO on the sharded engine; drop-in analog of

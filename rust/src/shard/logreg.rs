@@ -113,6 +113,10 @@ impl ShardProblem for ShardedLogReg<'_> {
     fn coord_objective(&self, _i: usize, values: &[f64]) -> f64 {
         ent(values[0], self.c)
     }
+
+    fn shard_extent(&self, ids: &[u32]) -> Option<(u64, u64)> {
+        Some(self.ds.x.rows_extent(ids))
+    }
 }
 
 /// Solve dual logistic regression on the sharded engine; drop-in analog

@@ -190,6 +190,10 @@ impl ShardProblem for ShardedMcSvm<'_> {
         // CD never writes it and damped merges average two zeros)
         -values.iter().sum::<f64>()
     }
+
+    fn shard_extent(&self, ids: &[u32]) -> Option<(u64, u64)> {
+        Some(self.ds.x.rows_extent(ids))
+    }
 }
 
 /// Solve the WW multi-class SVM on the sharded engine; drop-in analog of

@@ -96,6 +96,10 @@ impl ShardProblem for ShardedSvm<'_> {
     fn coord_objective(&self, _i: usize, values: &[f64]) -> f64 {
         -values[0]
     }
+
+    fn shard_extent(&self, ids: &[u32]) -> Option<(u64, u64)> {
+        Some(self.ds.x.rows_extent(ids))
+    }
 }
 
 /// Solve the SVM dual on the sharded engine; drop-in analog of

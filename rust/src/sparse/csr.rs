@@ -1,46 +1,116 @@
 //! Compressed sparse row (CSR) matrix — the instance-major layout used by
 //! the dual solvers (SVM, logistic regression, multi-class SVM), where a
 //! CD step on dual variable `α_i` touches exactly row `i`.
+//!
+//! # Storage backends
+//!
+//! Since the out-of-core data plane landed, a [`Csr`] is a thin facade
+//! over one of three [`CsrStorage`] backends:
+//!
+//! * **Owned** — the classic three-array layout (`indptr`/`indices`/
+//!   `values` in `Vec`s). Produced by [`Csr::from_rows`] /
+//!   [`Csr::from_parts`] and the in-memory libsvm parser.
+//! * **Mapped** — zero-copy views over the sections of a memory-mapped
+//!   `.acfbin` file ([`crate::sparse::storage`]). Row access costs two
+//!   `u64` loads from the mapped row-pointer section plus two slice
+//!   constructions; the kernel pages the value/index sections in on
+//!   demand, so datasets much larger than RAM stay trainable and cold
+//!   starts skip parsing entirely.
+//! * **Chunked** — rows grouped into fixed-size chunks, each chunk its
+//!   own small three-array block. This is the bounded-memory shape the
+//!   streaming libsvm parser ([`crate::sparse::ingest`]) builds, and a
+//!   backend in its own right for callers that want owned data without
+//!   one giant allocation per array.
+//!
+//! Every backend serves rows through the same [`RowView`] type, so the
+//! solvers, kernels, and the sharded engine are backend-oblivious; the
+//! round-trip property tests in `storage`/`ingest` pin mapped and
+//! chunked rows bit-identical to owned rows.
+//!
+//! ```
+//! use acf_cd::sparse::Csr;
+//! let m = Csr::from_rows(3, vec![vec![(0, 1.0), (2, 2.0)], vec![], vec![(1, 4.0)]]);
+//! assert_eq!(m.storage_kind(), "owned");
+//! let chunked = m.to_chunked(2);
+//! assert_eq!(chunked.storage_kind(), "chunked");
+//! assert_eq!(chunked, m); // equality is structural, backend-oblivious
+//! assert_eq!(chunked.row(0).dot_dense(&[1.0, 1.0, 1.0]), 3.0);
+//! ```
 
 use super::kernels;
-use std::sync::OnceLock;
+use crate::util::mmap::{Mmap, PAGE_SIZE};
+use std::sync::{Arc, OnceLock};
 
-/// CSR sparse matrix with f64 values and usize column indices.
+/// CSR sparse matrix with f64 values and u32 column indices.
 ///
-/// Invariants: `indptr.len() == rows + 1`, `indptr` non-decreasing,
-/// `indices[indptr[r]..indptr[r+1]]` strictly increasing per row, all
+/// Invariants (upheld by every backend, validated at construction):
+/// row pointers non-decreasing with `indptr[0] == 0` and
+/// `indptr[rows] == nnz`, `indices` strictly increasing per row, all
 /// `indices[k] < cols`.
 #[derive(Clone, Debug)]
 pub struct Csr {
     rows: usize,
     cols: usize,
-    indptr: Vec<usize>,
-    indices: Vec<u32>,
-    values: Vec<f64>,
+    storage: CsrStorage,
     /// Lazily-computed per-row squared norms (`Q_ii` for the dual
     /// solvers, column norms for the transposed LASSO view). `Csr` has
-    /// no mutating methods, so the cache can never go stale.
+    /// no mutating methods, so the cache can never go stale. For mapped
+    /// matrices the cache is pre-seeded from the `.acfbin` norms
+    /// section, which was written with the same kernel at ingest time —
+    /// bit-identical to recomputation, without touching the value pages.
     norms_sq: OnceLock<Vec<f64>>,
 }
 
-// Structural equality only — the norm cache is derived state.
+/// The physical layout behind a [`Csr`] — see the module docs for when
+/// each backend is produced.
+#[derive(Clone, Debug)]
+pub enum CsrStorage {
+    /// Heap-owned three-array CSR.
+    Owned { indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64> },
+    /// Zero-copy sections of a memory-mapped `.acfbin` file.
+    Mapped(MappedCsr),
+    /// Fixed-size row chunks, each an independent owned block.
+    Chunked(ChunkedCsr),
+}
+
+// Structural equality only — backends and the norm cache are physical
+// details; two matrices are equal when every row serves the same
+// indices and (bit-identical) values.
 impl PartialEq for Csr {
     fn eq(&self, other: &Csr) -> bool {
         self.rows == other.rows
             && self.cols == other.cols
-            && self.indptr == other.indptr
-            && self.indices == other.indices
-            && self.values == other.values
+            && self.nnz() == other.nnz()
+            && (0..self.rows).all(|r| {
+                let a = self.row(r);
+                let b = other.row(r);
+                a.indices == b.indices && a.values == b.values
+            })
     }
 }
 
 /// Borrowed view of one sparse row.
 ///
+/// # Safety contract
+///
 /// Invariant: `indices` is strictly increasing (inherited from the
 /// [`Csr`] row it was sliced from, or validated by [`RowView::new`]).
-/// The hot-path methods rely on it for their O(1) bounds proof — see
-/// [`crate::sparse::kernels`] — so the fields are private: every
-/// `RowView` reachable from safe code upholds the invariant.
+/// The hot-path methods rely on it for their O(1) bounds proof — the
+/// last index bounds all of them — before calling the unchecked
+/// gather/scatter kernels in [`crate::sparse::kernels`]. The fields are
+/// private so every `RowView` reachable from safe code upholds the
+/// invariant: `Csr` construction validates it for all three storage
+/// backends (including untrusted mapped files), and hand-built views
+/// must pass [`RowView::new`].
+///
+/// ```
+/// use acf_cd::sparse::RowView;
+/// let row = RowView::new(&[0, 3, 7], &[1.0, -2.0, 0.5]);
+/// let mut w = vec![0.0; 8];
+/// row.axpy_into(2.0, &mut w);
+/// assert_eq!(w[3], -4.0);
+/// assert_eq!(row.dot_dense(&w), 2.0 * row.norm_sq());
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct RowView<'a> {
     indices: &'a [u32],
@@ -127,38 +197,310 @@ impl<'a> RowView<'a> {
     }
 }
 
+/// Sort a triplet row by column and merge duplicate columns by
+/// summation, preserving explicit zeros. This is the **single**
+/// normalization every row-producing path applies — [`Csr::from_rows`],
+/// the in-memory libsvm parser, and the streaming `.acfbin` ingest — so
+/// the same input text yields bit-identical rows no matter which path
+/// parsed it.
+pub(crate) fn normalize_row(mut row: Vec<(usize, f64)>) -> (Vec<u32>, Vec<f64>) {
+    row.sort_unstable_by_key(|&(c, _)| c);
+    let mut indices = Vec::with_capacity(row.len());
+    let mut values: Vec<f64> = Vec::with_capacity(row.len());
+    let mut last: Option<usize> = None;
+    for (c, v) in row {
+        if last == Some(c) {
+            // duplicate column: accumulate
+            *values.last_mut().unwrap() += v;
+        } else {
+            debug_assert!(c <= u32::MAX as usize, "column index {c} exceeds u32");
+            indices.push(c as u32);
+            values.push(v);
+            last = Some(c);
+        }
+    }
+    (indices, values)
+}
+
+/// Zero-copy CSR sections of a memory-mapped `.acfbin` file.
+///
+/// Holds raw pointers into the mapping alongside the [`Arc<Mmap>`] that
+/// keeps the bytes alive — the mapping's buffer address is stable for
+/// its lifetime (a kernel mapping never moves; the heap fallback's
+/// buffer is owned by the `Mmap` and never reallocated), so the
+/// pointers remain valid for as long as the `Arc` does. Cloning is
+/// cheap: an `Arc` bump plus pointer copies.
+///
+/// Construction ([`MappedCsr::new`]) performs the same release-grade
+/// O(nnz) invariant validation as [`Csr::from_parts`]; a mapped file is
+/// untrusted input, and the unchecked kernels are only sound over rows
+/// whose indices are strictly increasing and bounded by `cols`.
+#[derive(Clone, Debug)]
+pub struct MappedCsr {
+    /// keeps the mapped bytes alive; pointers below point into it
+    map: Arc<Mmap>,
+    indptr: *const u64,
+    indices: *const u32,
+    values: *const f64,
+    rows: usize,
+    nnz: usize,
+    /// byte offsets of the sections within the map (page-locality probes)
+    values_off: usize,
+    indices_off: usize,
+}
+
+// SAFETY: the pointers target the immutable buffer owned by `map`
+// (read-only for the lifetime of the Arc — see `Mmap`'s contract), so
+// shared references across threads are sound.
+unsafe impl Send for MappedCsr {}
+unsafe impl Sync for MappedCsr {}
+
+impl MappedCsr {
+    /// Build zero-copy sections over `map`, validating layout (bounds,
+    /// 8-/4-byte alignment of each section) and the full CSR structural
+    /// invariants. Errors name the failing byte offset — the file is
+    /// untrusted input.
+    pub(crate) fn new(
+        map: Arc<Mmap>,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        indptr_off: usize,
+        values_off: usize,
+        indices_off: usize,
+    ) -> Result<MappedCsr, String> {
+        let total = map.len();
+        // checked arithmetic throughout: the header fields are untrusted,
+        // and a wrapped size here would defeat the bounds proof below
+        let need = |off: usize, bytes: Option<usize>, what: &str| -> Result<(), String> {
+            match bytes.and_then(|b| off.checked_add(b)) {
+                Some(end) if end <= total => Ok(()),
+                _ => Err(format!("{what} section at byte offset {off} overruns the {total}-byte mapping")),
+            }
+        };
+        need(indptr_off, rows.checked_add(1).and_then(|r| r.checked_mul(8)), "row-pointer")?;
+        need(values_off, nnz.checked_mul(8), "values")?;
+        need(indices_off, nnz.checked_mul(4), "indices")?;
+        let base = map.as_bytes().as_ptr();
+        debug_assert_eq!(base as usize % 8, 0, "Mmap guarantees 8-aligned base");
+        for (off, align, what) in
+            [(indptr_off, 8, "row-pointer"), (values_off, 8, "values"), (indices_off, 4, "indices")]
+        {
+            if off % align != 0 {
+                return Err(format!("{what} section offset {off} is not {align}-byte aligned"));
+            }
+        }
+        // SAFETY: bounds and alignment of every section were just
+        // proven against the live mapping.
+        let m = unsafe {
+            MappedCsr {
+                indptr: base.add(indptr_off) as *const u64,
+                values: base.add(values_off) as *const f64,
+                indices: base.add(indices_off) as *const u32,
+                map,
+                rows,
+                nnz,
+                values_off,
+                indices_off,
+            }
+        };
+        m.validate(cols, indptr_off, indices_off)?;
+        Ok(m)
+    }
+
+    /// Release-grade O(nnz) structural validation (the mapped analog of
+    /// `Csr::from_parts`' asserts), with byte offsets in every error.
+    fn validate(&self, cols: usize, indptr_off: usize, indices_off: usize) -> Result<(), String> {
+        let ip = |r: usize| -> u64 {
+            // SAFETY: r <= rows, and the section holds rows+1 u64s.
+            unsafe { *self.indptr.add(r) }
+        };
+        if ip(0) != 0 {
+            return Err(format!("indptr[0] = {} (expected 0) at byte offset {indptr_off}", ip(0)));
+        }
+        if ip(self.rows) != self.nnz as u64 {
+            return Err(format!(
+                "indptr[{}] = {} does not match nnz {} (byte offset {})",
+                self.rows,
+                ip(self.rows),
+                self.nnz,
+                indptr_off + self.rows * 8
+            ));
+        }
+        for r in 0..self.rows {
+            let (lo, hi) = (ip(r), ip(r + 1));
+            if lo > hi {
+                return Err(format!(
+                    "indptr decreasing at row {r} (byte offset {})",
+                    indptr_off + (r + 1) * 8
+                ));
+            }
+            if hi > self.nnz as u64 {
+                return Err(format!(
+                    "indptr[{}] = {hi} exceeds nnz {} (byte offset {})",
+                    r + 1,
+                    self.nnz,
+                    indptr_off + (r + 1) * 8
+                ));
+            }
+            let mut prev: Option<u32> = None;
+            for k in lo..hi {
+                // SAFETY: k < nnz, proven by the indptr checks above.
+                let j = unsafe { *self.indices.add(k as usize) };
+                if prev.is_some_and(|p| p >= j) {
+                    return Err(format!(
+                        "row {r}: indices not strictly increasing (byte offset {})",
+                        indices_off + k as usize * 4
+                    ));
+                }
+                if j as usize >= cols {
+                    return Err(format!(
+                        "row {r}: column {j} out of bounds for {cols} columns (byte offset {})",
+                        indices_off + k as usize * 4
+                    ));
+                }
+                prev = Some(j);
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn bounds(&self, r: usize) -> (usize, usize) {
+        assert!(r < self.rows, "row {r} out of bounds ({} rows)", self.rows);
+        // SAFETY: r + 1 <= rows; the section holds rows + 1 entries, and
+        // construction proved every entry <= nnz.
+        unsafe { (*self.indptr.add(r) as usize, *self.indptr.add(r + 1) as usize) }
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> RowView<'_> {
+        let (lo, hi) = self.bounds(r);
+        // SAFETY: lo <= hi <= nnz (validated at construction), and the
+        // sections hold nnz elements inside the live mapping.
+        unsafe {
+            RowView {
+                indices: std::slice::from_raw_parts(self.indices.add(lo), hi - lo),
+                values: std::slice::from_raw_parts(self.values.add(lo), hi - lo),
+            }
+        }
+    }
+
+    /// The mapping this matrix reads from (backing kind, page counts).
+    pub fn map(&self) -> &Mmap {
+        &self.map
+    }
+}
+
+/// Owned CSR rows grouped into fixed-size chunks — the bounded-memory
+/// layout the streaming libsvm parser builds (each chunk becomes one
+/// allocation instead of three matrix-sized ones).
+#[derive(Clone, Debug)]
+pub struct ChunkedCsr {
+    /// rows per chunk (every chunk but the last holds exactly this many)
+    chunk_rows: usize,
+    rows: usize,
+    nnz: usize,
+    chunks: Vec<CsrChunk>,
+}
+
+#[derive(Clone, Debug)]
+struct CsrChunk {
+    /// global nnz offset of this chunk's first entry (extent accounting)
+    base_nnz: usize,
+    /// chunk-local row pointers, `indptr[0] == 0`
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl ChunkedCsr {
+    pub(crate) fn new(chunk_rows: usize) -> ChunkedCsr {
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+        ChunkedCsr { chunk_rows, rows: 0, nnz: 0, chunks: Vec::new() }
+    }
+
+    /// Append one row. Release-grade validation, as in
+    /// [`Csr::from_parts`]: chunked rows feed the unchecked kernels too.
+    pub(crate) fn push_row(&mut self, indices: &[u32], values: &[f64]) {
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        assert!(
+            indices.windows(2).all(|p| p[0] < p[1]),
+            "row indices must be strictly increasing"
+        );
+        if self.rows % self.chunk_rows == 0 {
+            self.chunks.push(CsrChunk {
+                base_nnz: self.nnz,
+                indptr: vec![0],
+                indices: Vec::new(),
+                values: Vec::new(),
+            });
+        }
+        let chunk = self.chunks.last_mut().expect("chunk pushed above");
+        chunk.indices.extend_from_slice(indices);
+        chunk.values.extend_from_slice(values);
+        chunk.indptr.push(chunk.indices.len());
+        self.rows += 1;
+        self.nnz += indices.len();
+    }
+
+    #[inline]
+    fn locate(&self, r: usize) -> (&CsrChunk, usize) {
+        assert!(r < self.rows, "row {r} out of bounds ({} rows)", self.rows);
+        (&self.chunks[r / self.chunk_rows], r % self.chunk_rows)
+    }
+
+    #[inline]
+    fn bounds(&self, r: usize) -> (usize, usize) {
+        let (chunk, local) = self.locate(r);
+        (chunk.base_nnz + chunk.indptr[local], chunk.base_nnz + chunk.indptr[local + 1])
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> RowView<'_> {
+        let (chunk, local) = self.locate(r);
+        let lo = chunk.indptr[local];
+        let hi = chunk.indptr[local + 1];
+        RowView { indices: &chunk.indices[lo..hi], values: &chunk.values[lo..hi] }
+    }
+
+    /// Number of chunks (diagnostics).
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
 impl Csr {
     /// Build from triplet rows: `rows_data[r]` is a list of (col, value)
     /// pairs (will be sorted and deduplicated by summation).
+    ///
+    /// ```
+    /// use acf_cd::sparse::Csr;
+    /// let m = Csr::from_rows(4, vec![vec![(2, 1.0), (0, 3.0)], vec![(1, -1.0)]]);
+    /// assert_eq!(m.row(0).indices(), &[0, 2]); // sorted per row
+    /// assert_eq!(m.nnz(), 3);
+    /// ```
     pub fn from_rows(cols: usize, rows_data: Vec<Vec<(usize, f64)>>) -> Csr {
         let rows = rows_data.len();
         let mut indptr = Vec::with_capacity(rows + 1);
         let mut indices = Vec::new();
         let mut values = Vec::new();
         indptr.push(0);
-        for mut row in rows_data {
-            row.sort_unstable_by_key(|&(c, _)| c);
-            let mut last: Option<usize> = None;
-            for (c, v) in row {
+        for row in rows_data {
+            for &(c, _) in &row {
                 assert!(c < cols, "column index {c} out of bounds ({cols})");
-                if last == Some(c) {
-                    // duplicate column: accumulate
-                    *values.last_mut().unwrap() += v;
-                } else if v != 0.0 {
-                    indices.push(c as u32);
-                    values.push(v);
-                    last = Some(c);
-                } else {
-                    last = Some(c);
-                    // skip explicit zeros, but remember the column so a
-                    // duplicate still merges correctly
-                    indices.push(c as u32);
-                    values.push(0.0);
-                }
             }
+            let (ri, rv) = normalize_row(row);
+            indices.extend_from_slice(&ri);
+            values.extend_from_slice(&rv);
             indptr.push(indices.len());
         }
-        Csr { rows, cols, indptr, indices, values, norms_sq: OnceLock::new() }
+        Csr {
+            rows,
+            cols,
+            storage: CsrStorage::Owned { indptr, indices, values },
+            norms_sq: OnceLock::new(),
+        }
     }
 
     /// Build from raw parts. Validated with release-grade asserts
@@ -176,11 +518,63 @@ impl Csr {
         assert_eq!(indptr.len(), rows + 1, "indptr length");
         assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
         assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "indptr endpoint");
-        let m = Csr { rows, cols, indptr, indices, values, norms_sq: OnceLock::new() };
+        let m = Csr {
+            rows,
+            cols,
+            storage: CsrStorage::Owned { indptr, indices, values },
+            norms_sq: OnceLock::new(),
+        };
         if let Err(e) = m.check_invariants() {
             panic!("Csr::from_parts: invalid structure: {e}");
         }
         m
+    }
+
+    /// Wrap a validated storage backend. `norms` pre-seeds the
+    /// squared-norm cache (the `.acfbin` open path, which loads the
+    /// norms written at ingest instead of touching every value page).
+    ///
+    /// Callers must have validated the backend's structural invariants
+    /// ([`MappedCsr::new`] and [`ChunkedCsr::push_row`] both do).
+    pub(crate) fn from_storage(
+        rows: usize,
+        cols: usize,
+        storage: CsrStorage,
+        norms: Option<Vec<f64>>,
+    ) -> Csr {
+        let norms_sq = OnceLock::new();
+        if let Some(n) = norms {
+            debug_assert_eq!(n.len(), rows, "norms length");
+            let _ = norms_sq.set(n);
+        }
+        Csr { rows, cols, storage, norms_sq }
+    }
+
+    /// Re-layout into the chunked backend with `chunk_rows` rows per
+    /// chunk. Content (and therefore equality, norms, kernel results)
+    /// is unchanged — only the physical grouping differs.
+    pub fn to_chunked(&self, chunk_rows: usize) -> Csr {
+        let mut chunked = ChunkedCsr::new(chunk_rows);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            chunked.push_row(row.indices, row.values);
+        }
+        Csr::from_storage(self.rows, self.cols, CsrStorage::Chunked(chunked), None)
+    }
+
+    /// The backing storage (backend-specific inspection; row access
+    /// goes through [`Csr::row`]).
+    pub fn storage(&self) -> &CsrStorage {
+        &self.storage
+    }
+
+    /// `"owned"`, `"mapped"`, or `"chunked"` — for reports and logs.
+    pub fn storage_kind(&self) -> &'static str {
+        match &self.storage {
+            CsrStorage::Owned { .. } => "owned",
+            CsrStorage::Mapped(_) => "mapped",
+            CsrStorage::Chunked(_) => "chunked",
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -192,18 +586,84 @@ impl Csr {
     }
 
     pub fn nnz(&self) -> usize {
-        self.indices.len()
+        match &self.storage {
+            CsrStorage::Owned { indices, .. } => indices.len(),
+            CsrStorage::Mapped(m) => m.nnz,
+            CsrStorage::Chunked(c) => c.nnz,
+        }
     }
 
     #[inline]
     pub fn row(&self, r: usize) -> RowView<'_> {
-        let lo = self.indptr[r];
-        let hi = self.indptr[r + 1];
-        RowView { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+        match &self.storage {
+            CsrStorage::Owned { indptr, indices, values } => {
+                let lo = indptr[r];
+                let hi = indptr[r + 1];
+                RowView { indices: &indices[lo..hi], values: &values[lo..hi] }
+            }
+            CsrStorage::Mapped(m) => m.row(r),
+            CsrStorage::Chunked(c) => c.row(r),
+        }
     }
 
     pub fn row_nnz(&self, r: usize) -> usize {
-        self.indptr[r + 1] - self.indptr[r]
+        let (lo, hi) = self.row_bounds(r);
+        hi - lo
+    }
+
+    /// Global nnz range of row `r` (identical across backends).
+    #[inline]
+    fn row_bounds(&self, r: usize) -> (usize, usize) {
+        match &self.storage {
+            CsrStorage::Owned { indptr, .. } => (indptr[r], indptr[r + 1]),
+            CsrStorage::Mapped(m) => m.bounds(r),
+            CsrStorage::Chunked(c) => c.bounds(r),
+        }
+    }
+
+    /// Byte / nominal-page footprint of the given rows' value + index
+    /// data, for the data-locality probes the sharded engine emits at
+    /// `spans` trace level (see [`crate::obs`]). `ids` must be sorted
+    /// ascending (shard partitions are). Pages are counted per section
+    /// (values, then indices) at the nominal
+    /// [`PAGE_SIZE`](crate::util::mmap::PAGE_SIZE); for mapped storage
+    /// the offsets are the real file offsets, so the count reflects the
+    /// pages the worker actually touches.
+    pub fn rows_extent(&self, ids: &[u32]) -> (u64, u64) {
+        debug_assert!(ids.windows(2).all(|p| p[0] < p[1]), "ids must be sorted ascending");
+        let (vbase, ibase) = match &self.storage {
+            CsrStorage::Mapped(m) => (m.values_off, m.indices_off),
+            _ => (0, 0),
+        };
+        let mut bytes = 0u64;
+        let mut pages = 0u64;
+        let mut last_vpage: Option<usize> = None;
+        let mut last_ipage: Option<usize> = None;
+        let mut fresh = |lo_byte: usize, hi_byte: usize, last: &mut Option<usize>| -> u64 {
+            // [lo_byte, hi_byte) is non-empty and non-decreasing in
+            // start across calls (ids are sorted)
+            let p0 = lo_byte / PAGE_SIZE;
+            let p1 = (hi_byte - 1) / PAGE_SIZE;
+            let start = match *last {
+                Some(seen) => p0.max(seen + 1),
+                None => p0,
+            };
+            *last = Some(match *last {
+                Some(seen) => seen.max(p1),
+                None => p1,
+            });
+            (p1 + 1).saturating_sub(start) as u64
+        };
+        for &i in ids {
+            let (lo, hi) = self.row_bounds(i as usize);
+            if hi == lo {
+                continue;
+            }
+            bytes += ((hi - lo) * (8 + 4)) as u64;
+            pages += fresh(vbase + lo * 8, vbase + hi * 8, &mut last_vpage);
+            pages += fresh(ibase + lo * 4, ibase + hi * 4, &mut last_ipage);
+        }
+        (bytes, pages)
     }
 
     /// Per-row squared norms, computed once and cached on the matrix.
@@ -230,11 +690,14 @@ impl Csr {
     }
 
     /// Transpose to CSC-equivalent CSR (i.e. a CSR matrix of the
-    /// transpose). Counting sort over columns — O(nnz + cols).
+    /// transpose). Counting sort over columns — O(nnz + cols). Always
+    /// produces owned storage.
     pub fn transpose(&self) -> Csr {
         let mut counts = vec![0usize; self.cols + 1];
-        for &j in &self.indices {
-            counts[j as usize + 1] += 1;
+        for r in 0..self.rows {
+            for &j in self.row(r).indices {
+                counts[j as usize + 1] += 1;
+            }
         }
         for c in 0..self.cols {
             counts[c + 1] += counts[c];
@@ -252,7 +715,12 @@ impl Csr {
                 cursor[j as usize] += 1;
             }
         }
-        Csr { rows: self.cols, cols: self.rows, indptr, indices, values, norms_sq: OnceLock::new() }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            storage: CsrStorage::Owned { indptr, indices, values },
+            norms_sq: OnceLock::new(),
+        }
     }
 
     /// Extract a dense row-major block [r0..r1) × [c0..c1), padded with
@@ -286,7 +754,8 @@ impl Csr {
         out
     }
 
-    /// Select a subset of rows (dataset splits).
+    /// Select a subset of rows (dataset splits). Always produces owned
+    /// storage.
     pub fn select_rows(&self, idx: &[usize]) -> Csr {
         let mut indptr = Vec::with_capacity(idx.len() + 1);
         let mut indices = Vec::new();
@@ -298,21 +767,57 @@ impl Csr {
             values.extend_from_slice(row.values);
             indptr.push(indices.len());
         }
-        Csr { rows: idx.len(), cols: self.cols, indptr, indices, values, norms_sq: OnceLock::new() }
+        Csr {
+            rows: idx.len(),
+            cols: self.cols,
+            storage: CsrStorage::Owned { indptr, indices, values },
+            norms_sq: OnceLock::new(),
+        }
     }
 
-    /// Validate structural invariants (used by property tests).
+    /// Validate structural invariants (used by property tests; mapped
+    /// and chunked backends were already validated at construction, but
+    /// re-checking is cheap insurance for tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        if self.indptr.len() != self.rows + 1 {
-            return Err("indptr length".into());
-        }
-        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.indices.len() {
-            return Err("indptr endpoints".into());
+        match &self.storage {
+            CsrStorage::Owned { indptr, indices, .. } => {
+                if indptr.len() != self.rows + 1 {
+                    return Err("indptr length".into());
+                }
+                if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
+                    return Err("indptr endpoints".into());
+                }
+                for r in 0..self.rows {
+                    if indptr[r] > indptr[r + 1] {
+                        return Err(format!("indptr decreasing at {r}"));
+                    }
+                }
+            }
+            CsrStorage::Mapped(m) => {
+                if m.rows != self.rows {
+                    return Err("mapped row count mismatch".into());
+                }
+            }
+            CsrStorage::Chunked(c) => {
+                if c.rows != self.rows {
+                    return Err("chunked row count mismatch".into());
+                }
+                let mut running = 0usize;
+                for (k, chunk) in c.chunks.iter().enumerate() {
+                    if chunk.base_nnz != running {
+                        return Err(format!("chunk {k} base_nnz mismatch"));
+                    }
+                    if chunk.indptr.first() != Some(&0) {
+                        return Err(format!("chunk {k} indptr start"));
+                    }
+                    running += chunk.indices.len();
+                }
+                if running != c.nnz {
+                    return Err("chunked nnz mismatch".into());
+                }
+            }
         }
         for r in 0..self.rows {
-            if self.indptr[r] > self.indptr[r + 1] {
-                return Err(format!("indptr decreasing at {r}"));
-            }
             let row = self.row(r);
             for w in row.indices.windows(2) {
                 if w[0] >= w[1] {
@@ -470,5 +975,83 @@ mod tests {
         let m = sample();
         let w = vec![0.0; 2]; // cols = 3: the O(1) gate must fire
         m.row(0).dot_dense(&w);
+    }
+
+    // ---- storage-backend behavior ------------------------------------
+
+    #[test]
+    fn chunked_backend_serves_identical_rows() {
+        let m = sample();
+        for chunk_rows in [1, 2, 3, 7] {
+            let c = m.to_chunked(chunk_rows);
+            assert_eq!(c.storage_kind(), "chunked");
+            assert_eq!(c, m, "chunk_rows={chunk_rows}");
+            c.check_invariants().unwrap();
+            assert_eq!(c.nnz(), m.nnz());
+            for r in 0..m.rows() {
+                assert_eq!(c.row(r).indices(), m.row(r).indices());
+                assert_eq!(c.row(r).values(), m.row(r).values());
+                assert_eq!(c.row_nnz(r), m.row_nnz(r));
+            }
+            assert_eq!(c.row_norms_sq(), m.row_norms_sq());
+            assert_eq!(c.transpose(), m.transpose());
+        }
+    }
+
+    #[test]
+    fn chunked_backend_property_matches_owned() {
+        prop::check(30, |g| {
+            let rows = g.usize_in(1, 25);
+            let cols = g.usize_in(1, 20);
+            let mut data = Vec::new();
+            for _ in 0..rows {
+                let k = g.usize_in(0, cols.min(6));
+                let pat = g.sparse_pattern(cols, k);
+                data.push(pat.into_iter().map(|c| (c, g.f64_in(-2.0, 2.0))).collect());
+            }
+            let m = Csr::from_rows(cols, data);
+            let chunk_rows = g.usize_in(1, rows + 2);
+            let c = m.to_chunked(chunk_rows);
+            c.check_invariants()?;
+            prop::assert_holds(c == m, "chunked == owned")?;
+            let x = g.vec_f64(cols, -1.0, 1.0);
+            let (a, b) = (m.matvec(&x), c.matvec(&x));
+            prop::assert_holds(
+                a.iter().zip(&b).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "matvec bit-identical across backends",
+            )
+        });
+    }
+
+    #[test]
+    fn chunk_count_is_ceil_rows_over_chunk_rows() {
+        let m = sample();
+        for (chunk_rows, expect) in [(1, 3), (2, 2), (3, 1), (10, 1)] {
+            match m.to_chunked(chunk_rows).storage() {
+                CsrStorage::Chunked(c) => assert_eq!(c.n_chunks(), expect),
+                other => panic!("expected chunked storage, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rows_extent_counts_bytes_and_pages() {
+        let m = sample();
+        // rows 0 and 2 hold 2 nnz each: 2 * 2 * (8 + 4) bytes
+        let (bytes, pages) = m.rows_extent(&[0, 2]);
+        assert_eq!(bytes, 48);
+        // tiny matrix: everything on one values page + one indices page
+        assert_eq!(pages, 2);
+        // the empty row contributes nothing
+        assert_eq!(m.rows_extent(&[1]), (0, 0));
+        // extents agree across backends for owned-style offsets
+        assert_eq!(m.to_chunked(2).rows_extent(&[0, 2]).0, bytes);
+    }
+
+    #[test]
+    fn storage_kind_reports_backend() {
+        let m = sample();
+        assert_eq!(m.storage_kind(), "owned");
+        assert_eq!(m.to_chunked(2).storage_kind(), "chunked");
     }
 }

@@ -1,0 +1,264 @@
+//! Streaming libsvm → `.acfbin` ingest: parse rows in bounded chunks
+//! and spill them straight into the on-disk layout
+//! ([`crate::sparse::storage`]) without ever materializing the matrix.
+//!
+//! Peak memory is O(chunk) for row data plus O(rows) for the
+//! row-pointer/label/norm columns — independent of nnz — so datasets
+//! much larger than RAM can be converted once and then trained
+//! memory-mapped (`acf-cd ingest`, then `--data-backend mmap`).
+//!
+//! Each parsed row goes through the **same** per-line tokenizer and the
+//! same column normalization (sort, merge duplicates, keep explicit
+//! zeros) as the in-memory parser, so the streamed file opens to a
+//! matrix bit-identical to [`parse_libsvm`](crate::sparse::parse_libsvm)
+//! on the same text — the round-trip property the tests pin down.
+//!
+//! ```
+//! use acf_cd::sparse::{ingest, parse_libsvm, storage};
+//! let text = "+1 1:0.5 3:1.25\n-1 2:2\n+1 4:1 # comment\n";
+//! let dir = std::env::temp_dir().join("acf_ingest_doc");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join(format!("doc_{}.acfbin", std::process::id()));
+//! let report = ingest::ingest_reader(text.as_bytes(), &path, 0, 2).unwrap();
+//! assert_eq!(report.rows, 3);
+//! let mapped = storage::open_dataset(&path).unwrap();
+//! assert_eq!(mapped.x, parse_libsvm(text, "doc", 0).unwrap().x);
+//! std::fs::remove_file(&path).ok();
+//! ```
+
+use super::csr::{normalize_row, ChunkedCsr, Csr, CsrStorage};
+use super::libsvm::{parse_line, Dataset, LibsvmError};
+use super::storage::AcfbinWriter;
+use crate::util::error::{Context, Result};
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::time::Instant;
+
+/// Rows buffered per chunk when the caller does not choose
+/// (`acf-cd ingest --chunk-rows`). Small enough that a chunk of even
+/// very wide rows stays cache-friendly, large enough to amortize flush
+/// overhead.
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+
+/// What an ingest run did — row/nnz counts, sizes, and throughput (the
+/// `ingest_throughput` row in `BENCH_scaling_shards.json` and the
+/// `acf-cd ingest` report come straight from this).
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReport {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// bytes of libsvm text consumed
+    pub input_bytes: u64,
+    /// bytes of the finished `.acfbin` file
+    pub output_bytes: u64,
+    pub seconds: f64,
+    /// input megabytes (1e6 bytes) parsed per second
+    pub mb_per_s: f64,
+}
+
+/// Stream a libsvm file into `dst` as `.acfbin`. `chunk_rows = 0`
+/// selects [`DEFAULT_CHUNK_ROWS`].
+pub fn ingest_libsvm(src: &Path, dst: &Path, min_features: usize, chunk_rows: usize) -> Result<IngestReport> {
+    let f = std::fs::File::open(src).with_context(|| format!("opening {}", src.display()))?;
+    ingest_reader(BufReader::new(f), dst, min_features, chunk_rows)
+        .with_context(|| format!("ingesting {}", src.display()))
+}
+
+/// Stream libsvm text from any reader into `dst` as `.acfbin`.
+pub fn ingest_reader<R: BufRead>(
+    reader: R,
+    dst: &Path,
+    min_features: usize,
+    chunk_rows: usize,
+) -> Result<IngestReport> {
+    let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+    let start = Instant::now();
+    let mut writer = AcfbinWriter::create(dst)?;
+    let mut input_bytes = 0u64;
+    let mut chunk: Vec<(f64, Vec<u32>, Vec<f64>)> = Vec::with_capacity(chunk_rows);
+    let mut flush = |chunk: &mut Vec<(f64, Vec<u32>, Vec<f64>)>, w: &mut AcfbinWriter| -> Result<()> {
+        for (label, indices, values) in chunk.drain(..) {
+            w.push_row(label, &indices, &values)?;
+        }
+        Ok(())
+    };
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(LibsvmError::Io)?;
+        input_bytes += line.len() as u64 + 1; // + newline
+        let Some((label, row)) = parse_line(&line, lineno)? else { continue };
+        let (indices, values) = normalize_row(row);
+        chunk.push((label, indices, values));
+        if chunk.len() >= chunk_rows {
+            flush(&mut chunk, &mut writer)?;
+        }
+    }
+    flush(&mut chunk, &mut writer)?;
+    let summary = writer.finish(min_features)?;
+    let seconds = start.elapsed().as_secs_f64();
+    Ok(IngestReport {
+        rows: summary.rows,
+        cols: summary.cols,
+        nnz: summary.nnz,
+        input_bytes,
+        output_bytes: summary.bytes,
+        seconds,
+        mb_per_s: if seconds > 0.0 { input_bytes as f64 / 1e6 / seconds } else { 0.0 },
+    })
+}
+
+/// Parse libsvm text into an **in-memory chunked** matrix
+/// ([`CsrStorage::Chunked`]): same dialect and normalization as
+/// [`parse_libsvm`](crate::sparse::parse_libsvm), but rows land in
+/// fixed-size chunk blocks instead of three matrix-sized allocations.
+pub fn parse_libsvm_chunked(
+    text: &str,
+    name: &str,
+    min_features: usize,
+    chunk_rows: usize,
+) -> Result<Dataset, LibsvmError> {
+    let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+    let mut chunked = ChunkedCsr::new(chunk_rows);
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let Some((label, row)) = parse_line(line, lineno)? else { continue };
+        let (indices, values) = normalize_row(row);
+        if let Some(&last) = indices.last() {
+            max_col = max_col.max(last as usize + 1);
+        }
+        chunked.push_row(&indices, &values);
+        y.push(label);
+    }
+    let rows = y.len();
+    let cols = max_col.max(min_features);
+    Ok(Dataset {
+        name: name.to_string(),
+        x: Csr::from_storage(rows, cols, CsrStorage::Chunked(chunked), None),
+        y,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::libsvm::{parse_libsvm, to_libsvm_string};
+    use crate::sparse::storage::open_dataset;
+    use crate::util::prop;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("acf_cd_ingest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", std::process::id(), name))
+    }
+
+    /// Deliberately awkward text: comments, blank lines, an empty row
+    /// (label only), trailing whitespace, rows with nnz % 4 ∈ {1,2,3}
+    /// tails, and a duplicate column to exercise merge-by-summation.
+    const AWKWARD: &str = "\
+# header comment
+
++1 1:0.5 3:1.25 9:2 7:-1 2:0.125
+-1\t
++1 4:1
+-1 2:2 2:3 5:-0.5  # dup column accumulates
++1 1:1 2:2 3:3 4:4 5:5 6:6 7:7
+";
+
+    #[test]
+    fn streamed_file_matches_in_memory_parser_bit_exactly() {
+        let path = tmp("awkward.acfbin");
+        let report = ingest_reader(AWKWARD.as_bytes(), &path, 0, 2).unwrap();
+        let mem = parse_libsvm(AWKWARD, "awkward", 0).unwrap();
+        let mapped = open_dataset(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(report.rows, 5);
+        assert_eq!(mapped.x.storage_kind(), "mapped");
+        assert_eq!(mapped.x, mem.x);
+        assert_eq!(mapped.y, mem.y);
+        // dup column 2 merged: 2 + 3
+        let r3 = mapped.x.row(3);
+        assert_eq!(r3.indices(), &[1, 4]);
+        assert_eq!(r3.values(), &[5.0, -0.5]);
+        // the empty row survives as an empty row
+        assert_eq!(mapped.x.row_nnz(1), 0);
+        // norms from the file match recomputation bit-for-bit
+        for (a, b) in mapped.x.row_norms_sq().iter().zip(mem.x.row_norms_sq()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_parser_matches_in_memory_parser() {
+        for chunk_rows in [1, 2, 3, 100] {
+            let mem = parse_libsvm(AWKWARD, "t", 0).unwrap();
+            let chunked = parse_libsvm_chunked(AWKWARD, "t", 0, chunk_rows).unwrap();
+            assert_eq!(chunked.x.storage_kind(), "chunked");
+            assert_eq!(chunked.x, mem.x, "chunk_rows={chunk_rows}");
+            assert_eq!(chunked.y, mem.y);
+            chunked.x.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn ingest_round_trip_property() {
+        prop::check(20, |g| {
+            let n = g.usize_in(1, 40);
+            let d = g.usize_in(1, 50);
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                let k = g.usize_in(0, d.min(9)); // includes empty rows and odd tails
+                let pat = g.sparse_pattern(d, k);
+                rows.push(pat.into_iter().map(|c| (c, g.f64_in(-3.0, 3.0))).collect::<Vec<_>>());
+                y.push(if g.bool() { 1.0 } else { -1.0 });
+            }
+            let ds = Dataset { name: "prop".into(), x: Csr::from_rows(d, rows), y };
+            let text = to_libsvm_string(&ds);
+            let chunk_rows = g.usize_in(1, n + 3);
+            let path = tmp(&format!("prop_{}.acfbin", g.usize_in(0, usize::MAX / 2)));
+            ingest_reader(text.as_bytes(), &path, d, chunk_rows).map_err(|e| format!("{e:#}"))?;
+            let mapped = open_dataset(&path).map_err(|e| format!("{e:#}"))?;
+            std::fs::remove_file(&path).ok();
+            let mem = parse_libsvm(&text, "prop", d).map_err(|e| format!("{e}"))?;
+            prop::assert_holds(mapped.x == mem.x, "streamed == in-memory matrix")?;
+            prop::assert_holds(mapped.y == mem.y, "streamed == in-memory labels")?;
+            // and the chunked in-memory backend agrees too
+            let chk = parse_libsvm_chunked(&text, "prop", d, chunk_rows).map_err(|e| format!("{e}"))?;
+            prop::assert_holds(chk.x == mem.x, "chunked == in-memory matrix")
+        });
+    }
+
+    #[test]
+    fn report_accounts_for_sizes_and_throughput() {
+        let path = tmp("report.acfbin");
+        let report = ingest_reader(AWKWARD.as_bytes(), &path, 0, 0).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(report.rows, 5);
+        assert_eq!(report.cols, 9);
+        assert!(report.nnz >= 13, "nnz {}", report.nnz);
+        assert!(report.input_bytes as usize >= AWKWARD.len());
+        assert!(report.output_bytes > 104);
+        assert!(report.seconds >= 0.0 && report.mb_per_s >= 0.0);
+    }
+
+    #[test]
+    fn malformed_lines_fail_with_line_numbers() {
+        let path = tmp("malformed.acfbin");
+        let err = ingest_reader("+1 1:1\n+1 0:1\n".as_bytes(), &path, 0, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+        assert!(!path.exists(), "failed ingest must not leave a file behind");
+        let err = parse_libsvm_chunked("+1 1:abc\n", "t", 0, 0).unwrap_err();
+        assert!(format!("{err}").contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn min_features_pads_streamed_files() {
+        let path = tmp("pad.acfbin");
+        ingest_reader("+1 1:1\n".as_bytes(), &path, 12, 0).unwrap();
+        let ds = open_dataset(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds.n_features(), 12);
+    }
+}

@@ -98,6 +98,54 @@ pub fn read_libsvm(path: &Path, min_features: usize) -> Result<Dataset, LibsvmEr
     parse_reader(BufReader::new(f), &name, min_features)
 }
 
+/// Parse one libsvm line: strip `#` comments and surrounding
+/// whitespace, convert 1-based indices to 0-based. `Ok(None)` for
+/// blank / comment-only lines. `lineno` is 0-based (error messages are
+/// 1-based). Shared by the in-memory parser below and the streaming
+/// `.acfbin` ingest ([`crate::sparse::ingest`]), so both accept exactly
+/// the same dialect.
+pub(crate) fn parse_line(
+    raw: &str,
+    lineno: usize,
+) -> Result<Option<(f64, Vec<(usize, f64)>)>, LibsvmError> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut toks = line.split_ascii_whitespace();
+    let label_tok = toks.next().ok_or_else(|| LibsvmError::Parse {
+        line: lineno + 1,
+        message: "missing label".into(),
+    })?;
+    let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+        line: lineno + 1,
+        message: format!("bad label '{label_tok}'"),
+    })?;
+    let mut row = Vec::new();
+    for tok in toks {
+        let (idx, val) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            message: format!("bad feature token '{tok}'"),
+        })?;
+        let idx: usize = idx.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            message: format!("bad feature index '{idx}'"),
+        })?;
+        if idx == 0 {
+            return Err(LibsvmError::Parse {
+                line: lineno + 1,
+                message: "libsvm feature indices are 1-based".into(),
+            });
+        }
+        let val: f64 = val.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            message: format!("bad feature value '{val}'"),
+        })?;
+        row.push((idx - 1, val));
+    }
+    Ok(Some((label, row)))
+}
+
 fn parse_reader<R: Read>(r: R, name: &str, min_features: usize) -> Result<Dataset, LibsvmError> {
     let reader = BufReader::new(r);
     let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
@@ -105,41 +153,9 @@ fn parse_reader<R: Read>(r: R, name: &str, min_features: usize) -> Result<Datase
     let mut max_col = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut toks = line.split_ascii_whitespace();
-        let label_tok = toks.next().ok_or_else(|| LibsvmError::Parse {
-            line: lineno + 1,
-            message: "missing label".into(),
-        })?;
-        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
-            line: lineno + 1,
-            message: format!("bad label '{label_tok}'"),
-        })?;
-        let mut row = Vec::new();
-        for tok in toks {
-            let (idx, val) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
-                line: lineno + 1,
-                message: format!("bad feature token '{tok}'"),
-            })?;
-            let idx: usize = idx.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                message: format!("bad feature index '{idx}'"),
-            })?;
-            if idx == 0 {
-                return Err(LibsvmError::Parse {
-                    line: lineno + 1,
-                    message: "libsvm feature indices are 1-based".into(),
-                });
-            }
-            let val: f64 = val.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                message: format!("bad feature value '{val}'"),
-            })?;
-            max_col = max_col.max(idx);
-            row.push((idx - 1, val));
+        let Some((label, row)) = parse_line(&line, lineno)? else { continue };
+        for &(c, _) in &row {
+            max_col = max_col.max(c + 1);
         }
         rows.push(row);
         y.push(label);

@@ -1,12 +1,33 @@
-//! Sparse linear-algebra substrate: CSR matrices, the libsvm data
-//! format, dense-vector helpers, and the hot-path [`kernels`] layer
-//! (4-way unrolled unchecked gather/scatter + the fused CD `step`; see
-//! that module's safety contract) the CD solvers run on.
+//! Sparse linear-algebra substrate and the **data plane** under it.
+//!
+//! The solvers see one matrix type — [`Csr`] handing out per-row
+//! [`RowView`]s — but the bytes behind it come from one of three
+//! interchangeable backends ([`csr::CsrStorage`]):
+//!
+//! * **Owned** — three heap vectors; what [`parse_libsvm`] and the
+//!   synthetic generators build.
+//! * **Mapped** — a read-only file mapping of an `.acfbin` file
+//!   ([`storage`]); rows are zero-copy views into the mapped pages, so
+//!   training sets can exceed RAM (`--data-backend mmap`).
+//! * **Chunked** — bounded row blocks filled by the streaming ingest
+//!   ([`ingest`]), avoiding matrix-sized allocations while a file is
+//!   being converted.
+//!
+//! All backends serve bit-identical rows for the same logical matrix;
+//! the property tests in [`storage`] and [`ingest`] pin that down. The
+//! hot paths ([`kernels`]: 4-way unrolled unchecked gather/scatter +
+//! the fused CD `step`; see that module's safety contract) only ever
+//! see `&[u32]`/`&[f64]` slices, so they are backend-oblivious.
+//!
+//! Also here: the libsvm reader/writer ([`libsvm`]) and dense-vector
+//! helpers ([`ops`]).
 
 pub mod csr;
+pub mod ingest;
 pub mod kernels;
 pub mod libsvm;
 pub mod ops;
+pub mod storage;
 
-pub use csr::{Csr, RowView};
+pub use csr::{Csr, CsrStorage, RowView};
 pub use libsvm::{parse_libsvm, read_libsvm, to_libsvm_string, Dataset};

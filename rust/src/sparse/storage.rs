@@ -1,0 +1,585 @@
+//! The `.acfbin` on-disk dataset format and its mapped reader — the
+//! persistence half of the out-of-core data plane.
+//!
+//! # Format (version 1)
+//!
+//! A column-stable binary layout: one header, then five contiguous
+//! sections, each at an 8-byte-aligned offset recorded in the header so
+//! readers never infer positions. All integers and floats are
+//! **native-endian**; the endianness tag makes a foreign-endian file
+//! fail loudly instead of decoding garbage.
+//!
+//! ```text
+//! offset  size          field
+//! ------  ------------  -----------------------------------------
+//!      0  8             magic "ACFBIN01"
+//!      8  8 (u64)       endianness tag 0x0102030405060708
+//!     16  8 (u64)       format version (1)
+//!     24  8 (u64)       rows
+//!     32  8 (u64)       cols
+//!     40  8 (u64)       nnz
+//!     48  8 (u64)       flags (reserved, 0)
+//!     56  8 (u64)       byte offset of the row-pointer section
+//!     64  8 (u64)       byte offset of the labels section
+//!     72  8 (u64)       byte offset of the norms section
+//!     80  8 (u64)       byte offset of the values section
+//!     88  8 (u64)       byte offset of the indices section
+//!     96  8 (u64)       total file length in bytes
+//!    104  (rows+1)*8    row pointers (u64, indptr[0] = 0)
+//!         rows*8        labels (f64)
+//!         rows*8        per-row squared norms (f64, written at ingest)
+//!         nnz*8         values (f64)
+//!         nnz*4         column indices (u32, strictly increasing per row)
+//! ```
+//!
+//! The u32 indices section goes **last** so every other section sits at
+//! a naturally 8-aligned offset with zero padding. Squared norms are
+//! computed once at write time with the same kernel the solvers use
+//! ([`crate::sparse::kernels::dot`]), so a mapped matrix serves
+//! bit-identical `row_norms_sq()` without ever touching the value pages.
+//!
+//! # Reading
+//!
+//! [`open_dataset`] maps the file ([`crate::util::mmap::Mmap`]) and
+//! builds a [`Csr`] whose rows are zero-copy views into the mapped
+//! value/index sections ([`CsrStorage::Mapped`]). The header and the
+//! full CSR structural invariants are validated up front — the file is
+//! untrusted input, and the unchecked row kernels are only sound over
+//! validated rows; every validation error names the byte offset at
+//! fault.
+//!
+//! # Writing
+//!
+//! [`AcfbinWriter`] streams rows in bounded memory (O(rows) row-pointer
+//! /label/norm state, O(1) value/index state via spill segments) and
+//! assembles the final file with an atomic rename, so a crashed ingest
+//! never leaves a half-written `.acfbin` behind; [`write_dataset`] is
+//! the one-call version for in-memory datasets.
+//!
+//! ```
+//! use acf_cd::sparse::{parse_libsvm, storage};
+//! let ds = parse_libsvm("+1 1:0.5 3:1.25\n-1 2:2\n", "doc", 0).unwrap();
+//! let dir = std::env::temp_dir().join("acf_storage_doc");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join(format!("doc_{}.acfbin", std::process::id()));
+//! storage::write_dataset(&ds, &path).unwrap();
+//! let mapped = storage::open_dataset(&path).unwrap();
+//! assert_eq!(mapped.x.storage_kind(), "mapped");
+//! assert_eq!(mapped.x, ds.x); // bit-identical rows, zero copies
+//! assert_eq!(mapped.y, ds.y);
+//! std::fs::remove_file(&path).ok();
+//! ```
+
+use super::csr::{Csr, CsrStorage, MappedCsr};
+use super::kernels;
+use super::libsvm::Dataset;
+use crate::util::error::{Context, Result};
+use crate::util::mmap::Mmap;
+use crate::{anyhow, bail};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// First 8 bytes of every `.acfbin` file.
+pub const MAGIC: [u8; 8] = *b"ACFBIN01";
+/// Byte-order canary: reads back differently under the wrong endianness.
+pub const ENDIAN_TAG: u64 = 0x0102_0304_0506_0708;
+/// Current format version.
+pub const VERSION: u64 = 1;
+/// Fixed header length; the first section starts here.
+pub const HEADER_LEN: usize = 104;
+
+/// Summary of a written `.acfbin` file.
+#[derive(Clone, Copy, Debug)]
+pub struct AcfbinSummary {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// total bytes of the final file
+    pub bytes: u64,
+}
+
+/// Streaming `.acfbin` writer with bounded memory: per-row state is
+/// O(1) (values and indices spill to temporary segment files as they
+/// arrive), plus O(rows) for the row-pointer, label, and norm columns
+/// that land in the header-adjacent sections. [`AcfbinWriter::finish`]
+/// assembles header + sections into `<path>.tmp` and renames it over
+/// the destination, so readers never observe a partial file.
+pub struct AcfbinWriter {
+    final_path: PathBuf,
+    values_path: PathBuf,
+    indices_path: PathBuf,
+    values_w: BufWriter<File>,
+    indices_w: BufWriter<File>,
+    indptr: Vec<u64>,
+    labels: Vec<f64>,
+    norms: Vec<f64>,
+    nnz: u64,
+    /// 1 + highest column index seen
+    min_cols: usize,
+}
+
+impl AcfbinWriter {
+    /// Start writing toward `path` (parent directory must exist). Two
+    /// spill segments (`<path>.values.tmp`, `<path>.indices.tmp`) are
+    /// created next to it and removed by [`AcfbinWriter::finish`].
+    pub fn create(path: &Path) -> Result<AcfbinWriter> {
+        let suffixed = |suffix: &str| -> PathBuf {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(suffix);
+            PathBuf::from(os)
+        };
+        let values_path = suffixed(".values.tmp");
+        let indices_path = suffixed(".indices.tmp");
+        let open = |p: &Path| -> Result<BufWriter<File>> {
+            Ok(BufWriter::new(File::create(p).with_context(|| format!("creating spill segment {}", p.display()))?))
+        };
+        Ok(AcfbinWriter {
+            final_path: path.to_path_buf(),
+            values_w: open(&values_path)?,
+            indices_w: open(&indices_path)?,
+            values_path,
+            indices_path,
+            indptr: vec![0],
+            labels: Vec::new(),
+            norms: Vec::new(),
+            nnz: 0,
+            min_cols: 0,
+        })
+    }
+
+    /// Append one row. `indices` must be strictly increasing (the same
+    /// invariant every [`Csr`] backend enforces); the row's squared norm
+    /// is computed here, with the solver dot kernel, and stored in the
+    /// norms section.
+    pub fn push_row(&mut self, label: f64, indices: &[u32], values: &[f64]) -> Result<()> {
+        if indices.len() != values.len() {
+            bail!("row {}: {} indices vs {} values", self.labels.len(), indices.len(), values.len());
+        }
+        if !indices.windows(2).all(|p| p[0] < p[1]) {
+            bail!("row {}: indices must be strictly increasing", self.labels.len());
+        }
+        for &v in values {
+            self.values_w.write_all(&v.to_ne_bytes())?;
+        }
+        for &j in indices {
+            self.indices_w.write_all(&j.to_ne_bytes())?;
+        }
+        if let Some(&last) = indices.last() {
+            self.min_cols = self.min_cols.max(last as usize + 1);
+        }
+        self.nnz += indices.len() as u64;
+        self.indptr.push(self.nnz);
+        self.labels.push(label);
+        self.norms.push(kernels::dot(values, values));
+        Ok(())
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Assemble the final file and atomically rename it into place.
+    /// `min_features` forces a feature-space dimension at least that
+    /// large (the libsvm `min_features` convention).
+    pub fn finish(mut self, min_features: usize) -> Result<AcfbinSummary> {
+        self.values_w.flush()?;
+        self.indices_w.flush()?;
+        let rows = self.labels.len();
+        let cols = self.min_cols.max(min_features);
+        let nnz = self.nnz as usize;
+
+        let off_indptr = HEADER_LEN as u64;
+        let off_labels = off_indptr + (rows as u64 + 1) * 8;
+        let off_norms = off_labels + rows as u64 * 8;
+        let off_values = off_norms + rows as u64 * 8;
+        let off_indices = off_values + nnz as u64 * 8;
+        let file_len = off_indices + nnz as u64 * 4;
+
+        let tmp_path = {
+            let mut os = self.final_path.as_os_str().to_os_string();
+            os.push(".tmp");
+            PathBuf::from(os)
+        };
+        let mut out = BufWriter::new(
+            File::create(&tmp_path).with_context(|| format!("creating {}", tmp_path.display()))?,
+        );
+        out.write_all(&MAGIC)?;
+        for word in [
+            ENDIAN_TAG,
+            VERSION,
+            rows as u64,
+            cols as u64,
+            nnz as u64,
+            0, // flags
+            off_indptr,
+            off_labels,
+            off_norms,
+            off_values,
+            off_indices,
+            file_len,
+        ] {
+            out.write_all(&word.to_ne_bytes())?;
+        }
+        for &p in &self.indptr {
+            out.write_all(&p.to_ne_bytes())?;
+        }
+        for &l in &self.labels {
+            out.write_all(&l.to_ne_bytes())?;
+        }
+        for &n in &self.norms {
+            out.write_all(&n.to_ne_bytes())?;
+        }
+        for spill in [&self.values_path, &self.indices_path] {
+            let mut f = File::open(spill).with_context(|| format!("reopening spill segment {}", spill.display()))?;
+            std::io::copy(&mut f, &mut out)?;
+        }
+        out.flush()?;
+        drop(out);
+        std::fs::rename(&tmp_path, &self.final_path)
+            .with_context(|| format!("renaming into {}", self.final_path.display()))?;
+        std::fs::remove_file(&self.values_path).ok();
+        std::fs::remove_file(&self.indices_path).ok();
+        Ok(AcfbinSummary { rows, cols, nnz, bytes: file_len })
+    }
+}
+
+impl Drop for AcfbinWriter {
+    fn drop(&mut self) {
+        // abandoned writer (error path): don't leave spill segments
+        std::fs::remove_file(&self.values_path).ok();
+        std::fs::remove_file(&self.indices_path).ok();
+    }
+}
+
+/// Write an in-memory dataset as `.acfbin` (the registry spill path and
+/// the tests' round-trip oracle).
+pub fn write_dataset(ds: &Dataset, path: &Path) -> Result<AcfbinSummary> {
+    let mut w = AcfbinWriter::create(path)?;
+    for r in 0..ds.n_instances() {
+        let row = ds.x.row(r);
+        w.push_row(ds.y[r], row.indices(), row.values())?;
+    }
+    w.finish(ds.n_features())
+        .with_context(|| format!("writing {} as .acfbin to {}", ds.name, path.display()))
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_ne_bytes(bytes[off..off + 8].try_into().expect("8-byte slice"))
+}
+
+fn read_f64_section(bytes: &[u8], off: usize, count: usize, what: &str, total: usize) -> Result<Vec<f64>> {
+    let end = count.checked_mul(8).and_then(|b| off.checked_add(b)).filter(|&e| e <= total);
+    let end = end.ok_or_else(|| anyhow!("{what} section at byte offset {off} overruns the {total}-byte file"))?;
+    let words = bytes[off..end].chunks_exact(8);
+    Ok(words.map(|c| f64::from_ne_bytes(c.try_into().expect("8-byte chunk"))).collect())
+}
+
+/// Open an `.acfbin` file as a memory-mapped [`Dataset`]: zero-copy
+/// [`CsrStorage::Mapped`] rows, labels and norms copied out of their
+/// (small, O(rows)) sections, the norm cache pre-seeded so
+/// `row_norms_sq()` never touches the value pages. The dataset name is
+/// the file stem.
+///
+/// Every header or structure violation is rejected with an error naming
+/// the byte offset at fault — mapped rows feed the unchecked kernels,
+/// so an invalid file must be impossible to open.
+pub fn open_dataset(path: &Path) -> Result<Dataset> {
+    let map = Arc::new(Mmap::open(path)?);
+    let total = map.len();
+    let err = |msg: String| anyhow!("{}: invalid .acfbin: {msg}", path.display());
+    if total < HEADER_LEN {
+        return Err(err(format!(
+            "truncated: {total} bytes, the {HEADER_LEN}-byte header starting at offset 0 is incomplete"
+        )));
+    }
+    let bytes = map.as_bytes();
+    if bytes[..8] != MAGIC {
+        return Err(err(format!("bad magic {:02x?} at offset 0 (expected {MAGIC:02x?})", &bytes[..8])));
+    }
+    if read_u64(bytes, 8) != ENDIAN_TAG {
+        return Err(err(format!(
+            "endianness tag {:#018x} at offset 8 does not match this machine (expected {ENDIAN_TAG:#018x}); \
+             the file was written on a foreign-endian host",
+            read_u64(bytes, 8)
+        )));
+    }
+    let version = read_u64(bytes, 16);
+    if version != VERSION {
+        return Err(err(format!("unsupported format version {version} at offset 16 (supported: {VERSION})")));
+    }
+    let as_size = |off: usize, what: &str| -> Result<usize> {
+        let v = read_u64(bytes, off);
+        usize::try_from(v).map_err(|_| err(format!("{what} {v} at offset {off} does not fit this target's usize")))
+    };
+    let rows = as_size(24, "row count")?;
+    let cols = as_size(32, "column count")?;
+    let nnz = as_size(40, "nnz")?;
+    let declared_len = read_u64(bytes, 96);
+    if declared_len != total as u64 {
+        return Err(err(format!(
+            "file is {total} bytes but the header at offset 96 declares {declared_len} (truncated or trailing garbage)"
+        )));
+    }
+    let off_indptr = as_size(56, "row-pointer offset")?;
+    let off_labels = as_size(64, "labels offset")?;
+    let off_norms = as_size(72, "norms offset")?;
+    let off_values = as_size(80, "values offset")?;
+    let off_indices = as_size(88, "indices offset")?;
+    let labels = read_f64_section(bytes, off_labels, rows, "labels", total).map_err(|e| err(format!("{e}")))?;
+    let norms = read_f64_section(bytes, off_norms, rows, "norms", total).map_err(|e| err(format!("{e}")))?;
+    let mapped = MappedCsr::new(Arc::clone(&map), rows, cols, nnz, off_indptr, off_values, off_indices)
+        .map_err(err)?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
+    Ok(Dataset {
+        name,
+        x: Csr::from_storage(rows, cols, CsrStorage::Mapped(mapped), Some(norms)),
+        y: labels,
+    })
+}
+
+/// Spill an in-memory dataset to a transient `.acfbin` and reopen it
+/// memory-mapped. The on-disk file is unlinked immediately after
+/// mapping (the mapping stays valid until dropped), so the caller gets
+/// mapped-backend semantics with no cleanup obligations — this is how
+/// `--data-backend mmap` serves registry-synthesized datasets, and how
+/// the benches put the mapped backend under the existing speedup gates.
+pub fn remap_dataset(ds: &Dataset) -> Result<Dataset> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join("acf_cd_remap");
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!(
+        "remap_{}_{}.acfbin",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    write_dataset(ds, &path)?;
+    let mut mapped = open_dataset(&path)?;
+    std::fs::remove_file(&path).ok(); // mapping outlives the directory entry
+    mapped.name = ds.name.clone();
+    Ok(mapped)
+}
+
+/// Full `{:#}` chain of an `open_dataset` failure — the corruption
+/// tests assert these messages name the byte offset at fault.
+#[cfg(test)]
+fn open_err(path: &Path) -> String {
+    format!("{:#}", open_dataset(path).expect_err("open should fail"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::libsvm::parse_libsvm;
+    use crate::util::prop;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("acf_cd_storage_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", std::process::id(), name))
+    }
+
+    fn sample_ds() -> Dataset {
+        parse_libsvm("+1 1:0.5 3:1.25\n-1 2:2 4:-0.5\n+1 1:1\n-1 5:3.5\n", "sample", 0).unwrap()
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let ds = sample_ds();
+        let path = tmp("round_trip.acfbin");
+        let summary = write_dataset(&ds, &path).unwrap();
+        assert_eq!(summary.rows, ds.n_instances());
+        assert_eq!(summary.cols, ds.n_features());
+        assert_eq!(summary.nnz, ds.nnz());
+        let back = open_dataset(&path).unwrap();
+        assert_eq!(back.x.storage_kind(), "mapped");
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        // the pre-seeded norm cache is bit-identical to recomputation
+        let owned_norms = ds.x.row_norms_sq();
+        for (a, b) in back.x.row_norms_sq().iter().zip(owned_norms) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(summary.bytes, std::fs::metadata(&path).unwrap().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn round_trip_property_with_empty_rows_and_odd_tails() {
+        prop::check(25, |g| {
+            let n = g.usize_in(1, 30);
+            let d = g.usize_in(1, 40);
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                // explicitly include empty rows and nnz % 4 != 0 tails
+                let k = g.usize_in(0, d.min(7));
+                let pat = g.sparse_pattern(d, k);
+                rows.push(pat.into_iter().map(|c| (c, g.f64_in(-4.0, 4.0))).collect::<Vec<_>>());
+                y.push(g.f64_in(-2.0, 2.0));
+            }
+            let ds = Dataset { name: "prop".into(), x: Csr::from_rows(d, rows), y };
+            let path = tmp(&format!("prop_{}.acfbin", g.usize_in(0, usize::MAX / 2)));
+            write_dataset(&ds, &path).map_err(|e| format!("{e:#}"))?;
+            let back = open_dataset(&path).map_err(|e| format!("{e:#}"))?;
+            std::fs::remove_file(&path).ok();
+            prop::assert_holds(back.x == ds.x, "matrix bit-identical")?;
+            prop::assert_holds(
+                back.y.iter().zip(&ds.y).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "labels bit-identical",
+            )?;
+            back.x.check_invariants()
+        });
+    }
+
+    #[test]
+    fn empty_dataset_round_trips() {
+        let ds = Dataset { name: "empty".into(), x: Csr::from_rows(3, vec![]), y: vec![] };
+        let path = tmp("empty.acfbin");
+        write_dataset(&ds, &path).unwrap();
+        let back = open_dataset(&path).unwrap();
+        assert_eq!(back.n_instances(), 0);
+        assert_eq!(back.n_features(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapped_rows_share_no_heap_with_the_file_copy() {
+        // zero-copy check: two opens of the same file produce equal rows
+        let ds = sample_ds();
+        let path = tmp("zero_copy.acfbin");
+        write_dataset(&ds, &path).unwrap();
+        let a = open_dataset(&path).unwrap();
+        let b = open_dataset(&path).unwrap();
+        assert_eq!(a.x, b.x);
+        for r in 0..a.n_instances() {
+            assert_eq!(a.x.row(r).values(), b.x.row(r).values());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_naming_offset_zero() {
+        let path = tmp("bad_magic.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("offset 0") && msg.contains("magic"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_unsupported_version_naming_offset() {
+        let path = tmp("bad_version.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[16..24].copy_from_slice(&99u64.to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("offset 16") && msg.contains("version 99"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_foreign_endian_naming_offset() {
+        let path = tmp("bad_endian.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..16].copy_from_slice(&ENDIAN_TAG.swap_bytes().to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("offset 8") && msg.contains("endian"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file_naming_length() {
+        let path = tmp("truncated.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut mid-values-section
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("offset 96") && msg.contains("truncated"), "{msg}");
+        // and a cut inside the header itself
+        std::fs::write(&path, &bytes[..40]).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("truncated") && msg.contains("offset 0"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_indices_naming_byte_offset() {
+        let path = tmp("bad_indices.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off_indices = read_u64(&bytes, 88) as usize;
+        // row 0 is [0, 2]: make it non-increasing by raising entry 0
+        bytes[off_indices..off_indices + 4].copy_from_slice(&7u32.to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("byte offset") && msg.contains("row 0"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_column_naming_byte_offset() {
+        let path = tmp("bad_col.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off_indices = read_u64(&bytes, 88) as usize;
+        bytes[off_indices..off_indices + 4].copy_from_slice(&u32::MAX.to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("out of bounds") && msg.contains("byte offset"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_indptr_naming_byte_offset() {
+        let path = tmp("bad_indptr.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off_indptr = read_u64(&bytes, 56) as usize;
+        // indptr[1] beyond nnz
+        bytes[off_indptr + 8..off_indptr + 16].copy_from_slice(&10_000u64.to_ne_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = open_err(&path);
+        assert!(msg.contains("byte offset") && msg.contains("exceeds nnz"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn finish_cleans_spill_segments_and_writes_atomically() {
+        let path = tmp("atomic.acfbin");
+        write_dataset(&sample_ds(), &path).unwrap();
+        let dir = path.parent().unwrap();
+        let strays: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(path.file_name().unwrap().to_str().unwrap()) && n.ends_with(".tmp"))
+            .collect();
+        assert!(strays.is_empty(), "leftover temp files: {strays:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn remap_preserves_name_and_content_without_files() {
+        let ds = sample_ds();
+        let mapped = remap_dataset(&ds).unwrap();
+        assert_eq!(mapped.name, ds.name);
+        assert_eq!(mapped.x.storage_kind(), "mapped");
+        assert_eq!(mapped.x, ds.x);
+        assert_eq!(mapped.y, ds.y);
+        // norms served from the header section, bit-identical
+        for (a, b) in mapped.x.row_norms_sq().iter().zip(ds.x.row_norms_sq()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,339 @@
+//! First-party read-only file mapping — the zero-dependency substrate of
+//! the out-of-core data plane ([`crate::sparse::storage`]).
+//!
+//! The offline build has no `libc` (or any other crate), so on Linux
+//! x86_64/aarch64 the `mmap(2)`/`munmap(2)` system calls are issued
+//! directly with inline assembly; everywhere else (and whenever the
+//! kernel refuses the mapping) the file is read into an **8-byte-aligned
+//! heap buffer** instead. Both backings satisfy the same contract:
+//!
+//! * the buffer's base address is at least 8-byte aligned (page-aligned
+//!   for real mappings), so `f64`/`u64` sections of an `.acfbin` file at
+//!   8-aligned offsets can be reinterpreted in place;
+//! * the bytes are immutable for the lifetime of the [`Mmap`] — there
+//!   are no mutating methods, and the mapping is `MAP_PRIVATE`.
+//!
+//! **File-stability contract:** a real memory mapping reflects later
+//! writes to the same file by other processes. Callers must not modify
+//! a file while it is mapped; `.acfbin` producers write to a temporary
+//! name and `rename(2)` into place (see
+//! [`crate::sparse::storage::AcfbinWriter`]), which never mutates bytes
+//! an existing mapping can see.
+//!
+//! ```
+//! use acf_cd::util::mmap::Mmap;
+//! let dir = std::env::temp_dir().join("acf_mmap_doc");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join("hello.bin");
+//! std::fs::write(&path, b"hello mmap").unwrap();
+//! let map = Mmap::open(&path).unwrap();
+//! assert_eq!(map.as_bytes(), b"hello mmap");
+//! assert_eq!(map.len(), 10);
+//! std::fs::remove_file(&path).ok();
+//! ```
+
+use crate::util::error::{Context, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// Nominal page size used for locality accounting (page-touch probes,
+/// [`pages_spanned`]). Linux on x86_64/aarch64 defaults to 4 KiB pages;
+/// the probes are diagnostics, so a fixed nominal size keeps them
+/// deterministic across hosts with huge pages configured.
+pub const PAGE_SIZE: usize = 4096;
+
+/// Number of nominal pages a byte range spans (0 for an empty range).
+pub fn pages_spanned(bytes: usize) -> usize {
+    bytes.div_ceil(PAGE_SIZE)
+}
+
+/// A read-only mapping of an entire file.
+///
+/// Obtained from [`Mmap::open`]. The backing is either a real kernel
+/// mapping (Linux x86_64/aarch64) or an aligned heap copy — see the
+/// module docs; [`Mmap::backing`] reports which one.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+enum Backing {
+    /// Kernel `mmap(2)` region; unmapped on drop.
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Kernel,
+    /// 8-byte-aligned heap copy of the file (`Vec<u64>` backing buffer —
+    /// a `Vec<u8>` would only be 1-aligned, and reinterpreting it as
+    /// `&[u64]`/`&[f64]` sections would be undefined behavior).
+    Heap(#[allow(dead_code)] Vec<u64>),
+}
+
+// SAFETY: the buffer is immutable for the lifetime of the value (no
+// mutating methods; MAP_PRIVATE for kernel mappings) and owned by it
+// (heap Vec, or an exclusive mapping released in Drop).
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Falls back to an aligned heap read when no
+    /// kernel mapping is available (non-Linux targets, zero-length
+    /// files, or an `mmap` failure).
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let file = File::open(path).with_context(|| format!("opening {} for mapping", path.display()))?;
+        let len = file.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        let Ok(len) = usize::try_from(len) else {
+            crate::bail!("{}: file too large to map on this target", path.display());
+        };
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        if len > 0 {
+            if let Some(ptr) = sys::map_readonly(&file, len) {
+                return Ok(Mmap { ptr, len, backing: Backing::Kernel });
+            }
+        }
+        Self::open_heap(file, len, path)
+    }
+
+    /// The heap fallback, also used directly by tests to cover both
+    /// backings on every platform.
+    fn open_heap(mut file: File, len: usize, path: &Path) -> Result<Mmap> {
+        // u64 backing guarantees 8-byte alignment of the base address.
+        let mut words = vec![0u64; len.div_ceil(8)];
+        let base = words.as_mut_ptr() as *mut u8;
+        // SAFETY: the Vec owns len.div_ceil(8) * 8 >= len writable bytes;
+        // u64 -> u8 views are always valid.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(base, len) };
+        file.read_exact(bytes).with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mmap { ptr: base as *const u8, len, backing: Backing::Heap(words) })
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the live backing buffer (kernel
+        // mapping until Drop, or the owned Vec<u64>).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Nominal pages spanned by the whole mapping.
+    pub fn pages(&self) -> usize {
+        pages_spanned(self.len)
+    }
+
+    /// `"mmap"` for a kernel mapping, `"heap"` for the aligned-read
+    /// fallback (reported by `acf-cd train` and the ingest smoke).
+    pub fn backing(&self) -> &'static str {
+        match self.backing {
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Backing::Kernel => "mmap",
+            Backing::Heap(_) => "heap",
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        if matches!(self.backing, Backing::Kernel) {
+            // SAFETY: ptr/len came from a successful mmap in open(); the
+            // region is unmapped exactly once.
+            unsafe { sys::unmap(self.ptr, self.len) };
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).field("backing", &self.backing()).finish()
+    }
+}
+
+/// Raw-syscall shim: the two calls the data plane needs, with no libc.
+/// Syscall numbers are per-architecture ABI constants; the argument
+/// registers follow the Linux syscall convention for each ISA.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    /// `mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0)`; `None` on any
+    /// kernel error (the caller falls back to the heap read).
+    pub(super) fn map_readonly(file: &File, len: usize) -> Option<*const u8> {
+        let fd = file.as_raw_fd();
+        let ret = unsafe { mmap_raw(len, fd) };
+        // Linux returns -errno in [-4095, -1] on failure.
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as *const u8)
+        }
+    }
+
+    /// `munmap(ptr, len)`. Failure is ignored: the region was exclusively
+    /// ours and the process keeps running either way.
+    ///
+    /// # Safety
+    /// `ptr`/`len` must describe a region previously returned by
+    /// [`map_readonly`] and not yet unmapped.
+    pub(super) unsafe fn unmap(ptr: *const u8, len: usize) {
+        munmap_raw(ptr, len);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn mmap_raw(len: usize, fd: i32) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 9isize => ret, // SYS_mmap
+            in("rdi") 0usize,
+            in("rsi") len,
+            in("rdx") PROT_READ,
+            in("r10") MAP_PRIVATE,
+            in("r8") fd as isize,
+            in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn munmap_raw(ptr: *const u8, len: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 11isize => ret, // SYS_munmap
+            in("rdi") ptr,
+            in("rsi") len,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn mmap_raw(len: usize, fd: i32) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 222usize, // SYS_mmap
+            inlateout("x0") 0usize => ret,
+            in("x1") len,
+            in("x2") PROT_READ,
+            in("x3") MAP_PRIVATE,
+            in("x4") fd as isize,
+            in("x5") 0usize,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn munmap_raw(ptr: *const u8, len: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 215usize, // SYS_munmap
+            inlateout("x0") ptr => ret,
+            in("x1") len,
+            options(nostack)
+        );
+        ret
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("acf_cd_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("contents.bin");
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.as_bytes(), &data[..]);
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.pages(), 3); // 10000 bytes -> 3 nominal 4K pages
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn base_address_is_eight_aligned() {
+        let path = tmp("aligned.bin");
+        std::fs::write(&path, vec![7u8; 33]).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.as_bytes().as_ptr() as usize % 8, 0, "backing {}", map.backing());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn heap_fallback_matches_kernel_mapping() {
+        let path = tmp("fallback.bin");
+        let data = vec![42u8; 4097]; // straddles a page boundary
+        std::fs::write(&path, &data).unwrap();
+        let mapped = Mmap::open(&path).unwrap();
+        let heap = Mmap::open_heap(File::open(&path).unwrap(), data.len(), &path).unwrap();
+        assert_eq!(heap.backing(), "heap");
+        assert_eq!(mapped.as_bytes(), heap.as_bytes());
+        assert_eq!(heap.as_bytes().as_ptr() as usize % 8, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.pages(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors_with_path() {
+        let e = Mmap::open(Path::new("/nonexistent/acf/xyz.bin")).unwrap_err();
+        assert!(format!("{e:#}").contains("xyz.bin"), "{e:#}");
+    }
+
+    #[test]
+    fn survives_unlink_while_mapped() {
+        // the data plane unlinks spilled registry files immediately after
+        // mapping them; the mapping must stay readable
+        let path = tmp("unlinked.bin");
+        std::fs::write(&path, b"still here").unwrap();
+        let map = Mmap::open(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(map.as_bytes(), b"still here");
+    }
+
+    #[test]
+    fn pages_spanned_counts() {
+        assert_eq!(pages_spanned(0), 0);
+        assert_eq!(pages_spanned(1), 1);
+        assert_eq!(pages_spanned(PAGE_SIZE), 1);
+        assert_eq!(pages_spanned(PAGE_SIZE + 1), 2);
+    }
+}

@@ -1,10 +1,11 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! deterministic RNG, JSON, CLI parsing, a scoped threadpool, statistics,
-//! timing, and a mini property-testing framework.
+//! timing, read-only file mapping, and a mini property-testing framework.
 
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod mmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;

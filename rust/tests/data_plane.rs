@@ -1,0 +1,98 @@
+//! Data-plane integration: the `--data-backend mmap` path must be
+//! bit-identical to the owned backend through the whole coordinator
+//! stack, and a libsvm file ingested to `.acfbin` must train exactly
+//! like the in-memory dataset it came from.
+
+use acf_cd::coordinator::{run_job, JobSpec, Problem};
+use acf_cd::data::{DataBackend, Scale};
+use acf_cd::sched::Policy;
+use acf_cd::sparse::{ingest, storage, to_libsvm_string};
+
+fn quick(problem: Problem, ds: &str) -> JobSpec {
+    let mut s = JobSpec::new(problem, ds, Policy::Acf);
+    s.scale = Scale(0.08);
+    s.eps = 0.01;
+    s
+}
+
+const FAMILIES: [(Problem, &str); 4] = [
+    (Problem::Svm { c: 1.0 }, "rcv1-like"),
+    (Problem::Lasso { lambda: 0.01 }, "rcv1-like"),
+    (Problem::LogReg { c: 1.0 }, "rcv1-like"),
+    (Problem::McSvm { c: 1.0 }, "iris-like"),
+];
+
+#[test]
+fn mmap_backend_is_bit_identical_on_sync_runs() {
+    // Serial (S = 0) and epoch-synchronized sharded (S = 4) runs are
+    // bit-deterministic, so the two backends must agree to the last bit:
+    // same iteration count, same objective bits, same weights.
+    for (problem, ds) in FAMILIES {
+        for shards in [0usize, 4] {
+            let mut owned = quick(problem, ds);
+            owned.shards = shards;
+            let mut mapped = owned.clone();
+            mapped.data_backend = DataBackend::Mmap;
+            let a = run_job(&owned).unwrap();
+            let b = run_job(&mapped).unwrap();
+            let tag = format!("{} S={shards}", problem.family());
+            assert!(a.result.status.converged(), "{tag} owned: {}", a.result.summary());
+            assert!(b.result.status.converged(), "{tag} mmap: {}", b.result.summary());
+            assert_eq!(a.result.iterations, b.result.iterations, "{tag}");
+            assert_eq!(a.result.objective.to_bits(), b.result.objective.to_bits(), "{tag}");
+            assert_eq!(a.w, b.w, "{tag}");
+            assert_eq!(a.w_multi, b.w_multi, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn mmap_backend_matches_owned_on_async_runs() {
+    // The async bounded-staleness merge is not bit-deterministic (thread
+    // timing orders the submissions), so the backends are compared on
+    // the convex optimum both must reach, not on bits.
+    for (problem, ds) in FAMILIES {
+        let mut owned = quick(problem, ds);
+        owned.shards = 4;
+        owned.async_merge = true;
+        owned.staleness_bound = 3;
+        let mut mapped = owned.clone();
+        mapped.data_backend = DataBackend::Mmap;
+        let a = run_job(&owned).unwrap();
+        let b = run_job(&mapped).unwrap();
+        let tag = problem.family();
+        assert!(a.result.status.converged(), "{tag} owned async: {}", a.result.summary());
+        assert!(b.result.status.converged(), "{tag} mmap async: {}", b.result.summary());
+        let rel = (a.result.objective - b.result.objective).abs() / a.result.objective.abs().max(1.0);
+        assert!(rel < 1e-2, "{tag}: owned {} vs mmap {}", a.result.objective, b.result.objective);
+    }
+}
+
+#[test]
+fn ingested_acfbin_trains_bit_identically_to_its_source() {
+    // libsvm text → chunked ingest → mapped Csr reproduces the source
+    // dataset exactly (f64 `Display` round-trips the shortest repr), so
+    // training directly on the `.acfbin` path is bit-identical too.
+    let spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like");
+    let ds = spec.load_dataset().unwrap();
+    let dir = std::env::temp_dir();
+    let src = dir.join(format!("acf_dp_{}.libsvm", std::process::id()));
+    let dst = dir.join(format!("acf_dp_{}.acfbin", std::process::id()));
+    std::fs::write(&src, to_libsvm_string(&ds)).unwrap();
+    // min_features pins the column count: libsvm text omits trailing
+    // all-zero features, which would otherwise shrink the problem.
+    let rep = ingest::ingest_libsvm(&src, &dst, ds.n_features(), 0).unwrap();
+    assert_eq!((rep.rows, rep.cols), (ds.n_instances(), ds.n_features()));
+    let mapped = storage::open_dataset(&dst).unwrap();
+    assert_eq!(mapped.x, ds.x, "mapped rows differ from the in-memory parse");
+    assert_eq!(mapped.y, ds.y, "labels differ after the text round-trip");
+    let mut on_file = spec.clone();
+    on_file.dataset = dst.to_string_lossy().into_owned();
+    let a = run_job(&spec).unwrap();
+    let b = run_job(&on_file).unwrap();
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&dst);
+    assert!(a.result.status.converged() && b.result.status.converged());
+    assert_eq!(a.result.objective.to_bits(), b.result.objective.to_bits());
+    assert_eq!(a.w, b.w);
+}
