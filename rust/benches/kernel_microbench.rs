@@ -2,20 +2,28 @@
 //! densities nnz ∈ {4, 32, 256, 4096}:
 //!
 //!   * gather dot: sequential bounds-checked reference
-//!     (`kernels::dot_dense_scalar`) vs the 4-way unrolled unchecked
-//!     kernel behind `RowView::dot_dense`,
-//!   * scatter axpy: `kernels::axpy_scalar` vs `RowView::axpy_into`,
+//!     (`kernels::dot_dense_scalar`, `#[inline(never)]` so the baseline
+//!     stays a real call) vs the always-compiled 4-way scalar unroll
+//!     (`kernels::scalar::dot`) vs the runtime-dispatched SIMD tier
+//!     behind `RowView::dot_dense`,
+//!   * scatter axpy: the same three levels (`kernels::axpy_scalar`,
+//!     `kernels::scalar::axpy`, `RowView::axpy_into`),
 //!   * one full CD step: split `dot_dense` + `axpy_into` vs the fused
-//!     `RowView::step` (same slices, one bounds gate).
+//!     `RowView::step` (same slices, one bounds gate), plus the fused
+//!     step pinned to the scalar-unroll tier,
+//!   * the software-pipelined batched dot (`kernels::dot_many_unchecked`).
 //!
-//! Rows share one index pattern so the numbers isolate kernel
-//! instruction overhead (bounds checks, dependency chains) rather than
-//! cache-miss behavior — the end-to-end story lives in
-//! `scaling_shards` / `microbench_hotpath`.
+//! The resolved dispatch tier (`avx2+fma` / `sse2` / `neon` / `scalar`)
+//! is recorded in the JSON (`kernel_tier`, plus `arch`), so numbers from
+//! different hosts are comparable. Rows share one index pattern so the
+//! numbers isolate kernel instruction overhead (bounds checks,
+//! dependency chains) rather than cache-miss behavior — the end-to-end
+//! story lives in `scaling_shards` / `microbench_hotpath`.
 //!
 //! Run: `cargo bench --bench kernel_microbench [-- --quick]`
 //! Writes `BENCH_kernel_microbench.json`; the CI `bench-smoke` job fails
-//! if the fused step is slower than the split dot+axpy reference.
+//! if the fused step is slower than the split dot+axpy reference, or if
+//! the SIMD tier falls below 0.95× the scalar unroll at nnz ≥ 32.
 
 use acf_cd::bench_util::{bench_fn, write_bench_summary, BenchConfig, BenchReport};
 use acf_cd::sparse::{kernels, RowView};
@@ -35,10 +43,16 @@ fn main() {
     let warmup = 3;
     let sweep_elems = if cfg.quick { 1usize << 16 } else { 1 << 18 };
     let mut rng = Rng::new(cfg.seed);
+    let tier = kernels::active_tier_name();
+    // available_tiers() lists the always-compiled scalar unroll first
+    let scalar_tier = kernels::available_tiers()[0];
+    assert_eq!(scalar_tier.name(), "scalar");
     let mut out = Json::obj();
     out.set("bench", Json::Str("kernel_microbench".into()));
     out.set("quick", Json::Bool(cfg.quick));
-    println!("sparse-kernel microbench — ns per primitive, {iters} samples per point");
+    out.set("kernel_tier", Json::Str(tier.into()));
+    out.set("arch", Json::Str(std::env::consts::ARCH.into()));
+    println!("sparse-kernel microbench — ns per primitive, {iters} samples per point, dispatch tier {tier}");
 
     for &nnz in &NNZ_SIZES {
         let d = 4 * nnz;
@@ -65,9 +79,24 @@ fn main() {
         let dot_unrolled = bench_fn(&format!("dot/unrolled nnz={nnz}"), warmup, iters, || {
             let mut acc = 0.0;
             for r in 0..rows {
+                // SAFETY: indices are 4k < d = 4·nnz, validated above.
+                acc += unsafe { kernels::scalar::dot(&indices, &values[r], &w0) };
+            }
+            acc
+        });
+        let dot_simd = bench_fn(&format!("dot/{tier} nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
                 acc += row(r).dot_dense(&w0);
             }
             acc
+        });
+        let pairs: Vec<(&[u32], &[f64])> = values.iter().map(|v| (indices.as_slice(), v.as_slice())).collect();
+        let mut dots = vec![0.0; rows];
+        let dot_many = bench_fn(&format!("dot_many/{tier} nnz={nnz}"), warmup, iters, || {
+            // SAFETY: every pair shares the validated strided indices.
+            unsafe { kernels::dot_many_unchecked(&pairs, &w0, &mut dots) };
+            dots[0]
         });
 
         // ---- scatter axpy --------------------------------------------
@@ -79,6 +108,13 @@ fn main() {
             w[0]
         });
         let axpy_unrolled = bench_fn(&format!("axpy/unrolled nnz={nnz}"), warmup, iters, || {
+            for r in 0..rows {
+                // SAFETY: indices are 4k < d = 4·nnz, validated above.
+                unsafe { kernels::scalar::axpy(SCALE, &indices, &values[r], &mut w) };
+            }
+            w[0]
+        });
+        let axpy_simd = bench_fn(&format!("axpy/{tier} nnz={nnz}"), warmup, iters, || {
             for r in 0..rows {
                 row(r).axpy_into(SCALE, &mut w);
             }
@@ -96,7 +132,7 @@ fn main() {
             }
             acc
         });
-        let fused = bench_fn(&format!("step/fused nnz={nnz}"), warmup, iters, || {
+        let fused = bench_fn(&format!("step/fused {tier} nnz={nnz}"), warmup, iters, || {
             let mut acc = 0.0;
             for r in 0..rows {
                 let (dot, _) = row(r).step(&mut w, |dot| SCALE * dot);
@@ -104,8 +140,28 @@ fn main() {
             }
             acc
         });
+        let fused_unrolled = bench_fn(&format!("step/fused unrolled nnz={nnz}"), warmup, iters, || {
+            let mut acc = 0.0;
+            for r in 0..rows {
+                // SAFETY: indices are 4k < d = 4·nnz, validated above.
+                let (dot, _) = unsafe { scalar_tier.step(&indices, &values[r], &mut w, |dot| SCALE * dot) };
+                acc += dot;
+            }
+            acc
+        });
 
-        for r in [&dot_scalar, &dot_unrolled, &axpy_scalar, &axpy_unrolled, &split, &fused] {
+        for r in [
+            &dot_scalar,
+            &dot_unrolled,
+            &dot_simd,
+            &dot_many,
+            &axpy_scalar,
+            &axpy_unrolled,
+            &axpy_simd,
+            &split,
+            &fused,
+            &fused_unrolled,
+        ] {
             r.print();
         }
         let ns = |rep: &BenchReport| rep.median() / rows as f64 * 1e9;
@@ -113,19 +169,28 @@ fn main() {
         e.set("rows_per_sweep", Json::Num(rows as f64))
             .set("dot_scalar_ns", Json::Num(ns(&dot_scalar)))
             .set("dot_unrolled_ns", Json::Num(ns(&dot_unrolled)))
+            .set("dot_simd_ns", Json::Num(ns(&dot_simd)))
+            .set("dot_many_ns", Json::Num(ns(&dot_many)))
             .set("axpy_scalar_ns", Json::Num(ns(&axpy_scalar)))
             .set("axpy_unrolled_ns", Json::Num(ns(&axpy_unrolled)))
+            .set("axpy_simd_ns", Json::Num(ns(&axpy_simd)))
             .set("split_dot_axpy_ns", Json::Num(ns(&split)))
             .set("fused_step_ns", Json::Num(ns(&fused)))
+            .set("fused_unrolled_ns", Json::Num(ns(&fused_unrolled)))
             .set("dot_unrolled_speedup", Json::Num(ns(&dot_scalar) / ns(&dot_unrolled)))
             .set("axpy_unrolled_speedup", Json::Num(ns(&axpy_scalar) / ns(&axpy_unrolled)))
+            .set("dot_simd_over_unrolled", Json::Num(ns(&dot_unrolled) / ns(&dot_simd)))
+            .set("axpy_simd_over_unrolled", Json::Num(ns(&axpy_unrolled) / ns(&axpy_simd)))
+            .set("fused_simd_over_unrolled", Json::Num(ns(&fused_unrolled) / ns(&fused)))
             .set("fused_over_split", Json::Num(ns(&split) / ns(&fused)));
         out.set(&format!("nnz_{nnz}"), e);
         println!(
-            "nnz={nnz}: dot {:.2}x, axpy {:.2}x, fused/split {:.2}x",
+            "nnz={nnz}: dot {:.2}x, axpy {:.2}x, fused/split {:.2}x, {tier}/unrolled dot {:.2}x axpy {:.2}x",
             ns(&dot_scalar) / ns(&dot_unrolled),
             ns(&axpy_scalar) / ns(&axpy_unrolled),
-            ns(&split) / ns(&fused)
+            ns(&split) / ns(&fused),
+            ns(&dot_unrolled) / ns(&dot_simd),
+            ns(&axpy_unrolled) / ns(&axpy_simd)
         );
     }
 

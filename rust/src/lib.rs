@@ -36,10 +36,17 @@
 //! iteration hot loop is pure Rust.
 //!
 //! Hot path: every CD step runs on the [`sparse::kernels`] layer —
-//! 4-way unrolled, `get_unchecked` gather/scatter with a fused
-//! dot+update+scatter `step` (safety restored by an O(1) bound check on
-//! the strictly-increasing CSR row indices); per-row norms are computed
-//! once and cached on the matrix ([`sparse::Csr::row_norms_sq`]).
+//! `get_unchecked` gather/scatter with a fused dot+update+scatter
+//! `step` (safety restored by an O(1) bound check on the
+//! strictly-increasing CSR row indices), dispatched at runtime across
+//! SIMD tiers (AVX2+FMA / SSE2 on x86_64, NEON on aarch64, with the
+//! 4-way scalar unroll as the always-compiled fallback and oracle).
+//! Every tier keeps the scalar unroll's exact 4-accumulator reduction
+//! tree, so results are **bit-identical** across tiers and the sync
+//! engine's determinism survives heterogeneous hardware; verify loops
+//! software-pipeline the sweep by prefetching the next row while the
+//! current reduction drains. Per-row norms are computed once and
+//! cached on the matrix ([`sparse::Csr::row_norms_sq`]).
 //!
 //! Scaling axis: [`shard`] partitions the coordinate set into S shards,
 //! runs an inner ACF scheduler per shard on a persistent worker pool,

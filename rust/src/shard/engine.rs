@@ -410,6 +410,15 @@ pub trait ShardProblem: Sync {
     /// operation cost (used by the synchronized verification pass).
     fn violation(&self, i: usize, values: &[f64], shared: &[f64]) -> (f64, usize);
 
+    /// Best-effort prefetch of coordinate `i`'s backing data — typically
+    /// the matrix row the next `step`/`violation` call will gather
+    /// ([`crate::sparse::kernels::prefetch_row`]). The verification
+    /// scans visit coordinates in a known order, so the engine overlaps
+    /// coordinate `i`'s memory latency with the previous coordinate's
+    /// reduction (software pipelining). Must be a pure hint: no
+    /// observable state may change. Default: no-op.
+    fn prefetch_coord(&self, _i: usize) {}
+
     /// Non-separable objective part, a function of the shared state only
     /// (½‖r‖²/ℓ for LASSO, ½‖w‖² / ½Σ_k‖w_k‖² for the duals).
     fn shared_objective(&self, shared: &[f64]) -> f64;
@@ -1133,6 +1142,11 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     let mut vmax = 0.0f64;
                     let mut ops = 0usize;
                     for (kk, &i) in st.ids.iter().enumerate() {
+                        // software pipelining: issue the next coordinate's
+                        // row loads while this violation reduces
+                        if let Some(&nx) = st.ids.get(kk + 1) {
+                            p.prefetch_coord(nx as usize);
+                        }
                         let (v, o) =
                             p.violation(i as usize, &st.values[kk * w..(kk + 1) * w], &ctx.shared);
                         vmax = vmax.max(v);
@@ -1489,6 +1503,11 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 let mut vmax = 0.0f64;
                 let mut ops = 0usize;
                 for (kk, &i) in st.ids.iter().enumerate() {
+                    // software pipelining: issue the next coordinate's
+                    // row loads while this violation reduces
+                    if let Some(&nx) = st.ids.get(kk + 1) {
+                        p.prefetch_coord(nx as usize);
+                    }
                     let (v, o) =
                         p.violation(i as usize, &st.values[kk * w..(kk + 1) * w], &snap);
                     vmax = vmax.max(v);

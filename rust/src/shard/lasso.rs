@@ -84,6 +84,14 @@ impl ShardProblem for ShardedLasso {
         (subgrad_violation(values[0], g, self.lambda), col.nnz())
     }
 
+    #[inline]
+    fn prefetch_coord(&self, j: usize) {
+        // feature-sharded: coordinate j's data is a column of X, i.e. a
+        // row of the transposed view
+        let col = self.prob.xt.row(j);
+        crate::sparse::kernels::prefetch_row(col.indices(), col.values());
+    }
+
     fn shared_objective(&self, shared: &[f64]) -> f64 {
         crate::sparse::ops::norm_sq(shared) / (2.0 * self.prob.n_instances as f64)
     }

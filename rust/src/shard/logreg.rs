@@ -105,6 +105,12 @@ impl ShardProblem for ShardedLogReg<'_> {
         (grad_violation(g), row.nnz())
     }
 
+    #[inline]
+    fn prefetch_coord(&self, i: usize) {
+        let row = self.ds.x.row(i);
+        crate::sparse::kernels::prefetch_row(row.indices(), row.values());
+    }
+
     fn shared_objective(&self, shared: &[f64]) -> f64 {
         0.5 * crate::sparse::ops::norm_sq(shared)
     }

@@ -179,6 +179,14 @@ impl ShardProblem for ShardedMcSvm<'_> {
         (max_viol, self.k_classes * row.nnz())
     }
 
+    #[inline]
+    fn prefetch_coord(&self, i: usize) {
+        // K dots reuse the same row slices, so one row prefetch covers
+        // the whole per-class violation scan
+        let row = self.ds.x.row(i);
+        crate::sparse::kernels::prefetch_row(row.indices(), row.values());
+    }
+
     fn shared_objective(&self, shared: &[f64]) -> f64 {
         // ½ Σ_k ‖w_k‖² is ½‖·‖² of the flattened buffer
         0.5 * crate::sparse::ops::norm_sq(shared)

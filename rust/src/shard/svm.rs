@@ -88,6 +88,12 @@ impl ShardProblem for ShardedSvm<'_> {
         (pg_violation(values[0], g, self.c), row.nnz())
     }
 
+    #[inline]
+    fn prefetch_coord(&self, i: usize) {
+        let row = self.ds.x.row(i);
+        crate::sparse::kernels::prefetch_row(row.indices(), row.values());
+    }
+
     fn shared_objective(&self, shared: &[f64]) -> f64 {
         0.5 * crate::sparse::ops::norm_sq(shared)
     }

@@ -181,13 +181,18 @@ pub fn solve_prepared(
     (LassoModel { w, lambda }, rs.finish(status, obj, final_viol, epochs))
 }
 
-/// Full subgradient-violation pass.
+/// Full subgradient-violation pass. Software-pipelined: column `j + 1`'s
+/// slices are prefetched while column `j`'s gather-dot reduces.
 fn verify(prob: &LassoProblem, lambda: f64, w: &[f64], r: &[f64]) -> (f64, usize) {
     let l = prob.n_instances as f64;
     let mut max_viol = 0.0f64;
     let mut ops = 0usize;
     for j in 0..prob.n_features {
         let col = prob.xt.row(j);
+        if j + 1 < prob.n_features {
+            let next = prob.xt.row(j + 1);
+            crate::sparse::kernels::prefetch_row(next.indices(), next.values());
+        }
         let g = col.dot_dense(r) / l;
         ops += col.nnz();
         max_viol = max_viol.max(subgrad_violation(w[j], g, lambda));

@@ -203,10 +203,16 @@ pub fn solve(
 }
 
 fn verify(ds: &Dataset, alpha: &[f64], w: &[f64], c: f64) -> (f64, usize) {
+    let n = ds.n_instances();
     let mut max_viol = 0.0f64;
     let mut ops = 0usize;
-    for i in 0..ds.n_instances() {
+    for i in 0..n {
         let row = ds.x.row(i);
+        // software pipelining: next row's loads overlap this reduction
+        if i + 1 < n {
+            let next = ds.x.row(i + 1);
+            crate::sparse::kernels::prefetch_row(next.indices(), next.values());
+        }
         let m = ds.y[i] * row.dot_dense(w);
         ops += row.nnz();
         let g = m + (alpha[i] / (c - alpha[i])).ln();

@@ -62,12 +62,18 @@ pub(crate) fn pg_violation(alpha_i: f64, g: f64, c: f64) -> f64 {
 }
 
 /// Full KKT verification pass; returns (max violation, ops spent).
+/// Software-pipelined: row `i + 1`'s slices are prefetched while row
+/// `i`'s gather-dot reduces (a pure hint — results are unchanged).
 fn verify_pass(ds: &Dataset, alpha: &[f64], w: &[f64], c: f64) -> (f64, usize) {
     let n = ds.n_instances();
     let mut max_viol = 0.0f64;
     let mut ops = 0usize;
     for i in 0..n {
         let row = ds.x.row(i);
+        if i + 1 < n {
+            let next = ds.x.row(i + 1);
+            crate::sparse::kernels::prefetch_row(next.indices(), next.values());
+        }
         let g = ds.y[i] * row.dot_dense(w) - 1.0;
         ops += row.nnz();
         max_viol = max_viol.max(pg_violation(alpha[i], g, c));

@@ -160,9 +160,10 @@ impl<'a> RowView<'a> {
         }
     }
 
-    /// Dot product against a dense vector (unrolled unchecked kernel;
-    /// the bounds of every gather are established in O(1) by
-    /// [`Self::check_bounds`]).
+    /// Dot product against a dense vector (unchecked kernel on the
+    /// runtime-dispatched SIMD tier — see [`crate::sparse::kernels`];
+    /// bit-identical across tiers. The bounds of every gather are
+    /// established in O(1) by [`Self::check_bounds`]).
     #[inline]
     pub fn dot_dense(&self, w: &[f64]) -> f64 {
         self.check_bounds(w.len());
@@ -666,27 +667,83 @@ impl Csr {
         (bytes, pages)
     }
 
+    /// Run `f` over every row in order, prefetching row `r + 1`'s
+    /// index/value slices while `f` consumes row `r` — software
+    /// pipelining for full-matrix sweeps: the next row's cache-line
+    /// loads are in flight during the current row's reduction. Prefetch
+    /// is a pure hint, so results are identical to a plain loop.
+    fn for_each_row_pipelined<F: FnMut(usize, RowView<'_>)>(&self, mut f: F) {
+        if self.rows == 0 {
+            return;
+        }
+        let mut cur = self.row(0);
+        for r in 0..self.rows {
+            if r + 1 < self.rows {
+                let next = self.row(r + 1);
+                kernels::prefetch_row(next.indices, next.values);
+                f(r, cur);
+                cur = next;
+            } else {
+                f(r, cur);
+            }
+        }
+    }
+
     /// Per-row squared norms, computed once and cached on the matrix.
     /// Every solver that needs `Q_ii` (svm / logreg / mcsvm / the shard
     /// fronts) borrows this slice instead of recomputing its own copy.
+    /// The one-time fill is a pipelined full sweep (prefetch row `r + 1`
+    /// while row `r` reduces); the values are bit-identical to a naive
+    /// per-row loop.
     pub fn row_norms_sq(&self) -> &[f64] {
-        self.norms_sq.get_or_init(|| (0..self.rows).map(|r| self.row(r).norm_sq()).collect())
+        self.norms_sq.get_or_init(|| {
+            let mut norms = Vec::with_capacity(self.rows);
+            self.for_each_row_pipelined(|_, row| norms.push(row.norm_sq()));
+            norms
+        })
     }
 
-    /// Dense matvec `y = A x` (reference / validation path).
+    /// Dense matvec `y = A x` (reference / validation path; pipelined
+    /// full sweep, bit-identical to per-row [`RowView::dot_dense`]).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
-        (0..self.rows).map(|r| self.row(r).dot_dense(x)).collect()
+        let mut y = Vec::with_capacity(self.rows);
+        self.for_each_row_pipelined(|_, row| y.push(row.dot_dense(x)));
+        y
     }
 
-    /// Transposed matvec `y = Aᵀ x`.
+    /// Transposed matvec `y = Aᵀ x` (pipelined full sweep).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            self.row(r).axpy_into(x[r], &mut y);
-        }
+        self.for_each_row_pipelined(|r, row| row.axpy_into(x[r], &mut y));
         y
+    }
+
+    /// Batched gather-dot `out[k] = row(ids[k]) · w` through the
+    /// software-pipelined [`kernels::dot_many_unchecked`]: row `k + 1`'s
+    /// slices are prefetched while row `k` reduces, so a verification
+    /// scan's cache misses overlap its arithmetic. Bit-identical to
+    /// calling [`RowView::dot_dense`] per id — pipelining changes memory
+    /// timing, never the reduction tree.
+    pub fn dot_rows_into(&self, ids: &[u32], w: &[f64], out: &mut [f64]) {
+        assert_eq!(ids.len(), out.len(), "dot_rows_into length mismatch");
+        // fixed-size batches keep the slice-pair scratch on the stack
+        const BATCH: usize = 32;
+        let empty: (&[u32], &[f64]) = (&[], &[]);
+        let mut batch = [empty; BATCH];
+        for (ids_chunk, out_chunk) in ids.chunks(BATCH).zip(out.chunks_mut(BATCH)) {
+            for (slot, &r) in batch.iter_mut().zip(ids_chunk.iter()) {
+                let row = self.row(r as usize);
+                // the O(1) soundness gate of the unchecked kernels
+                row.check_bounds(w.len());
+                *slot = (row.indices, row.values);
+            }
+            // SAFETY: every batched row passed the O(1) last-index gate
+            // (row indices strictly increasing — Csr invariant), so all
+            // gathers are in bounds for w.
+            unsafe { kernels::dot_many_unchecked(&batch[..ids_chunk.len()], w, out_chunk) };
+        }
     }
 
     /// Transpose to CSC-equivalent CSR (i.e. a CSR matrix of the
@@ -871,6 +928,34 @@ mod tests {
         assert_eq!(m.matvec(&x), vec![7.0, 0.0, 11.0]);
         let y = vec![1.0, 1.0, 1.0];
         assert_eq!(m.matvec_t(&y), vec![4.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_rows_into_bit_matches_per_row() {
+        prop::check(40, |g| {
+            let cols = g.usize_in(1, 24);
+            // up to 80 rows so the scan crosses the 32-row batch boundary
+            let nrows = g.usize_in(0, 80);
+            let rows: Vec<Vec<(usize, f64)>> = (0..nrows)
+                .map(|_| {
+                    let nnz = g.usize_in(0, cols);
+                    let pat = g.sparse_pattern(cols, nnz);
+                    pat.iter().map(|&c| (c, g.f64_in(-2.0, 2.0))).collect()
+                })
+                .collect();
+            let m = Csr::from_rows(cols, rows);
+            let w = g.vec_f64(cols, -2.0, 2.0);
+            // reversed ids: the batch API promises per-id results in any
+            // visit order, not just ascending scans
+            let ids: Vec<u32> = (0..nrows as u32).rev().collect();
+            let mut out = vec![0.0; nrows];
+            m.dot_rows_into(&ids, &w, &mut out);
+            for (k, &i) in ids.iter().enumerate() {
+                let reference = m.row(i as usize).dot_dense(&w);
+                prop::assert_holds(out[k].to_bits() == reference.to_bits(), "dot_rows_into bits")?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

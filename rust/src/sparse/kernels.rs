@@ -1,5 +1,7 @@
 //! Hot-path sparse/dense kernels: 4-way unrolled gather/scatter with
-//! independent accumulator lanes, in checked and unchecked flavors.
+//! independent accumulator lanes, in checked and unchecked flavors, plus
+//! runtime-dispatched SIMD tiers and a software-pipelined multi-row
+//! variant.
 //!
 //! The CD inner loop is one sparse gather-dot followed by (usually) one
 //! sparse scatter-add over the same row slices. The paper's wall-clock
@@ -8,16 +10,72 @@
 //!
 //! * **4 independent accumulator lanes** — breaks the sequential
 //!   floating-point dependency chain so the CPU can keep several
-//!   multiply-adds in flight (and the autovectorizer can use them),
+//!   multiply-adds in flight,
 //! * **`get_unchecked` indexing** on the unchecked variants — the gather
 //!   `w[indices[k]]` otherwise pays one bounds check per non-zero,
 //! * a **fused [`step_unchecked`]** entry point that runs the gradient
 //!   dot and the scatter-update back-to-back on the same row slices
-//!   while they are hot in cache.
+//!   while they are hot in cache,
+//! * **explicit SIMD tiers** dispatched at runtime (below), and
+//! * **software pipelining** ([`dot_many_unchecked`], [`prefetch_row`])
+//!   that issues the next row's cache-line loads while the current row's
+//!   reduction is still retiring.
+//!
+//! # Runtime dispatch
+//!
+//! The unchecked entry points ([`dot_dense_unchecked`],
+//! [`axpy_unchecked`], [`step_unchecked`]) route through a process-wide
+//! dispatch table resolved exactly once ([`active_tier`], a
+//! `OnceLock<&'static KernelTier>`). Tier selection order:
+//!
+//! 1. the `ACF_FORCE_KERNEL` override (`scalar` | `simd` | `auto`,
+//!    parsed once by [`crate::util::cpufeat::kernel_force`]), then
+//! 2. the best tier the CPU supports: `avx2+fma` when `cpuid` reports
+//!    both AVX2 and FMA, else `sse2` (baseline on x86_64); `neon` on
+//!    aarch64 (baseline); `scalar` everywhere else.
+//!
+//! The 4-way **scalar unroll is always compiled** and remains both the
+//! fallback tier and the parity oracle — SIMD tiers are an
+//! implementation detail behind the same contract, never a semantic
+//! fork. The `*_checked` twins below never dispatch: they are the fixed
+//! scalar reference every tier is tested against.
+//!
+//! # Bit-identity / reduction-tree contract
+//!
+//! Every tier — scalar, SSE2, AVX2+FMA, NEON — produces **bit-identical
+//! results** for `dot`, `axpy`, and the fused `step`. The sharded
+//! engine's determinism guarantees (sync runs bit-identical across
+//! `--shard-workers` counts, owned ↔ mmap data-plane parity, tracing
+//! non-perturbation) silently assume the kernels are a pure function of
+//! their inputs; dispatch must not make results a function of the host
+//! CPU. Concretely, every implementation keeps the exact reduction tree
+//! of the scalar unroll:
+//!
+//! * the dot keeps 4 independent accumulators where lane `l` sums the
+//!   elements at positions `4c + l` in chunk order, the `nnz % 4` tail
+//!   folds into lane 0, and the final reduction is `(a0 + a1) +
+//!   (a2 + a3)` — SIMD lanes map 1:1 onto scalar lanes, so every
+//!   intermediate rounding is the same;
+//! * **no FMA contraction anywhere**: the scalar unroll rounds the
+//!   product and the add separately, so the AVX2 tier uses
+//!   `mul_pd` + `add_pd` rather than `vfmadd` (one rounding) — the
+//!   `+fma` in the tier name records the *detection gate*, not the
+//!   instruction mix;
+//! * the axpy vectorizes only the products `scale * values[k]` (the
+//!   same single IEEE multiply as the scalar path) and applies the
+//!   scatter `w[j] += p` element-by-element in row order — which also
+//!   keeps repeated indices exact, a stronger property than CSR needs;
+//! * prefetching ([`prefetch_row`], [`dot_many_unchecked`]) changes
+//!   memory timing only, never arithmetic.
+//!
+//! The per-tier property tests at the bottom assert bit-identity against
+//! the checked oracle for every tier the host can run, across empty
+//! rows, repeated axpy indices, and every `nnz % 4` tail class.
 //!
 //! # Safety contract of the unchecked paths
 //!
-//! Every `*_unchecked` function requires, and `debug_assert!`s:
+//! Every `*_unchecked` function (and every [`KernelTier`] method)
+//! requires, and `debug_assert!`s where practical:
 //!
 //! 1. `indices.len() == values.len()`;
 //! 2. every `indices[k] as usize` is in bounds for `w`.
@@ -33,20 +91,26 @@
 //!
 //! Each unchecked kernel has a `*_checked` twin generated from the same
 //! monomorphized implementation (`const CHECKED: bool` toggles the
-//! indexing only), so checked and unchecked results are **bit-identical
-//! by construction** — the property tests below assert it anyway, across
-//! empty rows, `nnz % 4 != 0` tails and random sparse patterns. The
-//! pre-existing sequential implementations remain as [`dot_dense_scalar`]
-//! / [`axpy_scalar`]: the *semantic* oracle (and the perf baseline of
-//! `benches/kernel_microbench.rs`). Note that lane accumulation
-//! re-associates the dot-product sum, so the unrolled dot agrees with the
-//! scalar reference only up to floating-point rounding; the scatter-add
-//! touches each (distinct) index exactly once and is bit-identical to the
-//! scalar version.
+//! indexing only), so checked and scalar-unrolled results are
+//! **bit-identical by construction**, and every SIMD tier is tested
+//! bit-exact against that twin. The pre-existing sequential
+//! implementations remain as [`dot_dense_scalar`] / [`axpy_scalar`]: the
+//! *semantic* oracle (and the perf baseline of
+//! `benches/kernel_microbench.rs`; `#[inline(never)]` keeps that
+//! baseline honest). Note that lane accumulation re-associates the
+//! dot-product sum, so the unrolled dot agrees with the sequential
+//! reference only up to floating-point rounding; the scatter-add touches
+//! each (distinct) index exactly once and is bit-identical to the
+//! sequential version.
+
+use crate::util::cpufeat;
+use std::sync::OnceLock;
 
 /// Sequential bounds-checked sparse dot — the original implementation,
 /// kept as the semantic oracle and microbench baseline.
-#[inline]
+/// (`inline(never)`: the microbench measures it as a real call, so the
+/// baseline cannot be inlined-and-vectorized into something it is not.)
+#[inline(never)]
 pub fn dot_dense_scalar(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
     let mut acc = 0.0;
     for (&j, &v) in indices.iter().zip(values.iter()) {
@@ -57,8 +121,8 @@ pub fn dot_dense_scalar(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
 
 /// Sequential bounds-checked scatter-add `w[indices[k]] += scale *
 /// values[k]` — the original implementation, kept as the semantic oracle
-/// and microbench baseline.
-#[inline]
+/// and microbench baseline (`inline(never)`, as in [`dot_dense_scalar`]).
+#[inline(never)]
 pub fn axpy_scalar(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
     for (&j, &v) in indices.iter().zip(values.iter()) {
         w[j as usize] += scale * v;
@@ -143,45 +207,469 @@ unsafe fn axpy_unrolled<const CHECKED: bool>(scale: f64, indices: &[u32], values
     }
 }
 
-/// 4-lane gather-dot, bounds-checked — the parity oracle for
-/// [`dot_dense_unchecked`] (bit-identical by construction).
+/// 4-lane gather-dot, bounds-checked — the parity oracle every dispatch
+/// tier is tested bit-exact against. Never dispatched.
 #[inline]
 pub fn dot_dense_checked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
     // SAFETY: CHECKED = true performs ordinary indexing; no contract.
     unsafe { dot_lanes::<true>(indices, values, w) }
 }
 
-/// 4-lane gather-dot with unchecked indexing.
-///
-/// # Safety
-/// `indices.len() == values.len()` and every `indices[k] as usize` must
-/// be `< w.len()` (see the module docs).
-#[inline]
-pub unsafe fn dot_dense_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
-    dot_lanes::<false>(indices, values, w)
-}
-
 /// 4-way unrolled scatter-add, bounds-checked — the parity oracle for
-/// [`axpy_unchecked`].
+/// [`axpy_unchecked`] and the SIMD tiers. Never dispatched.
 #[inline]
 pub fn axpy_checked(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
     // SAFETY: CHECKED = true performs ordinary indexing; no contract.
     unsafe { axpy_unrolled::<true>(scale, indices, values, w) }
 }
 
-/// 4-way unrolled scatter-add with unchecked indexing.
+/// The always-compiled scalar-unroll tier: the unchecked 4-lane kernels,
+/// exposed directly so benches and the dispatch table can name the tier
+/// regardless of what the CPU supports.
+pub mod scalar {
+    /// Scalar-tier unchecked gather-dot (4 accumulator lanes).
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_dense_unchecked`].
+    #[inline]
+    pub unsafe fn dot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        super::dot_lanes::<false>(indices, values, w)
+    }
+
+    /// Scalar-tier unchecked scatter-add (4-way unrolled).
+    ///
+    /// # Safety
+    /// Same contract as [`super::axpy_unchecked`].
+    #[inline]
+    pub unsafe fn axpy(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        super::axpy_unrolled::<false>(scale, indices, values, w)
+    }
+}
+
+/// x86_64 SIMD tiers. The AVX2 bodies carry `#[target_feature]` and are
+/// reached through plain `unsafe fn` wrappers (MSRV 1.73 cannot coerce
+/// `#[target_feature]` functions to fn pointers); SSE2 is part of the
+/// x86_64 baseline and needs no gate. Both keep the scalar reduction
+/// tree exactly — see the module docs — and in particular use separate
+/// multiply and add instructions (no FMA contraction).
+#[cfg(target_arch = "x86_64")]
+pub mod x86 {
+    use core::arch::x86_64::*;
+
+    /// AVX2 unchecked gather-dot: 4 f64 lanes per step via
+    /// `vgatherdpd`, lane `l` accumulating scalar lane `l` exactly.
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_dense_unchecked`]; additionally the
+    /// CPU must support AVX2 (guaranteed by the dispatch table).
+    #[inline]
+    pub unsafe fn dot_avx2(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        // vgatherdpd offsets are signed 32-bit: on a >2^31-element dense
+        // vector the gather could not address the tail, so fall back to
+        // the (bit-identical) scalar tier for such degenerate shapes.
+        if w.len() > i32::MAX as usize {
+            return super::scalar::dot(indices, values, w);
+        }
+        dot_avx2_body(indices, values, w)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2_body(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 u32 indices and 4 f64 values
+            // are in bounds at `base`, and every gathered index < w.len().
+            let idx = _mm_loadu_si128(ip.add(base) as *const __m128i);
+            let x = _mm256_i32gather_pd::<8>(w.as_ptr(), idx);
+            let v = _mm256_loadu_pd(vp.add(base));
+            // mul then add, NOT vfmadd: the scalar oracle rounds the
+            // product and the sum separately, and a fused single
+            // rounding would break the bit-identity contract.
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, x));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut a0 = lanes[0];
+        for k in chunks * 4..n {
+            a0 += *vp.add(k) * *w.get_unchecked(*ip.add(k) as usize);
+        }
+        (a0 + lanes[1]) + (lanes[2] + lanes[3])
+    }
+
+    /// AVX2 unchecked scatter-add: products `scale * values` vectorize;
+    /// the scatter stays element-by-element in row order (repeated
+    /// indices observe every prior update, exactly like the scalar
+    /// unroll).
+    ///
+    /// # Safety
+    /// Same contract as [`super::axpy_unchecked`]; additionally the CPU
+    /// must support AVX2 (guaranteed by the dispatch table).
+    #[inline]
+    pub unsafe fn axpy_avx2(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        axpy_avx2_body(scale, indices, values, w)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_avx2_body(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let s = _mm256_set1_pd(scale);
+        let mut prod = [0.0f64; 4];
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 values in bounds at `base`.
+            let v = _mm256_loadu_pd(vp.add(base));
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(s, v));
+            for (l, p) in prod.iter().enumerate() {
+                let j = *ip.add(base + l) as usize;
+                *w.get_unchecked_mut(j) += *p;
+            }
+        }
+        for k in chunks * 4..n {
+            let j = *ip.add(k) as usize;
+            *w.get_unchecked_mut(j) += scale * *vp.add(k);
+        }
+    }
+
+    /// SSE2 unchecked gather-dot: two 2-lane accumulators `[a0, a1]` /
+    /// `[a2, a3]`, gathers packed from scalar loads (SSE2 has no gather
+    /// instruction), reduction `(a0 + a1) + (a2 + a3)` in scalar.
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_dense_unchecked`]. SSE2 is baseline
+    /// on x86_64; no extra CPU requirement.
+    #[inline]
+    pub unsafe fn dot_sse2(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 indices/values in bounds at
+            // `base`, every index < w.len().
+            let j0 = *ip.add(base) as usize;
+            let j1 = *ip.add(base + 1) as usize;
+            let j2 = *ip.add(base + 2) as usize;
+            let j3 = *ip.add(base + 3) as usize;
+            // _mm_set_pd lists lanes high-to-low: lane 0 is w[j0]
+            let x01 = _mm_set_pd(*w.get_unchecked(j1), *w.get_unchecked(j0));
+            let x23 = _mm_set_pd(*w.get_unchecked(j3), *w.get_unchecked(j2));
+            let v01 = _mm_loadu_pd(vp.add(base));
+            let v23 = _mm_loadu_pd(vp.add(base + 2));
+            acc01 = _mm_add_pd(acc01, _mm_mul_pd(v01, x01));
+            acc23 = _mm_add_pd(acc23, _mm_mul_pd(v23, x23));
+        }
+        let mut l01 = [0.0f64; 2];
+        let mut l23 = [0.0f64; 2];
+        _mm_storeu_pd(l01.as_mut_ptr(), acc01);
+        _mm_storeu_pd(l23.as_mut_ptr(), acc23);
+        let mut a0 = l01[0];
+        for k in chunks * 4..n {
+            a0 += *vp.add(k) * *w.get_unchecked(*ip.add(k) as usize);
+        }
+        (a0 + l01[1]) + (l23[0] + l23[1])
+    }
+
+    /// SSE2 unchecked scatter-add: 2-lane product vectors, scatter
+    /// element-by-element in row order (see [`axpy_avx2`]).
+    ///
+    /// # Safety
+    /// Same contract as [`super::axpy_unchecked`]. SSE2 is baseline on
+    /// x86_64; no extra CPU requirement.
+    #[inline]
+    pub unsafe fn axpy_sse2(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let s = _mm_set1_pd(scale);
+        let mut prod = [0.0f64; 4];
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 values in bounds at `base`.
+            let v01 = _mm_loadu_pd(vp.add(base));
+            let v23 = _mm_loadu_pd(vp.add(base + 2));
+            _mm_storeu_pd(prod.as_mut_ptr(), _mm_mul_pd(s, v01));
+            _mm_storeu_pd(prod.as_mut_ptr().add(2), _mm_mul_pd(s, v23));
+            for (l, p) in prod.iter().enumerate() {
+                let j = *ip.add(base + l) as usize;
+                *w.get_unchecked_mut(j) += *p;
+            }
+        }
+        for k in chunks * 4..n {
+            let j = *ip.add(k) as usize;
+            *w.get_unchecked_mut(j) += scale * *vp.add(k);
+        }
+    }
+}
+
+/// aarch64 NEON tier: two 2-lane accumulators mirroring the SSE2 shape.
+/// NEON is baseline on aarch64; the `#[target_feature]` bodies are
+/// reached through plain `unsafe fn` wrappers for fn-pointer coercion
+/// (as in the `x86` module). No FMA contraction (`vmulq` + `vaddq`,
+/// never `vfmaq`) — see the module docs for the bit-identity contract.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use core::arch::aarch64::*;
+
+    /// NEON unchecked gather-dot.
+    ///
+    /// # Safety
+    /// Same contract as [`super::dot_dense_unchecked`]. NEON is baseline
+    /// on aarch64; no extra CPU requirement.
+    #[inline]
+    pub unsafe fn dot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        dot_body(indices, values, w)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_body(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let wp = w.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 indices/values in bounds at
+            // `base`, every index < w.len().
+            let j0 = *ip.add(base) as usize;
+            let j1 = *ip.add(base + 1) as usize;
+            let j2 = *ip.add(base + 2) as usize;
+            let j3 = *ip.add(base + 3) as usize;
+            let x01 = vcombine_f64(vld1_f64(wp.add(j0)), vld1_f64(wp.add(j1)));
+            let x23 = vcombine_f64(vld1_f64(wp.add(j2)), vld1_f64(wp.add(j3)));
+            let v01 = vld1q_f64(vp.add(base));
+            let v23 = vld1q_f64(vp.add(base + 2));
+            acc01 = vaddq_f64(acc01, vmulq_f64(v01, x01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(v23, x23));
+        }
+        let mut a0 = vgetq_lane_f64::<0>(acc01);
+        for k in chunks * 4..n {
+            a0 += *vp.add(k) * *wp.add(*ip.add(k) as usize);
+        }
+        (a0 + vgetq_lane_f64::<1>(acc01)) + (vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23))
+    }
+
+    /// NEON unchecked scatter-add: 2-lane product vectors, scatter
+    /// element-by-element in row order (see the module docs).
+    ///
+    /// # Safety
+    /// Same contract as [`super::axpy_unchecked`]. NEON is baseline on
+    /// aarch64; no extra CPU requirement.
+    #[inline]
+    pub unsafe fn axpy(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        axpy_body(scale, indices, values, w)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_body(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(indices.len(), values.len());
+        let n = indices.len();
+        let chunks = n / 4;
+        let ip = indices.as_ptr();
+        let vp = values.as_ptr();
+        let s = vdupq_n_f64(scale);
+        let mut prod = [0.0f64; 4];
+        for c in 0..chunks {
+            let base = c * 4;
+            // SAFETY (caller contract): 4 values in bounds at `base`.
+            let v01 = vld1q_f64(vp.add(base));
+            let v23 = vld1q_f64(vp.add(base + 2));
+            vst1q_f64(prod.as_mut_ptr(), vmulq_f64(s, v01));
+            vst1q_f64(prod.as_mut_ptr().add(2), vmulq_f64(s, v23));
+            for (l, p) in prod.iter().enumerate() {
+                let j = *ip.add(base + l) as usize;
+                *w.get_unchecked_mut(j) += *p;
+            }
+        }
+        for k in chunks * 4..n {
+            let j = *ip.add(k) as usize;
+            *w.get_unchecked_mut(j) += scale * *vp.add(k);
+        }
+    }
+}
+
+/// One resolved kernel implementation tier: a named pair of unchecked
+/// `dot`/`axpy` entry points with identical (bit-exact) semantics.
+/// `&'static KernelTier` values come from [`active_tier`] /
+/// [`available_tiers`]; the struct is plain fn pointers, so a tier is
+/// `Copy` and free to pass around.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelTier {
+    name: &'static str,
+    dot: unsafe fn(&[u32], &[f64], &[f64]) -> f64,
+    axpy: unsafe fn(f64, &[u32], &[f64], &mut [f64]),
+}
+
+impl KernelTier {
+    /// Tier name: `"scalar"`, `"sse2"`, `"avx2+fma"`, or `"neon"`.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// This tier's unchecked gather-dot.
+    ///
+    /// # Safety
+    /// Same contract as [`dot_dense_unchecked`].
+    #[inline]
+    pub unsafe fn dot(&self, indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        (self.dot)(indices, values, w)
+    }
+
+    /// This tier's unchecked scatter-add.
+    ///
+    /// # Safety
+    /// Same contract as [`axpy_unchecked`].
+    #[inline]
+    pub unsafe fn axpy(&self, scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
+        (self.axpy)(scale, indices, values, w)
+    }
+
+    /// This tier's fused CD step (dot → `update` → conditional scatter;
+    /// see [`step_unchecked`] for the semantics).
+    ///
+    /// # Safety
+    /// Same contract as [`step_unchecked`].
+    #[inline]
+    pub unsafe fn step<F: FnOnce(f64) -> f64>(
+        &self,
+        indices: &[u32],
+        values: &[f64],
+        w: &mut [f64],
+        update: F,
+    ) -> (f64, f64) {
+        let dot = (self.dot)(indices, values, w);
+        let scale = update(dot);
+        if scale != 0.0 {
+            (self.axpy)(scale, indices, values, w);
+        }
+        (dot, scale)
+    }
+}
+
+static SCALAR_TIER: KernelTier = KernelTier { name: "scalar", dot: scalar::dot, axpy: scalar::axpy };
+#[cfg(target_arch = "x86_64")]
+static SSE2_TIER: KernelTier = KernelTier { name: "sse2", dot: x86::dot_sse2, axpy: x86::axpy_sse2 };
+#[cfg(target_arch = "x86_64")]
+static AVX2_TIER: KernelTier = KernelTier { name: "avx2+fma", dot: x86::dot_avx2, axpy: x86::axpy_avx2 };
+#[cfg(target_arch = "aarch64")]
+static NEON_TIER: KernelTier = KernelTier { name: "neon", dot: neon::dot, axpy: neon::axpy };
+
+static ACTIVE_TIER: OnceLock<&'static KernelTier> = OnceLock::new();
+
+/// The tier every dispatched entry point runs on, resolved once per
+/// process: the `ACF_FORCE_KERNEL` override if set, else the best tier
+/// the CPU supports. One atomic load after first use.
+#[inline]
+pub fn active_tier() -> &'static KernelTier {
+    ACTIVE_TIER.get_or_init(select_tier)
+}
+
+/// Name of the active dispatch tier (`"avx2+fma"` / `"sse2"` / `"neon"`
+/// / `"scalar"`) — recorded in bench metadata so runs from different
+/// hosts stay comparable.
+pub fn active_tier_name() -> &'static str {
+    active_tier().name
+}
+
+fn select_tier() -> &'static KernelTier {
+    match cpufeat::kernel_force() {
+        cpufeat::KernelForce::Scalar => &SCALAR_TIER,
+        cpufeat::KernelForce::Auto | cpufeat::KernelForce::Simd => simd_tier().unwrap_or(&SCALAR_TIER),
+    }
+}
+
+/// Best SIMD tier the running CPU can execute, or `None` when only the
+/// scalar tier exists for this architecture.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_tier() -> Option<&'static KernelTier> {
+    if cpufeat::has_avx2_fma() {
+        Some(&AVX2_TIER)
+    } else {
+        // SSE2 is part of the x86_64 baseline: always runnable
+        Some(&SSE2_TIER)
+    }
+}
+
+/// Best SIMD tier the running CPU can execute, or `None` when only the
+/// scalar tier exists for this architecture.
+#[cfg(target_arch = "aarch64")]
+pub fn simd_tier() -> Option<&'static KernelTier> {
+    // NEON is part of the aarch64 baseline: always runnable
+    Some(&NEON_TIER)
+}
+
+/// Best SIMD tier the running CPU can execute, or `None` when only the
+/// scalar tier exists for this architecture.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn simd_tier() -> Option<&'static KernelTier> {
+    None
+}
+
+/// Every tier the running CPU can execute, scalar first. The per-tier
+/// bit-identity property tests iterate this list, so one test binary
+/// covers all locally runnable tiers regardless of which one dispatch
+/// selected.
+pub fn available_tiers() -> Vec<&'static KernelTier> {
+    #[allow(unused_mut)]
+    let mut tiers: Vec<&'static KernelTier> = vec![&SCALAR_TIER];
+    #[cfg(target_arch = "x86_64")]
+    {
+        tiers.push(&SSE2_TIER);
+        if cpufeat::has_avx2_fma() {
+            tiers.push(&AVX2_TIER);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    tiers.push(&NEON_TIER);
+    tiers
+}
+
+/// 4-lane gather-dot with unchecked indexing, dispatched to the active
+/// tier ([`active_tier`]); bit-identical to [`dot_dense_checked`] on
+/// every tier.
+///
+/// # Safety
+/// `indices.len() == values.len()` and every `indices[k] as usize` must
+/// be `< w.len()` (see the module docs).
+#[inline]
+pub unsafe fn dot_dense_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    (active_tier().dot)(indices, values, w)
+}
+
+/// Unrolled scatter-add with unchecked indexing, dispatched to the
+/// active tier; bit-identical to [`axpy_checked`] on every tier.
 ///
 /// # Safety
 /// Same contract as [`dot_dense_unchecked`], with `w` writable.
 #[inline]
 pub unsafe fn axpy_unchecked(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
-    axpy_unrolled::<false>(scale, indices, values, w)
+    (active_tier().axpy)(scale, indices, values, w)
 }
 
 /// Fused CD step on one sparse row: gather-dot against `w`, hand the
 /// result to `update` (which performs the O(1) coordinate math and
 /// returns the scatter scale; `0.0` means "no update"), then scatter-add
 /// on the *same, still-cache-hot* row slices. Returns `(dot, scale)`.
+/// Both halves run on the active dispatch tier.
 ///
 /// # Safety
 /// Same contract as [`dot_dense_unchecked`], with `w` writable.
@@ -192,15 +680,11 @@ pub unsafe fn step_unchecked<F: FnOnce(f64) -> f64>(
     w: &mut [f64],
     update: F,
 ) -> (f64, f64) {
-    let dot = dot_lanes::<false>(indices, values, w);
-    let scale = update(dot);
-    if scale != 0.0 {
-        axpy_unrolled::<false>(scale, indices, values, w);
-    }
-    (dot, scale)
+    active_tier().step(indices, values, w, update)
 }
 
-/// Bounds-checked twin of [`step_unchecked`] (parity oracle).
+/// Bounds-checked twin of [`step_unchecked`] (parity oracle; always the
+/// scalar unroll, never dispatched).
 #[inline]
 pub fn step_checked<F: FnOnce(f64) -> f64>(indices: &[u32], values: &[f64], w: &mut [f64], update: F) -> (f64, f64) {
     // SAFETY: CHECKED = true performs ordinary indexing; no contract.
@@ -210,6 +694,79 @@ pub fn step_checked<F: FnOnce(f64) -> f64>(indices: &[u32], values: &[f64], w: &
         unsafe { axpy_unrolled::<true>(scale, indices, values, w) };
     }
     (dot, scale)
+}
+
+/// Best-effort prefetch of the cache line at `p`. A pure scheduling
+/// hint: `prefetcht0` / `prfm pldl1keep` cannot fault on any address,
+/// and the function is a no-op on architectures without a stable
+/// prefetch primitive.
+#[inline(always)]
+fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint, not a memory access; any address is
+    // acceptable and SSE is part of the x86_64 baseline.
+    unsafe {
+        use core::arch::x86_64::{_MM_HINT_T0, _mm_prefetch};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: prfm is a hint, not a memory access; any address is
+    // acceptable.
+    unsafe {
+        core::arch::asm!("prfm pldl1keep, [{0}]", in(reg) p, options(nostack, preserves_flags, readonly));
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = p;
+}
+
+/// Prefetch the leading cache lines of a sparse row's index/value
+/// slices — the software-pipelining half of [`dot_many_unchecked`]:
+/// issue these loads for row `k + 1` while row `k`'s reduction is still
+/// retiring, so the next row's cache misses overlap the current row's
+/// arithmetic. The slice starts plus one line deeper on each side
+/// (16 `u32` indices / 8 `f64` values per 64-byte line) cover rows up to
+/// two lines long completely; longer rows stream behind the hardware
+/// prefetcher once the head is resident. Hint only: results are
+/// identical with or without it.
+#[inline]
+pub fn prefetch_row(indices: &[u32], values: &[f64]) {
+    prefetch_read(indices.as_ptr());
+    prefetch_read(values.as_ptr());
+    if indices.len() > 16 {
+        prefetch_read(indices[16..].as_ptr());
+    }
+    if values.len() > 8 {
+        prefetch_read(values[8..].as_ptr());
+    }
+}
+
+/// Software-pipelined multi-row gather-dot: `out[k] = rows[k] · w`,
+/// prefetching row `k + 1`'s slices while row `k` reduces. Bit-identical
+/// to calling [`dot_dense_unchecked`] per row — pipelining changes
+/// memory timing, never the reduction tree. Used by the batched
+/// verification scans and `row_norms_sq()`-style full sweeps.
+///
+/// # Safety
+/// The module contract must hold for **every** `(indices, values)` pair
+/// in `rows` against `w`; `rows.len() == out.len()`.
+pub unsafe fn dot_many_unchecked(rows: &[(&[u32], &[f64])], w: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), out.len());
+    let t = active_tier();
+    for (k, (&(indices, values), o)) in rows.iter().zip(out.iter_mut()).enumerate() {
+        if let Some(&(ni, nv)) = rows.get(k + 1) {
+            prefetch_row(ni, nv);
+        }
+        *o = (t.dot)(indices, values, w);
+    }
+}
+
+/// Bounds-checked twin of [`dot_many_unchecked`] (parity oracle: scalar
+/// checked kernel per row, no prefetch, no dispatch).
+pub fn dot_many_checked(rows: &[(&[u32], &[f64])], w: &[f64], out: &mut [f64]) {
+    assert_eq!(rows.len(), out.len(), "dot_many length mismatch");
+    for (&(indices, values), o) in rows.iter().zip(out.iter_mut()) {
+        *o = dot_dense_checked(indices, values, w);
+    }
 }
 
 /// Dense 4-lane dot product. Safe: `chunks_exact` gives the compiler
@@ -366,6 +923,150 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn all_tiers_dot_bit_identical_to_checked() {
+        for tier in available_tiers() {
+            prop::check(150, |g| {
+                let d = g.usize_in(1, 96);
+                let (idx, vals) = random_row(g, d);
+                let w = g.vec_f64(d, -2.0, 2.0);
+                let a = dot_dense_checked(&idx, &vals, &w);
+                // SAFETY: indices in bounds by construction
+                // (sparse_pattern over [0, d)).
+                let b = unsafe { tier.dot(&idx, &vals, &w) };
+                prop::assert_holds(a.to_bits() == b.to_bits(), tier.name())
+            });
+        }
+    }
+
+    #[test]
+    fn all_tiers_axpy_bit_identical_to_checked() {
+        for tier in available_tiers() {
+            prop::check(150, |g| {
+                let d = g.usize_in(1, 96);
+                let (idx, vals) = random_row(g, d);
+                let w0 = g.vec_f64(d, -2.0, 2.0);
+                let s = g.f64_in(-2.0, 2.0);
+                let mut wa = w0.clone();
+                let mut wb = w0;
+                axpy_checked(s, &idx, &vals, &mut wa);
+                // SAFETY: indices in bounds by construction.
+                unsafe { tier.axpy(s, &idx, &vals, &mut wb) };
+                for t in 0..d {
+                    prop::assert_holds(wa[t].to_bits() == wb[t].to_bits(), tier.name())?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn all_tiers_fused_step_bit_identical_to_checked() {
+        for tier in available_tiers() {
+            prop::check(100, |g| {
+                let d = g.usize_in(1, 96);
+                let (idx, vals) = random_row(g, d);
+                let w0 = g.vec_f64(d, -2.0, 2.0);
+                let coeff = g.f64_in(-1.0, 1.0);
+                let upd = |dot: f64| coeff * dot;
+                let mut wa = w0.clone();
+                let mut wb = w0;
+                let (da, sa) = step_checked(&idx, &vals, &mut wa, upd);
+                // SAFETY: indices in bounds by construction.
+                let (db, sb) = unsafe { tier.step(&idx, &vals, &mut wb, upd) };
+                prop::assert_holds(da.to_bits() == db.to_bits() && sa.to_bits() == sb.to_bits(), tier.name())?;
+                for t in 0..d {
+                    prop::assert_holds(wa[t].to_bits() == wb[t].to_bits(), tier.name())?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn all_tiers_tail_classes_and_empty_rows() {
+        // nnz values from the issue spec: every lane-width tail class
+        // (1, 2, 3, 5 ≡ 1 mod 4, 33 ≡ 1 mod 4 past one full vector) plus
+        // the empty row.
+        for nnz in [0usize, 1, 2, 3, 5, 33] {
+            let idx: Vec<u32> = (0..nnz as u32).map(|k| 3 * k).collect();
+            let vals: Vec<f64> = (0..nnz).map(|k| (k as f64 - 2.0) * 0.37).collect();
+            let d = 3 * nnz + 1;
+            let w: Vec<f64> = (0..d).map(|t| 0.05 * t as f64 - 1.0).collect();
+            let dot_ref = dot_dense_checked(&idx, &vals, &w);
+            for tier in available_tiers() {
+                // SAFETY: indices are 3k < d by construction.
+                let dt = unsafe { tier.dot(&idx, &vals, &w) };
+                assert_eq!(dot_ref.to_bits(), dt.to_bits(), "dot tier {} nnz {nnz}", tier.name());
+                let mut wa = w.clone();
+                let mut wb = w.clone();
+                axpy_checked(-0.625, &idx, &vals, &mut wa);
+                // SAFETY: as above.
+                unsafe { tier.axpy(-0.625, &idx, &vals, &mut wb) };
+                assert_eq!(wa, wb, "axpy tier {} nnz {nnz}", tier.name());
+            }
+        }
+    }
+
+    #[test]
+    fn all_tiers_axpy_exact_with_repeated_indices() {
+        // CSR rows never repeat indices, but the scatter contract is
+        // stronger: in-order read-modify-write per element, so repeated
+        // slots observe every prior update. Pin that down per tier.
+        let idx = [0u32, 3, 3, 5, 1, 3, 3, 3, 2];
+        let vals = [1.0, 2.0, -0.5, 4.0, 0.25, 8.0, -1.0, 0.125, 3.0];
+        let w0: Vec<f64> = (0..7).map(|t| 0.3 * t as f64 - 1.0).collect();
+        for tier in available_tiers() {
+            let mut wa = w0.clone();
+            let mut wb = w0.clone();
+            axpy_checked(0.7, &idx, &vals, &mut wa);
+            // SAFETY: all indices < 7 = w.len().
+            unsafe { tier.axpy(0.7, &idx, &vals, &mut wb) };
+            for t in 0..w0.len() {
+                assert_eq!(wa[t].to_bits(), wb[t].to_bits(), "tier {} slot {t}", tier.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_many_bit_identical_to_per_row() {
+        prop::check(80, |g| {
+            let d = g.usize_in(1, 48);
+            let w = g.vec_f64(d, -2.0, 2.0);
+            let nrows = g.usize_in(0, 9);
+            let rows_owned: Vec<(Vec<u32>, Vec<f64>)> = (0..nrows).map(|_| random_row(g, d)).collect();
+            let rows: Vec<(&[u32], &[f64])> = rows_owned.iter().map(|(i, v)| (i.as_slice(), v.as_slice())).collect();
+            let mut out = vec![0.0; nrows];
+            // SAFETY: every row's indices are in bounds by construction.
+            unsafe { dot_many_unchecked(&rows, &w, &mut out) };
+            let mut reference = vec![0.0; nrows];
+            dot_many_checked(&rows, &w, &mut reference);
+            for k in 0..nrows {
+                prop::assert_holds(out[k].to_bits() == reference[k].to_bits(), "dot_many bits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_tier_is_a_runnable_tier() {
+        let name = active_tier_name();
+        assert!(["scalar", "sse2", "avx2+fma", "neon"].contains(&name), "unknown tier {name}");
+        assert!(available_tiers().iter().any(|t| t.name() == name));
+        // and resolution is stable
+        assert_eq!(active_tier_name(), active_tier_name());
+    }
+
+    #[test]
+    fn prefetch_row_is_inert() {
+        // covers all slice-length branches, including the deep-line ones
+        for n in [0usize, 1, 9, 17, 40] {
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let vals = vec![1.0f64; n];
+            prefetch_row(&idx, &vals);
+        }
     }
 
     #[test]

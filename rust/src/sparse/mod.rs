@@ -15,9 +15,11 @@
 //!
 //! All backends serve bit-identical rows for the same logical matrix;
 //! the property tests in [`storage`] and [`ingest`] pin that down. The
-//! hot paths ([`kernels`]: 4-way unrolled unchecked gather/scatter +
-//! the fused CD `step`; see that module's safety contract) only ever
-//! see `&[u32]`/`&[f64]` slices, so they are backend-oblivious.
+//! hot paths ([`kernels`]: unchecked gather/scatter + the fused CD
+//! `step`, dispatched at runtime across SIMD tiers — AVX2+FMA / SSE2 /
+//! NEON / 4-way scalar unroll, all bit-identical; see that module's
+//! safety and bit-identity contracts) only ever see `&[u32]`/`&[f64]`
+//! slices, so they are backend-oblivious.
 //!
 //! Also here: the libsvm reader/writer ([`libsvm`]) and dense-vector
 //! helpers ([`ops`]).

@@ -1,5 +1,11 @@
 //! Dense-vector helpers shared by the solvers. Kept tiny and `#[inline]`
 //! — these appear in the CD inner loop.
+//!
+//! Unlike the sparse gather/scatter entry points, the dense kernels here
+//! are *not* runtime-dispatched: they are safe `chunks_exact` loops the
+//! autovectorizer already turns into packed code (no gathers involved),
+//! so a SIMD tier would buy nothing while adding an indirect call. See
+//! [`crate::sparse::kernels`] for the dispatch story on the sparse side.
 
 /// Clip `x` to `[lo, hi]` — the paper's `[x]_a^b` truncation.
 #[inline(always)]

@@ -1,8 +1,10 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! deterministic RNG, JSON, CLI parsing, a scoped threadpool, statistics,
-//! timing, read-only file mapping, and a mini property-testing framework.
+//! timing, read-only file mapping, CPU feature detection, and a mini
+//! property-testing framework.
 
 pub mod cli;
+pub mod cpufeat;
 pub mod error;
 pub mod json;
 pub mod mmap;

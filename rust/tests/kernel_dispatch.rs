@@ -1,0 +1,99 @@
+//! Kernel-dispatch integration tests: the resolved tier is consistent
+//! with the `ACF_FORCE_KERNEL` environment override, and a solve driven
+//! through the public API lands on bit-identical kernel results across
+//! every tier the host can run.
+//!
+//! The override is process-global (parsed once into a `OnceLock`), so
+//! these tests never mutate the environment in-process — they assert
+//! consistency against whatever the harness was launched with. CI runs
+//! the whole test suite twice: once with dispatch free (`auto`) and once
+//! with `ACF_FORCE_KERNEL=scalar`, which drives both branches below.
+
+use acf_cd::sparse::{kernels, Csr};
+use acf_cd::util::prop;
+
+#[test]
+fn active_tier_is_consistent_with_the_env_override() {
+    let name = kernels::active_tier_name();
+    assert!(["scalar", "sse2", "avx2+fma", "neon"].contains(&name), "unknown tier {name}");
+    let auto = kernels::simd_tier().map_or("scalar", |t| t.name());
+    match std::env::var("ACF_FORCE_KERNEL").ok().as_deref() {
+        Some(v) if v.eq_ignore_ascii_case("scalar") => assert_eq!(name, "scalar"),
+        // simd, auto, unset, and unrecognized values all resolve to the
+        // best tier the CPU supports
+        _ => assert_eq!(name, auto),
+    }
+}
+
+#[test]
+fn dispatched_row_ops_bit_match_the_checked_oracle() {
+    // end-to-end through the public API: Csr rows → RowView entry points
+    // (which dispatch) vs the never-dispatched checked kernels
+    prop::check(60, |g| {
+        let cols = g.usize_in(1, 40);
+        let nrows = g.usize_in(1, 12);
+        let rows: Vec<Vec<(usize, f64)>> = (0..nrows)
+            .map(|_| {
+                let nnz = g.usize_in(0, cols);
+                let pat = g.sparse_pattern(cols, nnz);
+                pat.iter().map(|&c| (c, g.f64_in(-2.0, 2.0))).collect()
+            })
+            .collect();
+        let m = Csr::from_rows(cols, rows);
+        let w0 = g.vec_f64(cols, -2.0, 2.0);
+        for r in 0..nrows {
+            let row = m.row(r);
+            let dispatched = row.dot_dense(&w0);
+            let oracle = kernels::dot_dense_checked(row.indices(), row.values(), &w0);
+            prop::assert_holds(dispatched.to_bits() == oracle.to_bits(), "dot dispatch parity")?;
+
+            let mut wa = w0.clone();
+            let mut wb = w0.clone();
+            row.axpy_into(0.75, &mut wa);
+            kernels::axpy_checked(0.75, row.indices(), row.values(), &mut wb);
+            for t in 0..cols {
+                prop::assert_holds(wa[t].to_bits() == wb[t].to_bits(), "axpy dispatch parity")?;
+            }
+
+            let mut wc = w0.clone();
+            let mut wd = w0.clone();
+            let (da, sa) = row.step(&mut wc, |dot| 0.5 * dot);
+            let (db, sb) = kernels::step_checked(row.indices(), row.values(), &mut wd, |dot| 0.5 * dot);
+            prop::assert_holds(da.to_bits() == db.to_bits() && sa.to_bits() == sb.to_bits(), "step dispatch parity")?;
+            for t in 0..cols {
+                prop::assert_holds(wc[t].to_bits() == wd[t].to_bits(), "step w dispatch parity")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_runnable_tier_agrees_on_a_full_matrix_sweep() {
+    // matvec exercises the pipelined full-row sweep; compare the
+    // dispatched result against each tier applied row by row
+    prop::check(30, |g| {
+        let cols = g.usize_in(1, 32);
+        let nrows = g.usize_in(1, 20);
+        let rows: Vec<Vec<(usize, f64)>> = (0..nrows)
+            .map(|_| {
+                let nnz = g.usize_in(0, cols);
+                let pat = g.sparse_pattern(cols, nnz);
+                pat.iter().map(|&c| (c, g.f64_in(-2.0, 2.0))).collect()
+            })
+            .collect();
+        let m = Csr::from_rows(cols, rows);
+        let x = g.vec_f64(cols, -2.0, 2.0);
+        let y = m.matvec(&x);
+        for tier in kernels::available_tiers() {
+            for r in 0..nrows {
+                let row = m.row(r);
+                // SAFETY: Csr validated the strictly-increasing invariant
+                // at construction and x.len() == cols bounds every index.
+                let yr = unsafe { tier.dot(row.indices(), row.values(), &x) };
+                prop::assert_holds(y[r].to_bits() == yr.to_bits(), tier.name())?;
+            }
+        }
+        Ok(())
+    });
+}
