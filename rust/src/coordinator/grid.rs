@@ -87,6 +87,17 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
             j.trace_out = Some(per_row_trace_path(base_path, row));
         }
     }
+    // Concurrent rows cannot share one listening socket either: every
+    // row gets its own ephemeral-port server (port forced to 0, address
+    // printed per row) and a `row` label so scrapes stay attributable
+    // to a grid cell.
+    if let Some(base_addr) = &base.metrics_addr {
+        let addr = per_row_metrics_addr(base_addr);
+        for (row, j) in jobs.iter_mut().enumerate() {
+            j.metrics_addr = Some(addr.clone());
+            j.metrics_labels.push(("row".to_string(), row.to_string()));
+        }
+    }
     parallel_map(jobs.len(), spec.workers, |k| run_job_on(&jobs[k], &ds))
         .into_iter()
         .collect()
@@ -98,6 +109,16 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<JobOutcome>> {
 fn per_row_trace_path(base: &str, row: usize) -> String {
     let stem = base.strip_suffix(".jsonl").unwrap_or(base);
     format!("{stem}.{row}.jsonl")
+}
+
+/// Per-row metrics address: the sweep's `--metrics-addr` host with the
+/// port replaced by 0, so every row binds its own ephemeral port
+/// (`127.0.0.1:9090` → `127.0.0.1:0`).
+fn per_row_metrics_addr(base: &str) -> String {
+    match base.rfind(':') {
+        Some(i) => format!("{}:0", &base[..i]),
+        None => format!("{base}:0"),
+    }
 }
 
 /// k-fold cross-validation accuracy of a problem family at one parameter
@@ -192,6 +213,37 @@ mod tests {
         assert_eq!(per_row_trace_path("sweep.jsonl", 0), "sweep.0.jsonl");
         assert_eq!(per_row_trace_path("sweep.jsonl", 12), "sweep.12.jsonl");
         assert_eq!(per_row_trace_path("runs/sweep", 3), "runs/sweep.3.jsonl");
+    }
+
+    #[test]
+    fn per_row_metrics_addrs_force_an_ephemeral_port() {
+        assert_eq!(per_row_metrics_addr("127.0.0.1:9090"), "127.0.0.1:0");
+        assert_eq!(per_row_metrics_addr("0.0.0.0:0"), "0.0.0.0:0");
+        assert_eq!(per_row_metrics_addr("localhost"), "localhost:0");
+    }
+
+    #[test]
+    fn sweep_rows_get_labelled_ephemeral_metrics_servers() {
+        let mut base = JobSpec::new(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        base.scale = Scale(0.04);
+        base.metrics_addr = Some("127.0.0.1:9090".into());
+        let spec = SweepSpec {
+            base,
+            grid: vec![1.0],
+            policies: vec![Policy::Acf, Policy::Permutation],
+            selectors: vec![],
+            include_shrinking: false,
+            workers: 2,
+        };
+        let out = run_sweep(&spec).unwrap();
+        assert_eq!(out.len(), 2);
+        for (row, o) in out.iter().enumerate() {
+            assert_eq!(o.spec.metrics_addr.as_deref(), Some("127.0.0.1:0"), "row {row}");
+            let label = ("row".to_string(), row.to_string());
+            let labels = &o.spec.metrics_labels;
+            assert!(labels.contains(&label), "row {row}: {labels:?}");
+            assert!(o.result.status.converged(), "row {row}");
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use crate::acf::AcfParams;
 use crate::anyhow;
 use crate::data::{registry, DataBackend, Scale};
+use crate::obs::live::LiveMetrics;
+use crate::obs::server::MetricsServer;
 use crate::obs::{self, Obs, TraceLevel};
 use crate::sched::Policy;
 use crate::select::{Selector, SelectorKind};
@@ -99,6 +101,16 @@ pub struct JobSpec {
     /// JSONL trace destination (`--trace-out`); consumed by the `trace`
     /// subcommand. `None` discards the recorded stream after the run
     pub trace_out: Option<String>,
+    /// `--metrics-addr <ip:port>`: serve live telemetry over HTTP for
+    /// the duration of the run (`/metrics`, `/snapshot`, `/healthz` —
+    /// see [`crate::obs::server`]). Port 0 binds an ephemeral port; the
+    /// resolved address is printed to stderr. `None` (the default)
+    /// constructs neither the registry nor the server, keeping the run
+    /// bit-identical to an uninstrumented build.
+    pub metrics_addr: Option<String>,
+    /// extra `name=value` labels stamped on every exported series
+    /// (sweeps use this to tag per-row servers with the grid row)
+    pub metrics_labels: Vec<(String, String)>,
 }
 
 impl JobSpec {
@@ -123,6 +135,8 @@ impl JobSpec {
             staleness_auto: false,
             trace_level: TraceLevel::Off,
             trace_out: None,
+            metrics_addr: None,
+            metrics_labels: Vec::new(),
         }
     }
 
@@ -148,7 +162,7 @@ impl JobSpec {
     }
 
     /// Sharded-engine configuration derived from this job.
-    fn shard_spec(&self, obs: Option<&Arc<Obs>>) -> ShardSpec {
+    fn shard_spec(&self, obs: Option<&Arc<Obs>>, live: Option<&Arc<LiveMetrics>>) -> ShardSpec {
         let mut spec = ShardSpec::new(self.shards);
         spec.partitioner = self.partitioner;
         spec.inner_selector = self.selector.unwrap_or(SelectorKind::Acf);
@@ -164,6 +178,9 @@ impl JobSpec {
         if let Some(o) = obs {
             spec = spec.with_obs(Arc::clone(o));
         }
+        if let Some(l) = live {
+            spec = spec.with_live(Arc::clone(l));
+        }
         spec
     }
 
@@ -178,6 +195,21 @@ impl JobSpec {
         }
         let rings = if self.uses_sharded_engine() { self.shards + 1 } else { 1 };
         Some(Arc::new(Obs::new(self.trace_level, rings, obs::DEFAULT_RING_CAP)))
+    }
+
+    /// The live telemetry registry for this job, labelled with the job
+    /// identity plus any [`JobSpec::metrics_labels`]. `None` when no
+    /// `--metrics-addr` is configured — the solvers and engine then
+    /// skip every recording branch (no registry is even allocated).
+    fn build_live(&self) -> Option<Arc<LiveMetrics>> {
+        self.metrics_addr.as_ref()?;
+        let mut labels = vec![
+            ("problem".to_string(), self.problem.family().to_string()),
+            ("dataset".to_string(), self.dataset.clone()),
+            ("policy".to_string(), self.policy.name().to_string()),
+        ];
+        labels.extend(self.metrics_labels.iter().cloned());
+        Some(Arc::new(LiveMetrics::new(labels)))
     }
 
     /// Whether this job routes through the sharded parallel engine.
@@ -201,6 +233,7 @@ impl JobSpec {
             max_iterations: self.max_iterations,
             max_seconds: self.max_seconds,
             trace_every: 0,
+            ..SolverConfig::default()
         }
     }
 
@@ -378,6 +411,9 @@ impl JobOutcome {
                 o.set("trace_out", Json::Str(p.clone()));
             }
         }
+        if let Some(addr) = &self.spec.metrics_addr {
+            o.set("metrics_addr", Json::Str(addr.clone()));
+        }
         o
     }
 }
@@ -393,16 +429,48 @@ impl JobOutcome {
 /// `trace_out` JSONL file afterwards. Recording never perturbs
 /// results (see [`crate::obs`]); `off` skips the collector entirely.
 pub fn run_job_on(spec: &JobSpec, ds: &Dataset) -> Result<JobOutcome> {
+    let live = spec.build_live();
+    let mut server = match (&spec.metrics_addr, &live) {
+        (Some(addr), Some(l)) => {
+            let srv = MetricsServer::start(addr, Arc::clone(l))?;
+            eprintln!("metrics: listening on http://{}", srv.local_addr());
+            Some(srv)
+        }
+        _ => None,
+    };
+    let outcome = run_job_with_live(spec, ds, live);
+    if let Some(srv) = server.as_mut() {
+        srv.stop();
+    }
+    outcome
+}
+
+/// [`run_job_on`] with a caller-supplied live registry — lets embedders
+/// (and the telemetry tests) scrape a run they drive themselves without
+/// going through the `--metrics-addr` server lifecycle. `None` behaves
+/// exactly like a run without telemetry attached.
+pub fn run_job_with_live(
+    spec: &JobSpec,
+    ds: &Dataset,
+    live: Option<Arc<LiveMetrics>>,
+) -> Result<JobOutcome> {
     let obs = spec.build_obs();
-    let outcome = run_job_inner(spec, ds, obs.as_ref())?;
+    let outcome = run_job_inner(spec, ds, obs.as_ref(), live.as_ref())?;
     if let Some(o) = &obs {
         write_job_trace(spec, &outcome, o)?;
     }
     Ok(outcome)
 }
 
-fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result<JobOutcome> {
-    let cfg = spec.solver_config();
+fn run_job_inner(
+    spec: &JobSpec,
+    ds: &Dataset,
+    obs: Option<&Arc<Obs>>,
+    live: Option<&Arc<LiveMetrics>>,
+) -> Result<JobOutcome> {
+    let mut cfg = spec.solver_config();
+    cfg.obs = obs.cloned();
+    cfg.live = live.cloned();
     let rng = Rng::new(spec.seed ^ 0x5EED);
     // Sharded engine path (ACF policy on any of the four paper families
     // — see `JobSpec::uses_sharded_engine`); everything else falls
@@ -414,7 +482,7 @@ fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result
         match spec.problem {
             Problem::Svm { c } => {
                 let problem = shard::svm::ShardedSvm::new(ds, c);
-                let out = shard::svm::run_prepared(&problem, spec.shard_spec(obs))?;
+                let out = shard::svm::run_prepared(&problem, spec.shard_spec(obs, live))?;
                 return Ok(JobOutcome {
                     spec: spec.clone(),
                     result: out.result,
@@ -428,7 +496,7 @@ fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result
             }
             Problem::Lasso { lambda } => {
                 let problem = shard::lasso::ShardedLasso::new(ds, lambda);
-                let out = shard::lasso::run_prepared(&problem, spec.shard_spec(obs))?;
+                let out = shard::lasso::run_prepared(&problem, spec.shard_spec(obs, live))?;
                 let model = solvers::lasso::LassoModel { w: out.values, lambda };
                 let k = solvers::lasso::nnz_coefficients(&model);
                 return Ok(JobOutcome {
@@ -444,7 +512,7 @@ fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result
             }
             Problem::LogReg { c } => {
                 let problem = shard::logreg::ShardedLogReg::new(ds, c);
-                let out = shard::logreg::run_prepared(&problem, spec.shard_spec(obs))?;
+                let out = shard::logreg::run_prepared(&problem, spec.shard_spec(obs, live))?;
                 return Ok(JobOutcome {
                     spec: spec.clone(),
                     result: out.result,
@@ -458,7 +526,7 @@ fn run_job_inner(spec: &JobSpec, ds: &Dataset, obs: Option<&Arc<Obs>>) -> Result
             }
             Problem::McSvm { c } => {
                 let problem = shard::mcsvm::ShardedMcSvm::new(ds, c, spec.eps)?;
-                let out = shard::mcsvm::run_prepared(&problem, spec.shard_spec(obs))?;
+                let out = shard::mcsvm::run_prepared(&problem, spec.shard_spec(obs, live))?;
                 let w_multi = problem.unflatten_weights(&out.shared);
                 return Ok(JobOutcome {
                     spec: spec.clone(),
@@ -923,6 +991,56 @@ mod tests {
         assert_eq!(a.w, b.w);
         let j = b.to_json();
         assert_eq!(j.get("trace_level").unwrap().as_str(), Some("events"));
+        // live-telemetry leg: attaching a registry (the `--metrics-addr`
+        // data path, minus the HTTP server) must not perturb the
+        // trajectory either, and the registry's final point must agree
+        // with the run's own accounting
+        let ds = plain.load_dataset().unwrap();
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let c = run_job_with_live(&plain, &ds, Some(Arc::clone(&live))).unwrap();
+        assert_eq!(a.result.iterations, c.result.iterations);
+        assert_eq!(a.result.ops, c.result.ops);
+        assert_eq!(a.result.objective.to_bits(), c.result.objective.to_bits());
+        assert_eq!(a.w, c.w);
+        let point = live.latest();
+        assert_eq!(point.snapshot.last_objective, Some(c.result.objective));
+        let steps: u64 = point.snapshot.per_shard.iter().map(|s| s.steps).sum();
+        assert_eq!(steps, c.result.iterations);
+        assert_eq!(point.merge_stats, c.merge_stats.unwrap());
+    }
+
+    #[test]
+    fn live_registry_on_a_serial_job_tracks_the_objective() {
+        let spec = quick_spec(Problem::Lasso { lambda: 0.01 }, "rcv1-like", Policy::Cyclic);
+        let ds = spec.load_dataset().unwrap();
+        let plain = run_job_on(&spec, &ds).unwrap();
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let out = run_job_with_live(&spec, &ds, Some(Arc::clone(&live))).unwrap();
+        assert_eq!(plain.result.objective.to_bits(), out.result.objective.to_bits());
+        assert_eq!(plain.result.iterations, out.result.iterations);
+        let point = live.latest();
+        // serial solvers publish at epoch boundaries; the last published
+        // objective tracks the trajectory (the final result value comes
+        // from the verification pass after the last full epoch)
+        let published = point.snapshot.last_objective.expect("serial run published an objective");
+        let rel = (published - out.result.objective).abs() / out.result.objective.abs().max(1.0);
+        assert!(rel < 1e-6, "published {published} vs final {}", out.result.objective);
+    }
+
+    #[test]
+    fn metrics_addr_spec_runs_the_full_server_lifecycle() {
+        // `--metrics-addr` end to end: run_job_on binds the server,
+        // the run publishes, the server is torn down on completion, and
+        // the JSON report records the flag (scrape-while-training is
+        // covered by tests/telemetry.rs)
+        let mut spec = quick_spec(Problem::Svm { c: 1.0 }, "rcv1-like", Policy::Acf);
+        spec.shards = 2;
+        spec.metrics_addr = Some("127.0.0.1:0".into());
+        spec.metrics_labels = vec![("row".into(), "7".into())];
+        let out = run_job(&spec).unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let j = out.to_json();
+        assert_eq!(j.get("metrics_addr").unwrap().as_str(), Some("127.0.0.1:0"));
     }
 
     #[test]

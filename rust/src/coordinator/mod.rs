@@ -8,5 +8,5 @@ pub mod jobs;
 pub mod report;
 
 pub use grid::{cross_validate, run_sweep, SweepSpec};
-pub use jobs::{run_job, run_job_on, JobOutcome, JobSpec, Problem};
+pub use jobs::{run_job, run_job_on, run_job_with_live, JobOutcome, JobSpec, Problem};
 pub use report::{comparison_table, geomean_speedups, outcomes_json, selector_table};

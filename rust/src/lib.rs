@@ -65,7 +65,11 @@
 //! merges, publishes, τ moves, parks) and adaptation probes, folded
 //! into JSONL traces (`--trace-out`, `--trace-level`) that the `trace`
 //! subcommand renders as a stage-time breakdown and adaptation
-//! timeline.
+//! timeline, and gates against a baseline (`trace diff`). The same
+//! plane serves live: `--metrics-addr` publishes epoch/merge-boundary
+//! snapshots through [`obs::live`] and an in-process HTTP server
+//! ([`obs::server`]) as Prometheus text ([`obs::export`]), JSON, and a
+//! health probe — non-perturbing, and absent entirely when unset.
 //!
 //! Data plane: [`sparse`] serves the training matrix from three
 //! interchangeable storage backends ([`sparse::CsrStorage`]) — owned

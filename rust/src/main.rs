@@ -7,6 +7,7 @@
 //!   ingest    stream a libsvm text file into the mappable .acfbin format
 //!   markov    §6 Markov-chain experiment (balance π, Figure-1 curves)
 //!   trace     summarize a --trace-out JSONL file (stage times, adaptation)
+//!             or gate two traces against each other (`trace diff`)
 //!   datasets  list the paper-analog dataset registry
 //!   info      artifacts/runtime status (PJRT platform, manifest)
 //!
@@ -19,6 +20,8 @@
 //!   acf-cd ingest data.libsvm data.acfbin
 //!   acf-cd train --dataset data.acfbin --shards 4 --data-backend mmap
 //!   acf-cd trace run.jsonl
+//!   acf-cd trace diff baseline.jsonl candidate.jsonl --tolerance 0.2
+//!   acf-cd train --shards 4 --metrics-addr 127.0.0.1:9090
 //!   acf-cd markov --n 5 --seed 7 --curves
 
 use acf_cd::coordinator::{self, JobSpec, Problem, SweepSpec};
@@ -121,7 +124,19 @@ fn print_help() {
          \u{20}             outcomes and the τ/objective adaptation timeline.\n\
          \u{20}             Recording never changes results: off is the\n\
          \u{20}             pre-instrumentation hot path, and every level\n\
-         \u{20}             only reads solver state\n\
+         \u{20}             only reads solver state.\n\
+         \u{20}             `acf-cd trace diff <a> <b> [--tolerance <t>]`\n\
+         \u{20}             compares two traces (stage times, throughput,\n\
+         \u{20}             acceptance, objective) and exits non-zero when a\n\
+         \u{20}             watched ratio regresses beyond <t> (default 0.2)\n\
+         live metrics: --metrics-addr <ip:port> serves the run over HTTP\n\
+         \u{20}             while it trains: /metrics (Prometheus text\n\
+         \u{20}             format), /snapshot (JSON), /healthz. Port 0 binds\n\
+         \u{20}             an ephemeral port; the resolved address is printed\n\
+         \u{20}             to stderr. Reads the same non-perturbing plane as\n\
+         \u{20}             tracing; unset = no server, no registry. A sweep\n\
+         \u{20}             gives every row its own ephemeral-port server\n\
+         \u{20}             labelled row=<grid-major index>\n\
          selector sweeps: `sweep --selector a,b,...` compares coordinate-\n\
          \u{20}             selection rules (grid × selectors, all on the ACF\n\
          \u{20}             policy) instead of --policies; `sweep --trace-out\n\
@@ -232,6 +247,11 @@ fn parse_spec_inner(args: &Args, parse_selector: bool) -> Result<JobSpec> {
              discards the stream; add --trace-out <path> to keep it",
             spec.trace_level.name()
         );
+    }
+    // --metrics-addr: live telemetry HTTP endpoint (obs/server). The
+    // resolved address (relevant with port 0) is printed at bind time.
+    if let Some(a) = args.get("metrics-addr") {
+        spec.metrics_addr = Some(a.to_string());
     }
     Ok(spec)
 }
@@ -382,7 +402,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// `acf-cd trace <file.jsonl>` — offline summary of a recorded trace:
 /// stage-time breakdown, per-shard throughput, epoch-time histogram,
 /// merge outcomes, and the τ/objective adaptation timeline.
+/// `acf-cd trace diff <a> <b>` compares two traces instead.
 fn cmd_trace(args: &Args) -> Result<()> {
+    if args.positional.first().map(|s| s.as_str()) == Some("diff") {
+        return cmd_trace_diff(args);
+    }
     let path = match args.get("file").or_else(|| args.positional.first().map(|s| s.as_str())) {
         Some(p) => p,
         None => return Err(anyhow!("usage: acf-cd trace <file.jsonl>  (or --file <path>)")),
@@ -390,6 +414,35 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("cannot read trace file '{path}': {e}"))?;
     println!("{}", acf_cd::obs::report::summarize(&text)?.trim_end());
+    Ok(())
+}
+
+/// `acf-cd trace diff <a.jsonl> <b.jsonl> [--tolerance <t>]` — the
+/// regression gate: compare stage times, per-shard throughput, merge
+/// acceptance and the final objective of two traces, print the table,
+/// and exit non-zero when any watched ratio drifts beyond the
+/// tolerance (default ±20%).
+fn cmd_trace_diff(args: &Args) -> Result<()> {
+    let (a, b) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(a), Some(b)) => (a, b),
+        _ => {
+            return Err(anyhow!(
+                "usage: acf-cd trace diff <baseline.jsonl> <candidate.jsonl> [--tolerance <t>]"
+            ))
+        }
+    };
+    let tolerance = args.f64_or("tolerance", 0.2)?;
+    if !(0.0..=10.0).contains(&tolerance) {
+        return Err(anyhow!("--tolerance: expected a fraction like 0.2, got {tolerance}"));
+    }
+    let ta = std::fs::read_to_string(a).map_err(|e| anyhow!("cannot read '{a}': {e}"))?;
+    let tb = std::fs::read_to_string(b).map_err(|e| anyhow!("cannot read '{b}': {e}"))?;
+    let report = acf_cd::obs::report::diff(&ta, &tb, tolerance)?;
+    println!("{}", report.render().trim_end());
+    let n = report.regressions();
+    if n > 0 {
+        return Err(anyhow!("{n} watched metric(s) regressed beyond ±{:.0}%", tolerance * 100.0));
+    }
     Ok(())
 }
 

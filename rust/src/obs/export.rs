@@ -1,0 +1,436 @@
+//! First-party Prometheus text-exposition renderer for the live
+//! registry (`GET /metrics` on [`crate::obs::server`]).
+//!
+//! Implements the exposition format (version 0.0.4) directly — `# HELP`
+//! / `# TYPE` headers, label-value escaping (`\\`, `\"`, `\n`), and the
+//! cumulative `_bucket`/`_sum`/`_count` encoding of the log₂ epoch-time
+//! histogram — with zero dependencies. Every series carries the
+//! registry's constant label set (job identity; `("row", i)` under
+//! `sweep`), so multiple jobs scraped through one gateway stay
+//! distinguishable.
+//!
+//! Metric names are prefixed `acf_`; the full catalog is documented in
+//! `docs/ARCHITECTURE.md` ("Live telemetry").
+
+use super::live::LiveMetrics;
+use super::HIST_BUCKETS;
+
+/// Escape a label value: backslash, double quote and newline, per the
+/// exposition format.
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` text: backslash and newline only (quotes are legal).
+fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a sample value: integers without a decimal point, floats via
+/// the shortest round-tripping form, infinities as `+Inf`/`-Inf`.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 {
+            "+Inf".to_string()
+        } else {
+            "-Inf".to_string()
+        }
+    } else if v == v.trunc() && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Incremental writer for one exposition document.
+struct Prom<'a> {
+    out: String,
+    base: &'a [(String, String)],
+}
+
+impl Prom<'_> {
+    fn family(&mut self, name: &str, help: &str, typ: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(&escape_help(help));
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(typ);
+        self.out.push('\n');
+    }
+
+    /// One sample line; `extra` labels follow the registry's base set.
+    fn sample(&mut self, name: &str, extra: &[(&str, String)], value: f64) {
+        self.out.push_str(name);
+        if !self.base.is_empty() || !extra.is_empty() {
+            self.out.push('{');
+            let mut first = true;
+            for (k, v) in self.base.iter() {
+                if !first {
+                    self.out.push(',');
+                }
+                first = false;
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            for (k, v) in extra {
+                if !first {
+                    self.out.push(',');
+                }
+                first = false;
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+}
+
+/// Render the registry's latest published point as one Prometheus
+/// text-exposition document.
+pub fn render_prometheus(live: &LiveMetrics) -> String {
+    let point = live.latest();
+    let snap = &point.snapshot;
+    let ms = &point.merge_stats;
+    let mut w = Prom { out: String::with_capacity(4096), base: live.labels() };
+
+    w.family(
+        "acf_uptime_seconds",
+        "Seconds since the job started publishing live metrics.",
+        "gauge",
+    );
+    w.sample("acf_uptime_seconds", &[], snap.t1);
+    w.family("acf_scrapes_total", "Scrapes served by the /metrics endpoint.", "counter");
+    w.sample("acf_scrapes_total", &[], live.scrapes() as f64);
+
+    w.family("acf_shard_epochs_total", "Local epochs completed, per shard.", "counter");
+    for (k, sw) in snap.per_shard.iter().enumerate() {
+        w.sample("acf_shard_epochs_total", &[("shard", k.to_string())], sw.epochs as f64);
+    }
+    w.family("acf_shard_steps_total", "Coordinate steps taken, per shard.", "counter");
+    for (k, sw) in snap.per_shard.iter().enumerate() {
+        w.sample("acf_shard_steps_total", &[("shard", k.to_string())], sw.steps as f64);
+    }
+    w.family("acf_shard_ops_total", "Multiply-add operations spent, per shard.", "counter");
+    for (k, sw) in snap.per_shard.iter().enumerate() {
+        w.sample("acf_shard_ops_total", &[("shard", k.to_string())], sw.ops as f64);
+    }
+    w.family(
+        "acf_shard_compute_seconds_total",
+        "Seconds of epoch compute, per shard.",
+        "counter",
+    );
+    for (k, sw) in snap.per_shard.iter().enumerate() {
+        w.sample(
+            "acf_shard_compute_seconds_total",
+            &[("shard", k.to_string())],
+            sw.compute_nanos as f64 * 1e-9,
+        );
+    }
+
+    // Log₂ epoch-duration histogram. Internal bucket i counts
+    // [2^(i−1), 2^i) ns, so its inclusive Prometheus upper bound is
+    // 2^i ns; the last internal bucket is the +Inf overflow.
+    w.family(
+        "acf_epoch_duration_seconds",
+        "Distribution of local-epoch compute times (log2 buckets).",
+        "histogram",
+    );
+    let mut cumulative = 0u64;
+    for (i, &c) in snap.epoch_nanos_hist.iter().take(HIST_BUCKETS - 1).enumerate() {
+        cumulative += c;
+        let le = (1u64 << i) as f64 * 1e-9;
+        w.sample(
+            "acf_epoch_duration_seconds_bucket",
+            &[("le", fmt_value(le))],
+            cumulative as f64,
+        );
+    }
+    cumulative += snap.epoch_nanos_hist[HIST_BUCKETS - 1];
+    w.sample("acf_epoch_duration_seconds_bucket", &[("le", "+Inf".to_string())], cumulative as f64);
+    let compute_total: u64 = snap.per_shard.iter().map(|sw| sw.compute_nanos).sum();
+    w.sample("acf_epoch_duration_seconds_sum", &[], compute_total as f64 * 1e-9);
+    w.sample("acf_epoch_duration_seconds_count", &[], cumulative as f64);
+
+    w.family(
+        "acf_merge_submissions_total",
+        "Merge decisions in submissions, by outcome tier.",
+        "counter",
+    );
+    for (outcome, count) in [
+        ("additive", snap.merge.additive),
+        ("damped", snap.merge.damped),
+        ("rejected", snap.merge.rejected),
+        ("stale", snap.merge.stale),
+    ] {
+        w.sample("acf_merge_submissions_total", &[("outcome", outcome.to_string())], count as f64);
+    }
+    w.family(
+        "acf_merge_acceptance_rate",
+        "Accepted share of attempted submissions (1 when none).",
+        "gauge",
+    );
+    w.sample("acf_merge_acceptance_rate", &[], snap.merge.acceptance_rate());
+    w.family(
+        "acf_merge_staleness_total",
+        "Merge decisions by snapshot staleness (16+ is the overflow bucket).",
+        "counter",
+    );
+    for (i, &c) in snap.staleness_hist.iter().enumerate() {
+        let label =
+            if i + 1 == snap.staleness_hist.len() { "16+".to_string() } else { i.to_string() };
+        w.sample("acf_merge_staleness_total", &[("staleness", label)], c as f64);
+    }
+    w.family(
+        "acf_merge_wait_seconds_total",
+        "Seconds the merger spent idle on its queue.",
+        "counter",
+    );
+    w.sample("acf_merge_wait_seconds_total", &[], snap.merge_wait_nanos as f64 * 1e-9);
+
+    if let Some((_, tau)) = snap.tau.last() {
+        w.family("acf_staleness_tau", "Current staleness bound (last adaptive move).", "gauge");
+        w.sample("acf_staleness_tau", &[], *tau as f64);
+    }
+    if let Some(f) = snap.last_objective {
+        w.family("acf_objective", "Exact objective at the last publish.", "gauge");
+        w.sample("acf_objective", &[], f);
+    }
+
+    w.family("acf_pool_rounds_total", "Fork-join rounds dispatched by the sync engine.", "counter");
+    w.sample("acf_pool_rounds_total", &[], snap.pool_rounds as f64);
+    w.family(
+        "acf_queue_pushes_total",
+        "Submissions pushed through the async merge queue.",
+        "counter",
+    );
+    w.sample("acf_queue_pushes_total", &[], snap.queue_pushes as f64);
+    w.family("acf_queue_max_depth", "Largest merge-queue depth observed.", "gauge");
+    w.sample("acf_queue_max_depth", &[], snap.queue_max_depth as f64);
+
+    w.family(
+        "acf_objective_evals_total",
+        "Exact shared-objective evaluations by the merger.",
+        "counter",
+    );
+    w.sample("acf_objective_evals_total", &[], ms.objective_evals as f64);
+    w.family(
+        "acf_accepted_submissions_total",
+        "Submissions folded into accepted publishes.",
+        "counter",
+    );
+    w.sample("acf_accepted_submissions_total", &[], ms.accepted_submissions as f64);
+    w.family(
+        "acf_rejected_submissions_total",
+        "Submissions rejected by the exact objective check.",
+        "counter",
+    );
+    w.sample("acf_rejected_submissions_total", &[], ms.rejected_submissions as f64);
+    w.family(
+        "acf_batched_merges_total",
+        "Accepted publishes that folded a whole batch.",
+        "counter",
+    );
+    w.sample("acf_batched_merges_total", &[], ms.batched_merges as f64);
+
+    w.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::live::{LiveMetrics, LiveRecorder};
+    use super::super::MergeTier;
+    use super::*;
+    use std::sync::Arc;
+
+    /// Minimal exposition-format checker: every non-comment line is
+    /// `name{labels} value` with a parseable value; returns the samples.
+    fn parse(text: &str) -> Vec<(String, Vec<(String, String)>, f64)> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment: {line}"
+                );
+                continue;
+            }
+            let (series, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+            let v = match value {
+                "+Inf" => f64::INFINITY,
+                "-Inf" => f64::NEG_INFINITY,
+                other => other.parse::<f64>().unwrap_or_else(|_| panic!("bad value: {line}")),
+            };
+            let (name, labels) = match series.split_once('{') {
+                None => (series.to_string(), Vec::new()),
+                Some((n, rest)) => {
+                    let body = rest.strip_suffix('}').unwrap_or_else(|| panic!("no close: {line}"));
+                    let mut labels = Vec::new();
+                    // split on `",` boundaries — label values in these
+                    // tests never embed that sequence
+                    for pair in body.split("\",") {
+                        let pair = pair.strip_suffix('"').unwrap_or(pair);
+                        let (k, v) = pair
+                            .split_once("=\"")
+                            .unwrap_or_else(|| panic!("bad label: {line}"));
+                        labels.push((k.to_string(), v.to_string()));
+                    }
+                    (n.to_string(), labels)
+                }
+            };
+            out.push((name, labels, v));
+        }
+        out
+    }
+
+    fn get<'a>(
+        samples: &'a [(String, Vec<(String, String)>, f64)],
+        name: &str,
+    ) -> Vec<&'a (String, Vec<(String, String)>, f64)> {
+        samples.iter().filter(|(n, _, _)| n == name).collect()
+    }
+
+    #[test]
+    fn empty_registry_renders_parseable_exposition() {
+        let live = LiveMetrics::new(Vec::new());
+        let text = render_prometheus(&live);
+        let samples = parse(&text);
+        assert!(!samples.is_empty());
+        // no publish yet: counters at zero, acceptance defaults to 1
+        assert_eq!(get(&samples, "acf_scrapes_total")[0].2, 0.0);
+        assert_eq!(get(&samples, "acf_merge_acceptance_rate")[0].2, 1.0);
+        assert_eq!(get(&samples, "acf_epoch_duration_seconds_count")[0].2, 0.0);
+        // optional gauges absent without data
+        assert!(get(&samples, "acf_objective").is_empty());
+        assert!(get(&samples, "acf_staleness_tau").is_empty());
+        // no per-shard series for a zero-shard snapshot
+        assert!(get(&samples, "acf_shard_epochs_total").is_empty());
+    }
+
+    #[test]
+    fn label_values_and_help_are_escaped() {
+        let live = LiveMetrics::new(vec![
+            ("dataset".to_string(), "a\\b\"c\nd".to_string()),
+            ("job".to_string(), "plain".to_string()),
+        ]);
+        let text = render_prometheus(&live);
+        assert!(
+            text.contains(r#"dataset="a\\b\"c\nd""#),
+            "label not escaped:\n{text}"
+        );
+        // escaped text stays on one physical line
+        for line in text.lines() {
+            assert!(!line.is_empty());
+        }
+        assert_eq!(escape_help("multi\nline \\ text"), "multi\\nline \\\\ text");
+        assert_eq!(escape_label(r#"q"q"#), r#"q\"q"#);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let mut rec = LiveRecorder::new(Arc::clone(&live), 2);
+        // 900 ns → bucket 10; 2 000 ns → bucket 11; 1 ns → bucket 1
+        rec.epoch(0, 10, 100, 900);
+        rec.epoch(1, 10, 100, 2_000);
+        rec.epoch(0, 10, 100, 1);
+        rec.flush();
+        let samples = parse(&render_prometheus(&live));
+        let buckets = get(&samples, "acf_epoch_duration_seconds_bucket");
+        assert_eq!(buckets.len(), super::super::HIST_BUCKETS);
+        let mut prev = 0.0;
+        for (_, labels, v) in &buckets {
+            assert_eq!(labels[0].0, "le");
+            assert!(*v >= prev, "bucket counts must be cumulative: {v} < {prev}");
+            prev = *v;
+        }
+        assert_eq!(buckets.last().unwrap().1[0].1, "+Inf");
+        assert_eq!(buckets.last().unwrap().2, 3.0);
+        assert_eq!(get(&samples, "acf_epoch_duration_seconds_count")[0].2, 3.0);
+        let sum = get(&samples, "acf_epoch_duration_seconds_sum")[0].2;
+        assert!((sum - 2_901e-9).abs() < 1e-15, "sum {sum}");
+        // `le` values strictly increase up to the overflow bucket
+        let les: Vec<f64> = buckets[..buckets.len() - 1]
+            .iter()
+            .map(|(_, l, _)| l[0].1.parse::<f64>().unwrap())
+            .collect();
+        assert!(les.windows(2).all(|w| w[0] < w[1]), "{les:?}");
+    }
+
+    #[test]
+    fn series_reflect_recorder_state() {
+        let live = Arc::new(LiveMetrics::new(vec![("row".to_string(), "3".to_string())]));
+        let mut rec = LiveRecorder::new(Arc::clone(&live), 1);
+        rec.epoch(0, 50, 700, 900);
+        rec.merge_outcome(MergeTier::Additive, 0, 4);
+        rec.merge_outcome(MergeTier::Rejected, 2, 1);
+        rec.objective(-2.5);
+        rec.tau(3);
+        rec.engine(7, 21, 4);
+        rec.flush();
+        live.record_scrape();
+        let samples = parse(&render_prometheus(&live));
+        // every series carries the registry label
+        for (name, labels, _) in &samples {
+            assert_eq!(labels[0], ("row".to_string(), "3".to_string()), "{name}");
+        }
+        let find = |name: &str| get(&samples, name)[0].2;
+        assert_eq!(find("acf_scrapes_total"), 1.0);
+        assert_eq!(find("acf_shard_steps_total"), 50.0);
+        assert_eq!(find("acf_objective"), -2.5);
+        assert_eq!(find("acf_staleness_tau"), 3.0);
+        assert_eq!(find("acf_pool_rounds_total"), 7.0);
+        assert_eq!(find("acf_queue_pushes_total"), 21.0);
+        assert_eq!(find("acf_queue_max_depth"), 4.0);
+        let outcomes = get(&samples, "acf_merge_submissions_total");
+        let additive = outcomes
+            .iter()
+            .find(|(_, l, _)| l.iter().any(|(k, v)| k == "outcome" && v == "additive"))
+            .unwrap();
+        assert_eq!(additive.2, 4.0);
+        assert!((find("acf_merge_acceptance_rate") - 4.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_formatting_covers_edge_cases() {
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(12.0), "12");
+        assert_eq!(fmt_value(-3.0), "-3");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(0.5), "0.5");
+        let parsed: f64 = fmt_value(1e-9).parse().unwrap();
+        assert_eq!(parsed, 1e-9);
+    }
+}

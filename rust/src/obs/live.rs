@@ -1,0 +1,269 @@
+//! Live metrics registry — the in-process bridge between a running job
+//! and the HTTP telemetry endpoints ([`crate::obs::server`]).
+//!
+//! The trace rings are drain-once: the JSONL sink consumes them after
+//! the run, so a scraper cannot read them mid-flight without stealing
+//! events from the trace. Instead the engine's driving thread (the sync
+//! epoch loop, the async merger, or a serial solver's epoch boundary)
+//! owns a [`LiveRecorder`] — a running [`MetricsSnapshot`] fed the same
+//! observations the rings get — and publishes an immutable [`LivePoint`]
+//! into the shared [`LiveMetrics`] registry. Scrapers only ever clone an
+//! `Arc` out of the registry.
+//!
+//! Non-perturbation: the recorder lives entirely on the driving thread
+//! and only *reads* solver state. A publish is one snapshot clone plus
+//! one mutex-guarded pointer swap (`std` has no atomic `Arc` swap; the
+//! mutex is held for the O(1) exchange only, mirroring the engine's
+//! `PublishSlot`). Worker hot loops are untouched, and with no
+//! `--metrics-addr` no registry or recorder is constructed at all, so
+//! results stay bit-identical to an instrumented-but-idle build.
+
+use super::{MergeTier, MetricsSnapshot};
+use crate::shard::MergeStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Cap on the τ-trajectory length a live snapshot retains (the JSONL
+/// plane keeps the full trajectory; live scrapes only need the recent
+/// tail and must stay O(1) per publish).
+pub const TAU_POINT_CAP: usize = 256;
+
+/// One published observation: the whole-run metrics fold plus the
+/// merge-layer accounting at publish time.
+#[derive(Clone, Debug)]
+pub struct LivePoint {
+    /// Whole-run aggregation (`t0 = 0`, `t1` = seconds since the
+    /// recorder started).
+    pub snapshot: MetricsSnapshot,
+    /// Merge-layer accounting (authoritative driver/merger counters).
+    pub merge_stats: MergeStats,
+}
+
+impl LivePoint {
+    fn empty() -> LivePoint {
+        LivePoint {
+            snapshot: MetricsSnapshot::from_events(&[], 0, 0.0, 0.0),
+            merge_stats: MergeStats::default(),
+        }
+    }
+}
+
+/// Shared registry the telemetry server reads and the run publishes
+/// into. One instance per job (`--metrics-addr`); sweeps label each
+/// row's registry so scrapes can tell the series apart.
+#[derive(Debug)]
+pub struct LiveMetrics {
+    /// Constant `(name, value)` label pairs stamped on every exported
+    /// series (job identity; `("row", i)` under `sweep`).
+    labels: Vec<(String, String)>,
+    scrapes: AtomicU64,
+    /// Latest published point. The mutex guards an O(1) `Arc`
+    /// clone/replace only — never the snapshot contents.
+    latest: Mutex<Arc<LivePoint>>,
+}
+
+impl LiveMetrics {
+    pub fn new(labels: Vec<(String, String)>) -> LiveMetrics {
+        LiveMetrics {
+            labels,
+            scrapes: AtomicU64::new(0),
+            latest: Mutex::new(Arc::new(LivePoint::empty())),
+        }
+    }
+
+    /// The constant label set stamped on every exported series.
+    pub fn labels(&self) -> &[(String, String)] {
+        &self.labels
+    }
+
+    /// The most recently published point (the empty point before the
+    /// first publish).
+    pub fn latest(&self) -> Arc<LivePoint> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Replace the published point (called by [`LiveRecorder::flush`]).
+    pub fn publish(&self, point: LivePoint) {
+        *self.latest.lock().unwrap() = Arc::new(point);
+    }
+
+    /// Count one `/metrics` scrape; returns the new total.
+    pub fn record_scrape(&self) -> u64 {
+        self.scrapes.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Scrapes served so far.
+    pub fn scrapes(&self) -> u64 {
+        self.scrapes.load(Ordering::Relaxed)
+    }
+}
+
+/// Driver-thread accumulator feeding a [`LiveMetrics`] registry. Mirrors
+/// the fold rules of [`MetricsSnapshot::from_events`], but incrementally
+/// and without touching the event rings.
+pub struct LiveRecorder {
+    target: Arc<LiveMetrics>,
+    start: Instant,
+    snap: MetricsSnapshot,
+    merge_stats: MergeStats,
+}
+
+impl LiveRecorder {
+    /// `n_shards` sizes the per-shard table (0 for serial runs).
+    pub fn new(target: Arc<LiveMetrics>, n_shards: usize) -> LiveRecorder {
+        LiveRecorder {
+            target,
+            start: Instant::now(),
+            snap: MetricsSnapshot::from_events(&[], n_shards, 0.0, 0.0),
+            merge_stats: MergeStats::default(),
+        }
+    }
+
+    fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// One completed local epoch on `shard`.
+    pub fn epoch(&mut self, shard: u32, steps: u64, ops: u64, nanos: u64) {
+        if let Some(w) = self.snap.per_shard.get_mut(shard as usize) {
+            w.epochs += 1;
+            w.steps += steps;
+            w.ops += ops;
+            w.compute_nanos += nanos;
+        }
+        self.snap.epoch_nanos_hist[super::log2_bucket(nanos)] += 1;
+    }
+
+    /// One merge decision covering `batch` submissions.
+    pub fn merge_outcome(&mut self, tier: MergeTier, staleness: u64, batch: u64) {
+        let subs = batch.max(1);
+        match tier {
+            MergeTier::Additive => self.snap.merge.additive += subs,
+            MergeTier::Damped => self.snap.merge.damped += subs,
+            MergeTier::Rejected => self.snap.merge.rejected += subs,
+            MergeTier::Stale => self.snap.merge.stale += subs,
+        }
+        self.snap.staleness_hist[(staleness as usize).min(super::STALENESS_BUCKETS - 1)] += 1;
+    }
+
+    /// Exact objective after a publish / epoch boundary.
+    pub fn objective(&mut self, objective: f64) {
+        self.snap.last_objective = Some(objective);
+    }
+
+    /// A staleness-bound move (adaptive τ).
+    pub fn tau(&mut self, tau: u64) {
+        if self.snap.tau.len() >= TAU_POINT_CAP {
+            self.snap.tau.remove(0);
+        }
+        self.snap.tau.push((self.secs(), tau));
+    }
+
+    /// Nanoseconds the merger just spent waiting on the queue.
+    pub fn merge_wait(&mut self, nanos: u64) {
+        self.snap.merge_wait_nanos += nanos;
+    }
+
+    /// Cumulative engine-infrastructure counters (max-folded, matching
+    /// [`crate::obs::Event::EngineStats`]).
+    pub fn engine(&mut self, pool_rounds: u64, queue_pushes: u64, queue_max_depth: u64) {
+        self.snap.pool_rounds = self.snap.pool_rounds.max(pool_rounds);
+        self.snap.queue_pushes = self.snap.queue_pushes.max(queue_pushes);
+        self.snap.queue_max_depth = self.snap.queue_max_depth.max(queue_max_depth);
+    }
+
+    /// Overwrite the merge-layer accounting with the authoritative
+    /// driver/merger counters.
+    pub fn set_merge_stats(&mut self, stats: MergeStats) {
+        self.merge_stats = stats;
+    }
+
+    /// Publish the current fold into the registry.
+    pub fn flush(&mut self) {
+        self.snap.t1 = self.secs();
+        self.target
+            .publish(LivePoint { snapshot: self.snap.clone(), merge_stats: self.merge_stats });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_starts_empty_and_publishes_points() {
+        let live = LiveMetrics::new(vec![("job".into(), "t".into())]);
+        let p0 = live.latest();
+        assert_eq!(p0.snapshot.per_shard.len(), 0);
+        assert_eq!(p0.snapshot.last_objective, None);
+        assert_eq!(live.labels(), &[("job".to_string(), "t".to_string())]);
+
+        let live = Arc::new(live);
+        let mut rec = LiveRecorder::new(Arc::clone(&live), 2);
+        rec.epoch(0, 50, 700, 900);
+        rec.epoch(1, 25, 300, 2_000);
+        rec.epoch(7, 1, 1, 1); // out-of-range shard: histogram only
+        rec.merge_outcome(MergeTier::Additive, 1, 2);
+        rec.merge_outcome(MergeTier::Stale, 20, 1);
+        rec.objective(-1.5);
+        rec.merge_wait(400);
+        rec.engine(3, 10, 2);
+        rec.engine(5, 8, 1); // max-fold: pushes must not regress
+        rec.set_merge_stats(MergeStats { objective_evals: 9, ..MergeStats::default() });
+        rec.flush();
+
+        let p = live.latest();
+        let s = &p.snapshot;
+        assert_eq!(s.per_shard[0].epochs, 1);
+        assert_eq!(s.per_shard[0].steps, 50);
+        assert_eq!(s.per_shard[1].ops, 300);
+        assert_eq!(s.merge.additive, 2);
+        assert_eq!(s.merge.stale, 1);
+        assert_eq!(s.staleness_hist[1], 1);
+        assert_eq!(s.staleness_hist[super::super::STALENESS_BUCKETS - 1], 1);
+        assert_eq!(s.last_objective, Some(-1.5));
+        assert_eq!(s.merge_wait_nanos, 400);
+        assert_eq!((s.pool_rounds, s.queue_pushes, s.queue_max_depth), (5, 10, 2));
+        assert_eq!(s.epoch_nanos_hist.iter().sum::<u64>(), 3);
+        assert!(s.t1 >= 0.0);
+        assert_eq!(p.merge_stats.objective_evals, 9);
+    }
+
+    #[test]
+    fn tau_trajectory_is_capped() {
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let mut rec = LiveRecorder::new(Arc::clone(&live), 1);
+        for tau in 0..(TAU_POINT_CAP as u64 + 50) {
+            rec.tau(tau);
+        }
+        rec.flush();
+        let s = &live.latest().snapshot;
+        assert_eq!(s.tau.len(), TAU_POINT_CAP);
+        // oldest entries dropped, newest kept
+        assert_eq!(s.tau.last().unwrap().1, TAU_POINT_CAP as u64 + 49);
+    }
+
+    #[test]
+    fn scrape_counter_increments() {
+        let live = LiveMetrics::new(Vec::new());
+        assert_eq!(live.scrapes(), 0);
+        assert_eq!(live.record_scrape(), 1);
+        assert_eq!(live.record_scrape(), 2);
+        assert_eq!(live.scrapes(), 2);
+    }
+
+    #[test]
+    fn flush_overwrites_previous_point() {
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let mut rec = LiveRecorder::new(Arc::clone(&live), 1);
+        rec.objective(1.0);
+        rec.flush();
+        // a scraper holding the old point keeps a consistent view
+        let held = live.latest();
+        rec.objective(2.0);
+        rec.flush();
+        assert_eq!(held.snapshot.last_objective, Some(1.0));
+        assert_eq!(live.latest().snapshot.last_objective, Some(2.0));
+    }
+}

@@ -23,6 +23,8 @@
 //! | `merge_wait`    | spans  | merger            | nanos the merger spent idle waiting for submissions |
 //! | `selector`      | events | worker / serial   | shard (−1 = serial run), entropy, p_min, p_max of the selector distribution |
 //! | `data_extent`   | spans  | driver            | shard, bytes of matrix data its rows span, distinct 4 KiB pages they touch |
+//! | `objective`     | spans  | solver / driver   | shard (−1 = serial / whole model), epoch index, exact objective — the convergence curve |
+//! | `engine_stats`  | spans  | driver / merger   | cumulative pool rounds dispatched, queue pushes, max observed queue depth |
 //!
 //! # Levels
 //!
@@ -59,9 +61,22 @@
 //! here — [`OpCounter`], [`Trace`]/[`TracePoint`] (objective-vs-ops
 //! curves) and [`MergeStats`] — and the JSONL summary line folds them
 //! together with the event-derived [`MetricsSnapshot`]s.
+//!
+//! # Live telemetry
+//!
+//! The post-hoc JSONL plane is complemented by an in-flight one:
+//! [`live`] holds the latest [`MetricsSnapshot`] behind an `Arc` swap
+//! ([`live::LiveMetrics`]), [`export`] renders it in the Prometheus
+//! text exposition format, and [`server`] serves both over HTTP
+//! (`train --metrics-addr`). The solver side only ever *publishes*
+//! finished snapshots into the registry, so the non-perturbation
+//! contract of the tracing plane extends to the live plane unchanged.
 
+pub mod export;
+pub mod live;
 pub mod report;
 pub mod ring;
+pub mod server;
 pub mod sink;
 
 pub use crate::metrics::{OpCounter, Trace, TracePoint};
@@ -204,6 +219,16 @@ pub enum Event {
     /// 4 KiB pages they touch (working-set size under `--data-backend
     /// mmap`, where pages fault in on first touch).
     DataExtent { t: u64, shard: u32, bytes: u64, pages: u64 },
+    /// Exact objective at an epoch boundary — one point of the
+    /// convergence curve. Serial solvers emit with [`NO_SHARD`]; the
+    /// sharded drivers emit after each publish with the merge epoch.
+    Objective { t: u64, shard: u32, epoch: u64, objective: f64 },
+    /// Cumulative engine-infrastructure counters: fork-join rounds the
+    /// [`crate::util::threadpool::RoundPool`] dispatched, submissions
+    /// pushed through the async merge queue, and the largest queue
+    /// depth ever observed. Values are monotone; aggregation folds
+    /// them with `max`.
+    EngineStats { t: u64, pool_rounds: u64, queue_pushes: u64, queue_max_depth: u64 },
 }
 
 const TAG_SNAPSHOT_TAKE: u64 = 1;
@@ -216,6 +241,8 @@ const TAG_PARK: u64 = 7;
 const TAG_MERGE_WAIT: u64 = 8;
 const TAG_SELECTOR: u64 = 9;
 const TAG_DATA_EXTENT: u64 = 10;
+const TAG_OBJECTIVE: u64 = 11;
+const TAG_ENGINE_STATS: u64 = 12;
 
 impl Event {
     /// Nanoseconds since the collector started.
@@ -230,7 +257,9 @@ impl Event {
             | Event::Park { t, .. }
             | Event::MergeWait { t, .. }
             | Event::SelectorState { t, .. }
-            | Event::DataExtent { t, .. } => t,
+            | Event::DataExtent { t, .. }
+            | Event::Objective { t, .. }
+            | Event::EngineStats { t, .. } => t,
         }
     }
 
@@ -247,6 +276,8 @@ impl Event {
             Event::MergeWait { .. } => "merge_wait",
             Event::SelectorState { .. } => "selector",
             Event::DataExtent { .. } => "data_extent",
+            Event::Objective { .. } => "objective",
+            Event::EngineStats { .. } => "engine_stats",
         }
     }
 
@@ -275,6 +306,12 @@ impl Event {
                 (TAG_SELECTOR, shard, entropy.to_bits(), p_min.to_bits(), p_max.to_bits())
             }
             Event::DataExtent { shard, bytes, pages, .. } => (TAG_DATA_EXTENT, shard, bytes, pages, 0),
+            Event::Objective { shard, epoch, objective, .. } => {
+                (TAG_OBJECTIVE, shard, epoch, objective.to_bits(), 0)
+            }
+            Event::EngineStats { pool_rounds, queue_pushes, queue_max_depth, .. } => {
+                (TAG_ENGINE_STATS, NO_SHARD, pool_rounds, queue_pushes, queue_max_depth)
+            }
         };
         [tag | (u64::from(shard) << 32), self.t(), a, b, c, 0]
     }
@@ -308,6 +345,15 @@ impl Event {
                 p_max: f64::from_bits(c),
             }),
             TAG_DATA_EXTENT => Some(Event::DataExtent { t, shard, bytes: a, pages: b }),
+            TAG_OBJECTIVE => {
+                Some(Event::Objective { t, shard, epoch: a, objective: f64::from_bits(b) })
+            }
+            TAG_ENGINE_STATS => Some(Event::EngineStats {
+                t,
+                pool_rounds: a,
+                queue_pushes: b,
+                queue_max_depth: c,
+            }),
             _ => None,
         }
     }
@@ -652,6 +698,13 @@ pub struct MetricsSnapshot {
     pub parks: u64,
     /// Objective at the last publish in the window, if any.
     pub last_objective: Option<f64>,
+    /// Fork-join rounds the engine's `RoundPool` has dispatched
+    /// (cumulative; folded with `max` from [`Event::EngineStats`]).
+    pub pool_rounds: u64,
+    /// Submissions pushed through the async merge queue (cumulative).
+    pub queue_pushes: u64,
+    /// Largest merge-queue depth ever observed (cumulative max).
+    pub queue_max_depth: u64,
 }
 
 impl MetricsSnapshot {
@@ -670,6 +723,9 @@ impl MetricsSnapshot {
             merge_wait_nanos: 0,
             parks: 0,
             last_objective: None,
+            pool_rounds: 0,
+            queue_pushes: 0,
+            queue_max_depth: 0,
         };
         for ev in events {
             let secs = ev.t() as f64 * 1e-9;
@@ -702,6 +758,12 @@ impl MetricsSnapshot {
                 Event::MergeWait { nanos, .. } => snap.merge_wait_nanos += nanos,
                 Event::SelectorState { shard, entropy, p_min, p_max, .. } => {
                     snap.selector.push(SelectorPoint { t: secs, shard, entropy, p_min, p_max });
+                }
+                Event::Objective { objective, .. } => snap.last_objective = Some(objective),
+                Event::EngineStats { pool_rounds, queue_pushes, queue_max_depth, .. } => {
+                    snap.pool_rounds = snap.pool_rounds.max(pool_rounds);
+                    snap.queue_pushes = snap.queue_pushes.max(queue_pushes);
+                    snap.queue_max_depth = snap.queue_max_depth.max(queue_max_depth);
                 }
                 Event::SnapshotTake { .. } | Event::Submit { .. } | Event::DataExtent { .. } => {}
             }
@@ -770,7 +832,10 @@ impl MetricsSnapshot {
                 ),
             )
             .set("merge_wait_s", json::num(self.merge_wait_nanos as f64 * 1e-9))
-            .set("parks", json::num(self.parks as f64));
+            .set("parks", json::num(self.parks as f64))
+            .set("pool_rounds", json::num(self.pool_rounds as f64))
+            .set("queue_pushes", json::num(self.queue_pushes as f64))
+            .set("queue_max_depth", json::num(self.queue_max_depth as f64));
         if let Some(f) = self.last_objective {
             j.set("last_objective", json::num(f));
         }
@@ -929,6 +994,8 @@ mod tests {
             Event::MergeWait { t: 1_600, nanos: 400 },
             Event::SelectorState { t: 1_700, shard: 0, entropy: 0.69, p_min: 0.4, p_max: 0.6 },
             Event::DataExtent { t: 1_800, shard: 1, bytes: 12_288, pages: 4 },
+            Event::Objective { t: 1_850, shard: NO_SHARD, epoch: 7, objective: -1.25 },
+            Event::EngineStats { t: 1_900, pool_rounds: 12, queue_pushes: 34, queue_max_depth: 5 },
         ]
     }
 
@@ -998,7 +1065,12 @@ mod tests {
         assert_eq!(snap.tau[0].1, 3);
         assert_eq!(snap.parks, 1);
         assert_eq!(snap.merge_wait_nanos, 400);
-        assert_eq!(snap.last_objective, Some(-1.5));
+        // The objective event at t=1_850 lands after the publish at
+        // t=1_300, so it wins the "last" slot.
+        assert_eq!(snap.last_objective, Some(-1.25));
+        assert_eq!(snap.pool_rounds, 12);
+        assert_eq!(snap.queue_pushes, 34);
+        assert_eq!(snap.queue_max_depth, 5);
         // 900 ns lands in the [512, 1024) bucket.
         assert_eq!(snap.epoch_nanos_hist[log2_bucket(900)], 1);
         assert_eq!(log2_bucket(900), 10);
@@ -1015,7 +1087,7 @@ mod tests {
         assert_eq!(b.epochs, 1);
         assert_eq!(b.merges, 2);
         assert_eq!(b.n_shards, 1);
-        assert_eq!(b.span_nanos, 1_700 - 10);
+        assert_eq!(b.span_nanos, 1_900 - 10);
         assert!(b.idle_nanos_estimate() > 0);
     }
 

@@ -14,10 +14,18 @@ use crate::util::json::{self, Json};
 use crate::util::timer::{fmt_count, fmt_secs};
 use crate::{Error, Result};
 
-/// Parse a whole JSONL trace file and render the stage-time breakdown
-/// and adaptation timeline as display-ready text. Malformed lines are
-/// an error naming the line number.
-pub fn summarize(text: &str) -> Result<String> {
+/// A fully-parsed JSONL trace: the event stream (time-sorted) plus the
+/// meta/summary envelope lines. Shared by [`summarize`] and [`diff`].
+struct ParsedTrace {
+    meta: Option<Json>,
+    summary: Option<Json>,
+    snapshot_lines: usize,
+    events: Vec<Event>,
+}
+
+/// Parse a whole JSONL trace file. Malformed lines are an error naming
+/// the line number.
+fn parse_trace(text: &str) -> Result<ParsedTrace> {
     let mut events: Vec<Event> = Vec::new();
     let mut meta: Option<Json> = None;
     let mut summary: Option<Json> = None;
@@ -41,23 +49,31 @@ pub fn summarize(text: &str) -> Result<String> {
         }
     }
     events.sort_by_key(Event::t);
+    Ok(ParsedTrace { meta, summary, snapshot_lines, events })
+}
+
+/// Render the stage-time breakdown and adaptation timeline of a JSONL
+/// trace as display-ready text.
+pub fn summarize(text: &str) -> Result<String> {
+    let trace = parse_trace(text)?;
+    let events = &trace.events;
 
     let mut out = String::new();
-    if let Some(m) = &meta {
+    if let Some(m) = &trace.meta {
         out.push_str(&format!("meta     {}\n", scalar_fields(m)));
     }
     out.push_str(&format!(
         "stream   {} events retained, {} metrics snapshot(s)\n",
         events.len(),
-        snapshot_lines
+        trace.snapshot_lines
     ));
     if events.is_empty() {
         out.push_str("         (no event lines — summary-level trace)\n");
     } else {
-        render_stage_time(&mut out, &events);
-        render_adaptation(&mut out, &events);
+        render_stage_time(&mut out, events);
+        render_adaptation(&mut out, events);
     }
-    if let Some(s) = &summary {
+    if let Some(s) = &trace.summary {
         out.push_str(&format!("\nsummary  {}\n", scalar_fields(s)));
     }
     Ok(out)
@@ -82,15 +98,20 @@ fn scalar_fields(j: &Json) -> String {
     parts.join(" ")
 }
 
-fn render_stage_time(out: &mut String, events: &[Event]) {
-    let n_shards = events
+/// Shard count implied by the event stream (highest epoch shard id +1).
+fn shard_count(events: &[Event]) -> usize {
+    events
         .iter()
         .filter_map(|e| match e {
             Event::Epoch { shard, .. } if *shard != NO_SHARD => Some(*shard as usize + 1),
             _ => None,
         })
         .max()
-        .unwrap_or(0);
+        .unwrap_or(0)
+}
+
+fn render_stage_time(out: &mut String, events: &[Event]) {
+    let n_shards = shard_count(events);
     let b = StageBreakdown::from_events(events);
     out.push_str("\n-- stage time --\n");
     out.push_str(&format!("span        {}\n", fmt_secs(b.span_nanos as f64 * 1e-9)));
@@ -213,6 +234,21 @@ fn render_adaptation(out: &mut String, events: &[Event]) {
             publishes.len()
         ));
     }
+    // epoch-boundary objective trajectory (serial solvers and the sync
+    // engine record these; publishes above cover the async merger)
+    let objectives: Vec<(u64, f64)> = events
+        .iter()
+        .filter_map(|e| match *e {
+            Event::Objective { epoch, objective, .. } => Some((epoch, objective)),
+            _ => None,
+        })
+        .collect();
+    if let (Some(&(e0, f0)), Some(&(e1, f1))) = (objectives.first(), objectives.last()) {
+        out.push_str(&format!(
+            "epoch-obj   epoch {e0} f={f0:.6e}  →  epoch {e1} f={f1:.6e}  ({} record(s))\n",
+            objectives.len()
+        ));
+    }
     render_selector_probes(out, events);
 }
 
@@ -249,6 +285,247 @@ fn render_selector_probes(out: &mut String, events: &[Event]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// trace diff — regression gate between two JSONL traces
+// ---------------------------------------------------------------------------
+
+/// One compared quantity in a [`DiffReport`]. `ratio` is the badness
+/// factor of `b` relative to `a`: exactly `1.0` when the raw values are
+/// equal (including `0/0`), `+∞` when `a` is zero and `b` is not, and
+/// `b/a` otherwise — except the objective row, which uses
+/// `1 + (b − a) / max(|a|, 1)` so the gate stays meaningful for
+/// negative and near-zero objective values.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: String,
+    pub a: f64,
+    pub b: f64,
+    /// display-formatted `a` / `b` (units depend on the metric)
+    pub a_disp: String,
+    pub b_disp: String,
+    pub ratio: f64,
+    /// `true`: growth of `b` is a regression (times, work counts);
+    /// `false`: shrinkage is (throughput, acceptance rate)
+    pub higher_is_worse: bool,
+    /// unwatched rows are informational and never trip the gate
+    /// (e.g. the final τ — a different bound is a change, not a bug)
+    pub watched: bool,
+    pub regressed: bool,
+}
+
+/// Outcome of comparing two traces; `regressions() > 0` is the CLI's
+/// non-zero-exit signal.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+    pub tolerance: f64,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+
+    /// Display-ready regression table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "-- trace diff (tolerance ±{:.0}%) --\n",
+            self.tolerance * 100.0
+        ));
+        out.push_str(&format!(
+            "{:<22} {:>12} {:>12} {:>8}  {}\n",
+            "metric", "a", "b", "ratio", "status"
+        ));
+        for r in &self.rows {
+            let ratio = if r.ratio.is_infinite() {
+                "∞".to_string()
+            } else {
+                format!("{:.2}x", r.ratio)
+            };
+            let status = if r.regressed {
+                "REGRESSED"
+            } else if !r.watched {
+                "info"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "{:<22} {:>12} {:>12} {:>8}  {}\n",
+                r.name, r.a_disp, r.b_disp, ratio, status
+            ));
+        }
+        let n = self.regressions();
+        if n == 0 {
+            out.push_str("no regressions\n");
+        } else {
+            out.push_str(&format!(
+                "{n} regression(s) beyond ±{:.0}%\n",
+                self.tolerance * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Aggregate scalars extracted from one parsed trace for comparison.
+struct TraceMetrics {
+    span_s: f64,
+    compute_s: f64,
+    merge_wait_s: f64,
+    idle_s: f64,
+    epochs: f64,
+    steps: f64,
+    ops: f64,
+    ops_per_sec: f64,
+    acceptance: f64,
+    per_shard_ops_per_sec: Vec<f64>,
+    final_objective: Option<f64>,
+    final_tau: Option<f64>,
+}
+
+fn trace_metrics(trace: &ParsedTrace) -> TraceMetrics {
+    let events = &trace.events;
+    let b = StageBreakdown::from_events(events);
+    let n_shards = shard_count(events);
+    let snap = MetricsSnapshot::from_events(events, n_shards, 0.0, f64::INFINITY);
+    let steps: u64 = snap.per_shard.iter().map(|w| w.steps).sum();
+    let ops: u64 = snap.per_shard.iter().map(|w| w.ops).sum();
+    let compute_s = b.compute_nanos as f64 * 1e-9;
+    // objective: prefer the epoch-boundary records, then publishes,
+    // then the summary line (summary-level traces have no events)
+    let final_objective = events
+        .iter()
+        .rev()
+        .find_map(|e| match *e {
+            Event::Objective { objective, .. } => Some(objective),
+            Event::Publish { objective, .. } => Some(objective),
+            _ => None,
+        })
+        .or_else(|| {
+            trace.summary.as_ref().and_then(|s| s.get("objective").and_then(Json::as_f64))
+        });
+    let final_tau = events
+        .iter()
+        .rev()
+        .find_map(|e| match *e {
+            Event::Tau { tau, .. } => Some(tau as f64),
+            _ => None,
+        });
+    TraceMetrics {
+        span_s: b.span_nanos as f64 * 1e-9,
+        compute_s,
+        merge_wait_s: b.merge_wait_nanos as f64 * 1e-9,
+        idle_s: b.idle_nanos_estimate() as f64 * 1e-9,
+        epochs: b.epochs as f64,
+        steps: steps as f64,
+        ops: ops as f64,
+        ops_per_sec: if compute_s > 0.0 { ops as f64 / compute_s } else { 0.0 },
+        acceptance: snap.merge.acceptance_rate(),
+        per_shard_ops_per_sec: snap.per_shard.iter().map(|w| w.ops_per_sec()).collect(),
+        final_objective,
+        final_tau,
+    }
+}
+
+/// `b` relative to `a` with the [`DiffRow`] conventions.
+fn badness_ratio(a: f64, b: f64) -> f64 {
+    if a == b {
+        1.0
+    } else if a == 0.0 {
+        f64::INFINITY
+    } else {
+        b / a
+    }
+}
+
+fn diff_row(
+    name: &str,
+    a: f64,
+    b: f64,
+    fmt: impl Fn(f64) -> String,
+    higher_is_worse: bool,
+    watched: bool,
+    tolerance: f64,
+) -> DiffRow {
+    let ratio = badness_ratio(a, b);
+    let regressed = watched
+        && if higher_is_worse { ratio > 1.0 + tolerance } else { ratio < 1.0 - tolerance };
+    DiffRow {
+        name: name.to_string(),
+        a,
+        b,
+        a_disp: fmt(a),
+        b_disp: fmt(b),
+        ratio,
+        higher_is_worse,
+        watched,
+        regressed,
+    }
+}
+
+/// Compare two JSONL traces (`a` = baseline, `b` = candidate) and gate
+/// every watched ratio at `tolerance` (0.2 = ±20%). Wall-clock and work
+/// metrics regress when `b` grows; throughput and acceptance regress
+/// when `b` shrinks; the objective regresses when `b` ends higher than
+/// `a` by more than `tolerance` relative to `max(|a|, 1)` (all four
+/// paper families minimize). Identical inputs always report zero
+/// regressions.
+pub fn diff(a_text: &str, b_text: &str, tolerance: f64) -> Result<DiffReport> {
+    let (ta, tb) = (parse_trace(a_text)?, parse_trace(b_text)?);
+    let (ma, mb) = (trace_metrics(&ta), trace_metrics(&tb));
+    let pct = |v: f64| format!("{:.1}%", v * 100.0);
+    let mut rows = vec![
+        diff_row("wall-clock span", ma.span_s, mb.span_s, fmt_secs, true, true, tolerance),
+        diff_row("compute time", ma.compute_s, mb.compute_s, fmt_secs, true, true, tolerance),
+        diff_row("merge-wait", ma.merge_wait_s, mb.merge_wait_s, fmt_secs, true, true, tolerance),
+        diff_row("idle (est.)", ma.idle_s, mb.idle_s, fmt_secs, true, true, tolerance),
+        diff_row("epochs", ma.epochs, mb.epochs, fmt_count, true, true, tolerance),
+        diff_row("steps", ma.steps, mb.steps, fmt_count, true, true, tolerance),
+        diff_row("ops", ma.ops, mb.ops, fmt_count, true, true, tolerance),
+        diff_row(
+            "throughput ops/s",
+            ma.ops_per_sec,
+            mb.ops_per_sec,
+            fmt_count,
+            false,
+            true,
+            tolerance,
+        ),
+        diff_row("acceptance rate", ma.acceptance, mb.acceptance, pct, false, true, tolerance),
+    ];
+    for (k, (&a, &b)) in
+        ma.per_shard_ops_per_sec.iter().zip(&mb.per_shard_ops_per_sec).enumerate()
+    {
+        rows.push(diff_row(&format!("shard {k} ops/s"), a, b, fmt_count, false, true, tolerance));
+    }
+    if ma.per_shard_ops_per_sec.len() != mb.per_shard_ops_per_sec.len() {
+        rows.push(diff_row(
+            "shard count",
+            ma.per_shard_ops_per_sec.len() as f64,
+            mb.per_shard_ops_per_sec.len() as f64,
+            fmt_count,
+            true,
+            false,
+            tolerance,
+        ));
+    }
+    if let (Some(a), Some(b)) = (ma.final_objective, mb.final_objective) {
+        // directional, scale-robust: only a *worse* (higher) final
+        // objective regresses, measured against max(|a|, 1)
+        let rel = (b - a) / a.abs().max(1.0);
+        let mut row =
+            diff_row("final objective", a, b, |v| format!("{v:.6e}"), true, true, tolerance);
+        row.ratio = 1.0 + rel;
+        row.regressed = rel > tolerance;
+        rows.push(row);
+    }
+    if let (Some(a), Some(b)) = (ma.final_tau, mb.final_tau) {
+        rows.push(diff_row("final tau", a, b, fmt_count, true, false, tolerance));
+    }
+    Ok(DiffReport { rows, tolerance })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +544,7 @@ mod tests {
             Event::MergeWait { t: 2_600, nanos: 300 },
             Event::SelectorState { t: 2_700, shard: 0, entropy: 1.2, p_min: 0.1, p_max: 0.5 },
             Event::SelectorState { t: 2_800, shard: 0, entropy: 1.1, p_min: 0.1, p_max: 0.6 },
+            Event::Objective { t: 2_900, shard: NO_SHARD, epoch: 1, objective: -0.75 },
         ];
         let data = TraceData { total: events.len() as u64, dropped: 0, events };
         let snaps = window_snapshots(&data.events, 2, 0.0);
@@ -288,6 +566,7 @@ mod tests {
         assert!(report.contains("2→3"), "{report}");
         assert!(report.contains("shard 0: entropy 1.200→1.100"), "{report}");
         assert!(report.contains("iterations=80"), "{report}");
+        assert!(report.contains("epoch-obj"), "{report}");
     }
 
     #[test]
@@ -309,5 +588,75 @@ mod tests {
     fn unknown_event_kind_is_an_error() {
         let text = "{\"kind\":\"wobble\",\"t_ns\":1}\n";
         assert!(summarize(text).is_err());
+    }
+
+    /// Minimal two-shard trace with tunable epoch cost and objective.
+    fn trace_with(epoch_nanos: u64, objective: f64) -> String {
+        let events = vec![
+            Event::Epoch { t: 1_000, shard: 0, steps: 40, ops: 500, nanos: epoch_nanos },
+            Event::Epoch { t: 2_000, shard: 1, steps: 40, ops: 480, nanos: epoch_nanos },
+            Event::Publish { t: 2_300, version: 2, objective },
+            Event::Objective { t: 2_900, shard: NO_SHARD, epoch: 1, objective },
+        ];
+        let data = TraceData { total: events.len() as u64, dropped: 0, events };
+        let snaps = window_snapshots(&data.events, 2, 0.0);
+        render_trace(TraceLevel::Events, &Json::obj(), &data, &snaps, &Json::obj())
+    }
+
+    #[test]
+    fn diff_of_identical_traces_reports_zero_regressions() {
+        let a = sample_trace();
+        let report = diff(&a, &a, 0.2).unwrap();
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        // every row compares equal values — the badness ratio is exactly 1
+        for row in &report.rows {
+            assert_eq!(row.ratio, 1.0, "{}: {} vs {}", row.name, row.a, row.b);
+        }
+        let text = report.render();
+        assert!(text.contains("no regressions"), "{text}");
+        // τ is reported but informational — never gated
+        let tau = report.rows.iter().find(|r| r.name == "final tau").expect("tau row");
+        assert!(!tau.watched && !tau.regressed);
+    }
+
+    #[test]
+    fn diff_flags_a_slower_candidate_trace() {
+        let a = trace_with(800, -0.75);
+        let b = trace_with(2_000, -0.75);
+        let report = diff(&a, &b, 0.2).unwrap();
+        let compute = report.rows.iter().find(|r| r.name == "compute time").unwrap();
+        assert!(compute.regressed, "{}", report.render());
+        assert!((compute.ratio - 2.5).abs() < 1e-9, "ratio {}", compute.ratio);
+        // the slower epochs also sink throughput below the gate
+        let thr = report.rows.iter().find(|r| r.name == "throughput ops/s").unwrap();
+        assert!(thr.regressed && !thr.higher_is_worse, "{}", report.render());
+        assert!(report.regressions() >= 2);
+        assert!(report.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn objective_gate_is_directional() {
+        let a = trace_with(800, -0.75);
+        // an improved (lower) objective is not a regression
+        let better = diff(&a, &trace_with(800, -0.95), 0.05).unwrap();
+        let row = better.rows.iter().find(|r| r.name == "final objective").unwrap();
+        assert!(!row.regressed, "{}", better.render());
+        // a worse (higher) one beyond tolerance trips the gate
+        let worse = diff(&a, &trace_with(800, 0.75), 0.05).unwrap();
+        let row = worse.rows.iter().find(|r| r.name == "final objective").unwrap();
+        assert!(row.regressed, "{}", worse.render());
+        assert!((row.ratio - 2.5).abs() < 1e-9, "1 + (0.75+0.75)/1, got {}", row.ratio);
+    }
+
+    #[test]
+    fn diff_handles_summary_only_traces() {
+        let mut summary = Json::obj();
+        summary.set("objective", json::num(-0.5));
+        let data = TraceData { total: 0, dropped: 0, events: Vec::new() };
+        let text = render_trace(TraceLevel::Summary, &Json::obj(), &data, &[], &summary);
+        let report = diff(&text, &text, 0.2).unwrap();
+        assert_eq!(report.regressions(), 0, "{}", report.render());
+        let obj = report.rows.iter().find(|r| r.name == "final objective").unwrap();
+        assert_eq!(obj.a, -0.5);
     }
 }

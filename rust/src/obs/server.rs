@@ -1,0 +1,312 @@
+//! Minimal blocking HTTP/1.1 telemetry server on `std::net`.
+//!
+//! Serves three read-only endpoints off a shared [`LiveMetrics`]
+//! registry:
+//!
+//! - `GET /metrics` — Prometheus text exposition ([`crate::obs::export`])
+//! - `GET /snapshot` — JSON of the latest [`LivePoint`] (snapshot +
+//!   merge stats), same shape as the run's JSONL windows
+//! - `GET /healthz` — liveness probe (`ok`)
+//!
+//! The design reuses the [`crate::util::threadpool`] idioms rather than
+//! pulling in an HTTP stack: an acceptor thread polls a non-blocking
+//! `TcpListener` and pushes accepted connections onto a bounded
+//! [`WorkQueue`], and a small fixed set of worker threads drain it with
+//! `pop_timeout`, so a stalled client can never wedge shutdown. Every
+//! response closes the connection (`Connection: close`) — scrapers
+//! reconnect per scrape, which keeps the server stateless.
+//!
+//! The server holds only an `Arc<LiveMetrics>`; it cannot reach solver
+//! state, so the non-perturbation contract is structural.
+
+use super::export::render_prometheus;
+use super::live::{LiveMetrics, LivePoint};
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use crate::util::threadpool::{Pop, WorkQueue};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Worker threads draining accepted connections. Telemetry traffic is
+/// one scraper every few seconds; two workers cover a slow client
+/// overlapping a health probe.
+const WORKERS: usize = 2;
+/// Per-connection socket timeout — a scraper that stalls longer is
+/// dropped.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Upper bound on request-head bytes read before giving up.
+const MAX_HEAD: usize = 8 * 1024;
+
+/// Handle to a running telemetry server. Dropping it (or calling
+/// [`MetricsServer::stop`]) shuts the listener and workers down.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<WorkQueue<TcpStream>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port `0` picks an ephemeral
+    /// port — read it back via [`MetricsServer::local_addr`]) and start
+    /// serving `live`.
+    pub fn start(addr: &str, live: Arc<LiveMetrics>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| crate::anyhow!("metrics: cannot bind {}: {}", addr, e))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| crate::anyhow!("metrics: no local addr: {}", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::anyhow!("metrics: set_nonblocking: {}", e))?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: Arc<WorkQueue<TcpStream>> = Arc::new(WorkQueue::new());
+        let mut threads = Vec::with_capacity(WORKERS + 1);
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_queue = Arc::clone(&queue);
+        threads.push(
+            std::thread::Builder::new()
+                .name("metrics-accept".to_string())
+                .spawn(move || {
+                    while !accept_stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                accept_queue.push_counted(stream);
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(25));
+                            }
+                            // transient accept errors (e.g. ECONNABORTED):
+                            // keep listening
+                            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                        }
+                    }
+                })
+                .map_err(|e| crate::anyhow!("metrics: spawn acceptor: {}", e))?,
+        );
+
+        for w in 0..WORKERS {
+            let q = Arc::clone(&queue);
+            let lv = Arc::clone(&live);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("metrics-worker-{w}"))
+                    .spawn(move || loop {
+                        match q.pop_timeout(Duration::from_millis(100)) {
+                            Pop::Item(stream) => handle_connection(stream, &lv),
+                            Pop::TimedOut => continue,
+                            Pop::Shutdown => break,
+                        }
+                    })
+                    .map_err(|e| crate::anyhow!("metrics: spawn worker: {}", e))?,
+            );
+        }
+
+        Ok(MetricsServer { addr: local, stop, queue, threads })
+    }
+
+    /// The bound address (resolves port `0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain the workers, and join all threads.
+    /// Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.shutdown();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Read the request head, route it, and write one response.
+fn handle_connection(mut stream: TcpStream, live: &LiveMetrics) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let head = match read_head(&mut stream) {
+        Some(h) => h,
+        None => return,
+    };
+    let (status, content_type, body) = route(&head, live);
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Read until the blank line terminating the request head (bounded by
+/// [`MAX_HEAD`]); returns `None` on timeout, disconnect, or oversize.
+fn read_head(stream: &mut TcpStream) -> Option<String> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return None,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") {
+                    return Some(String::from_utf8_lossy(&buf).into_owned());
+                }
+                if buf.len() > MAX_HEAD {
+                    return None;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Dispatch on the request line; returns `(status, content-type, body)`.
+fn route(head: &str, live: &LiveMetrics) -> (&'static str, &'static str, String) {
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    // ignore any query string — endpoints take no parameters
+    let path = path.split('?').next().unwrap_or(path);
+    if method != "GET" {
+        let body = "method not allowed\n".to_string();
+        return ("405 Method Not Allowed", "text/plain; charset=utf-8", body);
+    }
+    match path {
+        "/metrics" => {
+            live.record_scrape();
+            ("200 OK", "text/plain; version=0.0.4; charset=utf-8", render_prometheus(live))
+        }
+        "/snapshot" => ("200 OK", "application/json", snapshot_json(live)),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    }
+}
+
+/// JSON view of the latest [`LivePoint`]: labels, scrape count, the
+/// metrics snapshot (same shape as JSONL `metrics_snapshot` records),
+/// and the merge-layer accounting.
+fn snapshot_json(live: &LiveMetrics) -> String {
+    let point: Arc<LivePoint> = live.latest();
+    let ms = &point.merge_stats;
+    let mut labels = Json::obj();
+    for (k, v) in live.labels() {
+        labels.set(k, json::s(v));
+    }
+    let mut merge_stats = Json::obj();
+    merge_stats
+        .set("objective_evals", json::num(ms.objective_evals as f64))
+        .set("accepted_submissions", json::num(ms.accepted_submissions as f64))
+        .set("rejected_submissions", json::num(ms.rejected_submissions as f64))
+        .set("batched_merges", json::num(ms.batched_merges as f64))
+        .set("staleness_bound_final", json::num(ms.staleness_bound_final as f64));
+    let mut j = Json::obj();
+    j.set("labels", labels)
+        .set("scrapes", json::num(live.scrapes() as f64))
+        .set("snapshot", point.snapshot.to_json())
+        .set("merge_stats", merge_stats);
+    let mut out = j.to_string_compact();
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Blocking one-shot HTTP GET; returns `(status_line, body)`.
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("read");
+        let split = raw.find("\r\n\r\n").expect("header terminator");
+        let status = raw.lines().next().unwrap_or("").to_string();
+        (status, raw[split + 4..].to_string())
+    }
+
+    fn serve() -> (MetricsServer, Arc<LiveMetrics>) {
+        let live = Arc::new(LiveMetrics::new(vec![("job".to_string(), "test".to_string())]));
+        let srv = MetricsServer::start("127.0.0.1:0", Arc::clone(&live)).expect("start");
+        (srv, live)
+    }
+
+    #[test]
+    fn healthz_roundtrip() {
+        let (srv, _live) = serve();
+        let (status, body) = http_get(srv.local_addr(), "/healthz");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "ok\n");
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_exposition_and_counts_scrapes() {
+        let (srv, live) = serve();
+        let (status, body) = http_get(srv.local_addr(), "/metrics");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.contains("# TYPE acf_scrapes_total counter"), "{body}");
+        assert!(body.contains("acf_uptime_seconds"), "{body}");
+        assert_eq!(live.scrapes(), 1);
+        let (_, body2) = http_get(srv.local_addr(), "/metrics");
+        assert!(body2.contains("acf_scrapes_total{job=\"test\"} 2"), "{body2}");
+    }
+
+    #[test]
+    fn snapshot_endpoint_returns_parseable_json() {
+        let (srv, live) = serve();
+        {
+            let mut rec =
+                super::super::live::LiveRecorder::new(Arc::clone(&live), 1);
+            rec.objective(-3.25);
+            rec.flush();
+        }
+        let (status, body) = http_get(srv.local_addr(), "/snapshot");
+        assert!(status.contains("200"), "{status}");
+        let j = json::parse(&body).expect("parse snapshot json");
+        assert_eq!(
+            j.get("labels").and_then(|l| l.get("job")).and_then(Json::as_str),
+            Some("test")
+        );
+        let snap = j.get("snapshot").expect("snapshot key");
+        assert_eq!(snap.get("last_objective").and_then(Json::as_f64), Some(-3.25));
+        assert!(j.get("merge_stats").is_some());
+    }
+
+    #[test]
+    fn unknown_path_is_404_and_post_is_405() {
+        let (srv, _live) = serve();
+        let (status, _) = http_get(srv.local_addr(), "/nope");
+        assert!(status.contains("404"), "{status}");
+
+        let mut stream = TcpStream::connect(srv.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(stream, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+    }
+
+    #[test]
+    fn stop_joins_all_threads() {
+        let (mut srv, _live) = serve();
+        let addr = srv.local_addr();
+        srv.stop();
+        srv.stop(); // idempotent
+        // the listener is gone: a fresh bind on the same port succeeds
+        let rebind = TcpListener::bind(addr);
+        assert!(rebind.is_ok(), "port not released: {rebind:?}");
+    }
+}

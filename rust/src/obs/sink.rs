@@ -71,6 +71,16 @@ pub fn event_to_json(ev: &Event) -> Json {
                 .set("bytes", json::num(bytes as f64))
                 .set("pages", json::num(pages as f64));
         }
+        Event::Objective { shard, epoch, objective, .. } => {
+            j.set("shard", shard_num(shard))
+                .set("epoch", json::num(epoch as f64))
+                .set("objective", json::num(objective));
+        }
+        Event::EngineStats { pool_rounds, queue_pushes, queue_max_depth, .. } => {
+            j.set("pool_rounds", json::num(pool_rounds as f64))
+                .set("queue_pushes", json::num(queue_pushes as f64))
+                .set("queue_max_depth", json::num(queue_max_depth as f64));
+        }
     }
     j
 }
@@ -156,6 +166,18 @@ pub fn event_from_json(j: &Json) -> Result<Option<Event>> {
             bytes: field_u64(j, "bytes")?,
             pages: field_u64(j, "pages")?,
         },
+        "objective" => Event::Objective {
+            t,
+            shard: field_shard(j)?,
+            epoch: field_u64(j, "epoch")?,
+            objective: field_f64(j, "objective")?,
+        },
+        "engine_stats" => Event::EngineStats {
+            t,
+            pool_rounds: field_u64(j, "pool_rounds")?,
+            queue_pushes: field_u64(j, "queue_pushes")?,
+            queue_max_depth: field_u64(j, "queue_max_depth")?,
+        },
         other => return Err(Error::msg(format!("unknown trace event kind '{other}'"))),
     };
     Ok(Some(ev))
@@ -231,6 +253,8 @@ mod tests {
             Event::SelectorState { t: 1_500, shard: 0, entropy: 1.386_294, p_min: 0.05, p_max: 0.4 },
             Event::SelectorState { t: 1_600, shard: NO_SHARD, entropy: 0.5, p_min: 0.1, p_max: 0.9 },
             Event::DataExtent { t: 1_700, shard: 2, bytes: 36_864, pages: 10 },
+            Event::Objective { t: 1_800, shard: NO_SHARD, epoch: 3, objective: -2.5 + 1e-12 },
+            Event::EngineStats { t: 1_900, pool_rounds: 9, queue_pushes: 21, queue_max_depth: 4 },
         ]
     }
 

@@ -112,6 +112,7 @@
 
 use crate::acf::{AcfParams, Preferences, SequenceGenerator};
 use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::obs::live::{LiveMetrics, LiveRecorder};
 use crate::obs::{self, Emitter, Event, MergeTier, Obs};
 use crate::select::{Selector, SelectorKind};
 use crate::shard::partition::{Partition, Partitioner};
@@ -297,6 +298,14 @@ pub struct ShardSpec {
     /// Recording never mutates solver state, so results are identical
     /// at every trace level — only wall-clock differs.
     pub obs: Option<Arc<Obs>>,
+    /// live telemetry registry ([`crate::obs::live`]); `None` (the
+    /// default) constructs no recorder at all. When set, the driving
+    /// thread (sync epoch loop or async merger) publishes a running
+    /// [`crate::obs::MetricsSnapshot`] after every epoch/publish for the
+    /// HTTP telemetry server to scrape. Publishing only reads solver
+    /// state, so the non-perturbation contract of `obs` extends to the
+    /// live plane.
+    pub live: Option<Arc<LiveMetrics>>,
 }
 
 impl ShardSpec {
@@ -312,6 +321,7 @@ impl ShardSpec {
             merge: MergeMode::Sync,
             config: SolverConfig::default(),
             obs: None,
+            live: None,
         }
     }
 
@@ -349,6 +359,12 @@ impl ShardSpec {
     /// Attach an observability collector (see [`ShardSpec::obs`]).
     pub fn with_obs(mut self, obs: Arc<Obs>) -> ShardSpec {
         self.obs = Some(obs);
+        self
+    }
+
+    /// Attach a live telemetry registry (see [`ShardSpec::live`]).
+    pub fn with_live(mut self, live: Arc<LiveMetrics>) -> ShardSpec {
+        self.live = Some(live);
         self
     }
 }
@@ -479,6 +495,9 @@ struct EpochReport {
     window_viol: f64,
     steps: u64,
     counter: OpCounter,
+    /// wall-clock nanoseconds of the local epoch (0 unless the run is
+    /// traced at spans level or live telemetry is attached)
+    nanos: u64,
 }
 
 /// Task selector for the synchronized round workers (one fixed closure
@@ -554,6 +573,9 @@ struct Submission {
     claimed: f64,
     window_viol: f64,
     counter: OpCounter,
+    /// wall-clock nanoseconds of the local epoch (0 unless traced at
+    /// spans level or live telemetry is attached)
+    nanos: u64,
 }
 
 /// Worker → merger messages (async mode).
@@ -741,6 +763,9 @@ struct Merger<'e, P: ShardProblem> {
     stale_drops: u64,
     /// merger-thread emitter on the collector's driver ring
     em: Emitter<'e>,
+    /// live telemetry recorder (merger thread only; `None` without
+    /// `--metrics-addr`)
+    live: Option<LiveRecorder>,
 }
 
 impl<'e, P: ShardProblem> Merger<'e, P> {
@@ -756,13 +781,19 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
             if self.em.spans() {
                 self.em.emit(Event::Tau { t: self.em.now(), tau, prev });
             }
+            if let Some(lr) = self.live.as_mut() {
+                lr.tau(tau);
+            }
         }
     }
 
     /// One `merge` span for a (batch of) submission(s) that shared a fate.
-    fn emit_merge(&self, shard: u32, tier: MergeTier, staleness: u64, batch: u64) {
+    fn emit_merge(&mut self, shard: u32, tier: MergeTier, staleness: u64, batch: u64) {
         if self.em.spans() {
             self.em.emit(Event::Merge { t: self.em.now(), shard, tier, staleness, batch });
+        }
+        if let Some(lr) = self.live.as_mut() {
+            lr.merge_outcome(tier, staleness, batch);
         }
     }
 
@@ -784,6 +815,17 @@ impl<'e, P: ShardProblem> Merger<'e, P> {
                 version: self.version,
                 objective: self.f_cur,
             });
+            self.em.emit(Event::Objective {
+                t: self.em.now(),
+                shard: obs::NO_SHARD,
+                epoch: self.merges,
+                objective: self.f_cur,
+            });
+        }
+        if let Some(lr) = self.live.as_mut() {
+            lr.objective(self.f_cur);
+            lr.set_merge_stats(self.stats);
+            lr.flush();
         }
     }
 
@@ -1089,6 +1131,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         // The one fixed task closure served to the persistent workers;
         // `ctx.task` selects between epoch and verification rounds.
         let obs_ref = self.spec.obs.as_deref();
+        let live_on = self.spec.live.is_some();
         let task = |k: usize| {
             // A read-guard panic does not poison an RwLock, so a crashed
             // sibling worker cannot wedge this lock.
@@ -1107,7 +1150,13 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     let mut local = OpCounter::new();
                     let mut df_sum = 0.0f64;
                     let mut viol_max = 0.0f64;
+                    // Timing reads a clock only — solver state is
+                    // untouched, so results stay bit-identical. The
+                    // collector clock is 0 when tracing is off, so a
+                    // live-only run falls back to a local Instant.
                     let t_start = if em.spans() { em.now() } else { 0 };
+                    let t_wall =
+                        if live_on && !em.spans() { Some(std::time::Instant::now()) } else { None };
                     for _ in 0..ctx.quotas[k] {
                         let kk = st.sched.next();
                         let i = st.ids[kk] as usize;
@@ -1118,14 +1167,18 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         viol_max = viol_max.max(out.violation);
                         local.step(out.ops);
                     }
+                    let nanos = if em.spans() {
+                        em.now().saturating_sub(t_start)
+                    } else {
+                        t_wall.map_or(0, |t| t.elapsed().as_nanos() as u64)
+                    };
                     if em.spans() {
-                        let t_end = em.now();
                         em.emit(Event::Epoch {
-                            t: t_end,
+                            t: em.now(),
                             shard: k as u32,
                             steps: ctx.quotas[k],
                             ops: local.ops(),
-                            nanos: t_end.saturating_sub(t_start),
+                            nanos,
                         });
                     }
                     if em.events() {
@@ -1136,6 +1189,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         window_viol: viol_max,
                         steps: ctx.quotas[k],
                         counter: local,
+                        nanos,
                     })
                 }
                 SyncTask::Verify => {
@@ -1240,6 +1294,10 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let mut stats = MergeStats::default();
         // Driver ring: the last ring of the collector (index S).
         let em = obs::emitter(self.spec.obs.as_deref(), s_count);
+        // Live telemetry: the driving thread owns the recorder and
+        // publishes one point per epoch (reads only — no solver state
+        // is touched, and no recorder exists without `--metrics-addr`).
+        let mut live = self.spec.live.as_ref().map(|l| LiveRecorder::new(Arc::clone(l), s_count));
 
         let mut sum_diff = vec![0.0f64; dim];
         let mut trial_shared = vec![0.0f64; dim];
@@ -1319,6 +1377,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             let f_full = p.shared_objective(&trial_shared) + sep_trial.iter().sum::<f64>();
             stats.objective_evals += 1;
             let tol = 1e-12 * f_curr.abs().max(1.0);
+            let merge_tier;
             if f_full <= f_curr + tol {
                 // additive merge accepted
                 std::mem::swap(shared, &mut trial_shared);
@@ -1331,6 +1390,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 f_curr = f_full;
                 stats.accepted_submissions += s_count as u64;
                 stats.batched_merges += 1;
+                merge_tier = MergeTier::Additive;
                 if em.spans() {
                     em.emit(Event::Merge {
                         t: em.now(),
@@ -1362,6 +1422,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 f_curr = p.shared_objective(shared) + sep.iter().sum::<f64>();
                 stats.objective_evals += 1;
                 stats.accepted_submissions += s_count as u64;
+                merge_tier = MergeTier::Damped;
                 if em.spans() {
                     em.emit(Event::Merge {
                         t: em.now(),
@@ -1374,8 +1435,26 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             }
             if em.spans() {
                 em.emit(Event::Publish { t: em.now(), version: epochs, objective: f_curr });
+                em.emit(Event::Objective {
+                    t: em.now(),
+                    shard: obs::NO_SHARD,
+                    epoch: epochs,
+                    objective: f_curr,
+                });
             }
             drop(ctx_g);
+
+            // ---- live telemetry publish ------------------------------
+            if let Some(lr) = live.as_mut() {
+                for (k, r) in epoch_reports.iter().enumerate() {
+                    lr.epoch(k as u32, r.steps, r.counter.ops(), r.nanos);
+                }
+                lr.merge_outcome(merge_tier, 0, s_count as u64);
+                lr.objective(f_curr);
+                lr.engine(pool.round_stats().rounds, 0, 0);
+                lr.set_merge_stats(stats);
+                lr.flush();
+            }
 
             // ---- hierarchical adaptation: outer Δf report ------------
             for (k, r) in epoch_reports.iter().enumerate() {
@@ -1425,6 +1504,21 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 }
                 last_failed_verify = Some(epochs);
             }
+        }
+
+        let pool_rounds = pool.round_stats().rounds;
+        if em.spans() {
+            em.emit(Event::EngineStats {
+                t: em.now(),
+                pool_rounds,
+                queue_pushes: 0,
+                queue_max_depth: 0,
+            });
+        }
+        if let Some(lr) = live.as_mut() {
+            lr.engine(pool_rounds, 0, 0);
+            lr.set_merge_stats(stats);
+            lr.flush();
         }
 
         // ---- assemble global views -----------------------------------
@@ -1529,7 +1623,12 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                 let mut counter = OpCounter::new();
                 let mut viol = 0.0f64;
                 let mut claimed = 0.0f64;
+                // Local Instant fallback for live-only runs (the
+                // collector clock reads 0 when tracing is off).
+                let live_on = self.spec.live.is_some();
                 let t_start = if em.spans() { em.now() } else { 0 };
+                let t_wall =
+                    if live_on && !em.spans() { Some(std::time::Instant::now()) } else { None };
                 for _ in 0..quota {
                     let kk = st.sched.next();
                     let i = st.ids[kk] as usize;
@@ -1543,14 +1642,18 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     viol = viol.max(out.violation);
                     counter.step(out.ops);
                 }
+                let nanos = if em.spans() {
+                    em.now().saturating_sub(t_start)
+                } else {
+                    t_wall.map_or(0, |t| t.elapsed().as_nanos() as u64)
+                };
                 if em.spans() {
-                    let t_end = em.now();
                     em.emit(Event::Epoch {
-                        t: t_end,
+                        t: em.now(),
                         shard: k as u32,
                         steps: quota,
                         ops: counter.ops(),
-                        nanos: t_end.saturating_sub(t_start),
+                        nanos,
                     });
                 }
                 if em.events() {
@@ -1582,6 +1685,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     claimed,
                     window_viol: viol,
                     counter,
+                    nanos,
                 })
             }
         }
@@ -1702,6 +1806,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             tau: TauController::new(tau, adaptive, s_count),
             stale_drops: 0,
             em,
+            live: self.spec.live.as_ref().map(|l| LiveRecorder::new(Arc::clone(l), s_count)),
         };
 
         let mut counter = OpCounter::new();
@@ -1739,11 +1844,21 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             let msg = if let Some(m) = pending.pop_front() {
                 m
             } else {
+                let live_on = mg.live.is_some();
                 let wait_t0 = if em.spans() { em.now() } else { 0 };
+                let wait_wall =
+                    if live_on && !em.spans() { Some(std::time::Instant::now()) } else { None };
                 let popped = msgs.pop_timeout(Duration::from_millis(50));
+                let wait_nanos = if em.spans() {
+                    em.now().saturating_sub(wait_t0)
+                } else {
+                    wait_wall.map_or(0, |t| t.elapsed().as_nanos() as u64)
+                };
                 if em.spans() {
-                    let t = em.now();
-                    em.emit(Event::MergeWait { t, nanos: t.saturating_sub(wait_t0) });
+                    em.emit(Event::MergeWait { t: em.now(), nanos: wait_nanos });
+                }
+                if let Some(lr) = mg.live.as_mut() {
+                    lr.merge_wait(wait_nanos);
                 }
                 match popped {
                     Pop::Item(m) => m,
@@ -1834,6 +1949,18 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     for sub in &batch {
                         counter.merge(&sub.counter);
                         last_viol[sub.shard] = sub.window_viol;
+                    }
+                    if let Some(lr) = mg.live.as_mut() {
+                        for sub in &batch {
+                            lr.epoch(
+                                sub.shard as u32,
+                                sub.counter.iterations(),
+                                sub.counter.ops(),
+                                sub.nanos,
+                            );
+                        }
+                        let qs = msgs.stats();
+                        lr.engine(0, qs.pushes, qs.max_depth as u64);
                     }
 
                     // bounded staleness first: discard the delta AND the
@@ -1945,6 +2072,21 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             trace,
         };
         mg.stats.staleness_bound_final = mg.tau.current();
+        let qs = msgs.stats();
+        if em.spans() {
+            em.emit(Event::EngineStats {
+                t: em.now(),
+                pool_rounds: 0,
+                queue_pushes: qs.pushes,
+                queue_max_depth: qs.max_depth as u64,
+            });
+        }
+        if let Some(lr) = mg.live.as_mut() {
+            lr.engine(0, qs.pushes, qs.max_depth as u64);
+            lr.objective(mg.f_cur);
+            lr.set_merge_stats(mg.stats);
+            lr.flush();
+        }
         Ok(ShardedOutcome {
             values,
             shared: mg.cur,
@@ -2262,6 +2404,43 @@ mod tests {
                 assert!(data.events.is_empty(), "summary level records nothing");
             }
         }
+        // the live telemetry path shares the contract: attaching a
+        // registry (with or without a collector) changes no result bit
+        let live = Arc::new(crate::obs::live::LiveMetrics::new(Vec::new()));
+        let out = ShardedDriver::new(&p, spec(4).with_live(Arc::clone(&live))).run().unwrap();
+        assert_eq!(out.values, plain.values, "live leg");
+        assert_eq!(out.result.iterations, plain.result.iterations, "live leg");
+        assert_eq!(out.result.objective.to_bits(), plain.result.objective.to_bits(), "live leg");
+        // and the registry saw the run: final point matches the outcome
+        let point = live.latest();
+        assert_eq!(point.snapshot.last_objective, Some(out.result.objective));
+        assert!(point.snapshot.pool_rounds >= out.result.epochs, "one pool round per epoch");
+        let steps: u64 = point.snapshot.per_shard.iter().map(|w| w.steps).sum();
+        assert_eq!(steps, out.result.iterations);
+        assert_eq!(point.merge_stats, out.merge_stats);
+    }
+
+    #[test]
+    fn live_registry_tracks_async_runs() {
+        let p = Quad::new(64);
+        let live = Arc::new(crate::obs::live::LiveMetrics::new(Vec::new()));
+        let out = ShardedDriver::new(&p, spec(8).with_async(2).with_live(Arc::clone(&live)))
+            .run()
+            .unwrap();
+        assert!(out.result.status.converged(), "{}", out.result.summary());
+        let point = live.latest();
+        let s = &point.snapshot;
+        assert_eq!(s.last_objective, Some(out.result.objective));
+        assert_eq!(point.merge_stats, out.merge_stats);
+        // every accepted/rejected submission passed through the recorder
+        let decided = s.merge.additive + s.merge.damped + s.merge.rejected;
+        assert_eq!(
+            decided,
+            out.merge_stats.accepted_submissions + out.merge_stats.rejected_submissions,
+            "{s:?}"
+        );
+        assert!(s.queue_pushes > 0, "queue stats must flow into the snapshot");
+        assert!(s.queue_max_depth >= 1, "{s:?}");
     }
 
     #[test]
@@ -2290,11 +2469,17 @@ mod tests {
             data.events.iter().filter(|e| matches!(e, Event::Publish { .. })).count();
         let probes =
             data.events.iter().filter(|e| matches!(e, Event::SelectorState { .. })).count();
-        // 4 shards × ≥1 epoch each, one merge + publish per barrier, one
-        // selector probe per shard epoch (events level)
+        let objectives =
+            data.events.iter().filter(|e| matches!(e, Event::Objective { .. })).count();
+        let engine_stats =
+            data.events.iter().filter(|e| matches!(e, Event::EngineStats { .. })).count();
+        // 4 shards × ≥1 epoch each, one merge + publish + objective per
+        // barrier, one selector probe per shard epoch (events level)
         assert!(epochs >= 4, "{epochs}");
         assert!(merges as u64 >= out.result.epochs, "{merges} vs {}", out.result.epochs);
         assert!(publishes as u64 >= out.result.epochs, "{publishes}");
+        assert_eq!(objectives as u64, out.result.epochs, "one objective event per epoch");
+        assert_eq!(engine_stats, 1, "one engine_stats summary at the end");
         assert_eq!(probes, epochs, "one probe per epoch at events level");
         assert!(data.events.windows(2).all(|w| w[0].t() <= w[1].t()), "drain must sort");
     }

@@ -11,7 +11,10 @@
 //!   by-product of each step.
 
 use crate::metrics::{OpCounter, Trace, TracePoint};
+use crate::obs::live::{LiveMetrics, LiveRecorder};
+use crate::obs::{self, Event, Obs};
 use crate::util::timer::Timer;
+use std::sync::Arc;
 
 /// Why a solver run terminated.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,11 +47,27 @@ pub struct SolverConfig {
     /// record a convergence trace point every `trace_every` iterations
     /// (0 = no tracing)
     pub trace_every: u64,
+    /// observability collector for serial solvers (`None` — the default
+    /// — records nothing; serial runs use ring 0). Only the epoch-level
+    /// [`Event::Objective`] records flow through this; per-step state is
+    /// far too hot to trace.
+    pub obs: Option<Arc<Obs>>,
+    /// live telemetry registry ([`crate::obs::live`]); `None` constructs
+    /// no recorder. Publishing happens at epoch boundaries only and
+    /// reads solver state, never mutates it.
+    pub live: Option<Arc<LiveMetrics>>,
 }
 
 impl Default for SolverConfig {
     fn default() -> Self {
-        Self { eps: 0.01, max_iterations: 200_000_000, max_seconds: None, trace_every: 0 }
+        Self {
+            eps: 0.01,
+            max_iterations: 200_000_000,
+            max_seconds: None,
+            trace_every: 0,
+            obs: None,
+            live: None,
+        }
     }
 }
 
@@ -89,6 +108,49 @@ impl SolveResult {
             self.objective,
             self.final_violation
         )
+    }
+}
+
+/// Epoch-boundary observability hook for the serial solvers: emits
+/// [`Event::Objective`] records (spans level) and feeds the live
+/// telemetry registry. Constructed from the [`SolverConfig`] *before*
+/// [`RunState::new`] consumes it; does nothing (and computes nothing)
+/// when neither plane is attached.
+pub struct EpochObs {
+    obs: Option<Arc<Obs>>,
+    live: Option<LiveRecorder>,
+}
+
+impl EpochObs {
+    pub fn new(config: &SolverConfig) -> EpochObs {
+        EpochObs {
+            obs: config.obs.clone(),
+            live: config.live.as_ref().map(|l| LiveRecorder::new(Arc::clone(l), 0)),
+        }
+    }
+
+    /// Record the end of epoch `epoch`. `objective` is evaluated at most
+    /// once, and only when a plane that consumes it is attached — the
+    /// untraced path pays two `None` checks.
+    pub fn epoch(&mut self, epoch: u64, objective: impl FnOnce() -> f64) {
+        let em = obs::emitter(self.obs.as_deref(), 0);
+        let spans = em.spans();
+        if !spans && self.live.is_none() {
+            return;
+        }
+        let f = objective();
+        if spans {
+            em.emit(Event::Objective {
+                t: em.now(),
+                shard: obs::NO_SHARD,
+                epoch,
+                objective: f,
+            });
+        }
+        if let Some(lr) = self.live.as_mut() {
+            lr.objective(f);
+            lr.flush();
+        }
     }
 }
 

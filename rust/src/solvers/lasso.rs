@@ -20,7 +20,7 @@
 //! Table 3 is plain cyclic CD ("iterating over all coordinates in
 //! order"); ACF replaces the cyclic rule.
 
-use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use super::common::{EpochObs, RunState, SolveResult, SolveStatus, SolverConfig};
 use crate::select::Selector;
 use crate::sparse::ops::soft_threshold;
 use crate::sparse::{Csr, Dataset};
@@ -104,6 +104,7 @@ pub fn solve_prepared(
     let mut w = vec![0.0f64; d];
     // residual r = Xw − y = −y at w = 0
     let mut r: Vec<f64> = prob.y.iter().map(|&v| -v).collect();
+    let mut eo = EpochObs::new(&config);
     let mut rs = RunState::new(config);
     let mut status = SolveStatus::IterLimit;
     let mut window_max = 0.0f64;
@@ -163,6 +164,7 @@ pub fn solve_prepared(
 
         if window_count >= d {
             epochs += 1;
+            eo.epoch(epochs, || objective(&w, &r));
             if window_max < rs.eps() {
                 let (v, extra) = verify(prob, lambda, &w, &r);
                 rs.counter.extra(extra);

@@ -25,7 +25,7 @@
 //! `Δf` is computed exactly in O(1) from the quadratic change plus the
 //! entropy terms before/after.
 
-use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use super::common::{EpochObs, RunState, SolveResult, SolveStatus, SolverConfig};
 use crate::select::Selector;
 use crate::sparse::Dataset;
 
@@ -119,6 +119,7 @@ pub fn solve(
     for i in 0..n {
         ds.x.row(i).axpy_into(alpha[i] * ds.y[i], &mut w);
     }
+    let mut eo = EpochObs::new(&config);
     let mut rs = RunState::new(config);
     let mut status = SolveStatus::IterLimit;
     let mut window_max = 0.0f64;
@@ -183,6 +184,7 @@ pub fn solve(
 
         if window_count >= n {
             epochs += 1;
+            eo.epoch(epochs, || objective(&alpha, &w));
             if window_max < rs.eps() {
                 let (v, extra) = verify(ds, &alpha, &w, c);
                 rs.counter.extra(extra);

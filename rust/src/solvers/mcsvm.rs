@@ -27,7 +27,7 @@
 //! The subspace Hessian for example `i` is `‖x_i‖²·(I + 1·1ᵀ)` restricted
 //! to `k ≠ y_i`: diagonal `2‖x_i‖²`, off-diagonal `‖x_i‖²`.
 
-use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use super::common::{EpochObs, RunState, SolveResult, SolveStatus, SolverConfig};
 use crate::select::Selector;
 use crate::sparse::Dataset;
 use crate::util::error::Result;
@@ -226,6 +226,7 @@ pub fn solve(
     let mut alpha = vec![0.0f64; n * k_classes];
     let max_inner = 10 * k_classes;
 
+    let mut eo = EpochObs::new(&config);
     let mut rs = RunState::new(config);
     let mut status = SolveStatus::IterLimit;
     let mut window_max = 0.0f64;
@@ -297,6 +298,10 @@ pub fn solve(
 
         if window_count >= n {
             epochs += 1;
+            eo.epoch(epochs, || {
+                let quad: f64 = w.iter().map(|wk| crate::sparse::ops::norm_sq(wk)).sum();
+                0.5 * quad - alpha.iter().sum::<f64>()
+            });
             if window_max < rs.eps() {
                 let (v, extra) = verify(ds, &y, &alpha, &w, c, k_classes);
                 rs.counter.extra(extra);

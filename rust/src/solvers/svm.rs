@@ -28,7 +28,7 @@
 //!   permutation epochs plus the shrinking heuristic with warm-restart on
 //!   shrink failure (the paper's strongest competitor).
 
-use super::common::{RunState, SolveResult, SolveStatus, SolverConfig};
+use super::common::{EpochObs, RunState, SolveResult, SolveStatus, SolverConfig};
 use crate::select::Selector;
 use crate::sparse::Dataset;
 
@@ -97,6 +97,7 @@ pub fn solve(
     let q_diag = ds.x.row_norms_sq();
     let mut alpha = vec![0.0f64; n];
     let mut w = vec![0.0f64; d];
+    let mut eo = EpochObs::new(&config);
     let mut rs = RunState::new(config);
     let mut status = SolveStatus::IterLimit;
     let mut window_max = 0.0f64;
@@ -158,6 +159,9 @@ pub fn solve(
 
         if window_count >= n {
             epochs += 1;
+            eo.epoch(epochs, || {
+                0.5 * crate::sparse::ops::norm_sq(&w) - alpha.iter().sum::<f64>()
+            });
             if window_max < rs.eps() {
                 // candidate convergence: verify over all coordinates
                 let (v, extra) = verify_pass(ds, &alpha, &w, c);
@@ -196,6 +200,7 @@ pub fn solve_liblinear_shrinking(
     let q_diag = ds.x.row_norms_sq();
     let mut alpha = vec![0.0f64; n];
     let mut w = vec![0.0f64; d];
+    let mut eo = EpochObs::new(&config);
     let mut rs = RunState::new(config);
     let mut status = SolveStatus::IterLimit;
 
@@ -283,6 +288,7 @@ pub fn solve_liblinear_shrinking(
             }
             k += 1;
         }
+        eo.epoch(epochs, || 0.5 * crate::sparse::ops::norm_sq(&w) - alpha.iter().sum::<f64>());
 
         if pgmax_new - pgmin_new <= rs.eps() {
             if active.len() == n {

@@ -1,0 +1,171 @@
+//! Live-telemetry integration: a metrics server bound to an ephemeral
+//! port must serve parseable Prometheus text while a job trains, the
+//! exported series must agree with the job's own final accounting, and
+//! attaching the registry must never perturb the solve.
+
+use acf_cd::coordinator::{run_job_on, run_job_with_live, JobSpec, Problem};
+use acf_cd::data::Scale;
+use acf_cd::obs::live::LiveMetrics;
+use acf_cd::obs::server::MetricsServer;
+use acf_cd::sched::Policy;
+use acf_cd::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn quick(problem: Problem, ds: &str) -> JobSpec {
+    let mut s = JobSpec::new(problem, ds, Policy::Acf);
+    s.scale = Scale(0.08);
+    s.eps = 0.001;
+    s
+}
+
+/// Minimal HTTP/1.1 client: one request, connection-close semantics.
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    (head.to_string(), body.to_string())
+}
+
+/// Validate every line of a Prometheus text exposition: comments are
+/// `# HELP` / `# TYPE`, samples are `name[{labels}] value` with an
+/// `acf_`-prefixed metric name and a parseable value.
+fn validate_exposition(body: &str) -> usize {
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP acf_") || rest.starts_with("TYPE acf_"),
+                "unexpected comment line: {line}"
+            );
+            continue;
+        }
+        let (head, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "unparseable value '{value}' in: {line}"
+        );
+        let name_end = head.find('{').unwrap_or(head.len());
+        let name = &head[..name_end];
+        assert!(name.starts_with("acf_"), "unprefixed series: {line}");
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name in: {line}"
+        );
+        if name_end < head.len() {
+            assert!(head.ends_with('}'), "unterminated label set: {line}");
+        }
+        samples += 1;
+    }
+    samples
+}
+
+/// The value of the first sample whose line starts with `name` (label
+/// set ignored).
+fn sample_value(body: &str, name: &str) -> Option<f64> {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| {
+            l.strip_prefix(name).is_some_and(|rest| rest.starts_with('{') || rest.starts_with(' '))
+        })
+        .and_then(|l| l.rsplit_once(' '))
+        .and_then(|(_, v)| v.parse().ok())
+}
+
+#[test]
+fn metrics_server_serves_scrapes_during_a_sharded_run() {
+    let mut spec = quick(Problem::Svm { c: 1.0 }, "rcv1-like");
+    spec.shards = 2;
+    spec.max_seconds = Some(30.0);
+    let ds = spec.load_dataset().unwrap();
+
+    let live = Arc::new(LiveMetrics::new(vec![("job".to_string(), "e2e".to_string())]));
+    let mut server = MetricsServer::start("127.0.0.1:0", Arc::clone(&live)).unwrap();
+    let addr = server.local_addr();
+
+    let worker = {
+        let live = Arc::clone(&live);
+        std::thread::spawn(move || run_job_with_live(&spec, &ds, Some(live)).unwrap())
+    };
+
+    // scrape continuously while the run is in flight — every response
+    // must be a valid exposition, whatever phase it lands in
+    let mut mid_run_scrapes = 0usize;
+    while !worker.is_finished() {
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        validate_exposition(&body);
+        mid_run_scrapes += 1;
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let outcome = worker.join().unwrap();
+    assert!(outcome.result.status.converged(), "{}", outcome.result.summary());
+
+    // the final scrape must agree with the run's own accounting
+    let (head, body) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/plain"), "{head}");
+    let samples = validate_exposition(&body);
+    assert!(samples >= 10, "only {samples} samples:\n{body}");
+    let obj = sample_value(&body, "acf_objective").expect("acf_objective series");
+    let rel = (obj - outcome.result.objective).abs() / outcome.result.objective.abs().max(1.0);
+    assert!(rel < 1e-9, "exported {obj} vs result {}", outcome.result.objective);
+    let steps: f64 = body
+        .lines()
+        .filter(|l| l.starts_with("acf_shard_steps_total"))
+        .filter_map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse::<f64>().ok()))
+        .sum();
+    assert_eq!(steps as u64, outcome.result.iterations, "per-shard steps vs iterations");
+    let scrapes = sample_value(&body, "acf_scrapes_total").expect("scrape counter");
+    assert!(scrapes as usize >= mid_run_scrapes, "{scrapes} < {mid_run_scrapes}");
+    // the registry's constant labels are stamped on every series
+    assert!(body.contains("job=\"e2e\""), "{body}");
+
+    // the JSON twin and the liveness probe serve the same registry
+    let (head, body) = http_get(addr, "/snapshot");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let j = json::parse(body.trim()).expect("snapshot JSON");
+    let job = j.get("labels").and_then(|l| l.get("job")).and_then(Json::as_str);
+    assert_eq!(job, Some("e2e"));
+    let (head, body) = http_get(addr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(body, "ok\n");
+
+    server.stop();
+}
+
+#[test]
+fn live_telemetry_does_not_perturb_any_family() {
+    for (problem, ds_name) in [
+        (Problem::Svm { c: 1.0 }, "rcv1-like"),
+        (Problem::Lasso { lambda: 0.01 }, "rcv1-like"),
+        (Problem::LogReg { c: 1.0 }, "rcv1-like"),
+        (Problem::McSvm { c: 1.0 }, "iris-like"),
+    ] {
+        let spec = quick(problem, ds_name);
+        let ds = spec.load_dataset().unwrap();
+        let plain = run_job_on(&spec, &ds).unwrap();
+        let live = Arc::new(LiveMetrics::new(Vec::new()));
+        let instrumented = run_job_with_live(&spec, &ds, Some(Arc::clone(&live))).unwrap();
+        let tag = problem.family();
+        assert_eq!(plain.result.iterations, instrumented.result.iterations, "{tag}");
+        assert_eq!(plain.result.ops, instrumented.result.ops, "{tag}");
+        assert_eq!(
+            plain.result.objective.to_bits(),
+            instrumented.result.objective.to_bits(),
+            "{tag}"
+        );
+        assert_eq!(plain.w, instrumented.w, "{tag}");
+        assert_eq!(plain.w_multi, instrumented.w_multi, "{tag}");
+        // every serial family publishes its objective trajectory
+        assert!(live.latest().snapshot.last_objective.is_some(), "{tag}");
+    }
+}
