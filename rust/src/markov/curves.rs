@@ -41,6 +41,8 @@ impl Curve {
     /// Uni-modality with maximum at t = 0, up to estimation noise `tol`
     /// (relative). The conjecture's signature in the data.
     pub fn max_at_zero(&self, tol: f64) -> bool {
+        // INFALLIBLE: the constructor builds `t` as a symmetric grid
+        // around (and including) 0.
         let zero_idx = self.t.iter().position(|&t| t == 0.0).expect("grid contains 0");
         let at_zero = self.relative_rho[zero_idx];
         self.relative_rho.iter().all(|&r| r <= at_zero + tol)

@@ -20,6 +20,7 @@
 
 use super::{MergeTier, MetricsSnapshot};
 use crate::shard::MergeStats;
+use crate::util::sync;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -80,21 +81,24 @@ impl LiveMetrics {
     /// The most recently published point (the empty point before the
     /// first publish).
     pub fn latest(&self) -> Arc<LivePoint> {
-        self.latest.lock().unwrap().clone()
+        sync::lock(&self.latest).clone()
     }
 
     /// Replace the published point (called by [`LiveRecorder::flush`]).
     pub fn publish(&self, point: LivePoint) {
-        *self.latest.lock().unwrap() = Arc::new(point);
+        *sync::lock(&self.latest) = Arc::new(point);
     }
 
     /// Count one `/metrics` scrape; returns the new total.
     pub fn record_scrape(&self) -> u64 {
+        // ORDERING: Relaxed: pure monotone counter; the scrape *payload* is
+        // published via the `latest` mutex, not this atomic.
         self.scrapes.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Scrapes served so far.
     pub fn scrapes(&self) -> u64 {
+        // ORDERING: Relaxed: statistics read; no ordering with the payload.
         self.scrapes.load(Ordering::Relaxed)
     }
 }

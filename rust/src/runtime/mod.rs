@@ -106,8 +106,8 @@ pub struct Runtime {
 
 #[cfg(feature = "pjrt")]
 fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+    let path_str = path.to_str().ok_or_else(|| anyhow!("non-UTF-8 HLO path: {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
     let comp = xla::XlaComputation::from_proto(&proto);
     client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
 }

@@ -119,6 +119,7 @@ use crate::shard::partition::{Partition, Partitioner};
 use crate::solvers::{SolveResult, SolveStatus, SolverConfig};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
+use crate::util::sync;
 use crate::util::threadpool::{panic_message, Pop, RoundPool, WorkQueue};
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -606,13 +607,13 @@ impl PublishSlot {
     }
 
     fn snapshot(&self) -> (u64, Arc<Vec<f64>>) {
-        let g = self.slot.lock().unwrap();
+        let g = sync::lock(&self.slot);
         (g.0, g.1.clone())
     }
 
     /// Publish `buf` as `version`; returns the retired buffer.
     fn publish(&self, version: u64, buf: Arc<Vec<f64>>) -> Arc<Vec<f64>> {
-        let mut g = self.slot.lock().unwrap();
+        let mut g = sync::lock(&self.slot);
         g.0 = version;
         std::mem::replace(&mut g.1, buf)
     }
@@ -688,7 +689,7 @@ fn dispatch_shard(
         Work::Epoch { quota }
     };
     {
-        let mut d = directives[k].lock().unwrap();
+        let mut d = sync::lock(&directives[k]);
         d.apply = apply;
         d.work = work;
         // None callers (kick-off, resume) must not evict a buffer left
@@ -1135,7 +1136,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         let task = |k: usize| {
             // A read-guard panic does not poison an RwLock, so a crashed
             // sibling worker cannot wedge this lock.
-            let ctx = ctx.read().unwrap();
+            let ctx = sync::read(&ctx);
             let Ok(mut guard) = states[k].lock() else {
                 return; // already-poisoned shard: its panic is the root error
             };
@@ -1209,7 +1210,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                     SyncReport::Verify { viol: vmax, ops }
                 }
             };
-            *reports[k].lock().unwrap() = Some(report);
+            *sync::lock(&reports[k]) = Some(report);
         };
 
         std::thread::scope(|scope| {
@@ -1249,9 +1250,9 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         pool: &RoundPool,
         reports: &[Mutex<Option<SyncReport>>],
     ) -> Result<(f64, usize)> {
-        ctx.write().unwrap().task = SyncTask::Verify;
+        sync::write(&ctx).task = SyncTask::Verify;
         let outcome = self.sync_round(pool, reports);
-        ctx.write().unwrap().task = SyncTask::Epoch;
+        sync::write(&ctx).task = SyncTask::Epoch;
         outcome?.into_iter().try_fold((0.0f64, 0usize), |(vm, os), r| match r {
             SyncReport::Verify { viol, ops } => Ok((vm.max(viol), os + ops)),
             SyncReport::Epoch(_) => Err(Error::msg("verify round produced an epoch report")),
@@ -1280,7 +1281,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         // ---- bookkeeping ---------------------------------------------
         let mut sep = self.initial_sep(states)?;
         let mut f_curr = {
-            let ctx = ctx.read().unwrap();
+            let ctx = sync::read(&ctx);
             p.shared_objective(&ctx.shared) + sep.iter().sum::<f64>()
         };
 
@@ -1333,7 +1334,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             epochs += 1;
 
             // ---- parallel local epochs on the persistent pool --------
-            ctx.write().unwrap().quotas.copy_from_slice(&quotas);
+            sync::write(&ctx).quotas.copy_from_slice(&quotas);
             let round = self.sync_round(pool, reports)?;
             let epoch_reports: Vec<EpochReport> = round
                 .into_iter()
@@ -1349,7 +1350,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
             }
 
             // ---- merge (fixed shard order ⇒ deterministic) -----------
-            let mut ctx_g = ctx.write().unwrap();
+            let mut ctx_g = sync::write(&ctx);
             let shared = &mut ctx_g.shared;
             sum_diff.fill(0.0);
             for k in 0..s_count {
@@ -1523,7 +1524,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
 
         // ---- assemble global views -----------------------------------
         let values = self.collect_values(states)?;
-        let shared = std::mem::take(&mut ctx.write().unwrap().shared);
+        let shared = std::mem::take(&mut sync::write(&ctx).shared);
         let result = SolveResult {
             status,
             iterations: counter.iterations(),
@@ -1572,7 +1573,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
         // cannot do before this task's message is pushed.
         let em = obs::emitter(self.spec.obs.as_deref(), k);
         let (apply, work, mut delta) = {
-            let mut d = directives[k].lock().unwrap();
+            let mut d = sync::lock(&directives[k]);
             // only an epoch consumes the recycled delta buffer; leave it
             // resident across Verify/Park so it survives verify cycles
             let delta = match d.work {
@@ -1891,7 +1892,7 @@ impl<'a, P: ShardProblem> ShardedDriver<'a, P> {
                         verified = 0;
                         verify_viol = 0.0;
                         for k in 0..s_count {
-                            let mut d = directives[k].lock().unwrap();
+                            let mut d = sync::lock(&directives[k]);
                             d.apply = Apply::None;
                             d.work = Work::Verify;
                             drop(d);

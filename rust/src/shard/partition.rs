@@ -86,8 +86,12 @@ impl Partition {
                 // largest shard.
                 loop {
                     let Some(empty) = buckets.iter().position(|b| b.is_empty()) else { break };
+                    // INFALLIBLE: s >= 1 so the range is non-empty, and
+                    // because s = min(shards, n) <= n the largest of the s
+                    // buckets holds >= ceil(n/s) >= 1 items whenever some
+                    // other bucket is empty.
                     let donor = (0..s).max_by_key(|&k| buckets[k].len()).unwrap();
-                    let moved = buckets[donor].pop().unwrap();
+                    let moved = buckets[donor].pop().unwrap(); // INFALLIBLE: donor is the largest bucket
                     buckets[empty].push(moved);
                 }
             }

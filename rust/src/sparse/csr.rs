@@ -212,6 +212,7 @@ pub(crate) fn normalize_row(mut row: Vec<(usize, f64)>) -> (Vec<u32>, Vec<f64>) 
     for (c, v) in row {
         if last == Some(c) {
             // duplicate column: accumulate
+            // INFALLIBLE: `last == Some(c)` implies a prior push.
             *values.last_mut().unwrap() += v;
         } else {
             debug_assert!(c <= u32::MAX as usize, "column index {c} exceeds u32");
@@ -254,6 +255,7 @@ pub struct MappedCsr {
 // (read-only for the lifetime of the Arc — see `Mmap`'s contract), so
 // shared references across threads are sound.
 unsafe impl Send for MappedCsr {}
+// SAFETY: shared access is read-only (same argument as for `Send`).
 unsafe impl Sync for MappedCsr {}
 
 impl MappedCsr {
@@ -437,6 +439,7 @@ impl ChunkedCsr {
                 values: Vec::new(),
             });
         }
+        // INFALLIBLE: the first row of every chunk pushes one above.
         let chunk = self.chunks.last_mut().expect("chunk pushed above");
         chunk.indices.extend_from_slice(indices);
         chunk.values.extend_from_slice(values);
@@ -526,6 +529,9 @@ impl Csr {
             norms_sq: OnceLock::new(),
         };
         if let Err(e) = m.check_invariants() {
+            // acf-lint: allow(AL005) -- documented contract panic: an
+            // invalid Csr must be impossible to construct from safe code
+            // (the unchecked kernels rely on the row invariant).
             panic!("Csr::from_parts: invalid structure: {e}");
         }
         m
@@ -841,6 +847,7 @@ impl Csr {
                 if indptr.len() != self.rows + 1 {
                     return Err("indptr length".into());
                 }
+                // INFALLIBLE: `indptr.len() == rows + 1 >= 1` was just checked.
                 if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
                     return Err("indptr endpoints".into());
                 }

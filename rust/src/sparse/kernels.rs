@@ -174,6 +174,10 @@ unsafe fn dot_lanes<const CHECKED: bool>(indices: &[u32], values: &[f64], w: &[f
 /// `CHECKED` mechanics. Correct even with repeated indices (the four
 /// per-chunk updates execute in order); CSR rows never repeat indices,
 /// which is what lets the compiler schedule them independently.
+///
+/// Safety: same contract as [`dot_lanes`]: with `CHECKED = false` every
+/// index must be in bounds for `w`; with `CHECKED = true` the function
+/// is effectively safe.
 #[inline(always)]
 unsafe fn axpy_unrolled<const CHECKED: bool>(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
     debug_assert_eq!(indices.len(), values.len());
@@ -252,7 +256,7 @@ pub mod scalar {
 /// x86_64 baseline and needs no gate. Both keep the scalar reduction
 /// tree exactly — see the module docs — and in particular use separate
 /// multiply and add instructions (no FMA contraction).
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 pub mod x86 {
     use core::arch::x86_64::*;
 
@@ -273,6 +277,9 @@ pub mod x86 {
         dot_avx2_body(indices, values, w)
     }
 
+    // SAFETY: same index contract as the public `dot_avx2` wrapper; the
+    // target_feature additionally requires AVX2+FMA, which the wrapper's
+    // caller established via the dispatch probe.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn dot_avx2_body(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
         debug_assert_eq!(indices.len(), values.len());
@@ -315,6 +322,8 @@ pub mod x86 {
         axpy_avx2_body(scale, indices, values, w)
     }
 
+    // SAFETY: same contract as `axpy_avx2` plus the AVX2+FMA feature
+    // requirement established by the dispatch probe.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn axpy_avx2_body(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
         debug_assert_eq!(indices.len(), values.len());
@@ -422,7 +431,7 @@ pub mod x86 {
 /// reached through plain `unsafe fn` wrappers for fn-pointer coercion
 /// (as in the `x86` module). No FMA contraction (`vmulq` + `vaddq`,
 /// never `vfmaq`) — see the module docs for the bit-identity contract.
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 pub mod neon {
     use core::arch::aarch64::*;
 
@@ -436,6 +445,8 @@ pub mod neon {
         dot_body(indices, values, w)
     }
 
+    // SAFETY: same index contract as the public `dot` wrapper; NEON is
+    // baseline on aarch64, so the feature requirement is always met.
     #[target_feature(enable = "neon")]
     unsafe fn dot_body(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
         debug_assert_eq!(indices.len(), values.len());
@@ -479,6 +490,8 @@ pub mod neon {
         axpy_body(scale, indices, values, w)
     }
 
+    // SAFETY: same contract as the public `axpy` wrapper; NEON is
+    // baseline on aarch64.
     #[target_feature(enable = "neon")]
     unsafe fn axpy_body(scale: f64, indices: &[u32], values: &[f64], w: &mut [f64]) {
         debug_assert_eq!(indices.len(), values.len());
@@ -566,11 +579,11 @@ impl KernelTier {
 }
 
 static SCALAR_TIER: KernelTier = KernelTier { name: "scalar", dot: scalar::dot, axpy: scalar::axpy };
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 static SSE2_TIER: KernelTier = KernelTier { name: "sse2", dot: x86::dot_sse2, axpy: x86::axpy_sse2 };
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 static AVX2_TIER: KernelTier = KernelTier { name: "avx2+fma", dot: x86::dot_avx2, axpy: x86::axpy_avx2 };
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 static NEON_TIER: KernelTier = KernelTier { name: "neon", dot: neon::dot, axpy: neon::axpy };
 
 static ACTIVE_TIER: OnceLock<&'static KernelTier> = OnceLock::new();
@@ -599,7 +612,7 @@ fn select_tier() -> &'static KernelTier {
 
 /// Best SIMD tier the running CPU can execute, or `None` when only the
 /// scalar tier exists for this architecture.
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 pub fn simd_tier() -> Option<&'static KernelTier> {
     if cpufeat::has_avx2_fma() {
         Some(&AVX2_TIER)
@@ -611,7 +624,7 @@ pub fn simd_tier() -> Option<&'static KernelTier> {
 
 /// Best SIMD tier the running CPU can execute, or `None` when only the
 /// scalar tier exists for this architecture.
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 pub fn simd_tier() -> Option<&'static KernelTier> {
     // NEON is part of the aarch64 baseline: always runnable
     Some(&NEON_TIER)
@@ -619,7 +632,7 @@ pub fn simd_tier() -> Option<&'static KernelTier> {
 
 /// Best SIMD tier the running CPU can execute, or `None` when only the
 /// scalar tier exists for this architecture.
-#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[cfg(any(miri, not(any(target_arch = "x86_64", target_arch = "aarch64"))))]
 pub fn simd_tier() -> Option<&'static KernelTier> {
     None
 }
@@ -631,14 +644,14 @@ pub fn simd_tier() -> Option<&'static KernelTier> {
 pub fn available_tiers() -> Vec<&'static KernelTier> {
     #[allow(unused_mut)]
     let mut tiers: Vec<&'static KernelTier> = vec![&SCALAR_TIER];
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         tiers.push(&SSE2_TIER);
         if cpufeat::has_avx2_fma() {
             tiers.push(&AVX2_TIER);
         }
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     tiers.push(&NEON_TIER);
     tiers
 }
@@ -691,6 +704,7 @@ pub fn step_checked<F: FnOnce(f64) -> f64>(indices: &[u32], values: &[f64], w: &
     let dot = unsafe { dot_lanes::<true>(indices, values, w) };
     let scale = update(dot);
     if scale != 0.0 {
+        // SAFETY: CHECKED = true performs ordinary indexing; no contract.
         unsafe { axpy_unrolled::<true>(scale, indices, values, w) };
     }
     (dot, scale)
@@ -702,20 +716,20 @@ pub fn step_checked<F: FnOnce(f64) -> f64>(indices: &[u32], values: &[f64], w: &
 /// prefetch primitive.
 #[inline(always)]
 fn prefetch_read<T>(p: *const T) {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     // SAFETY: prefetch is a hint, not a memory access; any address is
     // acceptable and SSE is part of the x86_64 baseline.
     unsafe {
         use core::arch::x86_64::{_MM_HINT_T0, _mm_prefetch};
         _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     // SAFETY: prfm is a hint, not a memory access; any address is
     // acceptable.
     unsafe {
         core::arch::asm!("prfm pldl1keep, [{0}]", in(reg) p, options(nostack, preserves_flags, readonly));
     }
-    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(any(miri, not(any(target_arch = "x86_64", target_arch = "aarch64"))))]
     let _ = p;
 }
 
@@ -1088,8 +1102,10 @@ mod tests {
         let w0 = vec![1.0, 2.0, 3.0];
         let mut w = w0.clone();
         assert_eq!(dot_dense_checked(&[], &[], &w), 0.0);
+        // SAFETY: an empty row reads no indices at all.
         assert_eq!(unsafe { dot_dense_unchecked(&[], &[], &w) }, 0.0);
         axpy_checked(2.0, &[], &[], &mut w);
+        // SAFETY: an empty row writes no indices at all.
         unsafe { axpy_unchecked(2.0, &[], &[], &mut w) };
         let (dot, scale) = step_checked(&[], &[], &mut w, |d| d + 1.0);
         assert_eq!((dot, scale), (0.0, 1.0));
@@ -1105,11 +1121,13 @@ mod tests {
             let d = 2 * nnz + 1;
             let w: Vec<f64> = (0..d).map(|t| 0.1 * t as f64).collect();
             let a = dot_dense_checked(&idx, &vals, &w);
+            // SAFETY: indices are 2k < d = 2·nnz+1 by construction.
             let b = unsafe { dot_dense_unchecked(&idx, &vals, &w) };
             assert_eq!(a.to_bits(), b.to_bits(), "nnz = {nnz}");
             let mut wa = w.clone();
             let mut wb = w.clone();
             axpy_checked(0.25, &idx, &vals, &mut wa);
+            // SAFETY: same in-bounds indices as the dot above.
             unsafe { axpy_unchecked(0.25, &idx, &vals, &mut wb) };
             assert_eq!(wa, wb, "nnz = {nnz}");
         }

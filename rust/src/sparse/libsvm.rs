@@ -184,8 +184,9 @@ pub fn write_libsvm<W: Write>(ds: &Dataset, mut out: W) -> std::io::Result<()> {
 
 pub fn to_libsvm_string(ds: &Dataset) -> String {
     let mut buf = Vec::new();
+    // INFALLIBLE: `Write` on a `Vec<u8>` cannot fail.
     write_libsvm(ds, &mut buf).expect("in-memory write");
-    String::from_utf8(buf).expect("utf8")
+    String::from_utf8(buf).expect("utf8") // INFALLIBLE: the writer emits ASCII only
 }
 
 #[cfg(test)]

@@ -267,6 +267,7 @@ pub fn write_dataset(ds: &Dataset, path: &Path) -> Result<AcfbinSummary> {
 }
 
 fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    // INFALLIBLE: the slice is exactly 8 bytes by construction.
     u64::from_ne_bytes(bytes[off..off + 8].try_into().expect("8-byte slice"))
 }
 
@@ -274,6 +275,7 @@ fn read_f64_section(bytes: &[u8], off: usize, count: usize, what: &str, total: u
     let end = count.checked_mul(8).and_then(|b| off.checked_add(b)).filter(|&e| e <= total);
     let end = end.ok_or_else(|| anyhow!("{what} section at byte offset {off} overruns the {total}-byte file"))?;
     let words = bytes[off..end].chunks_exact(8);
+    // INFALLIBLE: `chunks_exact(8)` yields exactly-8-byte slices only.
     Ok(words.map(|c| f64::from_ne_bytes(c.try_into().expect("8-byte chunk"))).collect())
 }
 
@@ -354,6 +356,8 @@ pub fn remap_dataset(ds: &Dataset) -> Result<Dataset> {
     let path = dir.join(format!(
         "remap_{}_{}.acfbin",
         std::process::id(),
+        // ORDERING: Relaxed: unique-filename counter; only uniqueness of
+        // the fetched value matters, no data is published through it.
         SEQ.fetch_add(1, Ordering::Relaxed)
     ));
     write_dataset(ds, &path)?;

@@ -30,6 +30,8 @@ impl Json {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), value);
         } else {
+            // acf-lint: allow(AL005) -- documented contract panic: `set` is
+            // only meaningful on `Json::Obj` and misuse is a programmer error.
             panic!("Json::set on non-object");
         }
         self
@@ -214,7 +216,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), ParseError> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -247,7 +249,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.bump() {
@@ -288,6 +290,8 @@ impl<'a> Parser<'a> {
                         let start = self.pos - 1;
                         let text = std::str::from_utf8(&self.bytes[start..])
                             .map_err(|_| ParseError { offset: start, message: "invalid UTF-8".into() })?;
+                        // INFALLIBLE: `from_utf8` succeeded on a non-empty
+                        // suffix, so at least one char exists.
                         let c = text.chars().next().unwrap();
                         s.push(c);
                         self.pos = start + c.len_utf8();
@@ -320,6 +324,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // INFALLIBLE: every byte consumed above is ASCII (sign, digit,
+        // dot, exponent), so the slice is valid UTF-8.
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)
@@ -327,7 +333,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -346,7 +352,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -357,7 +363,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();

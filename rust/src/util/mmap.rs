@@ -61,7 +61,7 @@ pub struct Mmap {
 
 enum Backing {
     /// Kernel `mmap(2)` region; unmapped on drop.
-    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
     Kernel,
     /// 8-byte-aligned heap copy of the file (`Vec<u64>` backing buffer —
     /// a `Vec<u8>` would only be 1-aligned, and reinterpreting it as
@@ -73,6 +73,7 @@ enum Backing {
 // mutating methods; MAP_PRIVATE for kernel mappings) and owned by it
 // (heap Vec, or an exclusive mapping released in Drop).
 unsafe impl Send for Mmap {}
+// SAFETY: shared access is read-only (same argument as for `Send`).
 unsafe impl Sync for Mmap {}
 
 impl Mmap {
@@ -85,7 +86,7 @@ impl Mmap {
         let Ok(len) = usize::try_from(len) else {
             crate::bail!("{}: file too large to map on this target", path.display());
         };
-        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        #[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
         if len > 0 {
             if let Some(ptr) = sys::map_readonly(&file, len) {
                 return Ok(Mmap { ptr, len, backing: Backing::Kernel });
@@ -135,7 +136,7 @@ impl Mmap {
     /// fallback (reported by `acf-cd train` and the ingest smoke).
     pub fn backing(&self) -> &'static str {
         match self.backing {
-            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            #[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
             Backing::Kernel => "mmap",
             Backing::Heap(_) => "heap",
         }
@@ -144,7 +145,7 @@ impl Mmap {
 
 impl Drop for Mmap {
     fn drop(&mut self) {
-        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        #[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
         if matches!(self.backing, Backing::Kernel) {
             // SAFETY: ptr/len came from a successful mmap in open(); the
             // region is unmapped exactly once.
@@ -162,7 +163,7 @@ impl std::fmt::Debug for Mmap {
 /// Raw-syscall shim: the two calls the data plane needs, with no libc.
 /// Syscall numbers are per-architecture ABI constants; the argument
 /// registers follow the Linux syscall convention for each ISA.
-#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[cfg(all(target_os = "linux", not(miri), any(target_arch = "x86_64", target_arch = "aarch64")))]
 mod sys {
     use std::fs::File;
     use std::os::unix::io::AsRawFd;
@@ -174,6 +175,8 @@ mod sys {
     /// kernel error (the caller falls back to the heap read).
     pub(super) fn map_readonly(file: &File, len: usize) -> Option<*const u8> {
         let fd = file.as_raw_fd();
+        // SAFETY: `fd` is a live descriptor borrowed from `file` and the
+        // kernel validates `len`; any failure surfaces as -errno below.
         let ret = unsafe { mmap_raw(len, fd) };
         // Linux returns -errno in [-4095, -1] on failure.
         if (-4095..0).contains(&ret) {
@@ -193,6 +196,8 @@ mod sys {
         munmap_raw(ptr, len);
     }
 
+    // SAFETY: raw `mmap` syscall; the caller must pass a live fd, and the
+    // returned region is only published after the -errno check.
     #[cfg(target_arch = "x86_64")]
     unsafe fn mmap_raw(len: usize, fd: i32) -> isize {
         let ret: isize;
@@ -212,6 +217,8 @@ mod sys {
         ret
     }
 
+    // SAFETY: raw `munmap` syscall; the caller must pass a region obtained
+    // from `mmap_raw` and never touch it again.
     #[cfg(target_arch = "x86_64")]
     unsafe fn munmap_raw(ptr: *const u8, len: usize) -> isize {
         let ret: isize;
@@ -227,6 +234,7 @@ mod sys {
         ret
     }
 
+    // SAFETY: as for the x86_64 variant, via the aarch64 svc ABI.
     #[cfg(target_arch = "aarch64")]
     unsafe fn mmap_raw(len: usize, fd: i32) -> isize {
         let ret: isize;
@@ -244,6 +252,7 @@ mod sys {
         ret
     }
 
+    // SAFETY: as for the x86_64 variant, via the aarch64 svc ABI.
     #[cfg(target_arch = "aarch64")]
     unsafe fn munmap_raw(ptr: *const u8, len: usize) -> isize {
         let ret: isize;

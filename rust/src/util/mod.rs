@@ -11,5 +11,6 @@ pub mod mmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;

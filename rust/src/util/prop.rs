@@ -96,6 +96,9 @@ pub fn check_seeded<F: FnMut(&mut Gen) -> CaseResult>(seed: u64, mut prop: F) {
 }
 
 pub fn check_base_seed<F: FnMut(&mut Gen) -> CaseResult>(base: u64, cases: usize, prop: &mut F) {
+    // Miri interprets 100-1000x slower than native: keep the same seeds
+    // (case 0 upward) but cap the per-property case budget.
+    let cases = if cfg!(miri) { cases.min(8) } else { cases };
     for case in 0..cases {
         let seed = base.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
         let mut g = Gen { rng: Rng::new(seed), seed };

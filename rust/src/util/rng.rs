@@ -256,8 +256,10 @@ impl Zipf {
     /// Sample a rank in [0, n).
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.uniform();
-        // binary search for the first cdf entry >= u
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // binary search for the first cdf entry >= u (total_cmp: the cdf
+        // is built from finite weights and u is finite, so the IEEE total
+        // order agrees with <= here while staying panic-free)
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

@@ -139,7 +139,7 @@ impl Ewma {
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp); // panic-free; NaNs sort last instead of aborting
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

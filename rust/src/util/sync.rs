@@ -1,0 +1,84 @@
+//! Poison-transparent wrappers around `std::sync` lock acquisition.
+//!
+//! `Mutex::lock` / `RwLock::read` / `Condvar::wait` return `Err` only when
+//! another thread panicked while holding the guard. Everywhere this crate
+//! takes a lock, the guarded state is either repaired by the caller
+//! (worker panics surface as [`crate::util::error::ErrorKind::ShardWorker`])
+//! or plain data whose partial update is benign, so propagating the poison
+//! marker as a second panic would only turn one failure into a cascade.
+//! These helpers recover the guard instead, which also keeps library code
+//! free of `unwrap()` (lint rule `AL005`).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Acquire `m`, recovering the guard if the mutex is poisoned.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Take shared ownership of `l`, recovering the guard if poisoned.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Take exclusive ownership of `l`, recovering the guard if poisoned.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Consume `m` and return its value, ignoring a poison marker.
+pub fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, re-acquiring `g`'s mutex poison-transparently.
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` for at most `dur`, poison-transparently.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_pass_through() {
+        let l = RwLock::new(3usize);
+        assert_eq!(*read(&l), 3);
+        *write(&l) = 4;
+        assert_eq!(*read(&l), 4);
+    }
+
+    #[test]
+    fn wait_timeout_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let (_g, res) = wait_timeout(&cv, lock(&m), Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

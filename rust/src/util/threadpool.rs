@@ -15,6 +15,7 @@
 //!   shutdown, used by the asynchronous shard engine for its ready-shard
 //!   and merge-submission channels.
 
+use crate::util::sync;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -42,18 +43,23 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                // ORDERING: Relaxed: a pure work-claiming counter; the claimed
+                // index is the only data transferred and it rides in `i` itself.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let r = f(i);
-                *results[i].lock().unwrap() = Some(r);
+                *sync::lock(&results[i]) = Some(r);
             });
         }
     });
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
+        // INFALLIBLE: every index in 0..n is claimed by exactly one worker,
+        // which either stores Some(r) or panics — and a worker panic is
+        // re-thrown by `thread::scope` before this line is reached.
+        .map(|m| sync::into_inner(m).expect("worker did not produce a result"))
         .collect()
 }
 
@@ -83,6 +89,8 @@ impl Progress {
     }
 
     pub fn tick(&self) {
+        // ORDERING: Relaxed: progress display only; ticks carry no payload
+        // and an off-by-a-tick read is harmless.
         let d = self.done.fetch_add(1, Ordering::Relaxed) + 1;
         if !self.quiet {
             eprintln!("[{}] {}/{}", self.label, d, self.total);
@@ -90,6 +98,7 @@ impl Progress {
     }
 
     pub fn done(&self) -> usize {
+        // ORDERING: Relaxed: monotone counter read for display only.
         self.done.load(Ordering::Relaxed)
     }
 }
@@ -221,9 +230,9 @@ impl RoundPool {
         loop {
             let n;
             {
-                let mut st = self.state.lock().unwrap();
+                let mut st = sync::lock(&self.state);
                 while !st.shutdown && st.round == seen {
-                    st = self.work_cv.wait(st).unwrap();
+                    st = sync::wait(&self.work_cv, st);
                 }
                 if st.shutdown {
                     return;
@@ -233,7 +242,7 @@ impl RoundPool {
             }
             while let Some(i) = self.claim(seen, n) {
                 let outcome = catch_unwind(AssertUnwindSafe(|| f(i)));
-                let mut st = self.state.lock().unwrap();
+                let mut st = sync::lock(&self.state);
                 if let Err(payload) = outcome {
                     st.panics.push(TaskPanic { task: i, message: panic_message(payload.as_ref()) });
                 }
@@ -255,7 +264,7 @@ impl RoundPool {
         }
         let dispatched = Instant::now();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = sync::lock(&self.state);
             st.round += 1;
             st.n = n;
             st.remaining = n;
@@ -263,9 +272,9 @@ impl RoundPool {
             self.ticket.store((st.round & 0xffff_ffff) << 32, Ordering::Release);
             self.work_cv.notify_all();
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         while st.remaining > 0 {
-            st = self.done_cv.wait(st).unwrap();
+            st = sync::wait(&self.done_cv, st);
         }
         st.stats.rounds += 1;
         st.stats.busy_nanos += dispatched.elapsed().as_nanos() as u64;
@@ -277,13 +286,13 @@ impl RoundPool {
 
     /// Cumulative dispatch statistics since construction.
     pub fn round_stats(&self) -> RoundStats {
-        self.state.lock().unwrap().stats
+        sync::lock(&self.state).stats
     }
 
     /// Wake every parked worker and make `worker_loop` return. Must be
     /// called before the spawning scope ends.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         st.shutdown = true;
         self.work_cv.notify_all();
     }
@@ -348,7 +357,7 @@ impl<T> WorkQueue<T> {
     /// after insertion — the async engine records it as the
     /// queue-depth-at-submit observability event.
     pub fn push_counted(&self, item: T) -> usize {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         st.items.push_back(item);
         let depth = st.items.len();
         st.stats.pushes += 1;
@@ -359,19 +368,19 @@ impl<T> WorkQueue<T> {
 
     /// Cumulative producer-side statistics since construction.
     pub fn stats(&self) -> QueueStats {
-        self.state.lock().unwrap().stats
+        sync::lock(&self.state).stats
     }
 
     /// Current queue depth (items waiting). A racy snapshot — meant for
     /// observability probes, never for synchronization.
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        sync::lock(&self.state).items.len()
     }
 
     /// Block until an item is available; `None` once the queue is shut
     /// down.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         loop {
             if st.shutdown {
                 return None;
@@ -379,14 +388,14 @@ impl<T> WorkQueue<T> {
             if let Some(item) = st.items.pop_front() {
                 return Some(item);
             }
-            st = self.cv.wait(st).unwrap();
+            st = sync::wait(&self.cv, st);
         }
     }
 
     /// [`pop`](WorkQueue::pop) with a bounded wait, so consumers can
     /// interleave time-based bookkeeping with queue processing.
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         loop {
             if st.shutdown {
                 return Pop::Shutdown;
@@ -394,7 +403,7 @@ impl<T> WorkQueue<T> {
             if let Some(item) = st.items.pop_front() {
                 return Pop::Item(item);
             }
-            let (guard, res) = self.cv.wait_timeout(st, timeout).unwrap();
+            let (guard, res) = sync::wait_timeout(&self.cv, st, timeout);
             st = guard;
             if res.timed_out() {
                 return if st.shutdown {
@@ -414,7 +423,7 @@ impl<T> WorkQueue<T> {
     /// merger to drain every already-queued submission into one batched
     /// merge without waiting for more.
     pub fn try_pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         if st.shutdown {
             return None;
         }
@@ -423,7 +432,7 @@ impl<T> WorkQueue<T> {
 
     /// Wake all blocked consumers; subsequent pops return `None`.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = sync::lock(&self.state);
         st.shutdown = true;
         self.cv.notify_all();
     }

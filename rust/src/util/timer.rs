@@ -64,6 +64,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock dependent")]
     fn timer_advances() {
         let t = Timer::start();
         std::thread::sleep(Duration::from_millis(2));

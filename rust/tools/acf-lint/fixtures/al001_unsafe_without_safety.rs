@@ -1,0 +1,5 @@
+// Fixture: violates AL001 exactly once (line 4).
+pub fn first(xs: &[f64]) -> f64 {
+    let p = xs.as_ptr();
+    unsafe { *p }
+}

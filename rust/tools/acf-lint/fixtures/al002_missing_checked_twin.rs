@@ -1,0 +1,7 @@
+// Fixture: violates AL002 exactly once (the definition on line 5 has
+// no `frob_checked` twin anywhere in the tree).
+
+/// Reads `xs[i]` on the caller's promise that `i` is in bounds.
+pub fn frob_unchecked(xs: &[f64], i: usize) -> f64 {
+    xs[i]
+}

@@ -1,0 +1,5 @@
+// Fixture: violates AL003 exactly once (line 4) when linted under the
+// path label `src/sparse/kernels.rs`.
+pub fn dot_fused(a: f64, b: f64, c: f64) -> f64 {
+    a.mul_add(b, c)
+}

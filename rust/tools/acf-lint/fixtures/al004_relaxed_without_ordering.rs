@@ -1,0 +1,7 @@
+// Fixture: violates AL004 exactly once (line 6: Relaxed with no
+// `// ORDERING:` justification; Relaxed-only fields need no pairing).
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn peek(head: &AtomicU64) -> u64 {
+    head.load(Ordering::Relaxed)
+}

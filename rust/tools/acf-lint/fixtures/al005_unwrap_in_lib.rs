@@ -1,0 +1,4 @@
+// Fixture: violates AL005 exactly once (line 3).
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}

@@ -1,0 +1,5 @@
+// Fixture: violates AL006 exactly once (line 4) when linted under an
+// `src/obs/` path label: `report` is on the mutating-API deny list.
+pub fn observe(engine: &mut crate::shard::engine::ShardedEngine, i: usize, delta: f64) {
+    engine.report(i, delta);
+}

@@ -1,0 +1,918 @@
+//! acf-lint: first-party contract linter for the `acf-cd` sources.
+//!
+//! Scans Rust files line/token-wise (no rustc, no syn) and enforces the
+//! repo's own written contracts as named, individually allowlistable
+//! rules:
+//!
+//! * `AL001` — every `unsafe` block / fn / impl is immediately preceded
+//!   by a `// SAFETY:` comment (a `/// # Safety` doc section counts).
+//! * `AL002` — every `*_unchecked` entry point has a `*_checked` twin,
+//!   and at least one test references both names.
+//! * `AL003` — no `mul_add`/FMA-contraction-prone calls inside
+//!   `sparse/kernels.rs` (the bit-identity contract).
+//! * `AL004` — every `Ordering::Relaxed` carries an `// ORDERING:`
+//!   justification, and per atomic field the Acquire/Release sides pair
+//!   up within the file.
+//! * `AL005` — no `unwrap()` / `expect()` / `panic!` in non-test library
+//!   code, unless documented `// INFALLIBLE:` or allowlisted.
+//! * `AL006` — obs-plane files must not call mutating solver APIs
+//!   (deny-list of `&mut`-taking method names).
+//!
+//! Suppression, most local first: an inline
+//! `// acf-lint: allow(ALxxx) -- reason` on the flagged line or in the
+//! comment block immediately above it, or an entry in the crate-root
+//! `lint.allow` file (`RULE PATH-SUFFIX [SNIPPET-SUBSTRING]`).
+//!
+//! The scanner strips comments and blanks string/char literal contents
+//! before matching, so tokens inside strings never trigger rules and
+//! rule markers inside code never satisfy them.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// The rule identifiers, in catalog order.
+pub const RULES: [&str; 6] = ["AL001", "AL002", "AL003", "AL004", "AL005", "AL006"];
+
+const FMA_TOKENS: [&str; 4] = ["mul_add", "fmadd", "vfma", "fmla"];
+
+/// `&mut self`-taking solver/engine methods the obs plane must not call.
+const DENY_METHODS: [&str; 13] = [
+    "solve",
+    "solve_subspace",
+    "solve_sharded",
+    "run_job_on",
+    "run_round",
+    "step",
+    "step_unchecked",
+    "step_checked",
+    "axpy",
+    "axpy_into",
+    "axpy_unchecked",
+    "axpy_checked",
+    "report",
+];
+
+const ATOMIC_OPS: [&str; 13] = [
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_or",
+    "fetch_and",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_update",
+];
+
+/// One lint finding, with everything a human or a CI artifact needs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub snippet: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {} {}: {}", self.file, self.line, self.rule, self.message, self.snippet.trim())
+    }
+}
+
+/// One source line after lexing: executable text with string/char
+/// contents blanked, and the line's comment text (if any).
+pub struct ScanLine {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(Default)]
+struct ScanState {
+    block_depth: usize,
+    in_string: bool,
+    raw_hashes: Option<usize>,
+}
+
+fn starts(chars: &[char], i: usize, pat: &str) -> bool {
+    let mut k = i;
+    for p in pat.chars() {
+        if k >= chars.len() || chars[k] != p {
+            return false;
+        }
+        k += 1;
+    }
+    true
+}
+
+/// Length of a raw-string opener (`r"`, `r#"`, `br##"`, ...) at `i`,
+/// with its hash count; `None` if there is no raw string here.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut k = i;
+    if starts(chars, k, "br") {
+        k += 2;
+    } else if chars.get(k) == Some(&'r') {
+        k += 1;
+    } else {
+        return None;
+    }
+    let mut hashes = 0;
+    while chars.get(k + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if chars.get(k + hashes) == Some(&'"') {
+        Some((k + hashes + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+fn scan_line(chars: &[char], st: &mut ScanState) -> ScanLine {
+    let mut code = String::new();
+    let mut comment = String::new();
+    let n = chars.len();
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if st.block_depth > 0 {
+            if starts(chars, i, "/*") {
+                st.block_depth += 1;
+                i += 2;
+            } else if starts(chars, i, "*/") {
+                st.block_depth -= 1;
+                i += 2;
+            } else {
+                comment.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(h) = st.raw_hashes {
+            if c == '"' && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                st.raw_hashes = None;
+                code.push('"');
+                i += 1 + h;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if st.in_string {
+            if c == '\\' {
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                st.in_string = false;
+                code.push('"');
+            }
+            i += 1;
+            continue;
+        }
+        if starts(chars, i, "//") {
+            comment.extend(&chars[i..]);
+            break;
+        }
+        if starts(chars, i, "/*") {
+            st.block_depth = 1;
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            st.in_string = true;
+            code.push('"');
+            i += 1;
+            continue;
+        }
+        if let Some((len, hashes)) = raw_string_open(chars, i) {
+            st.raw_hashes = Some(hashes);
+            code.push('"');
+            i += len;
+            continue;
+        }
+        if starts(chars, i, "b\"") {
+            st.in_string = true;
+            code.push('"');
+            i += 2;
+            continue;
+        }
+        if c == '\'' || starts(chars, i, "b'") {
+            let start = if c == 'b' { i + 2 } else { i + 1 };
+            if chars.get(start) == Some(&'\\') {
+                // escaped char literal: consume the escape + closing quote
+                let mut j = start + 1;
+                if chars.get(j) == Some(&'u') && chars.get(j + 1) == Some(&'{') {
+                    while j < n && chars[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else if chars.get(j) == Some(&'x') {
+                    j += 3;
+                } else {
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'\'') {
+                    j += 1;
+                }
+                code.push_str("' '");
+                i = j;
+            } else if chars.get(start + 1) == Some(&'\'') && chars.get(start) != Some(&'\'') {
+                // plain one-char literal like 'x' or b'"'
+                code.push_str("' '");
+                i = start + 2;
+            } else {
+                // lifetime (or stray quote): keep the marker, move past it
+                code.push(c);
+                i = if c == 'b' { i + 2 } else { i + 1 };
+            }
+            continue;
+        }
+        code.push(c);
+        i += 1;
+    }
+    ScanLine { code, comment }
+}
+
+/// Lex `text` into per-line code/comment pairs.
+pub fn scan(text: &str) -> Vec<ScanLine> {
+    let mut st = ScanState::default();
+    text.split('\n').map(|l| scan_line(&l.chars().collect::<Vec<_>>(), &mut st)).collect()
+}
+
+/// Per line: is it inside a `#[cfg(test)]` item (the test module)?
+pub fn test_regions(lines: &[ScanLine]) -> Vec<bool> {
+    enum St {
+        Normal,
+        Pending,
+        Inside(isize),
+    }
+    let mut out = vec![false; lines.len()];
+    let mut depth: isize = 0;
+    let mut st = St::Normal;
+    for (i, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        match st {
+            St::Normal => {
+                if code.contains("#[cfg(test)]") {
+                    st = St::Pending;
+                    out[i] = true;
+                }
+            }
+            St::Pending => {
+                out[i] = true;
+                let s = code.trim();
+                if !s.is_empty() && !s.starts_with("#[") && !s.starts_with("#![") {
+                    let opens = code.matches('{').count() as isize;
+                    let closes = code.matches('}').count() as isize;
+                    st = if opens > closes { St::Inside(depth) } else { St::Normal };
+                }
+            }
+            St::Inside(_) => out[i] = true,
+        }
+        depth += code.matches('{').count() as isize - code.matches('}').count() as isize;
+        if let St::Inside(close) = st {
+            if depth <= close {
+                st = St::Normal;
+            }
+        }
+    }
+    out
+}
+
+/// The comment text of the contiguous run of comment- or attribute-only
+/// lines immediately above `idx` (doc comments included).
+pub fn preceding_comments(lines: &[ScanLine], idx: usize) -> String {
+    let mut texts = Vec::new();
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let code = lines[i].code.trim();
+        let comment = lines[i].comment.trim();
+        if code.is_empty() && !comment.is_empty() {
+            texts.push(comment.to_string());
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            if !comment.is_empty() {
+                texts.push(comment.to_string());
+            }
+        } else {
+            break;
+        }
+    }
+    texts.join("\n")
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Byte offsets where `word` occurs as a standalone token in `code`.
+pub fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(k) = code[from..].find(word) {
+        let at = from + k;
+        let before_ok = at == 0 || !code[..at].chars().next_back().is_some_and(is_word_char);
+        let after_ok = !code[at + word.len()..].chars().next().is_some_and(is_word_char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+fn has_safety_marker(text: &str) -> bool {
+    let low = text.to_ascii_lowercase();
+    low.contains("safety:") || low.contains("# safety")
+}
+
+fn inline_allowed(rule: &str, lines: &[ScanLine], idx: usize) -> bool {
+    let above = preceding_comments(lines, idx);
+    for src in [lines[idx].comment.as_str(), above.as_str()] {
+        let mut from = 0;
+        while let Some(k) = src[from..].find("acf-lint: allow(") {
+            let rest = &src[from + k + "acf-lint: allow(".len()..];
+            if let Some(end) = rest.find(')') {
+                if &rest[..end] == rule {
+                    return true;
+                }
+            }
+            from += k + 1;
+        }
+    }
+    false
+}
+
+/// Cross-file state threaded through [`lint_source`] and resolved by
+/// [`finish`]: `*_unchecked` twin coverage (AL002) and per-field atomic
+/// ordering pairing (AL004).
+#[derive(Default)]
+pub struct Ctx {
+    fn_defs: BTreeMap<String, (String, usize)>,
+    test_tokens: BTreeSet<String>,
+    atomics: BTreeMap<(String, String), (usize, BTreeSet<String>)>,
+}
+
+/// The identifier ending at `code[..dot]` (the receiver of a `.` call),
+/// skipping one trailing `[...]` index expression if present.
+fn identifier_before_dot(code: &str, dot: usize) -> Option<String> {
+    let chars: Vec<char> = code[..dot].chars().collect();
+    let mut k = chars.len();
+    while k > 0 && chars[k - 1].is_whitespace() {
+        k -= 1;
+    }
+    if k > 0 && chars[k - 1] == ']' {
+        let mut depth = 0usize;
+        while k > 0 {
+            k -= 1;
+            if chars[k] == ']' {
+                depth += 1;
+            }
+            if chars[k] == '[' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        }
+        while k > 0 && chars[k - 1].is_whitespace() {
+            k -= 1;
+        }
+    }
+    let end = k;
+    while k > 0 && is_word_char(chars[k - 1]) {
+        k -= 1;
+    }
+    if k == end {
+        return None;
+    }
+    Some(chars[k..end].iter().collect())
+}
+
+/// Orderings named in the call whose `(` sits at `lines[idx]` byte
+/// `open`, scanning until parens balance (bounded to 12 lines).
+fn call_orderings(lines: &[ScanLine], idx: usize, open: usize) -> BTreeSet<String> {
+    let mut text = String::new();
+    let mut depth: isize = 0;
+    'outer: for (j, l) in lines.iter().enumerate().skip(idx).take(12) {
+        let seg = if j == idx { &l.code[open..] } else { l.code.as_str() };
+        for c in seg.chars() {
+            text.push(c);
+            if c == '(' {
+                depth += 1;
+            }
+            if c == ')' {
+                depth -= 1;
+                if depth == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        text.push('\n');
+    }
+    let mut out = BTreeSet::new();
+    let mut from = 0;
+    while let Some(k) = text[from..].find("Ordering::") {
+        let rest = &text[from + k + "Ordering::".len()..];
+        let name: String = rest.chars().take_while(|&c| is_word_char(c)).collect();
+        if !name.is_empty() {
+            out.insert(name);
+        }
+        from += k + 1;
+    }
+    out
+}
+
+/// Does `code` contain a real `.expect(...)` call (not `.expect_byte`)?
+fn has_expect_call(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(k) = code[from..].find(".expect") {
+        let rest = &code[from + k + ".expect".len()..];
+        if !rest.chars().next().is_some_and(is_word_char) && rest.trim_start().starts_with('(') {
+            return true;
+        }
+        from += k + 1;
+    }
+    false
+}
+
+/// Does `code` invoke the `panic!` macro?
+fn has_panic_call(code: &str) -> bool {
+    for at in find_word(code, "panic") {
+        let rest = &code[at + "panic".len()..];
+        if let Some(body) = rest.strip_prefix('!') {
+            let body = body.trim_start();
+            if body.starts_with('(') || body.starts_with('{') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Is the token at byte `at` preceded (modulo whitespace) by a `.`? If
+/// so, return the byte offset of that dot.
+fn dot_before(code: &str, at: usize) -> Option<usize> {
+    let prefix = code[..at].trim_end();
+    if prefix.ends_with('.') {
+        Some(prefix.len() - 1)
+    } else {
+        None
+    }
+}
+
+/// Lint one file's contents under the path label `rel` (crate-relative,
+/// `/`-separated). Line-level findings are returned; cross-file facts
+/// accumulate in `ctx` for [`finish`].
+pub fn lint_source(rel: &str, text: &str, ctx: &mut Ctx) -> Vec<Finding> {
+    let lines = scan(text);
+    let is_test_line = test_regions(&lines);
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let in_test_tree = rel.starts_with("tests/") || rel.starts_with("benches/");
+    let is_lib = rel.starts_with("src/");
+    let is_kernels = rel.ends_with("sparse/kernels.rs");
+    let is_obs = rel.starts_with("src/obs/") || rel.contains("/obs/");
+    let mut out = Vec::new();
+
+    let mut emit = |rule: &'static str, idx: usize, message: String, raw: &str| {
+        out.push(Finding { rule, file: rel.to_string(), line: idx + 1, message, snippet: raw.to_string() });
+    };
+
+    for (idx, l) in lines.iter().enumerate() {
+        let code = l.code.as_str();
+        let raw = raw_lines.get(idx).copied().unwrap_or("");
+
+        // AL001: unsafe needs an immediately preceding safety comment.
+        let mut real_unsafe = false;
+        for at in find_word(code, "unsafe") {
+            let rest = code[at + "unsafe".len()..].trim_start();
+            let is_fn_ptr_type = rest.strip_prefix("fn").is_some_and(|r| r.trim_start().starts_with('('));
+            if !is_fn_ptr_type {
+                real_unsafe = true;
+            }
+        }
+        if real_unsafe {
+            let docs = format!("{}\n{}", l.comment, preceding_comments(&lines, idx));
+            if !has_safety_marker(&docs) && !inline_allowed("AL001", &lines, idx) {
+                emit("AL001", idx, "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(), raw);
+            }
+        }
+
+        // AL003: FMA-contraction-prone tokens in the bit-identity kernels.
+        if is_kernels {
+            for tok in FMA_TOKENS {
+                if code.contains(tok) && !inline_allowed("AL003", &lines, idx) {
+                    emit("AL003", idx, format!("FMA-prone token `{tok}` in a bit-identity kernel file"), raw);
+                    break;
+                }
+            }
+        }
+
+        // AL004 (line level): Relaxed needs a justification.
+        if is_lib && !is_test_line[idx] && code.contains("Ordering::Relaxed") {
+            let docs = format!("{}\n{}", l.comment, preceding_comments(&lines, idx));
+            if !docs.contains("ORDERING:") && !inline_allowed("AL004", &lines, idx) {
+                emit("AL004", idx, "`Ordering::Relaxed` without an `// ORDERING:` justification".to_string(), raw);
+            }
+        }
+
+        // AL005: no panicking escape hatches in library code.
+        if is_lib && !is_test_line[idx] && !in_test_tree {
+            let hit = if code.contains(".unwrap()") {
+                Some(".unwrap()")
+            } else if has_expect_call(code) {
+                Some(".expect(")
+            } else if has_panic_call(code) {
+                Some("panic!")
+            } else {
+                None
+            };
+            if let Some(hit) = hit {
+                let docs = format!("{}\n{}", l.comment, preceding_comments(&lines, idx));
+                if !docs.contains("INFALLIBLE:") && !inline_allowed("AL005", &lines, idx) {
+                    let msg = format!("`{hit}` in library code (use first-party errors or `// INFALLIBLE:`)");
+                    emit("AL005", idx, msg, raw);
+                }
+            }
+        }
+
+        // AL006: the obs plane is read-only with respect to the solver.
+        if is_obs {
+            for m in DENY_METHODS {
+                let hit = find_word(code, m).iter().any(|&at| {
+                    let dotted = dot_before(code, at).is_some();
+                    dotted && code[at + m.len()..].trim_start().starts_with('(')
+                });
+                if hit && !inline_allowed("AL006", &lines, idx) {
+                    emit("AL006", idx, format!("obs-plane call to mutating solver API `.{m}(...)`"), raw);
+                    break;
+                }
+            }
+        }
+
+        // AL002 facts: definitions in library code, referenced names in
+        // any test scope.
+        if is_lib && !is_test_line[idx] {
+            for at in find_word(code, "fn") {
+                let name: String = code[at + 2..].trim_start().chars().take_while(|&c| is_word_char(c)).collect();
+                if !name.is_empty() {
+                    ctx.fn_defs.entry(name).or_insert_with(|| (rel.to_string(), idx + 1));
+                }
+            }
+        }
+        if is_test_line[idx] || in_test_tree {
+            let mut word = String::new();
+            for c in code.chars().chain(std::iter::once(' ')) {
+                if is_word_char(c) {
+                    word.push(c);
+                } else if !word.is_empty() {
+                    ctx.test_tokens.insert(std::mem::take(&mut word));
+                }
+            }
+        }
+
+        // AL004 facts: per-field ordering sets for the pairing check.
+        if is_lib && !is_test_line[idx] {
+            for op in ATOMIC_OPS {
+                for at in find_word(code, op) {
+                    let rest = code[at + op.len()..].trim_start();
+                    let Some(dot) = dot_before(code, at) else { continue };
+                    if !rest.starts_with('(') {
+                        continue;
+                    }
+                    let Some(field) = identifier_before_dot(code, dot) else { continue };
+                    if field == "self" {
+                        continue;
+                    }
+                    let open = code.len() - rest.len();
+                    let ords = call_orderings(&lines, idx, open);
+                    if ords.is_empty() {
+                        continue;
+                    }
+                    let key = (rel.to_string(), field);
+                    let entry = ctx.atomics.entry(key).or_insert_with(|| (idx + 1, BTreeSet::new()));
+                    entry.1.extend(ords);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Resolve the cross-file rules (AL002 twin coverage, AL004 pairing)
+/// after every file has passed through [`lint_source`].
+pub fn finish(ctx: &Ctx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (name, (file, line)) in &ctx.fn_defs {
+        let Some(stem) = name.strip_suffix("_unchecked") else { continue };
+        let twin = format!("{stem}_checked");
+        let mut problems = Vec::new();
+        if !ctx.fn_defs.contains_key(&twin) {
+            problems.push(format!("missing checked twin `{twin}`"));
+        } else if !ctx.test_tokens.contains(name) || !ctx.test_tokens.contains(&twin) {
+            problems.push(format!("no test references both `{name}` and `{twin}`"));
+        }
+        if !problems.is_empty() {
+            out.push(Finding {
+                rule: "AL002",
+                file: file.clone(),
+                line: *line,
+                message: problems.join("; "),
+                snippet: name.clone(),
+            });
+        }
+    }
+    for ((file, field), (line, ords)) in &ctx.atomics {
+        let acq = ords.contains("Acquire");
+        let rel = ords.contains("Release");
+        let strong = ords.contains("AcqRel") || ords.contains("SeqCst");
+        if acq && !rel && !strong {
+            out.push(Finding {
+                rule: "AL004",
+                file: file.clone(),
+                line: *line,
+                message: format!("atomic `{field}` has Acquire reads but no Release-class writes in this file"),
+                snippet: field.clone(),
+            });
+        }
+        if rel && !acq && !strong {
+            out.push(Finding {
+                rule: "AL004",
+                file: file.clone(),
+                line: *line,
+                message: format!("atomic `{field}` has Release writes but no Acquire-class reads in this file"),
+                snippet: field.clone(),
+            });
+        }
+    }
+    out
+}
+
+/// One entry of the crate-root `lint.allow` file.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub snippet: Option<String>,
+}
+
+/// Parse `lint.allow` text: `RULE PATH-SUFFIX [SNIPPET-SUBSTRING]` per
+/// line, `#` comments and blank lines ignored.
+pub fn parse_allow(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(rule), Some(path)) = (it.next(), it.next()) else { continue };
+        let rest: Vec<&str> = it.collect();
+        let snippet = if rest.is_empty() { None } else { Some(rest.join(" ")) };
+        out.push(AllowEntry { rule: rule.to_string(), path_suffix: path.to_string(), snippet });
+    }
+    out
+}
+
+/// Does any allowlist entry cover this finding?
+pub fn is_allowed(f: &Finding, entries: &[AllowEntry]) -> bool {
+    entries.iter().any(|e| {
+        let snip_ok = match &e.snippet {
+            Some(s) => f.snippet.contains(s),
+            None => true,
+        };
+        e.rule == f.rule && f.file.ends_with(&e.path_suffix) && snip_ok
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the crate rooted at `root` (the directory holding `Cargo.toml`,
+/// `src/`, and optionally `lint.allow`): scans `src/`, `tests/`, and
+/// `benches/`, applies the allowlist, and returns surviving findings
+/// sorted by file and line.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut ctx = Ctx::default();
+    let mut findings = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let base = root.join(sub);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&base, &mut files)?;
+        for p in files {
+            let text = std::fs::read_to_string(&p)?;
+            let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
+            findings.extend(lint_source(&rel, &text, &mut ctx));
+        }
+    }
+    findings.extend(finish(&ctx));
+    let entries = match std::fs::read_to_string(root.join("lint.allow")) {
+        Ok(text) => parse_allow(&text),
+        Err(_) => Vec::new(),
+    };
+    findings.retain(|f| !is_allowed(f, &entries));
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable rendering of the findings (`--format json`).
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\",\"snippet\":\"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message),
+            json_escape(f.snippet.trim())
+        ));
+    }
+    out.push_str(&format!("],\"count\":{}}}", findings.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_once(rel: &str, text: &str) -> Vec<Finding> {
+        let mut ctx = Ctx::default();
+        let mut f = lint_source(rel, text, &mut ctx);
+        f.extend(finish(&ctx));
+        f
+    }
+
+    #[test]
+    fn scanner_blanks_strings_and_keeps_comments() {
+        let lines = scan("let s = \"unsafe // not code\"; // SAFETY: real comment");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("SAFETY: real comment"));
+    }
+
+    #[test]
+    fn scanner_handles_byte_char_quote() {
+        // b'"' must not open a string: the following unsafe is real code
+        let lines = scan("self.expect_byte(b'\"')?; unsafe {}");
+        assert!(lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn scanner_tracks_block_comments_and_raw_strings() {
+        let text = "/* unsafe\n still comment */ let x = r#\"unsafe \"q\" inside\"#;";
+        let lines = scan(text);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe"));
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[1].code.contains("let x ="));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = scan("fn f<'a>(x: &'a str) -> &'a str { x } // 'a stays code");
+        assert!(lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn test_region_tracking() {
+        let text = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn lib2() {}";
+        let regions = test_regions(&scan(text));
+        assert_eq!(regions, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert_eq!(find_word("unsafe_fn unsafe", "unsafe"), vec![10]);
+    }
+
+    #[test]
+    fn expect_detection_skips_expect_byte() {
+        assert!(has_expect_call("x.expect(\"msg\")"));
+        assert!(!has_expect_call("self.expect_byte(b)"));
+    }
+
+    #[test]
+    fn inline_allow_suppresses_only_named_rule() {
+        let allowed = "// acf-lint: allow(AL005) -- reason\npub fn f() { g().unwrap(); }";
+        assert!(lint_once("src/x.rs", allowed).is_empty());
+        let wrong_rule = "// acf-lint: allow(AL001) -- wrong rule\npub fn f() { g().unwrap(); }";
+        let f = lint_once("src/x.rs", wrong_rule);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("AL005", 2));
+    }
+
+    #[test]
+    fn allowlist_matching() {
+        let entries = parse_allow("# comment\nAL005 src/util/prop.rs panic!\n");
+        let hit = Finding {
+            rule: "AL005",
+            file: "src/util/prop.rs".to_string(),
+            line: 9,
+            message: String::new(),
+            snippet: "panic!(\"boom\")".to_string(),
+        };
+        let miss = Finding { snippet: "x.unwrap()".to_string(), ..hit.clone() };
+        assert!(is_allowed(&hit, &entries));
+        assert!(!is_allowed(&miss, &entries));
+    }
+
+    #[test]
+    fn json_rendering_escapes() {
+        let f = Finding {
+            rule: "AL005",
+            file: "src/a.rs".to_string(),
+            line: 3,
+            message: "m".to_string(),
+            snippet: "say \"hi\"".to_string(),
+        };
+        let j = to_json(&[f]);
+        assert!(j.contains("\\\"hi\\\""), "{j}");
+        assert!(j.contains("\"count\":1"), "{j}");
+    }
+
+    #[test]
+    fn acquire_without_release_is_pairing_finding() {
+        let src = [
+            "pub fn peek(head: &std::sync::atomic::AtomicU64) -> u64 {",
+            "    // ORDERING: acquire with no writer in this file.",
+            "    head.load(Ordering::Acquire)",
+            "}",
+        ];
+        let f = lint_once("src/half.rs", &src.join("\n"));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "AL004");
+        assert!(f[0].message.contains("no Release-class writes"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn paired_acquire_release_is_clean() {
+        let src = [
+            "pub fn publish(head: &std::sync::atomic::AtomicU64, v: u64) {",
+            "    head.store(v, Ordering::Release);",
+            "}",
+            "pub fn peek(head: &std::sync::atomic::AtomicU64) -> u64 {",
+            "    head.load(Ordering::Acquire)",
+            "}",
+        ];
+        assert!(lint_once("src/full.rs", &src.join("\n")).is_empty());
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_flagged() {
+        let src = "pub struct T {\n    dot: unsafe fn(&[u32], &[f64], &[f64]) -> f64,\n}";
+        assert!(lint_once("src/t.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unchecked_with_twin_and_tests_is_clean() {
+        let src = [
+            "/// # Safety: caller upholds bounds.",
+            "pub unsafe fn dot_unchecked(x: &[f64]) -> f64 { x[0] }",
+            "pub fn dot_checked(x: &[f64]) -> f64 { x[0] }",
+            "#[cfg(test)]",
+            "mod tests {",
+            "    // SAFETY: slice is non-empty",
+            "    fn both() { let _ = (dot_checked(&[1.0]), unsafe { dot_unchecked(&[1.0]) }); }",
+            "}",
+        ];
+        assert!(lint_once("src/k.rs", &src.join("\n")).is_empty());
+    }
+}

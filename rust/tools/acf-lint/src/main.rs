@@ -1,0 +1,84 @@
+//! CLI for the acf-cd contract linter.
+//!
+//! ```text
+//! acf-lint [--root DIR] [--format text|json] [-D all]
+//! ```
+//!
+//! `--root` defaults to the crate that owns this tool (two levels above
+//! `tools/acf-lint`), so `cargo run -p acf-lint` from anywhere inside
+//! the workspace lints the main crate. Findings go to stdout; with
+//! `-D all` any finding makes the process exit non-zero (the CI mode).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Opts {
+    root: PathBuf,
+    format: String,
+    deny_all: bool,
+}
+
+fn default_root() -> PathBuf {
+    // tools/acf-lint -> tools -> crate root
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().and_then(|p| p.parent()).map(PathBuf::from).unwrap_or(manifest)
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts { root: default_root(), format: "text".to_string(), deny_all: false };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => opts.root = PathBuf::from(args.next().ok_or("--root needs a directory")?),
+            "--format" => {
+                let f = args.next().ok_or("--format needs `text` or `json`")?;
+                if f != "text" && f != "json" {
+                    return Err(format!("unknown format `{f}` (expected `text` or `json`)"));
+                }
+                opts.format = f;
+            }
+            "-D" => {
+                let what = args.next().ok_or("-D needs an argument (only `all` is supported)")?;
+                if what != "all" {
+                    return Err(format!("-D {what}: only `-D all` is supported"));
+                }
+                opts.deny_all = true;
+            }
+            "--help" | "-h" => {
+                println!("usage: acf-lint [--root DIR] [--format text|json] [-D all]");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("acf-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match acf_lint::lint_tree(&opts.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("acf-lint: cannot lint {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if opts.format == "json" {
+        println!("{}", acf_lint::to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        eprintln!("acf-lint: {} finding(s) in {}", findings.len(), opts.root.display());
+    }
+    if opts.deny_all && !findings.is_empty() {
+        return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
+}

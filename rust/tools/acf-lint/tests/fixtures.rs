@@ -1,0 +1,109 @@
+//! Fixture-based rule tests: each fixture under `fixtures/` violates
+//! exactly one rule exactly once, and the self-clean test asserts that
+//! the real crate tree lints to zero findings.
+
+use std::path::PathBuf;
+
+use acf_lint::{finish, lint_source, lint_tree, Ctx, Finding};
+
+fn fixture(name: &str) -> String {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// Lint one fixture in isolation under a synthetic path label.
+fn lint_fixture(label: &str, name: &str) -> Vec<Finding> {
+    let mut ctx = Ctx::default();
+    let mut findings = lint_source(label, &fixture(name), &mut ctx);
+    findings.extend(finish(&ctx));
+    findings
+}
+
+fn assert_single(findings: &[Finding], rule: &str, line: usize) {
+    assert_eq!(findings.len(), 1, "expected exactly one finding, got {findings:?}");
+    assert_eq!(findings[0].rule, rule, "{findings:?}");
+    assert_eq!(findings[0].line, line, "{findings:?}");
+}
+
+#[test]
+fn al001_unsafe_without_safety_comment() {
+    let f = lint_fixture("src/fixture.rs", "al001_unsafe_without_safety.rs");
+    assert_single(&f, "AL001", 4);
+}
+
+#[test]
+fn al002_missing_checked_twin() {
+    let f = lint_fixture("src/fixture.rs", "al002_missing_checked_twin.rs");
+    assert_single(&f, "AL002", 5);
+    assert!(f[0].message.contains("frob_checked"), "{}", f[0].message);
+}
+
+#[test]
+fn al003_fma_token_in_kernels() {
+    let f = lint_fixture("src/sparse/kernels.rs", "al003_fma_in_kernels.rs");
+    assert_single(&f, "AL003", 4);
+    assert!(f[0].message.contains("mul_add"), "{}", f[0].message);
+}
+
+#[test]
+fn al003_same_source_is_clean_outside_kernels() {
+    let f = lint_fixture("src/sparse/other.rs", "al003_fma_in_kernels.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn al004_relaxed_without_justification() {
+    let f = lint_fixture("src/fixture.rs", "al004_relaxed_without_ordering.rs");
+    assert_single(&f, "AL004", 6);
+}
+
+#[test]
+fn al005_unwrap_in_library_code() {
+    let f = lint_fixture("src/fixture.rs", "al005_unwrap_in_lib.rs");
+    assert_single(&f, "AL005", 3);
+}
+
+#[test]
+fn al005_same_source_is_clean_in_tests_tree() {
+    let f = lint_fixture("tests/fixture.rs", "al005_unwrap_in_lib.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn al006_obs_plane_calls_mutator() {
+    let f = lint_fixture("src/obs/fixture.rs", "al006_obs_calls_mutator.rs");
+    assert_single(&f, "AL006", 4);
+    assert!(f[0].message.contains("report"), "{}", f[0].message);
+}
+
+#[test]
+fn al006_same_source_is_clean_outside_obs() {
+    let f = lint_fixture("src/shard/fixture.rs", "al006_obs_calls_mutator.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn every_rule_has_a_tripping_fixture() {
+    let cases = [
+        ("src/fixture.rs", "al001_unsafe_without_safety.rs", "AL001"),
+        ("src/fixture.rs", "al002_missing_checked_twin.rs", "AL002"),
+        ("src/sparse/kernels.rs", "al003_fma_in_kernels.rs", "AL003"),
+        ("src/fixture.rs", "al004_relaxed_without_ordering.rs", "AL004"),
+        ("src/fixture.rs", "al005_unwrap_in_lib.rs", "AL005"),
+        ("src/obs/fixture.rs", "al006_obs_calls_mutator.rs", "AL006"),
+    ];
+    let tripped: Vec<&str> = cases.iter().map(|(label, name, _)| lint_fixture(label, name)[0].rule).collect();
+    let expected: Vec<&str> = cases.iter().map(|c| c.2).collect();
+    assert_eq!(tripped, expected);
+    assert_eq!(expected, acf_lint::RULES.to_vec());
+}
+
+/// The acceptance gate: `acf-lint -D all` over the real tree is clean.
+#[test]
+fn self_clean_real_tree_has_zero_findings() {
+    let crate_root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = crate_root.parent().and_then(|p| p.parent()).expect("tools/acf-lint sits two levels below the crate");
+    let findings = lint_tree(root).expect("lint the main crate tree");
+    let listing: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "expected a clean tree, found:\n{}", listing.join("\n"));
+}
